@@ -1,0 +1,58 @@
+//! Pruning frontier explorer: sweep DTPU keep-ratios and report the
+//! speedup / retained-attention-mass tradeoff (the Evo-ViT-style ">1.6x
+//! at negligible accuracy loss" claim, experiment E7).
+//!
+//! "Accuracy proxy" = fraction of total attention probability mass carried
+//! by the kept tokens, measured functionally on the reference stack — the
+//! quantity column-mean ranking maximizes per step.
+//!
+//! ```sh
+//! cargo run --release --offline --example pruning_explorer
+//! ```
+
+use streamdcim::config::{presets, DataflowKind, PruningSchedule};
+use streamdcim::coordinator::EncoderStack;
+use streamdcim::dataflow;
+use streamdcim::model::refimpl::{encoder_block, Mat};
+use streamdcim::sim::dtpu::top_k_indices;
+use streamdcim::util::prng::Rng;
+
+fn main() {
+    // functional measurement: how much attention mass do kept tokens carry?
+    let model = presets::functional_small();
+    let stack = EncoderStack::new(&model, vec![128, 96, 64], 11);
+    let mut rng = Rng::new(3);
+    let ix = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let iy = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let (wx, _) = &stack.weights[0];
+    let (_, scores) = encoder_block(wx, &ix, &iy, 4);
+
+    println!("== retained attention mass vs keep-ratio (first cross layer) ==");
+    println!("{:>10} {:>8} {:>16}", "keep", "tokens", "mass retained");
+    for keep in [1.0, 0.9, 0.75, 0.5, 0.25] {
+        let k = (128.0 * keep) as usize;
+        let kept = top_k_indices(&scores, k);
+        let mass: f32 = kept.iter().map(|&i| scores[i]).sum();
+        println!("{keep:>10.2} {k:>8} {:>15.1} %", mass * 100.0);
+    }
+
+    // architectural measurement: end-to-end speedup on ViLBERT-base
+    println!("\n== end-to-end ViLBERT-base speedup vs keep-ratio ==");
+    let cfg = presets::streamdcim_default();
+    let mut no_prune = presets::vilbert_base();
+    no_prune.pruning = PruningSchedule::disabled();
+    let base = dataflow::run(DataflowKind::TileStream, &cfg, &no_prune).cycles as f64;
+    println!("{:>10} {:>14} {:>10} {:>12}", "keep", "cycles", "speedup", "energy (mJ)");
+    for keep in [0.9, 0.8, 0.75, 0.7, 0.6, 0.5] {
+        let mut m = presets::vilbert_base();
+        m.pruning = PruningSchedule { every: 1, keep_ratio: keep, min_tokens: 512 };
+        let r = dataflow::run(DataflowKind::TileStream, &cfg, &m);
+        println!(
+            "{keep:>10.2} {:>14} {:>9.2}x {:>12.2}",
+            r.cycles,
+            base / r.cycles as f64,
+            r.energy.total_mj()
+        );
+    }
+    println!("\npaper reference point: pruning image-token redundancy -> >1.6x speedup");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: simulate one ViLBERT-base run under all three dataflows,
+//! print the comparison, and (if `make artifacts` has run) push one
+//! cross-modal encoder block through the PJRT runtime.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use std::path::Path;
+
+use streamdcim::config::presets;
+use streamdcim::model::refimpl::{BlockWeights, Mat};
+use streamdcim::report;
+use streamdcim::runtime::Runtime;
+use streamdcim::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the paper's headline experiment, one model -----------------
+    let cfg = presets::streamdcim_default();
+    let model = presets::vilbert_base();
+    println!("simulating {} under all three dataflows...", model.name);
+    let runs = report::run_all(&cfg, &model);
+    for r in &runs {
+        println!(
+            "  {:<13} {:>12} cycles  {:>8.2} ms  {:>8.2} mJ",
+            r.dataflow.name(),
+            r.cycles,
+            r.ms,
+            r.energy.total_mj()
+        );
+    }
+    let (s_non, s_layer) = report::speedups(&runs);
+    println!("  Tile-stream speedup: {s_non:.2}x vs Non-stream (paper 2.86x), {s_layer:.2}x vs Layer-stream (paper 1.25x)");
+
+    // --- 2. one encoder block through the AOT artifacts ----------------
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(skipping PJRT demo — run `make artifacts` first)");
+        return Ok(());
+    }
+    println!("\nloading AOT artifacts (jax/pallas -> HLO text -> PJRT)...");
+    let rt = Runtime::load(dir)?;
+    println!("  {} artifacts compiled", rt.artifact_names().len());
+
+    let mut rng = Rng::new(42);
+    let weights = BlockWeights::random(&mut rng, 128, 512);
+    let vision = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let language = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let (out, scores) = rt.run_block("block_n128_d128_h4", &vision, &language, &weights)?;
+    println!("  cross-modal block: {}x{} tokens out", out.rows, out.cols);
+
+    // DTPU decision: which language tokens would survive pruning?
+    let kept = streamdcim::sim::dtpu::top_k_indices(&scores, 96);
+    println!(
+        "  DTPU keeps 96/128 language tokens; top-3 by importance: {:?}",
+        {
+            let mut idx: Vec<usize> = (0..scores.len()).collect();
+            idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+            idx[..3].to_vec()
+        }
+    );
+    assert_eq!(kept.len(), 96);
+    println!("quickstart OK");
+    Ok(())
+}

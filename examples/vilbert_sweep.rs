@@ -1,0 +1,42 @@
+//! Full Fig. 6 + Fig. 7 regeneration: both ViLBERT models, all three
+//! dataflows, with the paper's numbers alongside for comparison —
+//! the experiment driver behind EXPERIMENTS.md §E3/§E4/§E6.
+//!
+//! ```sh
+//! cargo run --release --offline --example vilbert_sweep
+//! ```
+
+use streamdcim::config::presets;
+use streamdcim::report;
+
+fn main() {
+    let cfg = presets::streamdcim_default();
+    let all: Vec<_> = [presets::vilbert_base(), presets::vilbert_large()]
+        .into_iter()
+        .map(|m| {
+            println!("running {} (3 dataflows)...", m.name);
+            (m.name.clone(), report::run_all(&cfg, &m))
+        })
+        .collect();
+
+    for fig in [report::fig6(&all), report::fig7(&all), report::headline(&all)] {
+        println!("\n=== {} ===\n{}", fig.title, fig.body);
+    }
+
+    // per-layer view of where Tile-stream wins on ViLBERT-base
+    let base = &all[0].1;
+    let layer = base.iter().find(|r| r.dataflow == streamdcim::config::DataflowKind::LayerStream).unwrap();
+    let tile = base.iter().find(|r| r.dataflow == streamdcim::config::DataflowKind::TileStream).unwrap();
+    println!("=== per-layer cycles, ViLBERT-base (Layer-stream vs Tile-stream) ===");
+    println!("{:<8} {:>14} {:>14} {:>9} {:>24}", "layer", "layer-stream", "tile-stream", "speedup", "exposed rewrite (layer)");
+    for (a, b) in layer.per_layer.iter().zip(&tile.per_layer) {
+        println!(
+            "{:<8} {:>14} {:>14} {:>8.2}x {:>24}",
+            format!("{} {}", a.index, if a.label.contains("Cross") { "x" } else { "s" }),
+            a.cycles(),
+            b.cycles(),
+            a.cycles() as f64 / b.cycles() as f64,
+            a.exposed_rewrite
+        );
+    }
+}

@@ -1,0 +1,220 @@
+"""AOT pipeline: lower the L2 graph to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is numerically validated against the pure-jnp oracle before
+it is written — a lowering bug fails the build, not the serving path.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path.  Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import ref
+
+# Functional model geometry (CPU-scale stand-in for ViLBERT dims; the
+# full-size 4096-token config is evaluated analytically by the simulator).
+D = 128          # embedding dim
+HEADS = 4        # attention heads
+FFN = 512        # FFN hidden dim (4D, like ViLBERT)
+STAGES = (128, 96, 64)  # token counts along the pruning schedule
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _shape_meta(shapes):
+    return [{"shape": list(s), "dtype": "f32"} for s in shapes]
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders.  Each returns (fn, input_shapes, output_shapes, meta).
+# Block params are *inputs* to the artifact (10 arrays, fixed order), so the
+# rust coordinator owns the weights and can swap checkpoints without
+# re-lowering.
+# ---------------------------------------------------------------------------
+
+PARAM_ORDER = list(M.BlockParams._fields)
+
+
+def _param_shapes(d=D, f=FFN):
+    return [
+        (d, d), (d, d), (d, d), (d, d),   # wq wk wv wo
+        (d,), (d,),                        # ln1_g ln1_b
+        (d, f), (f, d),                    # w1 w2
+        (d,), (d,),                        # ln2_g ln2_b
+    ]
+
+
+def build_block(n: int):
+    """Cross-modal encoder block at token count ``n`` (both streams; pass
+    iy = ix for a single-modal block)."""
+
+    def fn(ix, iy, *params):
+        p = M.BlockParams(*params)
+        out, scores = M.encoder_block(p, ix, iy, heads=HEADS)
+        return out, scores
+
+    ins = [(n, D), (n, D)] + _param_shapes()
+    outs = [(n, D), (n,)]
+    meta = {"kind": "encoder_block", "n": n, "d": D, "heads": HEADS,
+            "ffn": FFN, "params": PARAM_ORDER}
+    return fn, ins, outs, meta
+
+
+def build_qkv(n: int):
+    def fn(i, *params):
+        p = M.BlockParams(*params)
+        return M.qkv_generation(p, i)
+
+    ins = [(n, D)] + _param_shapes()
+    outs = [(n, D)] * 3
+    meta = {"kind": "qkv_generation", "n": n, "d": D, "params": PARAM_ORDER}
+    return fn, ins, outs, meta
+
+
+def build_matmul(m: int, k: int, n: int):
+    from compile.kernels.cim_matmul import cim_matmul
+
+    def fn(x, w):
+        return (cim_matmul(x, w),)
+
+    return fn, [(m, k), (k, n)], [(m, n)], \
+        {"kind": "matmul", "m": m, "k": k, "n": n}
+
+
+def build_softmax(m: int, n: int):
+    from compile.kernels.softmax import sfu_softmax
+
+    def fn(a):
+        return (sfu_softmax(a),)
+
+    return fn, [(m, n)], [(m, n)], {"kind": "softmax", "m": m, "n": n}
+
+
+def artifact_set():
+    arts = {}
+    for n in STAGES:
+        arts[f"block_n{n}_d{D}_h{HEADS}"] = build_block(n)
+        arts[f"qkv_n{n}_d{D}"] = build_qkv(n)
+    arts["matmul_64x64x64"] = build_matmul(64, 64, 64)
+    arts["matmul_128x128x128"] = build_matmul(128, 128, 128)
+    arts["softmax_128x128"] = build_softmax(128, 128)
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Validation: run the jitted fn on random inputs and compare to the oracle.
+# ---------------------------------------------------------------------------
+
+def _random_inputs(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in shapes:
+        x = rng.standard_normal(s).astype(np.float32) * 0.5
+        # keep values on the INT16 grid like the hardware
+        out.append(np.asarray(ref.quantize_i16(jnp.asarray(x), 1.0 / 4096.0)))
+    return out
+
+def validate(name, fn, ins, meta):
+    xs = _random_inputs(ins, seed=len(name))
+    got = jax.jit(fn)(*xs)
+    kind = meta["kind"]
+    if kind == "matmul":
+        want = (ref.matmul_ref(xs[0], xs[1]),)
+    elif kind == "softmax":
+        want = (ref.softmax_ref(xs[0]),)
+    elif kind == "qkv_generation":
+        p = dict(zip(PARAM_ORDER, xs[1:]))
+        want = tuple(ref.matmul_ref(xs[0], p[w]) for w in ("wq", "wk", "wv"))
+    elif kind == "encoder_block":
+        p = dict(zip(PARAM_ORDER, xs[2:]))
+        want = ref.encoder_block_ref(p, xs[0], xs[1], heads=meta["heads"])
+    else:
+        raise ValueError(kind)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"artifact {name} diverges from oracle")
+
+
+# ---------------------------------------------------------------------------
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources — lets `make artifacts` skip cleanly."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-validation", action="store_true",
+                    help="skip oracle check (CI fast path only)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"version": 1, "fingerprint": source_fingerprint(),
+                "defaults": {"d": D, "heads": HEADS, "ffn": FFN,
+                             "stages": list(STAGES)},
+                "artifacts": []}
+    for name, (fn, ins, outs, meta) in artifact_set().items():
+        if only and name not in only:
+            continue
+        if not args.skip_validation:
+            validate(name, fn, ins, meta)
+        lowered = jax.jit(fn, keep_unused=True).lower(*[_spec(s) for s in ins])
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "path": path,
+            "inputs": _shape_meta(ins), "outputs": _shape_meta(outs),
+            "meta": meta,
+        })
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for StreamDCIM.
+
+Each kernel mirrors one hardware unit of the paper:
+
+* :mod:`cim_matmul`      -- TBR-CIM macro matmul (weight-stationary tiling).
+* :mod:`cross_forward`   -- mixed-stationary cross-forwarding tile schedule.
+* :mod:`softmax`         -- SFU row-softmax.
+* :mod:`ref`             -- pure-jnp oracles for all of the above.
+
+All kernels are lowered with ``interpret=True`` (CPU-PJRT execution; real
+TPU lowering would emit a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from . import cim_matmul, cross_forward, softmax, ref  # noqa: F401

@@ -1,0 +1,103 @@
+"""Tile-based CIM-macro matmul kernel (Layer 1).
+
+Maps the TBR-CIM macro geometry onto a Pallas grid:
+
+* A CIM array is 128 columns wide -> the output column tile is
+  ``ARRAY_COLS = 128`` lanes (the TPU lane dimension).
+* A macro stacks 8 arrays x 4 rows of 16-bit cells = 32 rows -> the
+  contraction (K) tile is ``MACRO_ROWS = 32`` (the sublane dimension).
+* The weight tile is *stationary* across the inner grid loop, mirroring the
+  weight-stationary normal mode of the TBR-CIM macro: the HBM->VMEM schedule
+  expressed by the BlockSpec index maps re-stages the weight block only when
+  the (n, k) tile changes, exactly like a CIM rewrite.
+* Accumulation is carried in an f32 output block revisited across the K
+  grid dimension, mirroring the macro accumulator that sums the 8 per-array
+  adder-tree partial sums.
+
+The hardware computes INT16 x INT16 -> INT32+ MACs.  Functionally we keep
+values on an int16 grid (see :func:`ref.quantize_i16`) and accumulate in
+f32, which is exact for the tile sizes used here (<= 2^24 grid points).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TBR-CIM macro geometry (paper Sec. II: 8 arrays of 4 x 16b x 128 per macro).
+ARRAY_COLS = 128  # CIM array bit-line columns -> output tile width
+MACRO_ROWS = 32   # 8 arrays x 4 rows -> contraction tile depth
+ROW_TILE = 32     # input rows processed per grid step (systolic row burst)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One grid step: (TM, TK) @ (TK, TN) accumulated into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def cim_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    row_tile: int = ROW_TILE,
+    col_tile: int = ARRAY_COLS,
+    k_tile: int = MACRO_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` through the tile-based CIM macro schedule.
+
+    Args:
+      x: ``[M, K]`` activations (queries / inputs), f32 on an int16 grid.
+      w: ``[K, N]`` stationary operand (weights, or K^T columns).
+      row_tile/col_tile/k_tile: tile geometry; defaults mirror the paper's
+        macro. Shapes must divide evenly (the L2 model pads to multiples).
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``[M, N]`` f32 product.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tm = min(row_tile, m)
+    tn = min(col_tile, n)
+    tk = min(k_tile, k)
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (
+        f"shape ({m},{k})x({k2},{n}) not divisible by tiles ({tm},{tn},{tk})"
+    )
+    nk = k // tk
+    grid = (m // tm, n // tn, nk)
+    return pl.pallas_call(
+        partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def cim_matmul_bt(
+    x: jax.Array,
+    wt: jax.Array,
+    **kw,
+) -> jax.Array:
+    """``x @ wt.T`` — the QK^T form.
+
+    The paper's K-CIM stores K row-major and streams Q rows against it; the
+    transpose happens on the bit-lines.  We transpose at trace time (XLA
+    fuses it into the operand layout) and reuse the same macro schedule.
+    """
+    return cim_matmul(x, wt.T, **kw)

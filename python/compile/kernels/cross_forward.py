@@ -1,0 +1,112 @@
+"""Mixed-stationary cross-forwarding matmul (Layer 1).
+
+Realizes the paper's Fig. 4(a) tile schedule for the dynamic matmuls
+(``I_Y @ W_V`` and, inverted, ``Q_X @ K_Y^T``).
+
+Hybrid-mode TBR-CIM macro ``t`` stores row-tile ``(I_Y)_t`` *and* column-tile
+``(W_V)_t``.  At step ``t`` macro ``t`` is the broadcaster:
+
+* **row-forwarding**: rows of ``(I_Y)_t`` stream to the ``W_V`` halves of
+  macros ``t..T-1``  -> output tiles ``V[t, j]`` for ``j >= t``;
+* **column-forwarding**: columns of ``(W_V)_t`` stream to the ``I_Y`` halves
+  of macros ``t+1..T-1`` -> output tiles ``V[i, t]`` for ``i > t``.
+
+The union over steps covers every output tile exactly once (an "L-shell"
+per step), and after step ``t`` both tiles stored in macro ``t`` are dead --
+which is what frees the macro for the ping-pong rewrite in Fig. 4(b).
+
+The Pallas grid is ``(T, 2T-1)``: step ``t`` times a broadcast slot ``r``.
+Slots beyond the shell (``r >= 2(T-t)-1``) are masked with ``pl.when`` --
+they model the idle broadcast slots the elastic single-macro scheduler
+reclaims in hardware.  Functionally the kernel computes exactly ``x @ w``;
+the *order* is what differs from :func:`cim_matmul.cim_matmul`, and the L3
+simulator's tile-stream dataflow replays this same shell order.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shell_kernel(x_ref, w_ref, o_ref, *, t_tiles: int):
+    """One (step, slot) grid point: compute one output tile of its L-shell."""
+    t = pl.program_id(0)
+    r = pl.program_id(1)
+    shell = 2 * (t_tiles - t) - 1  # valid slots in step t's L-shell
+
+    @pl.when(r < shell)
+    def _compute():
+        o_ref[...] = jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+def _row_index(t, r, t_tiles):
+    """Output row-tile for (step t, slot r): row-forward then col-forward."""
+    row_fwd = t                      # slots 0 .. T-t-1   -> V[t, t+r]
+    col_fwd = t + (r - (t_tiles - t)) + 1  # slots T-t .. -> V[t+1+.., t]
+    valid = jnp.minimum(col_fwd, t_tiles - 1)
+    return jnp.where(r < t_tiles - t, row_fwd, valid)
+
+
+def _col_index(t, r, t_tiles):
+    col_in_row_fwd = jnp.minimum(t + r, t_tiles - 1)
+    return jnp.where(r < t_tiles - t, col_in_row_fwd, t)
+
+
+def cross_forward_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tiles: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` in the mixed-stationary cross-forwarding shell order.
+
+    Args:
+      x: ``[M, K]`` runtime-generated operand (e.g. ``I_Y`` or ``Q_X``).
+      w: ``[K, N]`` second runtime operand (e.g. ``W_V`` or ``K_Y^T``).
+      tiles: number of hybrid-mode macros T (paper: 8 per core). ``M`` and
+        ``N`` must divide into T equal tiles.
+      interpret: must stay True for CPU-PJRT execution.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    t_tiles = tiles
+    assert m % t_tiles == 0 and n % t_tiles == 0, (
+        f"({m},{n}) must divide into {t_tiles} tiles"
+    )
+    tm, tn = m // t_tiles, n // t_tiles
+    grid = (t_tiles, 2 * t_tiles - 1)
+    return pl.pallas_call(
+        partial(_shell_kernel, t_tiles=t_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda t, r: (_row_index(t, r, t_tiles), 0)),
+            pl.BlockSpec((k, tn), lambda t, r: (0, _col_index(t, r, t_tiles))),
+        ],
+        out_specs=pl.BlockSpec(
+            (tm, tn),
+            lambda t, r: (_row_index(t, r, t_tiles), _col_index(t, r, t_tiles)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def shell_schedule(t_tiles: int) -> list[list[tuple[int, int]]]:
+    """Python mirror of the shell order, used by tests and by DESIGN.md.
+
+    Returns, per step t, the list of (row_tile, col_tile) output tiles
+    computed at that step.  The L3 simulator's tile-stream dataflow
+    (rust/src/dataflow/tile_stream.rs) replays exactly this schedule.
+    """
+    out = []
+    for t in range(t_tiles):
+        shell = [(t, j) for j in range(t, t_tiles)]
+        shell += [(i, t) for i in range(t + 1, t_tiles)]
+        out.append(shell)
+    return out

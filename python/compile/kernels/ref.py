@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Layer-1 kernel and Layer-2 block.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert ``allclose(kernel(...), ref(...))`` for the kernels and
+``allclose(model(...), ref_model(...))`` for the full encoder blocks.
+Nothing here is ever lowered to an artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# INT16 quantization grid used by the attention layers (paper: INT16
+# precision to maintain accuracy).  Values are stored as scaled integers;
+# functionally we keep dequantized f32 values that lie exactly on the grid.
+I16_MIN, I16_MAX = -32768, 32767
+
+
+def quantize_i16(x: jax.Array, scale: float) -> jax.Array:
+    """Snap ``x`` to the INT16 grid with step ``scale`` (dequantized f32)."""
+    q = jnp.clip(jnp.round(x / scale), I16_MIN, I16_MAX)
+    return q * scale
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for cim_matmul / cross_forward_matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def softmax_ref(a: jax.Array) -> jax.Array:
+    """Oracle for sfu_softmax."""
+    return jax.nn.softmax(a, axis=-1)
+
+
+def token_scores_ref(p: jax.Array) -> jax.Array:
+    """Token importance = column mean of the attention probability matrix
+    (paper Sec. II.A, after Evo-ViT / SpAtten): score[j] = mean_i P[i, j].
+
+    For multi-head ``p`` of shape [H, M, N] the mean also runs over heads.
+    """
+    if p.ndim == 3:
+        return jnp.mean(p, axis=(0, 1))
+    return jnp.mean(p, axis=0)
+
+
+def attention_ref(q, k, v, *, scale):
+    """Single-head attention oracle: softmax(q k^T * scale) v, plus probs."""
+    a = matmul_ref(q, k.T) * scale
+    p = softmax_ref(a)
+    return matmul_ref(p, v), p
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def encoder_block_ref(params, ix, iy, *, heads):
+    """Oracle for the L2 cross-modal encoder block (stream for modal X).
+
+    Mirrors python/compile/model.py:encoder_block but uses plain jnp ops.
+    Returns (output tokens for modal X, importance scores for modal Y keys).
+    """
+    d = ix.shape[-1]
+    dh = d // heads
+    scale = jnp.float32(1.0 / jnp.sqrt(dh))
+
+    q = matmul_ref(ix, params["wq"])
+    k = matmul_ref(iy, params["wk"])
+    v = matmul_ref(iy, params["wv"])
+
+    outs, probs = [], []
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        o, p = attention_ref(q[:, sl], k[:, sl], v[:, sl], scale=scale)
+        outs.append(o)
+        probs.append(p)
+    attn = jnp.concatenate(outs, axis=-1)
+    p_all = jnp.stack(probs)  # [H, Nx, Ny]
+
+    x = ix + matmul_ref(attn, params["wo"])
+    x = layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+    h1 = gelu_ref(matmul_ref(x, params["w1"]))
+    x = x + matmul_ref(h1, params["w2"])
+    x = layernorm_ref(x, params["ln2_g"], params["ln2_b"])
+    return x, token_scores_ref(p_all)

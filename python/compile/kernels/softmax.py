@@ -1,0 +1,38 @@
+"""SFU row-softmax kernel (Layer 1).
+
+The paper's special function unit (SFU) normalizes each attention row
+``A_i`` into probabilities ``P_i``.  The hardware streams rows out of the
+CIM accumulators through an 8-lane exp/divide pipeline; here each grid step
+processes a burst of ``ROW_TILE`` rows held in VMEM with the numerically
+stable max-subtraction form (the SFU's INT16 input range makes the
+max-shift mandatory in hardware too).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 32  # rows per SFU burst
+
+
+def _softmax_kernel(a_ref, p_ref):
+    a = a_ref[...]
+    m = jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a - m)
+    p_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sfu_softmax(a: jax.Array, *, row_tile: int = ROW_TILE,
+                interpret: bool = True) -> jax.Array:
+    """Row-wise softmax of ``[M, N]`` attention scores."""
+    m, n = a.shape
+    tm = min(row_tile, m)
+    assert m % tm == 0, f"rows {m} not divisible by burst {tm}"
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // tm,),
+        in_specs=[pl.BlockSpec((tm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a)

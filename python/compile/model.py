@@ -1,0 +1,139 @@
+"""Layer 2 — ViLBERT-style multimodal encoder blocks in JAX.
+
+The compute graph mirrors the workload the paper evaluates (ViLBERT on
+VQA): two streams (modal X = vision, modal Y = language) of stacked
+single-modal and cross-modal encoder blocks.  Every matmul routes through
+the Layer-1 Pallas kernels:
+
+* ``I @ W_{Q,K,V}`` generation      -> :func:`kernels.cim_matmul.cim_matmul`
+  (weight-stationary, like Q-CIM / K-CIM / normal-mode TBR-CIM);
+* ``Q @ K^T`` and ``P @ V``         -> the same macro schedule via
+  :func:`kernels.cim_matmul.cim_matmul_bt` / ``cim_matmul`` (the hardware
+  runs these on hybrid-mode TBR-CIM with cross-forwarding; the functional
+  tile schedule is validated separately against
+  :func:`kernels.cross_forward.cross_forward_matmul`);
+* softmax                            -> :func:`kernels.softmax.sfu_softmax`.
+
+Token pruning (the DTPU) is an L3 decision: this graph *returns* the
+column-mean importance scores; the Rust coordinator selects the surviving
+tokens and invokes the next block's artifact at the pruned token count.
+Shapes here are static per artifact — one artifact per (Nx, Ny, D) stage.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cim_matmul import cim_matmul, cim_matmul_bt
+from compile.kernels.softmax import sfu_softmax
+from compile.kernels import ref
+
+
+class BlockParams(NamedTuple):
+    """Weights of one encoder block (attention + FFN, pre-quantized)."""
+
+    wq: jax.Array   # [D, D]
+    wk: jax.Array   # [D, D]
+    wv: jax.Array   # [D, D]
+    wo: jax.Array   # [D, D]
+    ln1_g: jax.Array  # [D]
+    ln1_b: jax.Array  # [D]
+    w1: jax.Array   # [D, F]
+    w2: jax.Array   # [F, D]
+    ln2_g: jax.Array  # [D]
+    ln2_b: jax.Array  # [D]
+
+
+def init_block_params(key, d: int, f: int, *, scale=0.02) -> BlockParams:
+    """Random block weights on the INT16 grid (deterministic per key)."""
+    ks = jax.random.split(key, 6)
+    q = lambda k, shape: ref.quantize_i16(
+        scale * jax.random.normal(k, shape, jnp.float32), 1.0 / 4096.0
+    )
+    return BlockParams(
+        wq=q(ks[0], (d, d)),
+        wk=q(ks[1], (d, d)),
+        wv=q(ks[2], (d, d)),
+        wo=q(ks[3], (d, d)),
+        ln1_g=jnp.ones((d,), jnp.float32),
+        ln1_b=jnp.zeros((d,), jnp.float32),
+        w1=q(ks[4], (d, f)),
+        w2=q(ks[5], (f, d)),
+        ln2_g=jnp.ones((d,), jnp.float32),
+        ln2_b=jnp.zeros((d,), jnp.float32),
+    )
+
+
+def params_as_dict(p: BlockParams) -> dict:
+    return p._asdict()
+
+
+def _layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def multihead_attention(q, k, v, *, heads: int):
+    """Multi-head attention over pre-projected Q/K/V, per-head kernels.
+
+    Heads are unrolled statically (H is small); each head's QK^T, softmax
+    and PV run through the L1 kernels exactly like one CIM-core pass.
+    Returns (concat output [M, D], stacked probs [H, M, N]).
+    """
+    d = q.shape[-1]
+    dh = d // heads
+    scale = jnp.float32(1.0) / jnp.sqrt(jnp.float32(dh))
+    outs, probs = [], []
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        a = cim_matmul_bt(q[:, sl], k[:, sl]) * scale   # QK^T on hybrid CIM
+        p = sfu_softmax(a)                              # SFU
+        o = cim_matmul(p, v[:, sl])                     # PV on hybrid CIM
+        outs.append(o)
+        probs.append(p)
+    return jnp.concatenate(outs, axis=-1), jnp.stack(probs)
+
+
+def encoder_block(params: BlockParams, ix, iy, *, heads: int):
+    """Cross-modal encoder block, stream for modal X (paper Sec. II).
+
+    ``Q_X = I_X W_Q`` while ``K_Y = I_Y W_K`` and ``V_Y = I_Y W_V`` come
+    from the *other* modality.  Pass ``iy = ix`` for a single-modal block.
+
+    Returns:
+      (block output for modal X ``[Nx, D]``,
+       importance scores of modal-Y key tokens ``[Ny]``).
+    """
+    q = cim_matmul(ix, params.wq)   # weight-stationary Q-CIM
+    k = cim_matmul(iy, params.wk)   # weight-stationary K-CIM
+    v = cim_matmul(iy, params.wv)   # TBR-CIM normal mode
+
+    attn, p_all = multihead_attention(q, k, v, heads=heads)
+
+    x = ix + cim_matmul(attn, params.wo)
+    x = _layernorm(x, params.ln1_g, params.ln1_b)
+    h1 = jax.nn.gelu(cim_matmul(x, params.w1), approximate=True)
+    x = x + cim_matmul(h1, params.w2)
+    x = _layernorm(x, params.ln2_g, params.ln2_b)
+
+    scores = jnp.mean(p_all, axis=(0, 1))  # column mean -> key importance
+    return x, scores
+
+
+def single_modal_block(params: BlockParams, ix, *, heads: int):
+    """Single-modal encoder block (vanilla Transformer attention)."""
+    return encoder_block(params, ix, ix, heads=heads)
+
+
+def qkv_generation(params: BlockParams, i):
+    """Standalone Q/K/V generation — the weight-stationary workload the
+    paper streams on Q-CIM / K-CIM / normal-mode TBR-CIM. Exported as its
+    own artifact so the runtime can pipeline generation and attention the
+    way the hardware does."""
+    return (
+        cim_matmul(i, params.wq),
+        cim_matmul(i, params.wk),
+        cim_matmul(i, params.wv),
+    )

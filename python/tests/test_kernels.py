@@ -1,0 +1,208 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/values for every kernel; deterministic
+parametrized cases pin the exact macro geometry from the paper.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.cim_matmul import (
+    cim_matmul, cim_matmul_bt, ARRAY_COLS, MACRO_ROWS, ROW_TILE,
+)
+from compile.kernels.cross_forward import cross_forward_matmul, shell_schedule
+from compile.kernels.softmax import sfu_softmax
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=0.5):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# cim_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (32, 32, 128),          # single macro tile
+        (64, 128, 256),         # multi-tile in every dim
+        (96, 64, 128),          # pruned-stage row count (96 = 3 tiles)
+        (ROW_TILE, MACRO_ROWS, ARRAY_COLS),  # exact paper geometry
+        (128, 512, 128),        # FFN down-projection shape
+    ],
+)
+def test_cim_matmul_matches_oracle(m, k, n):
+    x, w = _rand((m, k)), _rand((k, n))
+    got = cim_matmul(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_cim_matmul_bt_is_qkt():
+    q, kk = _rand((64, 32)), _rand((64, 32))
+    got = cim_matmul_bt(q, kk)
+    np.testing.assert_allclose(got, q @ kk.T, rtol=1e-5, atol=1e-5)
+
+
+def test_cim_matmul_rejects_ragged_tiles():
+    with pytest.raises(AssertionError):
+        cim_matmul(_rand((33, 32)), _rand((32, 128)))
+
+
+def test_cim_matmul_rejects_contraction_mismatch():
+    with pytest.raises(AssertionError):
+        cim_matmul(_rand((32, 64)), _rand((32, 128)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mi=st.integers(1, 4), ki=st.integers(1, 4), ni=st.integers(1, 3),
+    scale=st.floats(0.01, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cim_matmul_hypothesis_shapes(mi, ki, ni, scale, seed):
+    """Random multiples of the macro tile in every dimension."""
+    r = np.random.default_rng(seed)
+    m, k, n = 32 * mi, 32 * ki, 128 * ni
+    x = (r.standard_normal((m, k)) * scale).astype(np.float32)
+    w = (r.standard_normal((k, n)) * scale).astype(np.float32)
+    np.testing.assert_allclose(
+        cim_matmul(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5 * scale
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_cim_matmul_int16_grid_exact(seed):
+    """On the INT16 grid (hardware values) the kernel must be bit-exact
+    against the oracle — both accumulate the same f32 values."""
+    r = np.random.default_rng(seed)
+    q = 1.0 / 256.0
+    x = np.round(r.standard_normal((32, 64)) * 64) * q
+    w = np.round(r.standard_normal((64, 128)) * 64) * q
+    got = np.asarray(cim_matmul(x.astype(np.float32), w.astype(np.float32)))
+    want = np.asarray(ref.matmul_ref(x.astype(np.float32), w.astype(np.float32)))
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# cross_forward_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tiles", [1, 2, 4, 8])
+def test_cross_forward_matches_oracle(tiles):
+    x, w = _rand((8 * tiles, 64)), _rand((64, 16 * tiles))
+    got = cross_forward_matmul(x, w, tiles=tiles)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_cross_forward_equals_weight_stationary_kernel():
+    """Both dataflows must produce the same results (paper: the dataflow
+    changes the schedule, never the math). Tolerance covers the f32
+    accumulation-order difference (cim_matmul sums K in 32-wide tiles)."""
+    x, w = _rand((64, 128)), _rand((128, 128))
+    a = cross_forward_matmul(x, w, tiles=8)
+    b = cim_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tiles", [1, 2, 3, 5, 8])
+def test_shell_schedule_covers_every_tile_once(tiles):
+    seen = [t for shell in shell_schedule(tiles) for t in shell]
+    assert sorted(seen) == [(i, j) for i in range(tiles) for j in range(tiles)]
+    assert len(seen) == len(set(seen)) == tiles * tiles
+
+
+@pytest.mark.parametrize("tiles", [2, 4, 8])
+def test_shell_schedule_frees_broadcaster(tiles):
+    """After step t, no later shell may touch row-tile t or col-tile t —
+    that is exactly the property that lets the ping-pong pipeline rewrite
+    macro t while t+1.. still compute."""
+    sched = shell_schedule(tiles)
+    for t, _ in enumerate(sched):
+        for later in sched[t + 1:]:
+            for (i, j) in later:
+                assert i != t and j != t
+
+
+@settings(max_examples=8, deadline=None)
+@given(tiles=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_cross_forward_hypothesis(tiles, seed):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((4 * tiles, 32)).astype(np.float32)
+    w = r.standard_normal((32, 4 * tiles)).astype(np.float32)
+    np.testing.assert_allclose(
+        cross_forward_matmul(x, w, tiles=tiles),
+        ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sfu_softmax
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(32, 32), (64, 96), (128, 128), (96, 64)])
+def test_softmax_matches_oracle(m, n):
+    a = _rand((m, n), scale=3.0)
+    np.testing.assert_allclose(
+        sfu_softmax(a), ref.softmax_ref(a), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_softmax_rows_sum_to_one():
+    p = np.asarray(sfu_softmax(_rand((64, 64), scale=8.0)))
+    np.testing.assert_allclose(p.sum(axis=-1), np.ones(64), rtol=1e-5)
+    assert (p >= 0).all()
+
+
+def test_softmax_extreme_logits_stable():
+    """The SFU's max-subtraction must survive INT16-range logits."""
+    a = np.zeros((32, 64), np.float32)
+    a[:, 0] = 3e4   # near INT16 max
+    a[:, 1] = -3e4
+    p = np.asarray(sfu_softmax(a))
+    assert np.isfinite(p).all()
+    np.testing.assert_allclose(p[:, 0], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(p[:, 1], 0.0, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mi=st.integers(1, 4), n=st.integers(8, 160), scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_hypothesis(mi, n, scale, seed):
+    r = np.random.default_rng(seed)
+    a = (r.standard_normal((32 * mi, n)) * scale).astype(np.float32)
+    got = np.asarray(sfu_softmax(a))
+    np.testing.assert_allclose(got, np.asarray(ref.softmax_ref(a)),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(got.sum(-1), 1.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantization helper
+# ---------------------------------------------------------------------------
+
+def test_quantize_i16_grid_and_clip():
+    x = jnp.asarray([0.12345, -0.5, 100.0, -100.0], jnp.float32)
+    s = 1.0 / 1024.0
+    q = np.asarray(ref.quantize_i16(x, s))
+    assert (np.abs(np.round(q / s) - q / s) < 1e-6).all()
+    assert q.max() <= 32767 * s and q.min() >= -32768 * s
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1/256, 1/1024, 1/4096]))
+def test_quantize_idempotent(seed, scale):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal(64).astype(np.float32))
+    q1 = ref.quantize_i16(x, scale)
+    q2 = ref.quantize_i16(q1, scale)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)

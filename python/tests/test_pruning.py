@@ -1,0 +1,64 @@
+"""Functional token-pruning properties (the DTPU's algorithmic contract).
+
+The DTPU itself lives in the Rust L3 (rust/src/pruning, rust/src/sim/dtpu);
+these tests pin the *functional* behaviour of the scores the L2 graph
+feeds it: column-mean ranking after Evo-ViT / SpAtten.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+
+def test_token_scores_uniform_attention():
+    p = np.full((16, 8), 1.0 / 8.0, np.float32)
+    sc = np.asarray(ref.token_scores_ref(jnp.asarray(p)))
+    np.testing.assert_allclose(sc, 1.0 / 8.0, rtol=1e-6)
+
+
+def test_token_scores_multihead_mean():
+    p = np.zeros((2, 4, 4), np.float32)
+    p[0] = np.eye(4)
+    p[1, :, 0] = 1.0
+    sc = np.asarray(ref.token_scores_ref(jnp.asarray(p)))
+    # head 0 gives each key 1/4; head 1 gives key 0 everything
+    want = np.array([(0.25 + 1.0), (0.25 + 0), (0.25 + 0), (0.25 + 0)]) / 2
+    np.testing.assert_allclose(sc, want, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 32), n=st.integers(2, 32))
+def test_token_scores_sum_to_one(seed, m, n):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((m, n)).astype(np.float32) * 3
+    p = np.asarray(ref.softmax_ref(jnp.asarray(a)))
+    sc = np.asarray(ref.token_scores_ref(jnp.asarray(p)))
+    np.testing.assert_allclose(sc.sum(), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), keep=st.integers(1, 31))
+def test_topk_pruning_keeps_highest_scores(seed, keep):
+    """The rust DTPU keeps the top-k scored tokens; this mirrors it in
+    numpy and checks the invariant the simulator's proptests also assert:
+    min(kept scores) >= max(dropped scores)."""
+    r = np.random.default_rng(seed)
+    sc = r.random(32).astype(np.float32)
+    kept = np.sort(np.argsort(-sc, kind="stable")[:keep])
+    dropped = np.setdiff1d(np.arange(32), kept)
+    if len(dropped):
+        assert sc[kept].min() >= sc[dropped].max()
+    assert len(kept) == keep
+
+
+def test_pruning_reduces_quadratic_work():
+    """Paper Sec. I: pruning image tokens gives >1.6x speedup. Attention
+    work is quadratic in tokens, so keep-rate 0.75^2 over two stages gives
+    1/(0.5625^2)... here we just pin the work model used by the simulator:
+    work(n) ~ n^2 for QK^T+PV and ~n for generation."""
+    def attn_work(n):
+        return n * n
+    assert attn_work(4096) / attn_work(4096 * 3 // 4) > 1.6

@@ -1,0 +1,117 @@
+//! Ablation benches (experiments E5, E7, A1-A3 in DESIGN.md):
+//!
+//! * `rewrite_fraction` — the Sec. I TranCIM microbenchmark (E5).
+//! * `hybrid`           — TBR-CIM hybrid mode on/off (A1).
+//! * `pingpong`         — fine-grained compute-rewriting pipeline on/off (A2).
+//! * `bandwidth`        — off-chip bus sweep: where Layer- and Tile-stream
+//!                        converge/diverge (A3).
+//! * `pruning_sweep`    — keep-ratio sweep, the Evo-ViT >1.6x claim (E7).
+
+use streamdcim::benchkit::{row, section};
+use streamdcim::config::{presets, DataflowKind, Features, PruningSchedule};
+use streamdcim::dataflow;
+use streamdcim::model::{Op, OpKind, Stream};
+use streamdcim::pruning::attention_work_ratio;
+use streamdcim::sim::OpTiling;
+
+fn main() {
+    rewrite_fraction();
+    hybrid_ablation();
+    pingpong_ablation();
+    bandwidth_sweep();
+    pruning_sweep();
+}
+
+fn rewrite_fraction() {
+    section("E5 — TranCIM rewrite fraction (paper Sec. I: >57 % at 512-bit bus)");
+    let cfg = presets::streamdcim_default();
+    for (bits, label) in [(8u64, "INT8 (paper)"), (16, "INT16")] {
+        let op = Op {
+            name: "qkt".into(),
+            kind: OpKind::MatMulDynamic,
+            stream: Stream::X,
+            batch: 1,
+            m: 2048,
+            k: 512,
+            n: 2048,
+            bits,
+        };
+        let t = OpTiling::of(&cfg, &op);
+        let rw = t.rewrite_cycles(&cfg);
+        let c = t.compute_cycles(cfg.macros_per_core);
+        row(
+            &format!("K=2048x512 {label}"),
+            format!("rewrite {rw} / compute {c} -> {:.1} %", rw as f64 / (rw + c) as f64 * 100.0),
+        );
+    }
+}
+
+fn run_tile(cfg: &streamdcim::config::AccelConfig) -> u64 {
+    dataflow::run(DataflowKind::TileStream, cfg, &presets::vilbert_base()).cycles
+}
+
+fn hybrid_ablation() {
+    section("A1 — hybrid reconfigurable mode (challenge 1)");
+    let on = run_tile(&presets::streamdcim_default());
+    let mut cfg = presets::streamdcim_default();
+    cfg.features = Features { hybrid_mode: false, ..Features::default() };
+    let off = run_tile(&cfg);
+    row("hybrid on", format!("{on} cycles"));
+    row("hybrid off", format!("{off} cycles"));
+    row("hybrid speedup", format!("{:.3}x", off as f64 / on as f64));
+}
+
+fn pingpong_ablation() {
+    section("A2 — ping-pong compute-rewriting pipeline (challenge 3)");
+    let on = run_tile(&presets::streamdcim_default());
+    let mut cfg = presets::streamdcim_default();
+    cfg.features = Features { pingpong: false, ..Features::default() };
+    let off = run_tile(&cfg);
+    row("ping-pong on", format!("{on} cycles"));
+    row("ping-pong off", format!("{off} cycles"));
+    row("ping-pong speedup", format!("{:.3}x", off as f64 / on as f64));
+}
+
+fn bandwidth_sweep() {
+    section("A3 — off-chip bus sweep (Layer-stream vs Tile-stream gap)");
+    for bus in [128u64, 256, 512, 1024] {
+        let mut cfg = presets::streamdcim_default();
+        cfg.offchip_bus_bits = bus;
+        let model = presets::vilbert_base();
+        let layer = dataflow::run(DataflowKind::LayerStream, &cfg, &model).cycles;
+        let tile = dataflow::run(DataflowKind::TileStream, &cfg, &model).cycles;
+        let non = dataflow::run(DataflowKind::NonStream, &cfg, &model).cycles;
+        row(
+            &format!("bus {bus:>4} bits"),
+            format!(
+                "non {non:>12}  layer {layer:>11}  tile {tile:>11}  tile-speedup {:.2}x/{:.2}x",
+                non as f64 / tile as f64,
+                layer as f64 / tile as f64
+            ),
+        );
+    }
+}
+
+fn pruning_sweep() {
+    section("E7 — pruning keep-ratio sweep (paper cites >1.6x from pruning)");
+    let base_cycles = {
+        let mut cfg = presets::streamdcim_default();
+        cfg.features.token_pruning = false;
+        run_tile(&cfg)
+    };
+    for keep in [0.9, 0.8, 0.75, 0.7, 0.6] {
+        let cfg = presets::streamdcim_default();
+        let mut model = presets::vilbert_base();
+        model.pruning = PruningSchedule { every: 1, keep_ratio: keep, min_tokens: 512 };
+        let cycles = dataflow::run(DataflowKind::TileStream, &cfg, &model).cycles;
+        let work = attention_work_ratio(&model.pruning, 4096, 6);
+        row(
+            &format!("keep {keep:.2} every layer"),
+            format!(
+                "{cycles:>12} cycles  end-to-end {:.2}x  attention-work {:.2}x",
+                base_cycles as f64 / cycles as f64,
+                work
+            ),
+        );
+    }
+}

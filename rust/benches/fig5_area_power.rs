@@ -1,0 +1,40 @@
+//! Bench: regenerates **Fig. 5 — Area and Power Breakdown** (E1/E2).
+//!
+//! Area comes from the analytical 28nm model; power from the peak-activity
+//! ViLBERT-base Tile-stream run (the paper reports the maximum).
+
+use streamdcim::benchkit::{row, section};
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::energy::area::AreaModel;
+use streamdcim::report;
+
+fn main() {
+    let cfg = presets::streamdcim_default();
+
+    section("Fig. 5a — Area breakdown (paper total: 12.10 mm^2)");
+    let area = AreaModel::default();
+    let total = area.total_mm2(&cfg);
+    for (name, mm2) in area.breakdown(&cfg) {
+        row(&name, format!("{mm2:>7.3} mm^2  ({:>4.1} %)", mm2 / total * 100.0));
+    }
+    row("TOTAL", format!("{total:.2} mm^2"));
+
+    section("Fig. 5b — Power breakdown (peak run, on-chip)");
+    let runs = report::run_all(&cfg, &presets::vilbert_base());
+    let tile = runs.iter().find(|r| r.dataflow == DataflowKind::TileStream).unwrap();
+    let e = &tile.energy;
+    let onchip = e.onchip_mj();
+    for (name, mj) in e.components() {
+        if name == "Off-chip" {
+            continue;
+        }
+        row(
+            name,
+            format!("{:>7.2} mW  ({:>4.1} %)", mj / e.ms * 1e3, mj / onchip * 100.0),
+        );
+    }
+    row("TOTAL (on-chip)", format!("{:.2} mW  (paper max: 122.77 mW)", onchip / e.ms * 1e3));
+
+    let fig = report::fig5(&cfg, tile);
+    println!("\n{}\n{}", fig.title, fig.body);
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerates **Fig. 6 — Performance Comparison** (experiment E3).
+//!
+//! Prints the paper's bar chart as rows (cycles + speedups for the three
+//! dataflows on ViLBERT-base and ViLBERT-large) and times the simulator
+//! itself while doing it.
+
+use streamdcim::benchkit::{row, section, Bench};
+use streamdcim::config::presets;
+use streamdcim::report;
+
+fn main() {
+    section("Fig. 6 — Performance Comparison (paper: 2.86x/1.25x base, 2.42x/1.31x large)");
+
+    let mut all = Vec::new();
+    for model in [presets::vilbert_base(), presets::vilbert_large()] {
+        let cfg = presets::streamdcim_default();
+        let name = model.name.clone();
+        // time one full three-dataflow sweep
+        let mut runs = Vec::new();
+        Bench::new(format!("sim/run_all/{name}")).iters(3).run(|| {
+            runs = report::run_all(&cfg, &model);
+        });
+        all.push((name, runs));
+    }
+
+    let fig = report::fig6(&all);
+    println!("\n{}\n{}", fig.title, fig.body);
+
+    section("Fig. 6 rows (machine-readable)");
+    for (model, runs) in &all {
+        for r in runs {
+            row(
+                &format!("{model}/{}", r.dataflow.name()),
+                format!("{} cycles  {:.3} ms", r.cycles, r.ms),
+            );
+        }
+        let (s_non, s_layer) = report::speedups(runs);
+        row(&format!("{model}/speedup"), format!("{s_non:.3}x vs non, {s_layer:.3}x vs layer"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerates **Fig. 7 — Energy Comparison** (experiment E4),
+//! normalized to the Non-stream solution as in the paper.
+
+use streamdcim::benchkit::{row, section};
+use streamdcim::config::presets;
+use streamdcim::report;
+
+fn main() {
+    section("Fig. 7 — Energy Comparison (paper: 2.64x/1.27x base, 1.94x/1.19x large)");
+
+    let cfg = presets::streamdcim_default();
+    let all: Vec<_> = [presets::vilbert_base(), presets::vilbert_large()]
+        .into_iter()
+        .map(|m| (m.name.clone(), report::run_all(&cfg, &m)))
+        .collect();
+
+    let fig = report::fig7(&all);
+    println!("\n{}\n{}", fig.title, fig.body);
+
+    section("Fig. 7 rows (machine-readable)");
+    for (model, runs) in &all {
+        let non = runs
+            .iter()
+            .find(|r| r.dataflow == streamdcim::config::DataflowKind::NonStream)
+            .unwrap()
+            .energy
+            .total_mj();
+        for r in runs {
+            row(
+                &format!("{model}/{}", r.dataflow.name()),
+                format!(
+                    "{:.3} mJ  normalized {:.3}  components: mac {:.2} write {:.2} offchip {:.2} leak {:.2}",
+                    r.energy.total_mj(),
+                    r.energy.total_mj() / non,
+                    r.energy.cim_mac_mj,
+                    r.energy.cim_write_mj,
+                    r.energy.offchip_mj,
+                    r.energy.leakage_mj
+                ),
+            );
+        }
+        let (e_non, e_layer) = report::energy_savings(runs);
+        row(&format!("{model}/saving"), format!("{e_non:.3}x vs non, {e_layer:.3}x vs layer"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Hot-path microbenches (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * simulator throughput (full ViLBERT sweeps must stay interactive);
+//! * refimpl matmul (the functional fallback's kernel);
+//! * PJRT artifact execution latency (the serving request path) — only
+//!   when artifacts are present.
+
+use std::path::Path;
+
+use streamdcim::benchkit::{row, section, Bench};
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::dataflow;
+use streamdcim::model::refimpl::{self, BlockWeights, Mat};
+use streamdcim::util::prng::Rng;
+
+fn main() {
+    section("L3 simulator throughput");
+    let cfg = presets::streamdcim_default();
+    let base = presets::vilbert_base();
+    let r = Bench::new("sim/vilbert_base/tile").iters(5).run(|| {
+        dataflow::run(DataflowKind::TileStream, &cfg, &base)
+    });
+    let run = dataflow::run(DataflowKind::TileStream, &cfg, &base);
+    let sim_cycles_per_sec = run.cycles as f64 / (r.mean_ns / 1e9);
+    row("simulated cycles/s", format!("{:.2e}", sim_cycles_per_sec));
+
+    Bench::new("sim/vilbert_large/all3").iters(3).run(|| {
+        for k in DataflowKind::ALL {
+            std::hint::black_box(dataflow::run(k, &cfg, &presets::vilbert_large()));
+        }
+    });
+
+    section("refimpl kernels (functional fallback)");
+    let mut rng = Rng::new(1);
+    let a = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let b = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    Bench::new("refimpl/matmul_128").iters(20).run(|| refimpl::matmul(&a, &b));
+    let w = BlockWeights::random(&mut rng, 128, 512);
+    let ix = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    let iy = Mat::random_i16_grid(&mut rng, 128, 128, 0.5);
+    Bench::new("refimpl/encoder_block_n128").iters(3).run(|| {
+        refimpl::encoder_block(&w, &ix, &iy, 4)
+    });
+
+    section("PJRT request path");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = streamdcim::runtime::Runtime::load(&dir).expect("artifacts");
+        Bench::new("pjrt/matmul_128x128x128").iters(20).run(|| {
+            rt.execute("matmul_128x128x128", &[(&a.data, &[128, 128]), (&b.data, &[128, 128])])
+                .unwrap()
+        });
+        Bench::new("pjrt/block_n128 (full encoder)").iters(5).run(|| {
+            rt.run_block("block_n128_d128_h4", &ix, &iy, &w).unwrap()
+        });
+        Bench::new("pjrt/block_n64").iters(5).run(|| {
+            let sx = ix.gather_rows(&(0..64).collect::<Vec<_>>());
+            let sy = iy.gather_rows(&(0..64).collect::<Vec<_>>());
+            rt.run_block("block_n64_d128_h4", &sx, &sy, &w).unwrap()
+        });
+    } else {
+        row("pjrt", "skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,125 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`]: warmup, timed iterations, mean / p50 / p95 and a
+//! one-line report compatible with grepping in bench_output.txt.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    warmup: u32,
+    iters: u32,
+    min_time: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench { name: name.into(), warmup: 1, iters: 10, min_time: Duration::from_millis(50) }
+    }
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+    pub fn iters(mut self, n: u32) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+    pub fn min_time(mut self, d: Duration) -> Self {
+        self.min_time = d;
+        self
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns the measurements.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        let started = Instant::now();
+        loop {
+            for _ in 0..self.iters {
+                let t = Instant::now();
+                std::hint::black_box(f());
+                samples.push(t.elapsed().as_nanos() as f64);
+            }
+            if started.elapsed() >= self.min_time || samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
+        let r = BenchResult {
+            name: self.name,
+            iters: samples.len() as u32,
+            mean_ns: mean,
+            p50_ns: p(0.5),
+            p95_ns: p(0.95),
+        };
+        println!(
+            "bench {:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            r.name,
+            r.iters,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p95_ns)
+        );
+        r
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A labelled result row (for paper-figure tables inside benches).
+pub fn row(label: &str, value: impl std::fmt::Display) {
+    println!("  {label:<52} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop")
+            .iters(5)
+            .min_time(Duration::from_millis(1))
+            .run(|| std::hint::black_box(2 + 2));
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

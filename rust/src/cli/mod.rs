@@ -1,0 +1,127 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `streamdcim <command> [--flag value] [--switch] [positional...]`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("missing command (try `streamdcim help`)")]
+    MissingCommand,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["trace", "verbose", "json", "no-pruning", "ref"];
+
+pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+    let mut it = argv.into_iter().peekable();
+    let command = it.next().ok_or(CliError::MissingCommand)?;
+    let mut args = Args { command, ..Default::default() };
+    while let Some(tok) = it.next() {
+        if let Some(name) = tok.strip_prefix("--") {
+            if SWITCHES.contains(&name) {
+                args.switches.push(name.to_string());
+            } else if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else {
+                let v = it.next().ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                args.flags.insert(name.to_string(), v);
+            }
+        } else {
+            args.positional.push(tok);
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+    pub fn flag_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+StreamDCIM — tile-based streaming digital CIM accelerator (paper reproduction)
+
+USAGE: streamdcim <command> [options]
+
+COMMANDS
+  run        simulate a model under one dataflow
+               --model base|large|small|microbench   (default base)
+               --dataflow tile|layer|non             (default tile)
+               --config <file.toml>  --json  --trace
+  report     regenerate a paper figure
+               --figure fig5|fig6|fig7|headline|e5   (default headline)
+               --config <file.toml>
+  serve      end-to-end serving demo over AOT artifacts
+               --artifacts <dir>   (default artifacts)
+               --requests <n>      (default 32)
+               --batch <n>         (default 4)
+               --seed <n>          --ref (pure-rust reference, no PJRT)
+  artifacts  list loaded artifacts and their shapes
+               --artifacts <dir>
+  help       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = parse(v(&["run", "--model", "base", "--json", "extra"])).unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.flag("model"), Some("base"));
+        assert!(a.has("json"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(v(&["report", "--figure=fig6"])).unwrap();
+        assert_eq!(a.flag("figure"), Some("fig6"));
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = parse(v(&["serve", "--requests", "64", "--rate", "1.5"])).unwrap();
+        assert_eq!(a.flag_u64("requests", 32), 64);
+        assert_eq!(a.flag_u64("batch", 4), 4);
+        assert!((a.flag_f64("rate", 0.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert_eq!(
+            parse(v(&["run", "--model"])).unwrap_err(),
+            CliError::MissingValue("model".into())
+        );
+        assert_eq!(parse(v(&[])).unwrap_err(), CliError::MissingCommand);
+    }
+}

@@ -1,0 +1,263 @@
+//! Configuration system: accelerator geometry/timing, energy constants,
+//! workload (model) configs, dataflow selection, and TOML-subset loading.
+
+pub mod presets;
+pub mod toml;
+
+use crate::util::ceil_div;
+
+/// Which streaming solution schedules the accelerator (paper Sec. III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataflowKind {
+    /// Conventional CIM work mode: every dynamic matmul's operands and
+    /// results round-trip off-chip; rewrites are not overlapped.
+    NonStream,
+    /// TranCIM-style pipeline/parallel modes: on-chip layer streaming, but
+    /// layer-granular CIM rewriting (pipeline bubbles).
+    LayerStream,
+    /// StreamDCIM: tile-based streaming with mixed-stationary
+    /// cross-forwarding and the ping-pong compute-rewriting pipeline.
+    TileStream,
+}
+
+impl DataflowKind {
+    pub const ALL: [DataflowKind; 3] =
+        [DataflowKind::NonStream, DataflowKind::LayerStream, DataflowKind::TileStream];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataflowKind::NonStream => "Non-stream",
+            DataflowKind::LayerStream => "Layer-stream",
+            DataflowKind::TileStream => "Tile-stream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "non" | "non-stream" | "nonstream" => Some(DataflowKind::NonStream),
+            "layer" | "layer-stream" | "layerstream" => Some(DataflowKind::LayerStream),
+            "tile" | "tile-stream" | "tilestream" | "streamdcim" => Some(DataflowKind::TileStream),
+            _ => None,
+        }
+    }
+}
+
+/// Feature toggles for ablation studies (paper features individually).
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    /// TBR-CIM hybrid reconfigurable mode (Challenge 1). Off => macros are
+    /// plain weight-stationary and dynamic operands need staging rewrites.
+    pub hybrid_mode: bool,
+    /// Ping-pong fine-grained compute-rewriting pipeline (Challenge 3).
+    /// Off => rewrites serialize with compute even in tile streaming.
+    pub pingpong: bool,
+    /// Dynamic token pruning via the DTPU.
+    pub token_pruning: bool,
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features { hybrid_mode: true, pingpong: true, token_pruning: true }
+    }
+}
+
+/// StreamDCIM accelerator geometry + timing (paper Sec. II, Fig. 3).
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// CIM cores on the TBSN (paper: Q-CIM, K-CIM, TBR-CIM).
+    pub cores: u64,
+    /// Macros per core (paper: 8).
+    pub macros_per_core: u64,
+    /// SRAM-CIM arrays per macro (paper: 8).
+    pub arrays_per_macro: u64,
+    /// Rows per array (paper: 4 rows of dual-mode sub-array adder trees).
+    pub array_rows: u64,
+    /// Bit-line columns per array (paper: 128).
+    pub array_cols: u64,
+    /// Bits per CIM cell (paper: 16b).
+    pub cell_bits: u64,
+    /// Clock (paper: 200 MHz in 28nm).
+    pub freq_mhz: u64,
+    /// Off-chip memory bus width in bits (paper Sec. I example: 512).
+    pub offchip_bus_bits: u64,
+    /// Off-chip burst initiation latency in cycles (amortized per burst).
+    pub offchip_burst_cycles: u64,
+    /// Burst size in bits over which the initiation latency is amortized.
+    pub offchip_burst_bits: u64,
+    /// CIM macro write-port width (bits written per cycle during rewrite).
+    /// Narrower than the bus: CIM bit-cell write drivers are shared across
+    /// sub-arrays (TranCIM's bitline-transpose write is similarly serial).
+    pub macro_write_port_bits: u64,
+    /// Extra per-row write setup cycles (word-line charge + verify).
+    pub cim_row_setup_cycles: u64,
+    /// On-chip buffer sizes (paper: 64 KB each).
+    pub input_buf_kb: u64,
+    pub weight_buf_kb: u64,
+    pub output_buf_kb: u64,
+    /// TBSN pipeline-bus width between cores, bits per cycle.
+    pub tbsn_bus_bits: u64,
+    /// SFU exp/div lanes (values of a softmax row per cycle).
+    pub sfu_lanes: u64,
+    /// DTPU comparator throughput: tokens ranked per cycle.
+    pub dtpu_tokens_per_cycle: u64,
+    pub features: Features,
+    pub energy: EnergyConfig,
+}
+
+impl AccelConfig {
+    /// Contraction rows held stationary per macro (paper: 8*4 = 32).
+    pub fn macro_rows(&self) -> u64 {
+        self.arrays_per_macro * self.array_rows
+    }
+    /// Output columns per macro (paper: 128).
+    pub fn macro_cols(&self) -> u64 {
+        self.array_cols
+    }
+    /// Total macros across all cores.
+    pub fn total_macros(&self) -> u64 {
+        self.cores * self.macros_per_core
+    }
+    /// Storage bits of one macro.
+    pub fn macro_bits(&self) -> u64 {
+        self.macro_rows() * self.macro_cols() * self.cell_bits
+    }
+    /// Cycles to rewrite one macro row of `cols` values at `bits` precision.
+    pub fn row_write_cycles(&self, cols: u64, bits: u64) -> u64 {
+        ceil_div(cols * bits, self.macro_write_port_bits) + self.cim_row_setup_cycles
+    }
+    /// Cycles to stream `bits` over the off-chip channel (excl. queueing).
+    pub fn offchip_cycles(&self, bits: u64) -> u64 {
+        if bits == 0 {
+            return 0;
+        }
+        let beats = ceil_div(bits, self.offchip_bus_bits);
+        let bursts = ceil_div(bits, self.offchip_burst_bits);
+        beats + bursts * self.offchip_burst_cycles
+    }
+    pub fn ns_per_cycle(&self) -> f64 {
+        1e3 / self.freq_mhz as f64
+    }
+}
+
+/// Energy constants (pJ) for the 28nm digital-CIM process, calibrated to
+/// published silicon (TranCIM ISSCC'22, MulTCIM ISSCC'23, paper totals).
+/// See DESIGN.md Sec. 6 for the derivation of each constant.
+#[derive(Debug, Clone)]
+pub struct EnergyConfig {
+    /// One INT16 MAC inside a CIM array (bit-serial digital adder tree).
+    pub mac_pj: f64,
+    /// Writing one bit into a CIM cell (incl. write driver + verify).
+    pub cim_write_pj_per_bit: f64,
+    /// SRAM buffer access, per bit (64 KB banks).
+    pub buffer_pj_per_bit: f64,
+    /// Off-chip DRAM access, per bit (LPDDR4-class).
+    pub offchip_pj_per_bit: f64,
+    /// TBSN hop, per bit.
+    pub tbsn_pj_per_bit: f64,
+    /// One SFU elementary op (exp / div / cmp on one value).
+    pub sfu_pj_per_op: f64,
+    /// One DTPU compare-select.
+    pub dtpu_pj_per_op: f64,
+    /// Static leakage power, mW (whole chip).
+    pub leakage_mw: f64,
+}
+
+/// Workload: a ViLBERT-style two-stream multimodal encoder stack.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Single-modal encoder layers per stream.
+    pub single_layers_x: u64,
+    pub single_layers_y: u64,
+    /// Cross-modal co-attention layers (each serves both streams).
+    pub cross_layers: u64,
+    pub d_model: u64,
+    pub heads: u64,
+    pub d_ff: u64,
+    /// Initial token counts (paper: N_X = N_Y = 4096).
+    pub tokens_x: u64,
+    pub tokens_y: u64,
+    /// Operand precision in attention layers (paper: INT16).
+    pub bits: u64,
+    pub pruning: PruningSchedule,
+}
+
+/// Dynamic token-pruning schedule (Evo-ViT / SpAtten style).
+#[derive(Debug, Clone)]
+pub struct PruningSchedule {
+    /// Prune after every `every`-th cross-modal layer (0 = never).
+    pub every: u64,
+    /// Fraction of tokens kept at each pruning point.
+    pub keep_ratio: f64,
+    /// Never prune below this many tokens.
+    pub min_tokens: u64,
+}
+
+impl PruningSchedule {
+    pub fn disabled() -> Self {
+        PruningSchedule { every: 0, keep_ratio: 1.0, min_tokens: 1 }
+    }
+
+    /// Token count after applying one pruning step to `n`.
+    pub fn prune_once(&self, n: u64) -> u64 {
+        if self.every == 0 {
+            return n;
+        }
+        let kept = (n as f64 * self.keep_ratio).ceil() as u64;
+        kept.max(self.min_tokens).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn paper_macro_geometry() {
+        let c = presets::streamdcim_default();
+        assert_eq!(c.macro_rows(), 32); // 8 arrays x 4 rows
+        assert_eq!(c.macro_cols(), 128);
+        assert_eq!(c.total_macros(), 24); // 3 cores x 8 macros
+        assert_eq!(c.macro_bits(), 32 * 128 * 16);
+    }
+
+    #[test]
+    fn row_write_cycles_scale_with_precision() {
+        let c = presets::streamdcim_default();
+        let w16 = c.row_write_cycles(128, 16);
+        let w8 = c.row_write_cycles(128, 8);
+        assert!(w16 > w8);
+        assert_eq!(
+            w16,
+            (128 * 16 + c.macro_write_port_bits - 1) / c.macro_write_port_bits
+                + c.cim_row_setup_cycles
+        );
+    }
+
+    #[test]
+    fn offchip_cycles_monotonic() {
+        let c = presets::streamdcim_default();
+        assert_eq!(c.offchip_cycles(0), 0);
+        assert!(c.offchip_cycles(1) >= 1);
+        assert!(c.offchip_cycles(1 << 20) > c.offchip_cycles(1 << 10));
+    }
+
+    #[test]
+    fn dataflow_parse_roundtrip() {
+        for k in DataflowKind::ALL {
+            assert_eq!(DataflowKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DataflowKind::parse("streamdcim"), Some(DataflowKind::TileStream));
+        assert_eq!(DataflowKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn pruning_schedule_respects_floor() {
+        let p = PruningSchedule { every: 1, keep_ratio: 0.5, min_tokens: 100 };
+        assert_eq!(p.prune_once(4096), 2048);
+        assert_eq!(p.prune_once(150), 100);
+        assert_eq!(p.prune_once(80), 80); // never grows
+        assert_eq!(PruningSchedule::disabled().prune_once(4096), 4096);
+    }
+}

@@ -1,0 +1,302 @@
+//! TOML-subset parser for config files (the `toml` crate is unavailable
+//! offline).  Supports: `[section]` headers, `key = value` with integer,
+//! float, boolean, string and flat-array values, `#` comments.
+//!
+//! Used by the CLI (`--config file.toml`) to override the built-in presets;
+//! see `configs/*.toml` at the repo root for examples.
+
+use std::collections::BTreeMap;
+
+use super::{AccelConfig, Features, ModelConfig};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlVal {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlVal>),
+}
+
+impl TomlVal {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlVal::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlVal::Float(f) => Some(*f),
+            TomlVal::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlVal::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, TomlVal>;
+pub type Doc = BTreeMap<String, Table>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document into `{section -> {key -> value}}`.
+/// Keys before the first section header land in section `""`.
+pub fn parse(src: &str) -> Result<Doc, TomlError> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated section header"))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(ln, "expected key = value"))?;
+        let val = parse_value(v.trim(), ln)?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line: line + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlVal, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(TomlVal::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p, ln)?);
+            }
+        }
+        return Ok(TomlVal::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlVal::Bool(true)),
+        "false" => return Ok(TomlVal::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlVal::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlVal::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value '{s}'")))
+}
+
+macro_rules! set_u64 {
+    ($tbl:expr, $key:literal, $dst:expr) => {
+        if let Some(v) = $tbl.get($key).and_then(|v| v.as_u64()) {
+            $dst = v;
+        }
+    };
+}
+macro_rules! set_f64 {
+    ($tbl:expr, $key:literal, $dst:expr) => {
+        if let Some(v) = $tbl.get($key).and_then(|v| v.as_f64()) {
+            $dst = v;
+        }
+    };
+}
+
+/// Apply `[accel]`, `[energy]` and `[features]` sections onto a config.
+pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
+    if let Some(t) = doc.get("accel") {
+        set_u64!(t, "cores", cfg.cores);
+        set_u64!(t, "macros_per_core", cfg.macros_per_core);
+        set_u64!(t, "arrays_per_macro", cfg.arrays_per_macro);
+        set_u64!(t, "array_rows", cfg.array_rows);
+        set_u64!(t, "array_cols", cfg.array_cols);
+        set_u64!(t, "cell_bits", cfg.cell_bits);
+        set_u64!(t, "freq_mhz", cfg.freq_mhz);
+        set_u64!(t, "offchip_bus_bits", cfg.offchip_bus_bits);
+        set_u64!(t, "offchip_burst_cycles", cfg.offchip_burst_cycles);
+        set_u64!(t, "offchip_burst_bits", cfg.offchip_burst_bits);
+        set_u64!(t, "macro_write_port_bits", cfg.macro_write_port_bits);
+        set_u64!(t, "cim_row_setup_cycles", cfg.cim_row_setup_cycles);
+        set_u64!(t, "input_buf_kb", cfg.input_buf_kb);
+        set_u64!(t, "weight_buf_kb", cfg.weight_buf_kb);
+        set_u64!(t, "output_buf_kb", cfg.output_buf_kb);
+        set_u64!(t, "tbsn_bus_bits", cfg.tbsn_bus_bits);
+        set_u64!(t, "sfu_lanes", cfg.sfu_lanes);
+        set_u64!(t, "dtpu_tokens_per_cycle", cfg.dtpu_tokens_per_cycle);
+    }
+    if let Some(t) = doc.get("energy") {
+        set_f64!(t, "mac_pj", cfg.energy.mac_pj);
+        set_f64!(t, "cim_write_pj_per_bit", cfg.energy.cim_write_pj_per_bit);
+        set_f64!(t, "buffer_pj_per_bit", cfg.energy.buffer_pj_per_bit);
+        set_f64!(t, "offchip_pj_per_bit", cfg.energy.offchip_pj_per_bit);
+        set_f64!(t, "tbsn_pj_per_bit", cfg.energy.tbsn_pj_per_bit);
+        set_f64!(t, "sfu_pj_per_op", cfg.energy.sfu_pj_per_op);
+        set_f64!(t, "dtpu_pj_per_op", cfg.energy.dtpu_pj_per_op);
+        set_f64!(t, "leakage_mw", cfg.energy.leakage_mw);
+    }
+    if let Some(t) = doc.get("features") {
+        let mut f = Features {
+            hybrid_mode: cfg.features.hybrid_mode,
+            pingpong: cfg.features.pingpong,
+            token_pruning: cfg.features.token_pruning,
+        };
+        if let Some(v) = t.get("hybrid_mode").and_then(|v| v.as_bool()) {
+            f.hybrid_mode = v;
+        }
+        if let Some(v) = t.get("pingpong").and_then(|v| v.as_bool()) {
+            f.pingpong = v;
+        }
+        if let Some(v) = t.get("token_pruning").and_then(|v| v.as_bool()) {
+            f.token_pruning = v;
+        }
+        cfg.features = f;
+    }
+}
+
+/// Apply a `[model]` section onto a model config.
+pub fn apply_model_overrides(cfg: &mut ModelConfig, doc: &Doc) {
+    if let Some(t) = doc.get("model") {
+        if let Some(v) = t.get("name").and_then(|v| v.as_str()) {
+            cfg.name = v.to_string();
+        }
+        set_u64!(t, "single_layers_x", cfg.single_layers_x);
+        set_u64!(t, "single_layers_y", cfg.single_layers_y);
+        set_u64!(t, "cross_layers", cfg.cross_layers);
+        set_u64!(t, "d_model", cfg.d_model);
+        set_u64!(t, "heads", cfg.heads);
+        set_u64!(t, "d_ff", cfg.d_ff);
+        set_u64!(t, "tokens_x", cfg.tokens_x);
+        set_u64!(t, "tokens_y", cfg.tokens_y);
+        set_u64!(t, "bits", cfg.bits);
+    }
+    if let Some(t) = doc.get("pruning") {
+        set_u64!(t, "every", cfg.pruning.every);
+        set_f64!(t, "keep_ratio", cfg.pruning.keep_ratio);
+        set_u64!(t, "min_tokens", cfg.pruning.min_tokens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    const SAMPLE: &str = r#"
+# StreamDCIM override example
+[accel]
+freq_mhz = 400          # overclock
+offchip_bus_bits = 1_024
+[energy]
+offchip_pj_per_bit = 2.5
+[features]
+pingpong = false
+[model]
+name = "tiny"
+tokens_x = 256
+[pruning]
+keep_ratio = 0.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(SAMPLE).unwrap();
+        assert_eq!(doc["accel"]["freq_mhz"], TomlVal::Int(400));
+        assert_eq!(doc["accel"]["offchip_bus_bits"], TomlVal::Int(1024));
+        assert_eq!(doc["energy"]["offchip_pj_per_bit"], TomlVal::Float(2.5));
+        assert_eq!(doc["features"]["pingpong"], TomlVal::Bool(false));
+        assert_eq!(doc["model"]["name"], TomlVal::Str("tiny".into()));
+    }
+
+    #[test]
+    fn applies_overrides() {
+        let mut accel = presets::streamdcim_default();
+        let mut model = presets::vilbert_base();
+        let doc = parse(SAMPLE).unwrap();
+        apply_accel_overrides(&mut accel, &doc);
+        apply_model_overrides(&mut model, &doc);
+        assert_eq!(accel.freq_mhz, 400);
+        assert_eq!(accel.offchip_bus_bits, 1024);
+        assert!((accel.energy.offchip_pj_per_bit - 2.5).abs() < 1e-12);
+        assert!(!accel.features.pingpong);
+        assert!(accel.features.hybrid_mode); // untouched
+        assert_eq!(model.name, "tiny");
+        assert_eq!(model.tokens_x, 256);
+        assert!((model.pruning.keep_ratio - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(doc["a"]["k"], TomlVal::Str("x # y".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("[a]\nks = [1, 2, 3]\n").unwrap();
+        assert_eq!(
+            doc["a"]["ks"],
+            TomlVal::Arr(vec![TomlVal::Int(1), TomlVal::Int(2), TomlVal::Int(3)])
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("[a]\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("[a]\nk = \"open\n").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Serving coordinator (Layer 3): the request-path owner.
+//!
+//! * [`stack`]  — the multimodal encoder stack: chains encoder-block
+//!   artifacts across pruning stages, with the DTPU gather between them.
+//! * [`server`] — the leader loop: request queue, dynamic batcher, a
+//!   worker owning the PJRT runtime, and serving statistics.
+
+pub mod server;
+pub mod stack;
+
+pub use server::{Coordinator, Request, Response, ServeStats};
+pub use stack::{EncoderStack, ForwardResult};

@@ -1,0 +1,300 @@
+//! The leader loop: request queue, dynamic batcher, runtime worker.
+//!
+//! Architecture (vLLM-router-like, scaled to one box):
+//!
+//! ```text
+//!   clients --submit--> [queue] --drain<=B--> leader thread
+//!                                             | owns Runtime + EncoderStack
+//!                                             | (PJRT objects never cross
+//!                                             |  threads: created in-loop)
+//!                                             +--> per-request Response
+//! ```
+//!
+//! The PJRT runtime is constructed *inside* the leader thread (its handles
+//! are not `Send`), which is also the honest model of the hardware: one
+//! accelerator, one command queue.  Batching drains up to `batch_size`
+//! queued requests per iteration so artifact/cache warmth is amortized and
+//! queueing delay is visible in the stats.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::model::refimpl::Mat;
+use crate::runtime::Runtime;
+
+use super::stack::EncoderStack;
+
+/// One multimodal request: vision tokens + language tokens.
+pub struct Request {
+    pub id: u64,
+    pub ix: Mat,
+    pub iy: Mat,
+}
+
+/// The served result.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub x: Mat,
+    pub y: Mat,
+    /// Stage sizes traversed (token counts).
+    pub stages: Vec<usize>,
+    /// Wall-clock service latency (queueing + execution), microseconds.
+    pub latency_us: u128,
+    /// Execution-only latency, microseconds.
+    pub exec_us: u128,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    pub total_latency_us: u128,
+    pub max_latency_us: u128,
+    pub latencies_us: Vec<u128>,
+}
+
+impl ServeStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_latency_us as f64 / self.served as f64
+        }
+    }
+    pub fn percentile_us(&self, p: f64) -> u128 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+enum Job {
+    Run(Request, Instant, Sender<Result<Response>>),
+    Shutdown,
+}
+
+/// Handle to the serving leader.
+pub struct Coordinator {
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+}
+
+impl Coordinator {
+    /// Start the leader. `artifact_dir = None` serves through the pure-Rust
+    /// reference implementation (no artifacts needed — used in tests).
+    pub fn start(
+        artifact_dir: Option<PathBuf>,
+        model: &ModelConfig,
+        stages: Vec<u64>,
+        batch_size: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<Job>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats2 = Arc::clone(&stats);
+        let model = model.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+
+        let handle = std::thread::Builder::new()
+            .name("leader".into())
+            .spawn(move || {
+                // PJRT objects live and die on this thread.
+                let runtime = match artifact_dir {
+                    Some(dir) => match Runtime::load(&dir) {
+                        Ok(rt) => {
+                            let _ = ready_tx.send(Ok(()));
+                            Some(rt)
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    },
+                    None => {
+                        let _ = ready_tx.send(Ok(()));
+                        None
+                    }
+                };
+                let stack = EncoderStack::new(&model, stages, seed);
+                leader_loop(rx, runtime, stack, batch_size.max(1), &stats2);
+            })
+            .map_err(|e| anyhow!("spawn leader: {e}"))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("leader died during startup"))??;
+        Ok(Coordinator { tx, handle: Some(handle), stats })
+    }
+
+    /// Submit a request; returns a blocking receiver for the response.
+    pub fn submit(&self, req: Request) -> Receiver<Result<Response>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Job::Run(req, Instant::now(), tx))
+            .expect("leader gone");
+        rx
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().expect("stats poisoned").clone()
+    }
+
+    /// Stop the leader and return final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.stats.lock().expect("stats poisoned").clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn leader_loop(
+    rx: Receiver<Job>,
+    runtime: Option<Runtime>,
+    stack: EncoderStack,
+    batch_size: usize,
+    stats: &Mutex<ServeStats>,
+) {
+    loop {
+        // Block for the first job, then drain the queue up to batch_size.
+        let first = match rx.recv() {
+            Ok(Job::Run(r, t, tx)) => (r, t, tx),
+            Ok(Job::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        while batch.len() < batch_size {
+            match rx.try_recv() {
+                Ok(Job::Run(r, t, tx)) => batch.push((r, t, tx)),
+                Ok(Job::Shutdown) => return,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let bsize = batch.len();
+        {
+            let mut s = stats.lock().expect("stats poisoned");
+            s.batches += 1;
+        }
+        for (req, enqueued, reply) in batch {
+            let exec_start = Instant::now();
+            let result = match &runtime {
+                Some(rt) => stack.forward(rt, req.ix, req.iy),
+                None => Ok(stack.forward_ref(req.ix, req.iy)),
+            };
+            let exec_us = exec_start.elapsed().as_micros();
+            let latency_us = enqueued.elapsed().as_micros();
+            let resp = result.map(|f| Response {
+                id: req.id,
+                x: f.x,
+                y: f.y,
+                stages: f.stages,
+                latency_us,
+                exec_us,
+                batch_size: bsize,
+            });
+            {
+                let mut s = stats.lock().expect("stats poisoned");
+                s.served += 1;
+                s.total_latency_us += latency_us;
+                s.max_latency_us = s.max_latency_us.max(latency_us);
+                s.latencies_us.push(latency_us);
+            }
+            let _ = reply.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::prng::Rng;
+
+    fn req(id: u64, rng: &mut Rng) -> Request {
+        Request {
+            id,
+            ix: Mat::random_i16_grid(rng, 128, 128, 0.5),
+            iy: Mat::random_i16_grid(rng, 128, 128, 0.5),
+        }
+    }
+
+    #[test]
+    fn serves_through_refimpl() {
+        let model = presets::functional_small();
+        let coord =
+            Coordinator::start(None, &model, vec![128, 96, 64], 4, 42).unwrap();
+        let mut rng = Rng::new(9);
+        let waiters: Vec<_> = (0..6).map(|i| coord.submit(req(i, &mut rng))).collect();
+        for (i, w) in waiters.into_iter().enumerate() {
+            let resp = w.recv().unwrap().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.x.rows, 64); // pruned to the last stage
+            assert_eq!(resp.stages, vec![128, 96, 64]);
+            assert!(resp.batch_size >= 1);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.served, 6);
+        assert!(stats.mean_latency_us() > 0.0);
+        assert!(stats.percentile_us(0.95) >= stats.percentile_us(0.5));
+    }
+
+    #[test]
+    fn batching_groups_queued_requests() {
+        let model = presets::functional_small();
+        let coord =
+            Coordinator::start(None, &model, vec![128, 96, 64], 8, 42).unwrap();
+        let mut rng = Rng::new(10);
+        // submit a burst; at least some should share a batch
+        let waiters: Vec<_> = (0..12).map(|i| coord.submit(req(i, &mut rng))).collect();
+        let sizes: Vec<usize> =
+            waiters.into_iter().map(|w| w.recv().unwrap().unwrap().batch_size).collect();
+        let stats = coord.shutdown();
+        assert_eq!(stats.served, 12);
+        assert!(stats.batches <= 12);
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn deterministic_responses_across_coordinators() {
+        let model = presets::functional_small();
+        let run = || {
+            let coord =
+                Coordinator::start(None, &model, vec![128, 96, 64], 1, 42).unwrap();
+            let mut rng = Rng::new(11);
+            let resp = coord.submit(req(0, &mut rng)).recv().unwrap().unwrap();
+            coord.shutdown();
+            resp.x.data
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,185 @@
+//! The multimodal encoder stack: ViLBERT-style cross-modal co-attention
+//! executed through AOT artifacts, with DTPU pruning between stages.
+//!
+//! Artifact shapes are static, so the stack walks the pruning schedule
+//! along the compiled stages (e.g. 128 -> 96 -> 64 tokens): after each
+//! cross layer the DTPU selects the top-k tokens of each modality from the
+//! returned importance scores, the coordinator gathers the surviving rows
+//! (an L3 operation — the paper's DTPU is outside the CIM cores too), and
+//! the next layer runs the smaller artifact.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::model::refimpl::{encoder_block, BlockWeights, Mat};
+use crate::pruning::PruningPolicy;
+use crate::runtime::Runtime;
+use crate::util::prng::Rng;
+
+/// Per-layer weight pairs (X-stream block, Y-stream block).
+pub struct EncoderStack {
+    pub weights: Vec<(BlockWeights, BlockWeights)>,
+    pub policy: PruningPolicy,
+    pub heads: usize,
+    pub d: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ForwardResult {
+    pub x: Mat,
+    pub y: Mat,
+    /// Token count at the entry of each cross layer.
+    pub stages: Vec<usize>,
+    /// Original-index map of surviving X/Y tokens.
+    pub kept_x: Vec<usize>,
+    pub kept_y: Vec<usize>,
+}
+
+impl EncoderStack {
+    /// Deterministic random weights on the INT16 grid (`seed`), one block
+    /// pair per cross layer of `model`.
+    pub fn new(model: &ModelConfig, stages: Vec<u64>, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = model.d_model as usize;
+        let f = model.d_ff as usize;
+        let weights = (0..model.cross_layers)
+            .map(|_| {
+                (BlockWeights::random(&mut rng, d, f), BlockWeights::random(&mut rng, d, f))
+            })
+            .collect();
+        EncoderStack {
+            weights,
+            policy: PruningPolicy::new(model.pruning.clone(), stages),
+            heads: model.heads as usize,
+            d,
+        }
+    }
+
+    fn artifact_name(&self, n: usize, d: usize, heads: usize) -> String {
+        format!("block_n{n}_d{d}_h{heads}")
+    }
+
+    /// Run the stack through the PJRT runtime.
+    pub fn forward(&self, rt: &Runtime, ix: Mat, iy: Mat) -> Result<ForwardResult> {
+        self.forward_impl(Some(rt), ix, iy)
+    }
+
+    /// Run the stack through the pure-Rust reference (no artifacts needed;
+    /// used for validation and as a fallback).
+    pub fn forward_ref(&self, ix: Mat, iy: Mat) -> ForwardResult {
+        self.forward_impl(None, ix, iy).expect("refimpl cannot fail")
+    }
+
+    fn forward_impl(&self, rt: Option<&Runtime>, ix: Mat, iy: Mat) -> Result<ForwardResult> {
+        assert_eq!(ix.rows, iy.rows, "both modalities enter at the same stage size");
+        let mut x = ix;
+        let mut y = iy;
+        let mut kept_x: Vec<usize> = (0..x.rows).collect();
+        let mut kept_y: Vec<usize> = (0..y.rows).collect();
+        let mut stages = Vec::new();
+
+        for (i, (wx, wy)) in self.weights.iter().enumerate() {
+            debug_assert_eq!(
+                self.policy.snap_to_stage(x.rows as u64) as usize,
+                x.rows,
+                "stack must enter each layer at a compiled stage size"
+            );
+            stages.push(x.rows);
+
+            let (nx, sy, ny, sx) = match rt {
+                Some(rt) => {
+                    let name = self.artifact_name(x.rows, self.d, self.heads);
+                    let (nx, sy) = rt
+                        .run_block(&name, &x, &y, wx)
+                        .map_err(|e| anyhow!("layer {i} X-stream: {e}"))?;
+                    let (ny, sx) = rt
+                        .run_block(&name, &y, &x, wy)
+                        .map_err(|e| anyhow!("layer {i} Y-stream: {e}"))?;
+                    (nx, sy, ny, sx)
+                }
+                None => {
+                    let (nx, sy) = encoder_block(wx, &x, &y, self.heads);
+                    let (ny, sx) = encoder_block(wy, &y, &x, self.heads);
+                    (nx, sy, ny, sx)
+                }
+            };
+            x = nx;
+            y = ny;
+
+            // DTPU: prune both modalities to the next stage size.
+            let target = self.policy.target_tokens(x.rows as u64, i as u64);
+            if (target as usize) < x.rows {
+                let keep_x_local = self.policy.select(&sx, target);
+                let keep_y_local = self.policy.select(&sy, target);
+                kept_x = keep_x_local.iter().map(|&j| kept_x[j]).collect();
+                kept_y = keep_y_local.iter().map(|&j| kept_y[j]).collect();
+                x = x.gather_rows(&keep_x_local);
+                y = y.gather_rows(&keep_y_local);
+            }
+        }
+
+        Ok(ForwardResult { x, y, stages, kept_x, kept_y })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tokens(rng: &mut Rng, n: usize, d: usize) -> Mat {
+        Mat::random_i16_grid(rng, n, d, 0.5)
+    }
+
+    fn stack() -> EncoderStack {
+        EncoderStack::new(&presets::functional_small(), vec![128, 96, 64], 7)
+    }
+
+    #[test]
+    fn ref_forward_prunes_along_stages() {
+        let s = stack();
+        let mut rng = Rng::new(1);
+        let r = s.forward_ref(tokens(&mut rng, 128, 128), tokens(&mut rng, 128, 128));
+        // functional_small prunes every cross layer, keep 0.75, snapped to
+        // stages 128 -> 96 -> 64
+        assert_eq!(r.stages, vec![128, 96, 64]);
+        assert_eq!(r.x.rows, 64);
+        assert_eq!(r.y.rows, 64);
+        assert_eq!(r.kept_x.len(), 64);
+        // survivors reference original indices, strictly increasing
+        assert!(r.kept_x.windows(2).all(|w| w[0] < w[1]));
+        assert!(*r.kept_x.last().unwrap() < 128);
+    }
+
+    #[test]
+    fn ref_forward_deterministic() {
+        let s = stack();
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let a = s.forward_ref(tokens(&mut r1, 128, 128), tokens(&mut r1, 128, 128));
+        let b = s.forward_ref(tokens(&mut r2, 128, 128), tokens(&mut r2, 128, 128));
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.kept_y, b.kept_y);
+    }
+
+    #[test]
+    fn no_pruning_keeps_all_tokens() {
+        let mut model = presets::functional_small();
+        model.pruning = crate::config::PruningSchedule::disabled();
+        let s = EncoderStack::new(&model, vec![128, 96, 64], 7);
+        let mut rng = Rng::new(3);
+        let r = s.forward_ref(tokens(&mut rng, 128, 128), tokens(&mut rng, 128, 128));
+        assert_eq!(r.x.rows, 128);
+        assert_eq!(r.stages, vec![128, 128, 128]);
+        assert_eq!(r.kept_x.len(), 128);
+    }
+
+    #[test]
+    fn weights_differ_per_layer_and_stream() {
+        let s = stack();
+        let (ax, ay) = &s.weights[0];
+        let (bx, _) = &s.weights[1];
+        assert_ne!(ax.wq.data, ay.wq.data);
+        assert_ne!(ax.wq.data, bx.wq.data);
+    }
+}

@@ -1,0 +1,282 @@
+//! The three dataflow schedulers compared in the paper (Sec. III-A):
+//!
+//! * [`non_stream`]   — conventional CIM work mode (ISSCC'21-class macros):
+//!   sequential ops, off-chip round-trips for every intermediate.
+//! * [`layer_stream`] — TranCIM's pipeline/parallel reconfigurable modes:
+//!   on-chip streaming between cores, but layer-granular CIM rewriting
+//!   whose latency is fully exposed as pipeline bubbles.
+//! * [`tile_stream`]  — StreamDCIM: mixed-stationary cross-forwarding with
+//!   tile-based execution decoupling and the ping-pong fine-grained
+//!   compute-rewriting pipeline that overlaps rewrites with compute.
+//!
+//! All three schedule the *same* op graph onto the *same* accelerator
+//! resources; only the overlap/placement rules differ.  Baselines run the
+//! unpruned graph (challenge 1: their rigid microarchitecture cannot host
+//! dynamic token pruning); Tile-stream runs with the DTPU enabled.
+
+pub mod layer_stream;
+pub mod non_stream;
+pub mod tile_stream;
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::metrics::RunReport;
+use crate::model::{build_graph, Layer, Op, OpGraph};
+use crate::sim::accel::{KCIM, QCIM, TBR};
+use crate::sim::{Accelerator, OpTiling};
+
+/// Where an op's matmul runs in the streaming dataflows (Fig. 3a mapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Core(usize),
+    /// Spread across all cores (static FFN-class ops).
+    AllCores,
+}
+
+/// Streaming-mode placement by op role.
+pub fn placement(op: &Op) -> Placement {
+    match op.name {
+        "q_gen" => Placement::Core(QCIM),
+        "k_gen" => Placement::Core(KCIM),
+        "v_gen" => Placement::Core(TBR),
+        "qkt" | "pv" => Placement::Core(TBR),
+        "o_proj" => Placement::Core(QCIM),
+        _ => Placement::AllCores, // ffn1 / ffn2
+    }
+}
+
+/// Build the graph a dataflow actually executes: baselines cannot prune.
+pub fn graph_for(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> OpGraph {
+    let mut m = model.clone();
+    let prune = kind == DataflowKind::TileStream && cfg.features.token_pruning;
+    if !prune {
+        m.pruning = crate::config::PruningSchedule::disabled();
+    }
+    build_graph(&m)
+}
+
+/// Entry point: run `model` under `kind` on `cfg`, producing a full report.
+pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunReport {
+    let graph = graph_for(kind, cfg, model);
+    let mut acc = Accelerator::new(cfg.clone());
+    let mut per_layer = Vec::with_capacity(graph.layers.len());
+
+    // Initial token embeddings arrive from off-chip once (both modalities).
+    let in_bits = (model.tokens_x + model.tokens_y) * model.d_model * model.bits;
+    acc.activity.offchip_bits += in_bits;
+    acc.offchip.acquire(0, cfg.offchip_cycles(in_bits), "embed-in");
+
+    for layer in &graph.layers {
+        let stats = match kind {
+            DataflowKind::NonStream => non_stream::run_layer(&mut acc, layer),
+            DataflowKind::LayerStream => layer_stream::run_layer(&mut acc, layer),
+            DataflowKind::TileStream => tile_stream::run_layer(&mut acc, layer),
+        };
+        per_layer.push(stats);
+    }
+
+    // Final pooled outputs leave the chip.
+    let last = graph.layers.last();
+    let out_tokens = last.map(|l| l.tokens_x + l.tokens_y).unwrap_or(0);
+    let out_bits = out_tokens * model.d_model * model.bits;
+    acc.activity.offchip_bits += out_bits;
+    acc.offchip.acquire(acc.makespan(), cfg.offchip_cycles(out_bits), "embed-out");
+
+    RunReport::from_accel(&model.name, kind, &acc, per_layer)
+}
+
+// ---------------------------------------------------------------------------
+// Shared accounting + scheduling helpers used by the three dataflows.
+// ---------------------------------------------------------------------------
+
+/// Record the energy-relevant traffic of one matmul execution.
+///
+/// * `static_weights`: stationary operand fetched from off-chip (weights);
+///   dynamic operands travel over the TBSN from the producing core.
+/// * `replay_passes`: how many times the moving operand is re-streamed
+///   (blocked weight-stationary execution replays activations per pass).
+/// * `roundtrip`: Non-stream round-trips moving operand and result through
+///   off-chip DRAM.
+pub(crate) fn account_matmul(
+    acc: &mut Accelerator,
+    op: &Op,
+    t: &OpTiling,
+    replay_passes: u64,
+    static_weights: bool,
+    roundtrip: bool,
+) {
+    let a = &mut acc.activity;
+    a.macs += op.macs();
+    a.cim_write_bits += t.stationary_bits();
+    if static_weights {
+        a.offchip_bits += t.stationary_bits(); // weights are never cacheable
+    } else {
+        a.tbsn_bits += t.stationary_bits();
+    }
+    a.tbsn_bits += t.moving_bits() * replay_passes.max(1);
+    a.buffer_bits += t.moving_bits() * replay_passes.max(1) + t.output_bits();
+    if roundtrip {
+        a.offchip_bits += t.moving_bits() + t.output_bits();
+        if !static_weights {
+            // dynamic stationary operand was parked off-chip by the producer
+            a.offchip_bits += t.stationary_bits();
+        }
+    }
+}
+
+/// Execute a static-weight matmul whose rewrite is *preloaded* (overlapped
+/// with earlier compute, as both streaming modes do for layer weights):
+/// the write port is acquired as early as possible so an idle port hides
+/// the rewrite entirely; a busy port surfaces as a partial bubble.
+/// Returns (compute_start, compute_end, exposed_rewrite_cycles).
+pub(crate) fn exec_static_preloaded(
+    acc: &mut Accelerator,
+    op: &Op,
+    earliest: u64,
+    place: Placement,
+) -> (u64, u64, u64) {
+    // geometry fields are Copy; read them out before taking &mut borrows
+    let cfg = &acc.cfg;
+    let t = OpTiling::of(cfg, op);
+    let (macros, cores): (u64, Vec<usize>) = match place {
+        Placement::Core(c) => (cfg.macros_per_core, vec![c]),
+        Placement::AllCores => (cfg.macros_per_core * cfg.cores, (0..cfg.cores as usize).collect()),
+    };
+    let rewrite = t.rewrite_cycles(cfg) / cores.len() as u64;
+    // Preload: ports may start before `earliest`.
+    let preload_from = earliest.saturating_sub(rewrite);
+    let mut ports_done = 0;
+    for &c in &cores {
+        let (_, e) = acc.write_ports[c].acquire(preload_from, rewrite, "preload");
+        ports_done = ports_done.max(e);
+    }
+    let compute = t.compute_cycles(macros);
+    let per_core = compute; // each core runs its share of passes in lockstep
+    let start_at = earliest.max(ports_done);
+    let mut end = 0;
+    let mut start = u64::MAX;
+    for &c in &cores {
+        let (s, e) = acc.cores[c].acquire(start_at, per_core, "compute");
+        start = start.min(s);
+        end = end.max(e);
+    }
+    let exposed = ports_done.saturating_sub(earliest);
+    account_matmul(acc, op, &t, t.replay_factor(macros), true, false);
+    (start, end, exposed)
+}
+
+/// SFU op execution helper.
+pub(crate) fn exec_sfu(acc: &mut Accelerator, op: &Op, earliest: u64) -> (u64, u64) {
+    let (cycles, ops) = crate::sim::sfu::sfu_cost(&acc.cfg, op);
+    acc.activity.sfu_ops += ops;
+    acc.sfu.acquire(earliest, cycles, "sfu")
+}
+
+/// DTPU ranking execution helper.
+pub(crate) fn exec_rank(acc: &mut Accelerator, tokens: u64, earliest: u64) -> (u64, u64) {
+    let (cycles, ops) = crate::sim::dtpu::rank_cost(&acc.cfg, tokens);
+    acc.activity.dtpu_ops += ops;
+    acc.dtpu.acquire(earliest, cycles, "rank")
+}
+
+/// Group a layer's ops per modality stream (cross layers carry both an
+/// X-stream and a Y-stream attention group), preserving op order.
+pub(crate) fn ops_by_stream(layer: &Layer) -> Vec<Vec<&Op>> {
+    let mut groups: Vec<(crate::model::Stream, Vec<&Op>)> = Vec::new();
+    for op in &layer.ops {
+        match groups.iter_mut().find(|(g, _)| *g == op.stream) {
+            Some((_, v)) => v.push(op),
+            None => groups.push((op.stream, vec![op])),
+        }
+    }
+    groups.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Find an op in a group by its role name.
+pub(crate) fn find<'a>(ops: &[&'a Op], role: &str) -> Option<&'a Op> {
+    ops.iter().find(|o| o.name == role).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::OpKind;
+
+    #[test]
+    fn placement_follows_floorplan() {
+        let cfg = presets::vilbert_base();
+        let g = build_graph(&cfg);
+        let l = &g.layers[0];
+        let q = find(&l.ops.iter().collect::<Vec<_>>(), "q_gen").unwrap();
+        assert_eq!(placement(q), Placement::Core(QCIM));
+        let k = find(&l.ops.iter().collect::<Vec<_>>(), "k_gen").unwrap();
+        assert_eq!(placement(k), Placement::Core(KCIM));
+        let qkt = find(&l.ops.iter().collect::<Vec<_>>(), "qkt").unwrap();
+        assert_eq!(placement(qkt), Placement::Core(TBR));
+        let ffn = find(&l.ops.iter().collect::<Vec<_>>(), "ffn1").unwrap();
+        assert_eq!(placement(ffn), Placement::AllCores);
+    }
+
+    #[test]
+    fn baselines_get_unpruned_graphs() {
+        let acc = presets::streamdcim_default();
+        let model = presets::vilbert_base();
+        let g_non = graph_for(DataflowKind::NonStream, &acc, &model);
+        let g_tile = graph_for(DataflowKind::TileStream, &acc, &model);
+        assert!(g_non.total_macs() > g_tile.total_macs());
+        assert!(g_non.layers.iter().all(|l| !l.prune_after));
+    }
+
+    #[test]
+    fn ops_by_stream_groups_cross_layer() {
+        let model = presets::vilbert_base();
+        let g = build_graph(&model);
+        let cross = g.layers.iter().find(|l| matches!(l.kind, crate::model::LayerKind::CrossModal)).unwrap();
+        let groups = ops_by_stream(cross);
+        assert_eq!(groups.len(), 2); // X and Y streams
+        for grp in &groups {
+            assert!(find(grp, "qkt").is_some());
+            assert!(find(grp, "softmax").is_some());
+        }
+    }
+
+    #[test]
+    fn account_roundtrip_adds_offchip() {
+        let cfg = presets::streamdcim_default();
+        let op = Op {
+            name: "qkt",
+            kind: OpKind::MatMulDynamic,
+            stream: crate::model::Stream::X,
+            batch: 1,
+            m: 128,
+            k: 64,
+            n: 256,
+            bits: 16,
+        };
+        let t = OpTiling::of(&cfg, &op);
+        let mut a1 = Accelerator::new(cfg.clone());
+        account_matmul(&mut a1, &op, &t, 1, false, false);
+        let mut a2 = Accelerator::new(cfg);
+        account_matmul(&mut a2, &op, &t, 1, false, true);
+        assert!(a2.activity.offchip_bits > a1.activity.offchip_bits);
+        assert_eq!(a1.activity.macs, a2.activity.macs);
+    }
+
+    #[test]
+    fn preloaded_static_rewrite_hidden_when_port_idle() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::vilbert_base();
+        let g = build_graph(&model);
+        let op = find(&g.layers[0].ops.iter().collect::<Vec<_>>(), "q_gen").unwrap();
+        let mut acc = Accelerator::new(cfg);
+        // Plenty of lead time: rewrite fully hidden.
+        let t = OpTiling::of(&acc.cfg.clone(), op);
+        let lead = t.rewrite_cycles(&acc.cfg) + 100;
+        let (_, _, exposed) = exec_static_preloaded(&mut acc, op, lead, Placement::Core(QCIM));
+        assert_eq!(exposed, 0);
+        // No lead time on a fresh accelerator: partially exposed.
+        let mut acc2 = Accelerator::new(presets::streamdcim_default());
+        let (_, _, exposed2) = exec_static_preloaded(&mut acc2, op, 0, Placement::Core(QCIM));
+        assert!(exposed2 > 0);
+    }
+}

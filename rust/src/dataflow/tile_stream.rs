@@ -1,0 +1,268 @@
+//! Tile-based streaming — StreamDCIM's dataflow (paper Sec. II-B/C).
+//!
+//! Three mechanisms distinguish it from layer streaming:
+//!
+//! 1. **Tile-based execution decoupling** — dynamic matmuls are scheduled
+//!    pass-by-pass: the stationary tiles of pass *p+1* are rewritten while
+//!    pass *p* computes (the ping-pong fine-grained compute-rewriting
+//!    pipeline, Fig. 4b).  In steady state the op costs
+//!    `max(compute, rewrite)` instead of `compute + rewrite`.
+//! 2. **Mixed-stationary cross-forwarding** (Fig. 4a) — hybrid-mode
+//!    TBR-CIM macros hold *both* operand tiles; each shell step reuses the
+//!    broadcaster's stored row and column tiles across all other macros,
+//!    so the moving operand is streamed over the TBSN exactly once
+//!    (no per-pass replay) and the freed macro is rewritten immediately.
+//! 3. **DTPU token pruning** — the graph shrinks along the layer sequence
+//!    (handled in graph construction) and the rank cost lands on the DTPU
+//!    timeline here.
+//!
+//! Ablations: `features.pingpong = false` serializes rewrites with compute
+//! (per-pass, still tile-granular); `features.hybrid_mode = false` halves
+//! the macros usable by dynamic matmuls (staging conflicts between the
+//! input and weight operands) and restores per-pass replay traffic.
+
+use crate::metrics::LayerStats;
+use crate::model::{Layer, Op};
+use crate::sim::accel::TBR;
+use crate::sim::{Accelerator, OpTiling};
+
+use super::{account_matmul, exec_rank, exec_sfu, exec_static_preloaded, find, ops_by_stream, placement};
+
+/// Schedule one dynamic matmul tile-by-tile with the ping-pong pipeline.
+///
+/// `stationary_ready(p)` gives the cycle at which the stationary tiles of
+/// pass `p` are available from the producing core (tile-granular
+/// decoupling: pass p needs only its own tiles, not the whole operand).
+/// Returns (first_compute_start, last_compute_end, exposed_rewrite).
+fn exec_dynamic_pingpong(
+    acc: &mut Accelerator,
+    op: &Op,
+    moving_ready: u64,
+    stat_start: u64,
+    stat_end: u64,
+) -> (u64, u64, u64) {
+    let cfg = &acc.cfg;
+    let t = OpTiling::of(cfg, op);
+    let hybrid = cfg.features.hybrid_mode;
+    let pingpong = cfg.features.pingpong;
+    let macros = if hybrid { cfg.macros_per_core } else { cfg.macros_per_core / 2 };
+    let passes = t.passes(macros);
+    let rw_pass = t.rewrite_cycles_per_pass(cfg, macros);
+    let comp_pass = t.m; // one row per cycle per pass
+
+    let mut first_start = u64::MAX;
+    // Start from the core's current ready time so contention with other
+    // work on TBR-CIM is not misattributed to rewrite exposure.
+    let mut prev_end = acc.cores[TBR].ready_at();
+    let mut exposed = 0u64;
+    let span = stat_end.saturating_sub(stat_start);
+    for p in 0..passes {
+        // tile-granular producer decoupling: pass p's stationary tiles
+        // stream out of the producing core proportionally to its progress
+        let avail = stat_start + span * (p + 1) / passes;
+        let (_, rw_end) = acc.write_ports[TBR].acquire(avail, rw_pass, "pp-rewrite");
+        let data_ready = moving_ready.max(avail);
+        let earliest = if pingpong {
+            rw_end.max(data_ready)
+        } else {
+            // ablation: rewrite blocks the macro array itself
+            let (_, blocked) = acc.cores[TBR].acquire(rw_end.max(data_ready), 0, "stall");
+            rw_end.max(data_ready).max(blocked)
+        };
+        let (cs, ce) = if pingpong {
+            acc.cores[TBR].acquire(earliest, comp_pass, "compute")
+        } else {
+            // hold the core for rewrite + compute (serialized)
+            acc.cores[TBR].acquire(data_ready.max(avail), rw_pass + comp_pass, "rw+compute")
+        };
+        let ideal = prev_end.max(data_ready);
+        exposed += cs.saturating_sub(ideal);
+        first_start = first_start.min(cs);
+        prev_end = ce;
+    }
+    // cross-forwarding reuse: both operands stationary in hybrid macros,
+    // so the moving operand streams exactly once
+    let replay = if hybrid { 1 } else { t.replay_factor(macros) };
+    account_matmul(acc, op, &t, replay, false, false);
+    (first_start.min(prev_end), prev_end, exposed)
+}
+
+pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
+    let start = acc.makespan();
+    let mut exposed_total = 0;
+    let mut layer_end = start;
+
+    for grp in ops_by_stream(layer) {
+        // --- generation, parallel across the three cores ----------------
+        let q = find(&grp, "q_gen").expect("q_gen");
+        let k = find(&grp, "k_gen").expect("k_gen");
+        let v = find(&grp, "v_gen").expect("v_gen");
+        // static preload queueing is not "exposed rewrite" (see
+        // layer_stream.rs — the metric tracks dynamic-rewrite bubbles)
+        let (qg_start, _qg_end, _) = exec_static_preloaded(acc, q, start, placement(q));
+        let (kg_start, kg_end, _) = exec_static_preloaded(acc, k, start, placement(k));
+        let (vg_start, vg_end, _) = exec_static_preloaded(acc, v, start, placement(v));
+
+        // --- QK^T with cross-forwarding + ping-pong ---------------------
+        // Q rows stream as generated; K^T tiles land in hybrid macros as
+        // K-CIM produces them.
+        let qkt = find(&grp, "qkt").expect("qkt");
+        let (qkt_start, qkt_end, e4) =
+            exec_dynamic_pingpong(acc, qkt, qg_start + 1, kg_start, kg_end);
+        exposed_total += e4;
+
+        // softmax pipelined with QK^T row read-out
+        let sm = find(&grp, "softmax").expect("softmax");
+        let fill = qkt.m.min(qkt_end.saturating_sub(qkt_start));
+        let (_, sm_end) = exec_sfu(acc, sm, qkt_start + fill);
+        let sm_end = sm_end.max(qkt_end);
+
+        // --- PV: V tiles were produced during generation; P rows stream
+        //     from the SFU (tile decoupling lets PV start with the first
+        //     P rows, modelled via sm pipelining above) ------------------
+        let pv = find(&grp, "pv").expect("pv");
+        let (_, pv_end, e5) = exec_dynamic_pingpong(acc, pv, sm_end, vg_start, vg_end);
+        exposed_total += e5;
+
+        // --- projection + FFN (static, preloaded, all cores) ------------
+        let oproj = find(&grp, "o_proj").expect("o_proj");
+        let (_, op_end, _) = exec_static_preloaded(acc, oproj, pv_end, placement(oproj));
+        let ln1 = find(&grp, "ln1").expect("ln1");
+        let (_, ln1_end) = exec_sfu(acc, ln1, op_end);
+        let ffn1 = find(&grp, "ffn1").expect("ffn1");
+        let (_, f1_end, _) = exec_static_preloaded(acc, ffn1, ln1_end, placement(ffn1));
+        let gelu = find(&grp, "gelu").expect("gelu");
+        let (_, g_end) = exec_sfu(acc, gelu, f1_end);
+        let ffn2 = find(&grp, "ffn2").expect("ffn2");
+        let (_, f2_end, _) = exec_static_preloaded(acc, ffn2, g_end, placement(ffn2));
+        let ln2 = find(&grp, "ln2").expect("ln2");
+        let (_, mut stream_end) = exec_sfu(acc, ln2, f2_end);
+
+        // --- DTPU ranking (pruning layers only) --------------------------
+        if let Some(rank) = find(&grp, "rank") {
+            // column-mean accumulation rode along with PV read-out; the
+            // rank/select happens as the layer drains
+            let (_, r_end) = exec_rank(acc, rank.n, pv_end);
+            stream_end = stream_end.max(r_end);
+        }
+
+        layer_end = layer_end.max(stream_end);
+    }
+
+    LayerStats {
+        index: layer.index,
+        label: layer.kind.label().to_string(),
+        start,
+        end: layer_end,
+        macs: layer.macs(),
+        exposed_rewrite: exposed_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::Features;
+    use crate::model::build_graph;
+
+    fn unpruned(mut m: crate::config::ModelConfig) -> crate::config::ModelConfig {
+        m.pruning = crate::config::PruningSchedule::disabled();
+        m
+    }
+
+    #[test]
+    fn beats_layer_stream_on_same_graph() {
+        // Paper-scale shapes: at tiny functional-small sizes both schedules
+        // fit in one pass and legitimately tie; the 4096-token workload is
+        // where the rewrite overlap pays.
+        let cfg = presets::streamdcim_default();
+        let model = unpruned(presets::vilbert_base());
+        let g = build_graph(&model);
+        let mut a1 = Accelerator::new(cfg.clone());
+        let mut a2 = Accelerator::new(cfg);
+        let mut t_layer = 0;
+        let mut t_tile = 0;
+        for l in &g.layers {
+            t_layer = super::super::layer_stream::run_layer(&mut a1, l).end;
+            t_tile = run_layer(&mut a2, l).end;
+        }
+        assert!(
+            t_tile < t_layer,
+            "tile-stream {t_tile} should beat layer-stream {t_layer}"
+        );
+    }
+
+    #[test]
+    fn pingpong_hides_rewrites() {
+        let model = unpruned(presets::functional_small());
+        let g = build_graph(&model);
+        let cfg_on = presets::streamdcim_default();
+        let mut cfg_off = presets::streamdcim_default();
+        cfg_off.features = Features { pingpong: false, ..Features::default() };
+        let mut on = Accelerator::new(cfg_on);
+        let mut off = Accelerator::new(cfg_off);
+        let mut t_on = 0;
+        let mut t_off = 0;
+        for l in &g.layers {
+            t_on = run_layer(&mut on, l).end;
+            t_off = run_layer(&mut off, l).end;
+        }
+        assert!(t_on < t_off, "ping-pong on {t_on} vs off {t_off}");
+    }
+
+    #[test]
+    fn hybrid_mode_improves_dynamic_throughput() {
+        // needs multi-pass dynamic matmuls; tiny shapes fit in one pass
+        let model = unpruned(presets::vilbert_base());
+        let g = build_graph(&model);
+        let cfg_on = presets::streamdcim_default();
+        let mut cfg_off = presets::streamdcim_default();
+        cfg_off.features = Features { hybrid_mode: false, ..Features::default() };
+        let mut on = Accelerator::new(cfg_on);
+        let mut off = Accelerator::new(cfg_off);
+        let mut t_on = 0;
+        let mut t_off = 0;
+        for l in &g.layers {
+            t_on = run_layer(&mut on, l).end;
+            t_off = run_layer(&mut off, l).end;
+        }
+        assert!(t_on < t_off, "hybrid on {t_on} vs off {t_off}");
+        // and replay traffic grows without hybrid reuse
+        assert!(off.activity.tbsn_bits > on.activity.tbsn_bits);
+    }
+
+    #[test]
+    fn exposed_rewrite_below_layer_stream() {
+        // Over a full run (where static preloads have lead time), the
+        // ping-pong pipeline must hide most of the rewrite latency that
+        // layer streaming exposes as bubbles.
+        let cfg = presets::streamdcim_default();
+        let model = unpruned(presets::vilbert_base());
+        let g = build_graph(&model);
+        let mut a1 = Accelerator::new(cfg.clone());
+        let mut a2 = Accelerator::new(cfg);
+        let mut layer_exposed = 0;
+        let mut tile_exposed = 0;
+        for l in &g.layers {
+            layer_exposed += super::super::layer_stream::run_layer(&mut a1, l).exposed_rewrite;
+            tile_exposed += run_layer(&mut a2, l).exposed_rewrite;
+        }
+        assert!(
+            tile_exposed < layer_exposed / 2,
+            "tile {tile_exposed} vs layer {layer_exposed}"
+        );
+    }
+
+    #[test]
+    fn dtpu_used_on_pruning_layers() {
+        let cfg = presets::streamdcim_default();
+        let g = build_graph(&presets::functional_small()); // pruning on
+        let mut acc = Accelerator::new(cfg);
+        for l in &g.layers {
+            run_layer(&mut acc, l);
+        }
+        assert!(acc.activity.dtpu_ops > 0);
+        assert!(acc.dtpu.busy_cycles() > 0);
+    }
+}

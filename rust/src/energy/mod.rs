@@ -1,0 +1,138 @@
+//! Energy and area models (Fig. 5 / Fig. 7 substrate).
+//!
+//! Energy = sum over activity counters x per-event constants + leakage x
+//! time.  Area = per-module constants x instance counts, calibrated to the
+//! paper's 12.10 mm^2 total in 28 nm.  Both models are analytical — the
+//! substitution for Synopsys DC / PrimeTime PX documented in DESIGN.md §2.
+
+pub mod area;
+
+use crate::config::{AccelConfig, EnergyConfig};
+use crate::sim::Activity;
+
+/// Per-component energy of a run, in millijoules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub cim_mac_mj: f64,
+    pub cim_write_mj: f64,
+    pub buffer_mj: f64,
+    pub offchip_mj: f64,
+    pub tbsn_mj: f64,
+    pub sfu_mj: f64,
+    pub dtpu_mj: f64,
+    pub leakage_mj: f64,
+    /// Average power over the run (mW).
+    pub avg_power_mw: f64,
+    /// Run time (ms), kept for power re-derivation.
+    pub ms: f64,
+}
+
+const PJ_TO_MJ: f64 = 1e-9;
+
+impl EnergyBreakdown {
+    pub fn compute(cfg: &AccelConfig, act: &Activity, cycles: u64) -> Self {
+        let e: &EnergyConfig = &cfg.energy;
+        let ms = cycles as f64 * cfg.ns_per_cycle() / 1e6;
+        let mut b = EnergyBreakdown {
+            cim_mac_mj: act.macs as f64 * e.mac_pj * PJ_TO_MJ,
+            cim_write_mj: act.cim_write_bits as f64 * e.cim_write_pj_per_bit * PJ_TO_MJ,
+            buffer_mj: act.buffer_bits as f64 * e.buffer_pj_per_bit * PJ_TO_MJ,
+            offchip_mj: act.offchip_bits as f64 * e.offchip_pj_per_bit * PJ_TO_MJ,
+            tbsn_mj: act.tbsn_bits as f64 * e.tbsn_pj_per_bit * PJ_TO_MJ,
+            sfu_mj: act.sfu_ops as f64 * e.sfu_pj_per_op * PJ_TO_MJ,
+            dtpu_mj: act.dtpu_ops as f64 * e.dtpu_pj_per_op * PJ_TO_MJ,
+            leakage_mj: e.leakage_mw * ms * 1e-3, // mW * ms = uJ; * 1e-3 = mJ
+            avg_power_mw: 0.0,
+            ms,
+        };
+        if ms > 0.0 {
+            b.avg_power_mw = b.total_mj() / ms * 1e3;
+        }
+        b
+    }
+
+    /// Total including leakage.
+    pub fn total_mj(&self) -> f64 {
+        self.cim_mac_mj
+            + self.cim_write_mj
+            + self.buffer_mj
+            + self.offchip_mj
+            + self.tbsn_mj
+            + self.sfu_mj
+            + self.dtpu_mj
+            + self.leakage_mj
+    }
+
+    /// On-chip energy only (the paper's Fig. 5b power excludes DRAM).
+    pub fn onchip_mj(&self) -> f64 {
+        self.total_mj() - self.offchip_mj
+    }
+
+    /// Named components for report rendering.
+    pub fn components(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("CIM MAC", self.cim_mac_mj),
+            ("CIM write", self.cim_write_mj),
+            ("Buffers", self.buffer_mj),
+            ("Off-chip", self.offchip_mj),
+            ("TBSN", self.tbsn_mj),
+            ("SFU", self.sfu_mj),
+            ("DTPU", self.dtpu_mj),
+            ("Leakage", self.leakage_mj),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn energy_scales_with_activity() {
+        let cfg = presets::streamdcim_default();
+        let a1 = Activity { macs: 1_000_000, ..Default::default() };
+        let a2 = Activity { macs: 2_000_000, ..Default::default() };
+        let e1 = EnergyBreakdown::compute(&cfg, &a1, 1000);
+        let e2 = EnergyBreakdown::compute(&cfg, &a2, 1000);
+        assert!((e2.cim_mac_mj / e1.cim_mac_mj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leakage_scales_with_time() {
+        let cfg = presets::streamdcim_default();
+        let a = Activity::default();
+        let e1 = EnergyBreakdown::compute(&cfg, &a, 200_000); // 1 ms
+        let e2 = EnergyBreakdown::compute(&cfg, &a, 400_000); // 2 ms
+        assert!((e2.leakage_mj / e1.leakage_mj - 2.0).abs() < 1e-9);
+        // leakage at 1 ms = leakage_mw * 1e-3 mJ
+        assert!((e1.leakage_mj - cfg.energy.leakage_mw * 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_power_consistent() {
+        let cfg = presets::streamdcim_default();
+        let a = Activity { macs: 10_000_000, offchip_bits: 1 << 20, ..Default::default() };
+        let e = EnergyBreakdown::compute(&cfg, &a, 200_000);
+        assert!((e.avg_power_mw - e.total_mj() / e.ms * 1e3).abs() < 1e-9);
+        assert!(e.avg_power_mw > 0.0);
+    }
+
+    #[test]
+    fn total_is_sum_of_components() {
+        let cfg = presets::streamdcim_default();
+        let a = Activity {
+            macs: 1000,
+            cim_write_bits: 500,
+            offchip_bits: 2000,
+            buffer_bits: 100,
+            tbsn_bits: 50,
+            sfu_ops: 10,
+            dtpu_ops: 5,
+        };
+        let e = EnergyBreakdown::compute(&cfg, &a, 100);
+        let sum: f64 = e.components().iter().map(|(_, v)| v).sum();
+        assert!((e.total_mj() - sum).abs() < 1e-15);
+        assert!(e.onchip_mj() < e.total_mj());
+    }
+}

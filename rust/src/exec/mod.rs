@@ -1,0 +1,146 @@
+//! Minimal thread executor (tokio is unavailable offline).
+//!
+//! The coordinator's needs are modest: a worker pool consuming jobs from a
+//! shared queue, plus oneshot reply channels.  std::sync::mpsc covers the
+//! channels; this module adds the pool and a tiny `Oneshot` wrapper.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("poisoned job queue");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker queue closed");
+    }
+
+    /// Submit a closure and get a handle to its result.
+    pub fn submit<T, F>(&self, f: F) -> Promise<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.spawn(move || {
+            let _ = tx.send(f());
+        });
+        Promise { rx }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Result handle for a submitted job.
+pub struct Promise<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> Promise<T> {
+    /// Block until the job completes.
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("job panicked or pool dropped")
+    }
+
+    pub fn try_wait(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let promises: Vec<_> = (0..64)
+            .map(|i| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i * 2
+                })
+            })
+            .collect();
+        let results: Vec<usize> = promises.into_iter().map(|p| p.wait()).collect();
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+        assert_eq!(results[5], 10);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..16 {
+                let c = Arc::clone(&counter);
+                pool.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn single_thread_ordering() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let ps: Vec<_> = (0..8)
+            .map(|i| {
+                let log = Arc::clone(&log);
+                pool.submit(move || log.lock().unwrap().push(i))
+            })
+            .collect();
+        for p in ps {
+            p.wait();
+        }
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+}

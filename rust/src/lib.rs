@@ -1,0 +1,38 @@
+//! StreamDCIM — tile-based streaming digital CIM accelerator for multimodal
+//! Transformers (reproduction of Qin et al., cs.AR 2025).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1 (Pallas)** — tile-based CIM-macro matmul kernels authored in
+//!   `python/compile/kernels/`, validated against pure-jnp oracles.
+//! * **L2 (JAX)** — the multimodal (ViLBERT-style) attention graph in
+//!   `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — the cycle-level StreamDCIM simulator (CIM
+//!   macros, TBSN, DTPU, SFU, the three dataflows), the PJRT runtime that
+//!   executes the AOT artifacts for functional numerics, and the serving
+//!   coordinator.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only; the `streamdcim` binary is self-contained afterwards.
+//!
+//! Offline note: tokio/clap/serde/criterion/proptest are not available in
+//! this environment's vendored crate set, so the crate ships equivalent
+//! substrates: [`exec`] (thread executor), [`cli`] (arg parser), [`config`]
+//! (TOML-subset), [`util::json`], [`benchkit`] and [`propcheck`].
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod exec;
+pub mod metrics;
+pub mod model;
+pub mod propcheck;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,231 @@
+//! `streamdcim` — leader entrypoint.
+//!
+//! See `streamdcim help` (cli::USAGE) for commands.  The binary is fully
+//! self-contained after `make artifacts`: simulation needs no artifacts at
+//! all; `serve` loads the AOT HLO text through the PJRT CPU client.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use streamdcim::cli::{self, Args};
+use streamdcim::config::{presets, toml, AccelConfig, DataflowKind, ModelConfig};
+use streamdcim::coordinator::{Coordinator, Request};
+use streamdcim::model::refimpl::Mat;
+use streamdcim::report;
+use streamdcim::trace::render_gantt;
+use streamdcim::util::prng::Rng;
+use streamdcim::{dataflow, runtime};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::USAGE);
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", cli::USAGE);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", cli::USAGE);
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_configs(args: &Args) -> anyhow::Result<(AccelConfig, ModelConfig)> {
+    let mut accel = presets::streamdcim_default();
+    let mut model = presets::model_by_name(args.flag_or("model", "base"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", args.flag_or("model", "?")))?;
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        toml::apply_accel_overrides(&mut accel, &doc);
+        toml::apply_model_overrides(&mut model, &doc);
+    }
+    if args.has("no-pruning") {
+        model.pruning = streamdcim::config::PruningSchedule::disabled();
+    }
+    Ok((accel, model))
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let (accel, model) = load_configs(args)?;
+    let kind = DataflowKind::parse(args.flag_or("dataflow", "tile"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataflow"))?;
+    let r = dataflow::run(kind, &accel, &model);
+    if args.has("json") {
+        println!("{}", r.to_json().to_string_pretty());
+    } else {
+        println!("model      : {}", r.model);
+        println!("dataflow   : {}", r.dataflow.name());
+        println!("cycles     : {} ({:.2} ms @ {} MHz)", r.cycles, r.ms, accel.freq_mhz);
+        println!("energy     : {:.2} mJ  (avg {:.1} mW)", r.energy.total_mj(), r.energy.avg_power_mw);
+        println!("macs       : {:.3} T", r.activity.macs as f64 / 1e12);
+        println!("off-chip   : {:.1} Mb", r.activity.offchip_bits as f64 / 1e6);
+        println!("exposed rw : {} cycles", r.exposed_rewrite());
+        println!("-- utilization --");
+        for (name, u) in &r.utilization {
+            println!("  {name:<10} {:>5.1} %", u * 100.0);
+        }
+    }
+    if args.has("trace") {
+        // re-run the first layers with tracing for the gantt view
+        let mut acc = streamdcim::sim::Accelerator::with_trace(accel.clone());
+        let graph = dataflow::graph_for(kind, &accel, &model);
+        for layer in graph.layers.iter().take(2) {
+            match kind {
+                DataflowKind::NonStream => {
+                    dataflow::non_stream::run_layer(&mut acc, layer);
+                }
+                DataflowKind::LayerStream => {
+                    dataflow::layer_stream::run_layer(&mut acc, layer);
+                }
+                DataflowKind::TileStream => {
+                    dataflow::tile_stream::run_layer(&mut acc, layer);
+                }
+            }
+        }
+        println!("\n-- pipeline trace (first 2 layers) --");
+        println!("{}", render_gantt(&acc, 0, acc.makespan(), 100));
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let (accel, _) = load_configs(args)?;
+    let figure = args.flag_or("figure", "headline");
+    let both = || -> Vec<(String, Vec<streamdcim::metrics::RunReport>)> {
+        [presets::vilbert_base(), presets::vilbert_large()]
+            .into_iter()
+            .map(|m| (m.name.clone(), report::run_all(&accel, &m)))
+            .collect()
+    };
+    let fig = match figure {
+        "fig5" => {
+            let runs = report::run_all(&accel, &presets::vilbert_base());
+            let tile = runs
+                .iter()
+                .find(|r| r.dataflow == DataflowKind::TileStream)
+                .expect("tile run");
+            report::fig5(&accel, tile)
+        }
+        "fig6" => report::fig6(&both()),
+        "fig7" => report::fig7(&both()),
+        "headline" => report::headline(&both()),
+        "e5" => e5_report(&accel),
+        other => anyhow::bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5)"),
+    };
+    println!("{}\n{}", fig.title, fig.body);
+    Ok(())
+}
+
+/// E5: the Sec. I TranCIM microbenchmark (rewrite fraction of QK^T).
+fn e5_report(accel: &AccelConfig) -> report::FigureText {
+    use streamdcim::model::{Op, OpKind, Stream};
+    use streamdcim::sim::OpTiling;
+    let op = Op {
+        name: "qkt",
+        kind: OpKind::MatMulDynamic,
+        stream: Stream::X,
+        batch: 1,
+        m: 2048,
+        k: 512,
+        n: 2048,
+        bits: 8,
+    };
+    let t = OpTiling::of(accel, &op);
+    let rewrite = t.rewrite_cycles(accel);
+    let compute = t.compute_cycles(accel.macros_per_core);
+    let frac = rewrite as f64 / (rewrite + compute) as f64 * 100.0;
+    let body = format!(
+        "QK^T, K = 2048x512 INT8, {}-bit bus (paper Sec. I)\n\
+         layer-stream rewrite  : {rewrite} cycles\n\
+         QK^T compute          : {compute} cycles\n\
+         rewrite fraction      : {frac:.1} %   (paper: >57 %)\n",
+        accel.offchip_bus_bits
+    );
+    report::FigureText { title: "E5 — TranCIM rewrite-fraction microbenchmark".into(), body }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = presets::functional_small();
+    let artifacts = if args.has("ref") {
+        None
+    } else {
+        Some(PathBuf::from(args.flag_or("artifacts", "artifacts")))
+    };
+    let n_req = args.flag_u64("requests", 32);
+    let batch = args.flag_u64("batch", 4) as usize;
+    let seed = args.flag_u64("seed", 42);
+    let stages = vec![128, 96, 64];
+
+    println!(
+        "starting coordinator: {} requests, batch {batch}, {}",
+        n_req,
+        if artifacts.is_some() { "PJRT artifacts" } else { "pure-rust reference" }
+    );
+    let started = std::time::Instant::now();
+    let coord = Coordinator::start(artifacts, &model, stages, batch, seed)?;
+    println!("leader ready in {:.2} s", started.elapsed().as_secs_f64());
+
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let waiters: Vec<_> = (0..n_req)
+        .map(|id| {
+            coord.submit(Request {
+                id,
+                ix: Mat::random_i16_grid(&mut rng, 128, 128, 0.5),
+                iy: Mat::random_i16_grid(&mut rng, 128, 128, 0.5),
+            })
+        })
+        .collect();
+    for w in waiters {
+        let resp = w.recv().expect("leader gone")?;
+        if args.has("verbose") {
+            println!(
+                "  req {:>3}  stages {:?}  exec {:>8} us  batch {}",
+                resp.id, resp.stages, resp.exec_us, resp.batch_size
+            );
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = coord.shutdown();
+    println!("served {} requests in {:.2} s", stats.served, wall.as_secs_f64());
+    println!("throughput : {:.2} req/s", stats.served as f64 / wall.as_secs_f64());
+    println!(
+        "latency    : mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+        stats.mean_latency_us() / 1e3,
+        stats.percentile_us(0.5) as f64 / 1e3,
+        stats.percentile_us(0.95) as f64 / 1e3,
+        stats.max_latency_us as f64 / 1e3
+    );
+    println!("mean batch : {:.2}", stats.mean_batch());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let rt = runtime::Runtime::load(&dir)?;
+    println!("{} artifacts in {:?} (fingerprint {})", rt.artifact_names().len(), dir, &rt.manifest.fingerprint[..12.min(rt.manifest.fingerprint.len())]);
+    for name in rt.artifact_names() {
+        let s = rt.spec(name).unwrap();
+        println!("  {:<24} kind {:<14} inputs {:?} -> outputs {:?}", name, s.kind, s.inputs.len(), s.outputs);
+    }
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Run statistics: per-layer timing, activity, utilization, energy.
+
+use crate::config::DataflowKind;
+use crate::energy::EnergyBreakdown;
+use crate::sim::{Accelerator, Activity};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub index: usize,
+    pub label: String,
+    pub start: u64,
+    pub end: u64,
+    pub macs: u64,
+    /// Rewrite cycles that were *not* hidden behind compute (bubbles).
+    pub exposed_rewrite: u64,
+}
+
+impl LayerStats {
+    pub fn cycles(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub model: String,
+    pub dataflow: DataflowKind,
+    pub cycles: u64,
+    pub ms: f64,
+    pub activity: Activity,
+    pub energy: EnergyBreakdown,
+    pub per_layer: Vec<LayerStats>,
+    /// (resource name, utilization in [0,1]) over the makespan.
+    pub utilization: Vec<(String, f64)>,
+}
+
+impl RunReport {
+    pub fn from_accel(
+        model: &str,
+        dataflow: DataflowKind,
+        acc: &Accelerator,
+        per_layer: Vec<LayerStats>,
+    ) -> Self {
+        let cycles = acc.makespan();
+        let ms = acc.ms(cycles);
+        let energy = crate::energy::EnergyBreakdown::compute(&acc.cfg, &acc.activity, cycles);
+        let mut utilization: Vec<(String, f64)> = acc
+            .cores
+            .iter()
+            .chain(acc.write_ports.iter())
+            .chain([&acc.offchip, &acc.tbsn, &acc.sfu, &acc.dtpu])
+            .map(|t| (t.name.clone(), t.utilization(cycles)))
+            .collect();
+        utilization.sort_by(|a, b| a.0.cmp(&b.0));
+        RunReport {
+            model: model.to_string(),
+            dataflow,
+            cycles,
+            ms,
+            activity: acc.activity,
+            energy,
+            per_layer,
+            utilization,
+        }
+    }
+
+    /// Total exposed rewrite bubbles across the run.
+    pub fn exposed_rewrite(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.exposed_rewrite).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("dataflow", Json::str(self.dataflow.name())),
+            ("cycles", Json::num(self.cycles as f64)),
+            ("ms", Json::num(self.ms)),
+            ("energy_mj", Json::num(self.energy.total_mj())),
+            ("avg_power_mw", Json::num(self.energy.avg_power_mw)),
+            ("macs", Json::num(self.activity.macs as f64)),
+            ("offchip_bits", Json::num(self.activity.offchip_bits as f64)),
+            ("cim_write_bits", Json::num(self.activity.cim_write_bits as f64)),
+            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite() as f64)),
+            (
+                "utilization",
+                Json::obj(
+                    self.utilization
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "per_layer_cycles",
+                Json::arr(self.per_layer.iter().map(|l| Json::num(l.cycles() as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn report_from_accel() {
+        let mut acc = Accelerator::new(presets::streamdcim_default());
+        acc.cores[0].acquire(0, 1000, "c");
+        acc.activity.macs = 500;
+        let r = RunReport::from_accel(
+            "test",
+            DataflowKind::TileStream,
+            &acc,
+            vec![LayerStats {
+                index: 0,
+                label: "l0".into(),
+                start: 0,
+                end: 1000,
+                macs: 500,
+                exposed_rewrite: 10,
+            }],
+        );
+        assert_eq!(r.cycles, 1000);
+        assert_eq!(r.exposed_rewrite(), 10);
+        assert!(r.ms > 0.0);
+        let j = r.to_json().to_string_pretty();
+        assert!(j.contains("Tile-stream"));
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+}

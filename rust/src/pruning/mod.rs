@@ -1,0 +1,128 @@
+//! Token-pruning policy (the algorithmic half of the DTPU; the timing
+//! model lives in `sim::dtpu`).
+//!
+//! Scores are the column means of the attention probability matrix
+//! (Evo-ViT / SpAtten, paper Sec. II-A): the L2 artifact returns them, and
+//! [`PruningPolicy`] turns them into a keep-set, snapped to the token
+//! counts for which AOT artifacts exist (HLO shapes are static).
+
+use crate::config::PruningSchedule;
+use crate::sim::dtpu::top_k_indices;
+
+/// Coordinator-facing pruning policy.
+#[derive(Debug, Clone)]
+pub struct PruningPolicy {
+    pub schedule: PruningSchedule,
+    /// Token counts with compiled artifacts, descending (e.g. [128, 96, 64]).
+    pub stages: Vec<u64>,
+}
+
+impl PruningPolicy {
+    pub fn new(schedule: PruningSchedule, mut stages: Vec<u64>) -> Self {
+        stages.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(!stages.is_empty(), "need at least one artifact stage");
+        PruningPolicy { schedule, stages }
+    }
+
+    /// Largest artifact stage <= `tokens` (artifact shapes are static, so
+    /// the keep-set is snapped down to a compiled size).
+    pub fn snap_to_stage(&self, tokens: u64) -> u64 {
+        self.stages
+            .iter()
+            .copied()
+            .find(|&s| s <= tokens)
+            .unwrap_or(*self.stages.last().unwrap())
+    }
+
+    /// Target token count after pruning `n` tokens at cross-layer `i`
+    /// (0-based), snapped to an artifact stage.
+    pub fn target_tokens(&self, n: u64, cross_layer: u64) -> u64 {
+        if self.schedule.every == 0 || (cross_layer + 1) % self.schedule.every != 0 {
+            return self.snap_to_stage(n);
+        }
+        self.snap_to_stage(self.schedule.prune_once(n))
+    }
+
+    /// Select which tokens survive given their scores.
+    pub fn select(&self, scores: &[f32], target: u64) -> Vec<usize> {
+        top_k_indices(scores, target as usize)
+    }
+}
+
+/// Analytical work-reduction of a pruning schedule: ratio of pruned to
+/// unpruned attention MACs over `layers` cross layers (attention work is
+/// quadratic in tokens, generation linear).  Used by the pruning ablation
+/// bench to reproduce the paper's ">1.6x from pruning" claim shape.
+pub fn attention_work_ratio(schedule: &PruningSchedule, n0: u64, layers: u64) -> f64 {
+    let mut pruned = 0.0;
+    let mut full = 0.0;
+    let mut n = n0;
+    for i in 0..layers {
+        pruned += (n as f64) * (n as f64);
+        full += (n0 as f64) * (n0 as f64);
+        if schedule.every > 0 && (i + 1) % schedule.every == 0 {
+            n = schedule.prune_once(n);
+        }
+    }
+    full / pruned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> PruningPolicy {
+        PruningPolicy::new(
+            PruningSchedule { every: 1, keep_ratio: 0.75, min_tokens: 64 },
+            vec![64, 128, 96],
+        )
+    }
+
+    #[test]
+    fn stages_sorted_descending() {
+        assert_eq!(policy().stages, vec![128, 96, 64]);
+    }
+
+    #[test]
+    fn snap_rounds_down() {
+        let p = policy();
+        assert_eq!(p.snap_to_stage(128), 128);
+        assert_eq!(p.snap_to_stage(127), 96);
+        assert_eq!(p.snap_to_stage(96), 96);
+        assert_eq!(p.snap_to_stage(70), 64);
+        assert_eq!(p.snap_to_stage(10), 64); // floor stage
+    }
+
+    #[test]
+    fn target_follows_schedule() {
+        let p = policy();
+        // every=1: prune each cross layer; 128 * 0.75 = 96
+        assert_eq!(p.target_tokens(128, 0), 96);
+        assert_eq!(p.target_tokens(96, 1), 64); // 72 snaps to 64
+        let p2 = PruningPolicy::new(
+            PruningSchedule { every: 2, keep_ratio: 0.75, min_tokens: 64 },
+            vec![128, 96, 64],
+        );
+        assert_eq!(p2.target_tokens(128, 0), 128); // not a pruning layer
+        assert_eq!(p2.target_tokens(128, 1), 96);
+    }
+
+    #[test]
+    fn select_returns_sorted_survivors() {
+        let p = policy();
+        let scores = vec![0.1, 0.5, 0.3, 0.9, 0.2];
+        let kept = p.select(&scores, 3);
+        assert_eq!(kept, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn work_ratio_exceeds_paper_claim() {
+        // paper Sec. I: pruning image-token redundancy -> >1.6x speedup
+        let s = PruningSchedule { every: 1, keep_ratio: 0.7, min_tokens: 16 };
+        let r = attention_work_ratio(&s, 4096, 6);
+        assert!(r > 1.6, "ratio {r}");
+        // disabled schedule -> exactly 1.0
+        let r0 = attention_work_ratio(&PruningSchedule::disabled(), 4096, 6);
+        assert!((r0 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,199 @@
+//! Experiment report rendering: regenerates the paper's figures as text
+//! tables (the bench harness and CLI both route through here).
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::dataflow;
+use crate::energy::area::AreaModel;
+use crate::metrics::RunReport;
+use crate::util::geomean;
+
+/// All three dataflows on one model.
+pub fn run_all(cfg: &AccelConfig, model: &ModelConfig) -> Vec<RunReport> {
+    DataflowKind::ALL.iter().map(|k| dataflow::run(*k, cfg, model)).collect()
+}
+
+fn find<'a>(runs: &'a [RunReport], k: DataflowKind) -> &'a RunReport {
+    runs.iter().find(|r| r.dataflow == k).expect("missing dataflow run")
+}
+
+/// Fig. 6-style performance table for one model.  Speedups are normalized
+/// to Non-stream (the paper's bars) and to Layer-stream.
+pub fn fig6_rows(runs: &[RunReport]) -> Vec<(String, f64, f64)> {
+    let non = find(runs, DataflowKind::NonStream).cycles as f64;
+    runs.iter()
+        .map(|r| (r.dataflow.name().to_string(), r.cycles as f64, non / r.cycles as f64))
+        .map(|(n, c, s)| (n, c, s))
+        .collect()
+}
+
+/// (speedup vs Non-stream, speedup vs Layer-stream) of Tile-stream.
+pub fn speedups(runs: &[RunReport]) -> (f64, f64) {
+    let non = find(runs, DataflowKind::NonStream).cycles as f64;
+    let layer = find(runs, DataflowKind::LayerStream).cycles as f64;
+    let tile = find(runs, DataflowKind::TileStream).cycles as f64;
+    (non / tile, layer / tile)
+}
+
+/// (energy saving vs Non-stream, vs Layer-stream) of Tile-stream.
+pub fn energy_savings(runs: &[RunReport]) -> (f64, f64) {
+    let non = find(runs, DataflowKind::NonStream).energy.total_mj();
+    let layer = find(runs, DataflowKind::LayerStream).energy.total_mj();
+    let tile = find(runs, DataflowKind::TileStream).energy.total_mj();
+    (non / tile, layer / tile)
+}
+
+pub struct FigureText {
+    pub title: String,
+    pub body: String,
+}
+
+/// Fig. 5: area + (peak-activity) power breakdown.
+pub fn fig5(cfg: &AccelConfig, peak_run: &RunReport) -> FigureText {
+    let area = AreaModel::default();
+    let bd = area.breakdown(cfg);
+    let total = area.total_mm2(cfg);
+    let mut body = String::new();
+    body.push_str("(a) Area breakdown\n");
+    for (name, mm2) in &bd {
+        body.push_str(&format!(
+            "  {:<24} {:>7.2} mm^2  ({:>4.1} %)\n",
+            name,
+            mm2,
+            mm2 / total * 100.0
+        ));
+    }
+    body.push_str(&format!("  {:<24} {total:>7.2} mm^2  (paper: 12.10 mm^2)\n", "TOTAL"));
+    body.push_str("\n(b) Power breakdown (ViLBERT-base, Tile-stream)\n");
+    let e = &peak_run.energy;
+    let total_on = e.onchip_mj();
+    for (name, mj) in e.components() {
+        if name == "Off-chip" {
+            continue; // chip power excludes DRAM
+        }
+        let mw = if e.ms > 0.0 { mj / e.ms * 1e3 } else { 0.0 };
+        body.push_str(&format!(
+            "  {:<24} {:>8.2} mW  ({:>4.1} %)\n",
+            name,
+            mw,
+            if total_on > 0.0 { mj / total_on * 100.0 } else { 0.0 }
+        ));
+    }
+    let chip_mw = if e.ms > 0.0 { total_on / e.ms * 1e3 } else { 0.0 };
+    body.push_str(&format!(
+        "  {:<24} {chip_mw:>8.2} mW  (paper max: 122.77 mW)\n",
+        "TOTAL (on-chip)"
+    ));
+    FigureText { title: "Fig. 5 — Area and Power Breakdown".into(), body }
+}
+
+/// Fig. 6: performance comparison across dataflows on one or two models.
+pub fn fig6(all: &[(String, Vec<RunReport>)]) -> FigureText {
+    let mut body = String::new();
+    for (model, runs) in all {
+        body.push_str(&format!("{model}\n"));
+        let non = find(runs, DataflowKind::NonStream).cycles as f64;
+        for r in runs.iter() {
+            body.push_str(&format!(
+                "  {:<14} {:>14} cycles  {:>8.2} ms   speedup vs Non-stream {:>5.2}x\n",
+                r.dataflow.name(),
+                r.cycles,
+                r.ms,
+                non / r.cycles as f64
+            ));
+        }
+        let (s_non, s_layer) = speedups(runs);
+        body.push_str(&format!(
+            "  Tile-stream speedup: {s_non:.2}x vs Non-stream, {s_layer:.2}x vs Layer-stream\n\n"
+        ));
+    }
+    if all.len() >= 2 {
+        let per: Vec<(f64, f64)> = all.iter().map(|(_, r)| speedups(r)).collect();
+        let g_non = geomean(&per.iter().map(|p| p.0).collect::<Vec<_>>());
+        let g_layer = geomean(&per.iter().map(|p| p.1).collect::<Vec<_>>());
+        body.push_str(&format!(
+            "geomean speedup: {g_non:.2}x vs Non-stream (paper 2.63x), {g_layer:.2}x vs Layer-stream (paper 1.28x)\n"
+        ));
+    }
+    FigureText { title: "Fig. 6 — Performance Comparison".into(), body }
+}
+
+/// Fig. 7: energy comparison, normalized to Non-stream.
+pub fn fig7(all: &[(String, Vec<RunReport>)]) -> FigureText {
+    let mut body = String::new();
+    for (model, runs) in all {
+        body.push_str(&format!("{model}\n"));
+        let non = find(runs, DataflowKind::NonStream).energy.total_mj();
+        for r in runs.iter() {
+            let e = r.energy.total_mj();
+            body.push_str(&format!(
+                "  {:<14} {:>10.3} mJ   normalized {:>5.3}   saving vs Non-stream {:>5.2}x\n",
+                r.dataflow.name(),
+                e,
+                e / non,
+                non / e
+            ));
+        }
+        let (e_non, e_layer) = energy_savings(runs);
+        body.push_str(&format!(
+            "  Tile-stream energy saving: {e_non:.2}x vs Non-stream, {e_layer:.2}x vs Layer-stream\n\n"
+        ));
+    }
+    if all.len() >= 2 {
+        let per: Vec<(f64, f64)> = all.iter().map(|(_, r)| energy_savings(r)).collect();
+        let g_non = geomean(&per.iter().map(|p| p.0).collect::<Vec<_>>());
+        let g_layer = geomean(&per.iter().map(|p| p.1).collect::<Vec<_>>());
+        body.push_str(&format!(
+            "geomean energy saving: {g_non:.2}x vs Non-stream (paper 2.26x), {g_layer:.2}x vs Layer-stream (paper 1.23x)\n"
+        ));
+    }
+    FigureText { title: "Fig. 7 — Energy Comparison (normalized to Non-stream)".into(), body }
+}
+
+/// The paper's headline geomean claims (conclusion section).
+pub fn headline(all: &[(String, Vec<RunReport>)]) -> FigureText {
+    let sp: Vec<(f64, f64)> = all.iter().map(|(_, r)| speedups(r)).collect();
+    let en: Vec<(f64, f64)> = all.iter().map(|(_, r)| energy_savings(r)).collect();
+    let body = format!(
+        "geomean speedup      : {:.2}x vs Non-stream (paper 2.63x), {:.2}x vs Layer-stream (paper 1.28x)\n\
+         geomean energy saving: {:.2}x vs Non-stream (paper 2.26x), {:.2}x vs Layer-stream (paper 1.23x)\n",
+        geomean(&sp.iter().map(|p| p.0).collect::<Vec<_>>()),
+        geomean(&sp.iter().map(|p| p.1).collect::<Vec<_>>()),
+        geomean(&en.iter().map(|p| p.0).collect::<Vec<_>>()),
+        geomean(&en.iter().map(|p| p.1).collect::<Vec<_>>()),
+    );
+    FigureText { title: "Headline (geomean over ViLBERT-base/-large)".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn small_model_end_to_end_ordering() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::functional_small();
+        let runs = run_all(&cfg, &model);
+        assert_eq!(runs.len(), 3);
+        let (s_non, s_layer) = speedups(&runs);
+        assert!(s_non > 1.0, "tile must beat non-stream ({s_non})");
+        assert!(s_layer > 1.0, "tile must beat layer-stream ({s_layer})");
+        assert!(s_non > s_layer);
+        let (e_non, e_layer) = energy_savings(&runs);
+        assert!(e_non > 1.0, "energy vs non ({e_non})");
+        assert!(e_layer > 1.0, "energy vs layer ({e_layer})");
+    }
+
+    #[test]
+    fn figures_render() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::functional_small();
+        let runs = run_all(&cfg, &model);
+        let tile = runs.iter().find(|r| r.dataflow == DataflowKind::TileStream).unwrap();
+        let f5 = fig5(&cfg, tile);
+        assert!(f5.body.contains("TOTAL"));
+        let all = vec![("small".to_string(), runs)];
+        assert!(fig6(&all).body.contains("Tile-stream speedup"));
+        assert!(fig7(&all).body.contains("energy saving"));
+    }
+}

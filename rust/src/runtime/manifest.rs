@@ -1,0 +1,173 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    /// Input shapes, in call order (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (f32).
+    pub outputs: Vec<Vec<usize>>,
+    /// encoder_block / qkv: token count `n`; matmul/softmax: 0.
+    pub n: usize,
+    pub d: usize,
+    pub heads: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    /// Pruning stages (token counts) with compiled encoder blocks.
+    pub stages: Vec<usize>,
+    pub d: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn shapes(v: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    v.get(key)
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("missing '{key}'"))?
+        .iter()
+        .map(|io| {
+            io.get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        if j.get("version").and_then(|v| v.as_u64()) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let defaults = j.get("defaults").ok_or_else(|| anyhow!("missing defaults"))?;
+        let num = |o: &Json, k: &str| -> usize {
+            o.get(k).and_then(|v| v.as_u64()).unwrap_or(0) as usize
+        };
+        let stages = defaults
+            .get("stages")
+            .and_then(|s| s.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_u64().map(|x| x as usize)).collect())
+            .unwrap_or_default();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let meta = a.get("meta").ok_or_else(|| anyhow!("missing meta"))?;
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("missing name"))?
+                    .to_string(),
+                path: a
+                    .get("path")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("missing path"))?
+                    .to_string(),
+                kind: meta.get("kind").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                inputs: shapes(a, "inputs")?,
+                outputs: shapes(a, "outputs")?,
+                n: num(meta, "n"),
+                d: num(meta, "d"),
+                heads: num(meta, "heads"),
+            });
+        }
+        Ok(Manifest {
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            stages,
+            d: num(defaults, "d"),
+            heads: num(defaults, "heads"),
+            ffn: num(defaults, "ffn"),
+            artifacts,
+        })
+    }
+
+    /// The encoder-block artifact name for a token count, if compiled.
+    pub fn block_for(&self, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "encoder_block" && a.n == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "fingerprint": "abc",
+      "defaults": {"d": 128, "heads": 4, "ffn": 512, "stages": [128, 96, 64]},
+      "artifacts": [
+        {"name": "block_n128_d128_h4", "path": "block_n128_d128_h4.hlo.txt",
+         "inputs": [{"shape": [128, 128], "dtype": "f32"},
+                    {"shape": [128, 128], "dtype": "f32"}],
+         "outputs": [{"shape": [128, 128], "dtype": "f32"},
+                     {"shape": [128], "dtype": "f32"}],
+         "meta": {"kind": "encoder_block", "n": 128, "d": 128, "heads": 4}},
+        {"name": "matmul_64x64x64", "path": "matmul_64x64x64.hlo.txt",
+         "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                    {"shape": [64, 64], "dtype": "f32"}],
+         "outputs": [{"shape": [64, 64], "dtype": "f32"}],
+         "meta": {"kind": "matmul", "m": 64, "k": 64, "n": 64}}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.stages, vec![128, 96, 64]);
+        assert_eq!(m.d, 128);
+        assert_eq!(m.artifacts.len(), 2);
+        let b = m.block_for(128).unwrap();
+        assert_eq!(b.name, "block_n128_d128_h4");
+        assert_eq!(b.inputs[0], vec![128, 128]);
+        assert_eq!(b.outputs[1], vec![128]);
+        assert!(m.block_for(96).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "defaults": {}, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.artifacts.len() >= 9);
+            for stage in &m.stages {
+                assert!(m.block_for(*stage).is_some(), "missing block for stage {stage}");
+            }
+        }
+    }
+}

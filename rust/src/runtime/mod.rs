@@ -1,0 +1,164 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `make artifacts`) and executes them on the CPU PJRT client.
+//!
+//! Interchange format is HLO *text*: jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).  Every artifact was lowered with
+//! `return_tuple=True`, so execution results are N-tuples.
+//!
+//! Python is never on this path — the manifest + HLO text are plain files.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::refimpl::Mat;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (compiles each HLO module once).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = dir.join(&spec.path);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                    .map_err(|e| anyhow!("parse {}: {e}", spec.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", spec.name))?;
+            artifacts.insert(spec.name.clone(), LoadedArtifact { spec: spec.clone(), exe });
+        }
+        Ok(Runtime { client, artifacts, manifest })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name).map(|a| &a.spec)
+    }
+
+    /// Execute artifact `name` on f32 inputs `(data, shape)`; returns one
+    /// flat f32 vector per output, in artifact output order.
+    pub fn execute(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != art.spec.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want = &art.spec.inputs[i];
+            if *shape != want.as_slice() {
+                bail!("artifact '{name}' input {i}: shape {shape:?}, want {want:?}");
+            }
+            let n: usize = shape.iter().product();
+            if n != data.len() {
+                bail!("artifact '{name}' input {i}: {} values for shape {shape:?}", data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e}"))?;
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{name}': {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of '{name}': {e}"))?;
+        // return_tuple=True => results are a tuple of outputs
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of '{name}': {e}"))?;
+        if parts.len() != art.spec.outputs.len() {
+            bail!(
+                "artifact '{name}': {} outputs, manifest says {}",
+                parts.len(),
+                art.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("read output: {e}")))
+            .collect()
+    }
+
+    /// Convenience: run an encoder-block artifact on token matrices and
+    /// block weights; returns (output tokens, key importance scores).
+    pub fn run_block(
+        &self,
+        name: &str,
+        ix: &Mat,
+        iy: &Mat,
+        weights: &crate::model::refimpl::BlockWeights,
+    ) -> Result<(Mat, Vec<f32>)> {
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let mut inputs: Vec<(&[f32], Vec<usize>)> = vec![
+            (&ix.data, vec![ix.rows, ix.cols]),
+            (&iy.data, vec![iy.rows, iy.cols]),
+        ];
+        inputs.extend(weights.flat_inputs());
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let mut outs = self.execute(name, &refs)?;
+        let scores = outs.pop().ok_or_else(|| anyhow!("missing scores output"))?;
+        let out = outs.pop().ok_or_else(|| anyhow!("missing token output"))?;
+        let shape = &spec.outputs[0];
+        Ok((Mat::from_vec(shape[0], shape[1], out), scores))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in
+    // rust/tests/runtime_numerics.rs (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn load_missing_dir_fails_cleanly() {
+        match Runtime::load(Path::new("/nonexistent-artifacts")) {
+            Ok(_) => panic!("expected load failure"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("manifest"), "{msg}");
+            }
+        }
+    }
+}

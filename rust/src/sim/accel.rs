@@ -1,0 +1,165 @@
+//! The assembled accelerator: resource timelines + activity counters.
+
+use crate::config::AccelConfig;
+use crate::sim::resource::{Cycle, Timeline};
+
+/// Core roles in the paper's floorplan (Fig. 3a).
+pub const QCIM: usize = 0;
+pub const KCIM: usize = 1;
+pub const TBR: usize = 2;
+
+/// Energy-relevant activity counters, accumulated during a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Activity {
+    /// CIM MAC operations (at op precision).
+    pub macs: u64,
+    /// Bits written into CIM cells (rewrites).
+    pub cim_write_bits: u64,
+    /// Bits moved over the off-chip channel.
+    pub offchip_bits: u64,
+    /// Bits read/written in on-chip buffers.
+    pub buffer_bits: u64,
+    /// Bits moved over the TBSN pipeline bus.
+    pub tbsn_bits: u64,
+    /// SFU elementary ops (exp/div/add on one value).
+    pub sfu_ops: u64,
+    /// DTPU compare-select ops.
+    pub dtpu_ops: u64,
+}
+
+impl Activity {
+    pub fn add(&mut self, other: &Activity) {
+        self.macs += other.macs;
+        self.cim_write_bits += other.cim_write_bits;
+        self.offchip_bits += other.offchip_bits;
+        self.buffer_bits += other.buffer_bits;
+        self.tbsn_bits += other.tbsn_bits;
+        self.sfu_ops += other.sfu_ops;
+        self.dtpu_ops += other.dtpu_ops;
+    }
+}
+
+/// The accelerator's bottleneck resources. One instance simulates one run.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+    /// Per-core compute occupancy (macro MAC arrays).
+    pub cores: Vec<Timeline>,
+    /// Per-core macro write ports (CIM rewriting).
+    pub write_ports: Vec<Timeline>,
+    /// Shared off-chip channel.
+    pub offchip: Timeline,
+    /// TBSN pipeline bus between cores.
+    pub tbsn: Timeline,
+    pub sfu: Timeline,
+    pub dtpu: Timeline,
+    pub activity: Activity,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Self::build(cfg, false)
+    }
+
+    pub fn with_trace(cfg: AccelConfig) -> Self {
+        Self::build(cfg, true)
+    }
+
+    fn build(cfg: AccelConfig, trace: bool) -> Self {
+        let mk = |name: String| {
+            if trace {
+                Timeline::with_trace(name)
+            } else {
+                Timeline::new(name)
+            }
+        };
+        let names = ["Q-CIM", "K-CIM", "TBR-CIM"];
+        let cores = (0..cfg.cores as usize)
+            .map(|i| mk(names.get(i).map(|s| s.to_string()).unwrap_or(format!("core{i}"))))
+            .collect();
+        let write_ports = (0..cfg.cores as usize)
+            .map(|i| mk(format!("wport{i}")))
+            .collect();
+        Accelerator {
+            cores,
+            write_ports,
+            offchip: mk("offchip".into()),
+            tbsn: mk("tbsn".into()),
+            sfu: mk("sfu".into()),
+            dtpu: mk("dtpu".into()),
+            cfg,
+            activity: Activity::default(),
+        }
+    }
+
+    /// Makespan so far: the latest ready time across all resources.
+    pub fn makespan(&self) -> Cycle {
+        self.cores
+            .iter()
+            .chain(self.write_ports.iter())
+            .chain([&self.offchip, &self.tbsn, &self.sfu, &self.dtpu])
+            .map(|t| t.ready_at())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Simulated wall-clock in milliseconds at the configured frequency.
+    pub fn ms(&self, cycles: Cycle) -> f64 {
+        cycles as f64 * self.cfg.ns_per_cycle() / 1e6
+    }
+
+    pub fn reset(&mut self) {
+        for t in self
+            .cores
+            .iter_mut()
+            .chain(self.write_ports.iter_mut())
+            .chain([&mut self.offchip, &mut self.tbsn, &mut self.sfu, &mut self.dtpu])
+        {
+            t.reset();
+        }
+        self.activity = Activity::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn builds_paper_floorplan() {
+        let acc = Accelerator::new(presets::streamdcim_default());
+        assert_eq!(acc.cores.len(), 3);
+        assert_eq!(acc.cores[QCIM].name, "Q-CIM");
+        assert_eq!(acc.cores[KCIM].name, "K-CIM");
+        assert_eq!(acc.cores[TBR].name, "TBR-CIM");
+        assert_eq!(acc.write_ports.len(), 3);
+    }
+
+    #[test]
+    fn makespan_tracks_latest() {
+        let mut acc = Accelerator::new(presets::streamdcim_default());
+        acc.cores[0].acquire(0, 100, "c");
+        acc.offchip.acquire(0, 250, "dma");
+        assert_eq!(acc.makespan(), 250);
+        acc.reset();
+        assert_eq!(acc.makespan(), 0);
+    }
+
+    #[test]
+    fn ms_at_200mhz() {
+        let acc = Accelerator::new(presets::streamdcim_default());
+        // 200 MHz -> 5 ns/cycle -> 200k cycles = 1 ms
+        assert!((acc.ms(200_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activity_accumulates() {
+        let mut a = Activity::default();
+        a.add(&Activity { macs: 5, offchip_bits: 7, ..Default::default() });
+        a.add(&Activity { macs: 3, sfu_ops: 2, ..Default::default() });
+        assert_eq!(a.macs, 8);
+        assert_eq!(a.offchip_bits, 7);
+        assert_eq!(a.sfu_ops, 2);
+    }
+}

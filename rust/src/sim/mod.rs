@@ -1,0 +1,21 @@
+//! Cycle-level model of the StreamDCIM accelerator (and of the two
+//! baseline operating modes it is compared against).
+//!
+//! The simulator is a resource-occupancy model: every hardware unit that
+//! can be a bottleneck — each CIM core's compute array, each core's macro
+//! write port, the off-chip channel, the TBSN pipeline bus, the SFU and
+//! the DTPU — is a [`resource::Timeline`] that tasks acquire in program
+//! order.  The three dataflows (`dataflow::*`) differ only in *how* they
+//! sequence tile work onto these timelines (what overlaps what), never in
+//! the functional math — mirroring the paper, where the dataflow changes
+//! the schedule and the pipeline, not the results.
+
+pub mod accel;
+pub mod dtpu;
+pub mod resource;
+pub mod sfu;
+pub mod tiling;
+
+pub use accel::{Accelerator, Activity};
+pub use resource::Timeline;
+pub use tiling::OpTiling;

@@ -1,0 +1,66 @@
+//! SFU (special function unit) cost model: softmax, layernorm, GELU.
+//!
+//! The SFU is an `sfu_lanes`-wide elementwise pipeline fed from the CIM
+//! accumulators over the TBSN.  Softmax makes three passes over each row
+//! (max, exp+sum, divide); layernorm two (stats, normalize); GELU one.
+
+use crate::config::AccelConfig;
+use crate::model::{Op, OpKind};
+use crate::util::ceil_div;
+
+/// Cycles for an SFU op, and the number of elementary SFU operations
+/// (for energy accounting).
+pub fn sfu_cost(cfg: &AccelConfig, op: &Op) -> (u64, u64) {
+    let elems = op.batch * op.m * op.n.max(1);
+    let passes = match op.kind {
+        OpKind::Softmax => 3,
+        OpKind::LayerNorm => 2,
+        OpKind::Gelu => 1,
+        _ => return (0, 0),
+    };
+    let ops = elems * passes;
+    (ceil_div(ops, cfg.sfu_lanes), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::Stream;
+
+    fn op(kind: OpKind, batch: u64, m: u64, n: u64) -> Op {
+        Op { name: "op", kind, stream: Stream::X, batch, m, k: 0, n, bits: 16 }
+    }
+
+    #[test]
+    fn softmax_three_passes() {
+        let cfg = presets::streamdcim_default();
+        let (cyc, ops) = sfu_cost(&cfg, &op(OpKind::Softmax, 1, 8, 64));
+        assert_eq!(ops, 8 * 64 * 3);
+        assert_eq!(cyc, crate::util::ceil_div(8 * 64 * 3, cfg.sfu_lanes));
+    }
+
+    #[test]
+    fn layernorm_cheaper_than_softmax() {
+        let cfg = presets::streamdcim_default();
+        let (s, _) = sfu_cost(&cfg, &op(OpKind::Softmax, 1, 32, 128));
+        let (l, _) = sfu_cost(&cfg, &op(OpKind::LayerNorm, 1, 32, 128));
+        let (g, _) = sfu_cost(&cfg, &op(OpKind::Gelu, 1, 32, 128));
+        assert!(s > l && l > g);
+    }
+
+    #[test]
+    fn matmul_costs_nothing_on_sfu() {
+        let cfg = presets::streamdcim_default();
+        let (c, o) = sfu_cost(&cfg, &op(OpKind::MatMulStatic, 1, 32, 128));
+        assert_eq!((c, o), (0, 0));
+    }
+
+    #[test]
+    fn batch_scales_cost() {
+        let cfg = presets::streamdcim_default();
+        let (c1, _) = sfu_cost(&cfg, &op(OpKind::Softmax, 1, 32, 128));
+        let (c12, _) = sfu_cost(&cfg, &op(OpKind::Softmax, 12, 32, 128));
+        assert_eq!(c12, 12 * c1);
+    }
+}

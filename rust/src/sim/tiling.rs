@@ -1,0 +1,214 @@
+//! Tiling of a matmul op onto the TBR-CIM macro geometry.
+//!
+//! A matmul `batch x (m x k) @ (k x n)` maps onto macros holding
+//! `macro_rows x macro_cols` stationary tiles.  One *pass* loads up to
+//! `macros` tiles and streams all `m` input rows against them (one row per
+//! cycle, digital CIM: all columns MAC in parallel).
+
+use crate::config::AccelConfig;
+use crate::model::Op;
+use crate::util::ceil_div;
+
+#[derive(Debug, Clone, Copy)]
+pub struct OpTiling {
+    /// Stationary tiles ( = ceil(k/rows) * ceil(n/cols) * batch ).
+    pub tiles: u64,
+    /// Rows per stationary tile actually occupied (k clamp).
+    pub rows_per_tile: u64,
+    /// Columns per stationary tile actually occupied (n clamp).
+    pub cols_per_tile: u64,
+    /// Input rows streamed per pass.
+    pub m: u64,
+    /// Full op shape (for traffic accounting).
+    pub batch: u64,
+    pub k: u64,
+    pub n: u64,
+    /// Tiles along k / n per batch element.
+    pub k_tiles: u64,
+    pub n_tiles: u64,
+    /// Operand precision.
+    pub bits: u64,
+}
+
+impl OpTiling {
+    pub fn of(cfg: &AccelConfig, op: &Op) -> Self {
+        let rows = cfg.macro_rows();
+        let cols = cfg.macro_cols();
+        let k_tiles = ceil_div(op.k.max(1), rows);
+        let n_tiles = ceil_div(op.n.max(1), cols);
+        OpTiling {
+            tiles: op.batch * k_tiles * n_tiles,
+            rows_per_tile: op.k.min(rows).max(1),
+            cols_per_tile: op.n.min(cols).max(1),
+            m: op.m,
+            batch: op.batch,
+            k: op.k.max(1),
+            n: op.n.max(1),
+            k_tiles,
+            n_tiles,
+            bits: op.bits,
+        }
+    }
+
+    /// Passes needed when `macros` tiles are resident at once.
+    pub fn passes(&self, macros: u64) -> u64 {
+        ceil_div(self.tiles, macros.max(1))
+    }
+
+    /// Compute cycles with `macros` macros in parallel: each pass streams
+    /// `m` rows, one row per cycle.
+    pub fn compute_cycles(&self, macros: u64) -> u64 {
+        self.passes(macros) * self.m
+    }
+
+    /// Cycles to write the full stationary operand once through one
+    /// macro write port.
+    pub fn rewrite_cycles(&self, cfg: &AccelConfig) -> u64 {
+        let row_cycles = cfg.row_write_cycles(self.cols_per_tile, self.bits);
+        self.tiles * self.rows_per_tile * row_cycles
+    }
+
+    /// Cycles to rewrite the tiles of a single pass (`macros` tiles).
+    pub fn rewrite_cycles_per_pass(&self, cfg: &AccelConfig, macros: u64) -> u64 {
+        let row_cycles = cfg.row_write_cycles(self.cols_per_tile, self.bits);
+        let tiles = self.tiles.min(macros.max(1));
+        tiles * self.rows_per_tile * row_cycles
+    }
+
+    /// Bits of the stationary operand (written into CIM cells).
+    pub fn stationary_bits(&self) -> u64 {
+        self.tiles * self.rows_per_tile * self.cols_per_tile * self.bits
+    }
+
+    /// Bits of the moving operand, streamed once.
+    pub fn moving_bits(&self) -> u64 {
+        self.batch * self.m * self.k * self.bits
+    }
+
+    /// How many times the moving operand is re-streamed in a blocked
+    /// weight-stationary schedule with `macros` resident tiles.
+    ///
+    /// Passes that advance along k stream *disjoint* k-slices (no replay);
+    /// passes that advance along n re-stream the same k rows.  With
+    /// kt k-tiles and nt n-tiles per batch element, a pass holds
+    /// `g = max(1, macros / min(kt, macros))` n-tiles worth of full-k
+    /// stationary data, so the moving operand is streamed `ceil(nt / g)`
+    /// times.  (Cross-forwarding's hybrid mode eliminates this replay —
+    /// the paper's "more frequent reuse of stored data".)
+    pub fn replay_factor(&self, macros: u64) -> u64 {
+        let kt = self.k_tiles.max(1);
+        let g = (macros.max(1) / kt.min(macros.max(1))).max(1);
+        ceil_div(self.n_tiles.max(1), g)
+    }
+
+    /// Bits of the output, streamed once.
+    pub fn output_bits(&self) -> u64 {
+        self.batch * self.m * self.n * self.bits
+    }
+}
+
+/// MAC count of a pass-based schedule (equals the op's true MACs for
+/// exact-fit shapes; clamped tiles keep it consistent).
+pub fn op_macs(op: &Op) -> u64 {
+    op.macs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::{Op, OpKind, Stream};
+
+    fn mk(batch: u64, m: u64, k: u64, n: u64, bits: u64) -> Op {
+        Op {
+            name: "op",
+            kind: OpKind::MatMulDynamic,
+            stream: Stream::X,
+            batch,
+            m,
+            k,
+            n,
+            bits,
+        }
+    }
+
+    #[test]
+    fn exact_fit_tiling() {
+        let cfg = presets::streamdcim_default();
+        // 32x128 stationary = exactly 1 tile
+        let t = OpTiling::of(&cfg, &mk(1, 64, 32, 128, 16));
+        assert_eq!(t.tiles, 1);
+        assert_eq!(t.compute_cycles(8), 64);
+        assert_eq!(
+            t.rewrite_cycles(&cfg),
+            32 * cfg.row_write_cycles(128, 16)
+        );
+    }
+
+    #[test]
+    fn multi_tile_passes() {
+        let cfg = presets::streamdcim_default();
+        // k=512, n=2048 -> 16 x 16 = 256 tiles; 8 macros -> 32 passes
+        let t = OpTiling::of(&cfg, &mk(1, 2048, 512, 2048, 8));
+        assert_eq!(t.tiles, 256);
+        assert_eq!(t.passes(8), 32);
+        assert_eq!(t.compute_cycles(8), 32 * 2048);
+    }
+
+    #[test]
+    fn trancim_microbench_rewrite_fraction_over_57pct() {
+        // Paper Sec. I: K = 2048x512 INT8, 512-bit bus: TranCIM spends
+        // >57 % of QK^T latency rewriting K into CIM macros.
+        let cfg = presets::streamdcim_default();
+        // stationary K^T: k=512 (contraction), n=2048 columns
+        let t = OpTiling::of(&cfg, &mk(1, 2048, 512, 2048, 8));
+        let rewrite = t.rewrite_cycles(&cfg);
+        let compute = t.compute_cycles(cfg.macros_per_core);
+        let frac = rewrite as f64 / (rewrite + compute) as f64;
+        assert!(frac > 0.57, "rewrite fraction {frac:.3} (rw {rewrite}, c {compute})");
+        assert!(frac < 0.70, "calibration drifted high: {frac:.3}");
+    }
+
+    #[test]
+    fn batch_multiplies_tiles() {
+        let cfg = presets::streamdcim_default();
+        let t1 = OpTiling::of(&cfg, &mk(1, 128, 64, 256, 16));
+        let t12 = OpTiling::of(&cfg, &mk(12, 128, 64, 256, 16));
+        assert_eq!(t12.tiles, 12 * t1.tiles);
+    }
+
+    #[test]
+    fn small_ops_clamp() {
+        let cfg = presets::streamdcim_default();
+        let t = OpTiling::of(&cfg, &mk(1, 8, 16, 64, 16));
+        assert_eq!(t.tiles, 1);
+        assert_eq!(t.rows_per_tile, 16);
+        assert_eq!(t.cols_per_tile, 64);
+        assert!(t.stationary_bits() == 16 * 64 * 16);
+    }
+
+    #[test]
+    fn replay_factor_by_tiling_shape() {
+        let cfg = presets::streamdcim_default();
+        // PV-like: k huge (k-partitioned passes), n one tile -> no replay
+        let pv = OpTiling::of(&cfg, &mk(12, 4096, 4096, 64, 16));
+        assert_eq!(pv.replay_factor(8), 1);
+        // QK^T-like: kt=2, nt=32; 8 macros hold 4 n-tiles of full k
+        let qkt = OpTiling::of(&cfg, &mk(12, 4096, 64, 4096, 16));
+        assert_eq!(qkt.replay_factor(8), 8);
+        // FFN-like with all 24 macros: kt=24 >= 24 -> one n-tile per sweep
+        let ffn = OpTiling::of(&cfg, &mk(1, 4096, 768, 3072, 16));
+        assert_eq!(ffn.replay_factor(24), 24);
+        // fits entirely -> replay 1
+        let small = OpTiling::of(&cfg, &mk(1, 64, 32, 128, 16));
+        assert_eq!(small.replay_factor(8), 1);
+    }
+
+    #[test]
+    fn int8_rewrite_cheaper_than_int16() {
+        let cfg = presets::streamdcim_default();
+        let t8 = OpTiling::of(&cfg, &mk(1, 128, 128, 512, 8));
+        let t16 = OpTiling::of(&cfg, &mk(1, 128, 128, 512, 16));
+        assert!(t8.rewrite_cycles(&cfg) < t16.rewrite_cycles(&cfg));
+    }
+}

@@ -1,0 +1,105 @@
+//! Pipeline trace rendering: turn `Timeline` busy segments into a textual
+//! Gantt chart (the tool used to eyeball Fig. 4b-style overlap).
+
+use crate::sim::Accelerator;
+
+/// Render the accelerator's traced resources over `[from, to)` cycles,
+/// `width` characters wide.  Resources without tracing enabled are skipped
+/// (construct the accelerator with `Accelerator::with_trace`).
+pub fn render_gantt(acc: &Accelerator, from: u64, to: u64, width: usize) -> String {
+    let mut out = String::new();
+    let span = (to.saturating_sub(from)).max(1);
+    let lanes: Vec<&crate::sim::Timeline> = acc
+        .cores
+        .iter()
+        .chain(acc.write_ports.iter())
+        .chain([&acc.offchip, &acc.tbsn, &acc.sfu, &acc.dtpu])
+        .collect();
+    let name_w = lanes.iter().map(|l| l.name.len()).max().unwrap_or(8);
+    out.push_str(&format!(
+        "cycles {from}..{to} ({span} cycles, {} cycles/char)\n",
+        (span as usize / width.max(1)).max(1)
+    ));
+    for lane in lanes {
+        let Some(segs) = &lane.segments else { continue };
+        let mut row = vec![' '; width];
+        for (s, e, tag) in segs {
+            if *e <= from || *s >= to {
+                continue;
+            }
+            let cs = (((s.max(&from) - from) as u128 * width as u128 / span as u128) as usize)
+                .min(width - 1);
+            let ce = (((e.min(&to) - from) as u128 * width as u128 / span as u128) as usize)
+                .clamp(cs + 1, width);
+            let ch = tag_char(tag);
+            for c in &mut row[cs..ce] {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!(
+            "{:>width$} |{}|\n",
+            lane.name,
+            row.iter().collect::<String>(),
+            width = name_w
+        ));
+    }
+    out.push_str(&format!(
+        "{:>width$}  legend: #=compute ~=rewrite/preload .=dma s=sfu r=rank\n",
+        "",
+        width = name_w
+    ));
+    out
+}
+
+fn tag_char(tag: &str) -> char {
+    match tag {
+        "compute" | "qkt" | "pv" | "rw+compute" => '#',
+        "rewrite" | "preload" | "pp-rewrite" | "K-rewrite" | "V-rewrite" => '~',
+        "dma-in" | "dma-out" | "embed-in" | "embed-out" => '.',
+        "sfu" => 's',
+        "rank" => 'r',
+        _ => '+',
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn renders_traced_segments() {
+        let mut acc = Accelerator::with_trace(presets::streamdcim_default());
+        acc.cores[0].acquire(0, 50, "compute");
+        acc.write_ports[0].acquire(25, 50, "rewrite");
+        acc.sfu.acquire(60, 20, "sfu");
+        let g = render_gantt(&acc, 0, 100, 40);
+        assert!(g.contains("Q-CIM"));
+        assert!(g.contains('#'));
+        assert!(g.contains('~'));
+        assert!(g.contains('s'));
+        assert!(g.contains("legend"));
+    }
+
+    fn lane_rows(g: &str) -> String {
+        g.lines().filter(|l| l.contains('|')).collect::<Vec<_>>().join("\n")
+    }
+
+    #[test]
+    fn untraced_accelerator_renders_header_only() {
+        let mut acc = Accelerator::new(presets::streamdcim_default());
+        acc.cores[0].acquire(0, 10, "compute");
+        let g = render_gantt(&acc, 0, 10, 20);
+        assert!(!lane_rows(&g).contains('#'), "{g}");
+    }
+
+    #[test]
+    fn window_clips_segments() {
+        let mut acc = Accelerator::with_trace(presets::streamdcim_default());
+        acc.cores[0].acquire(0, 10, "compute");
+        acc.cores[0].acquire(990, 10, "compute");
+        let g = render_gantt(&acc, 100, 900, 40);
+        // both segments fall outside the window
+        assert!(!lane_rows(&g).contains('#'), "{g}");
+    }
+}

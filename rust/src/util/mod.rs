@@ -1,0 +1,48 @@
+//! Small self-contained substrates (offline environment: serde/serde_json
+//! are not in the vendored crate set, so the repo ships its own).
+
+pub mod json;
+pub mod prng;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Geometric mean of a slice of positive ratios.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(4096, 128), 32);
+    }
+
+    #[test]
+    fn geomean_matches_paper_headline() {
+        // paper: 2.86x (base) and 2.42x (large) vs Non-stream -> geomean 2.63x
+        let g = geomean(&[2.86, 2.42]);
+        assert!((g - 2.631).abs() < 0.01, "{g}");
+        // 1.25x / 1.31x vs Layer-stream -> geomean 1.28x
+        let g = geomean(&[1.25, 1.31]);
+        assert!((g - 1.2796).abs() < 0.01, "{g}");
+    }
+
+    #[test]
+    fn geomean_single() {
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+}

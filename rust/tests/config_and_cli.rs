@@ -1,0 +1,66 @@
+//! Config-file + CLI integration: the `configs/` examples must parse and
+//! produce runnable configurations.
+
+use streamdcim::cli;
+use streamdcim::config::{presets, toml};
+
+#[test]
+fn shipped_config_files_parse_and_apply() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        found += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = toml::parse(&text).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let mut accel = presets::streamdcim_default();
+        let mut model = presets::vilbert_base();
+        toml::apply_accel_overrides(&mut accel, &doc);
+        toml::apply_model_overrides(&mut model, &doc);
+        assert!(accel.cores > 0 && accel.freq_mhz > 0, "{path:?} broke the accel config");
+        assert!(model.tokens_x > 0, "{path:?} broke the model config");
+    }
+    assert!(found >= 2, "expected at least 2 example configs, found {found}");
+}
+
+#[test]
+fn cli_full_command_lines() {
+    let argv: Vec<String> = ["run", "--model", "large", "--dataflow", "layer", "--json"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let a = cli::parse(argv).unwrap();
+    assert_eq!(a.command, "run");
+    assert_eq!(a.flag("model"), Some("large"));
+    assert_eq!(a.flag("dataflow"), Some("layer"));
+    assert!(a.has("json"));
+
+    let argv: Vec<String> = ["serve", "--artifacts", "artifacts", "--requests=16", "--ref"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let a = cli::parse(argv).unwrap();
+    assert_eq!(a.flag_u64("requests", 0), 16);
+    assert!(a.has("ref"));
+}
+
+#[test]
+fn ablation_config_disables_features() {
+    let text = "[features]\nhybrid_mode = false\npingpong = false\ntoken_pruning = false\n";
+    let doc = toml::parse(text).unwrap();
+    let mut accel = presets::streamdcim_default();
+    toml::apply_accel_overrides(&mut accel, &doc);
+    assert!(!accel.features.hybrid_mode);
+    assert!(!accel.features.pingpong);
+    assert!(!accel.features.token_pruning);
+}
+
+#[test]
+fn usage_mentions_every_command() {
+    for cmd in ["run", "report", "serve", "artifacts"] {
+        assert!(cli::USAGE.contains(cmd), "USAGE missing {cmd}");
+    }
+}

@@ -1,0 +1,121 @@
+//! End-to-end coordinator tests: the serving path over real PJRT
+//! artifacts, with DTPU pruning between stages (needs `make artifacts`;
+//! the refimpl-backed tests always run).
+
+use std::path::{Path, PathBuf};
+
+use streamdcim::config::presets;
+use streamdcim::coordinator::{Coordinator, Request};
+use streamdcim::model::refimpl::Mat;
+use streamdcim::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn request(id: u64, rng: &mut Rng) -> Request {
+    Request {
+        id,
+        ix: Mat::random_i16_grid(rng, 128, 128, 0.5),
+        iy: Mat::random_i16_grid(rng, 128, 128, 0.5),
+    }
+}
+
+#[test]
+fn pjrt_serving_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let model = presets::functional_small();
+    let coord = Coordinator::start(Some(dir), &model, vec![128, 96, 64], 4, 42)
+        .expect("coordinator start");
+    let mut rng = Rng::new(7);
+    let waiters: Vec<_> = (0..8).map(|i| coord.submit(request(i, &mut rng))).collect();
+    for (i, w) in waiters.into_iter().enumerate() {
+        let resp = w.recv().expect("leader alive").expect("forward ok");
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.stages, vec![128, 96, 64], "pruning stages traversed");
+        assert_eq!(resp.x.rows, 64);
+        assert_eq!(resp.y.rows, 64);
+        assert!(resp.x.data.iter().all(|v| v.is_finite()));
+        assert!(resp.exec_us > 0);
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, 8);
+    assert!(stats.mean_batch() >= 1.0);
+}
+
+#[test]
+fn pjrt_serving_matches_refimpl_serving() {
+    // Same seed => same weights and same inputs; PJRT path and refimpl
+    // path must agree on outputs (tolerance) and pruning decisions.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let model = presets::functional_small();
+    let run = |artifacts: Option<PathBuf>| {
+        let coord =
+            Coordinator::start(artifacts, &model, vec![128, 96, 64], 1, 42).unwrap();
+        let mut rng = Rng::new(8);
+        let resp = coord.submit(request(0, &mut rng)).recv().unwrap().unwrap();
+        coord.shutdown();
+        resp
+    };
+    let pjrt = run(Some(dir));
+    let rref = run(None);
+    assert_eq!(pjrt.stages, rref.stages);
+    assert_eq!(pjrt.x.rows, rref.x.rows);
+    let max_diff = pjrt
+        .x
+        .data
+        .iter()
+        .zip(&rref.x.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // pruning keeps discrete token sets; if a borderline score flips a
+    // token the outputs differ structurally — accept either bitwise-near
+    // agreement or identical shapes with small aggregate drift
+    let mean_diff: f32 = pjrt
+        .x
+        .data
+        .iter()
+        .zip(&rref.x.data)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>()
+        / pjrt.x.data.len() as f32;
+    assert!(
+        max_diff < 0.05 || mean_diff < 0.02,
+        "PJRT vs refimpl diverged: max {max_diff}, mean {mean_diff}"
+    );
+}
+
+#[test]
+fn refimpl_serving_under_load() {
+    let model = presets::functional_small();
+    let coord = Coordinator::start(None, &model, vec![128, 96, 64], 8, 1).unwrap();
+    let mut rng = Rng::new(2);
+    let waiters: Vec<_> = (0..32).map(|i| coord.submit(request(i, &mut rng))).collect();
+    let mut max_batch = 0;
+    for w in waiters {
+        let r = w.recv().unwrap().unwrap();
+        max_batch = max_batch.max(r.batch_size);
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.served, 32);
+    assert!(stats.batches < 32, "burst must produce multi-request batches");
+    assert!(max_batch > 1);
+    assert!(stats.percentile_us(0.95) >= stats.percentile_us(0.5));
+}
+
+#[test]
+fn coordinator_survives_drop_without_shutdown() {
+    let model = presets::functional_small();
+    let coord = Coordinator::start(None, &model, vec![128, 96, 64], 2, 3).unwrap();
+    let mut rng = Rng::new(4);
+    let w = coord.submit(request(0, &mut rng));
+    let _ = w.recv().unwrap().unwrap();
+    drop(coord); // Drop impl joins the leader — must not hang or panic
+}

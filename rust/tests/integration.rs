@@ -1,0 +1,173 @@
+//! Full-stack simulator integration tests: the paper's headline claims
+//! (experiments E3-E6 in DESIGN.md) within reproduction bands.
+
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::model::{Op, OpKind, Stream};
+use streamdcim::report;
+use streamdcim::sim::OpTiling;
+use streamdcim::util::geomean;
+
+fn runs_for(model: streamdcim::config::ModelConfig) -> Vec<streamdcim::metrics::RunReport> {
+    report::run_all(&presets::streamdcim_default(), &model)
+}
+
+#[test]
+fn e3_fig6_speedup_bands() {
+    // Paper Fig. 6: 2.86x/1.25x (base), 2.42x/1.31x (large).
+    // Reproduction band: ordering exact, magnitudes within ~0.5x..2x.
+    let base = runs_for(presets::vilbert_base());
+    let (s_non, s_layer) = report::speedups(&base);
+    assert!(s_non > 2.0 && s_non < 4.5, "base vs Non-stream: {s_non:.2} (paper 2.86)");
+    assert!(s_layer > 1.1 && s_layer < 1.8, "base vs Layer-stream: {s_layer:.2} (paper 1.25)");
+
+    let large = runs_for(presets::vilbert_large());
+    let (l_non, l_layer) = report::speedups(&large);
+    assert!(l_non > 2.0 && l_non < 4.5, "large vs Non-stream: {l_non:.2} (paper 2.42)");
+    assert!(l_layer > 1.1 && l_layer < 1.8, "large vs Layer-stream: {l_layer:.2} (paper 1.31)");
+}
+
+#[test]
+fn e4_fig7_energy_bands() {
+    // Paper Fig. 7: 2.64x/1.27x (base), 1.94x/1.19x (large).
+    let base = runs_for(presets::vilbert_base());
+    let (e_non, e_layer) = report::energy_savings(&base);
+    assert!(e_non > 1.8 && e_non < 4.5, "base energy vs Non-stream: {e_non:.2} (paper 2.64)");
+    assert!(
+        e_layer > 1.05 && e_layer < 1.6,
+        "base energy vs Layer-stream: {e_layer:.2} (paper 1.27)"
+    );
+
+    let large = runs_for(presets::vilbert_large());
+    let (f_non, f_layer) = report::energy_savings(&large);
+    assert!(f_non > 1.5 && f_non < 4.0, "large energy vs Non-stream: {f_non:.2} (paper 1.94)");
+    assert!(
+        f_layer > 1.05 && f_layer < 1.6,
+        "large energy vs Layer-stream: {f_layer:.2} (paper 1.19)"
+    );
+}
+
+#[test]
+fn e6_headline_geomeans() {
+    // Paper conclusion: geomean 2.63x / 1.28x speedup, 2.26x / 1.23x energy.
+    let base = runs_for(presets::vilbert_base());
+    let large = runs_for(presets::vilbert_large());
+    let sp = [report::speedups(&base), report::speedups(&large)];
+    let en = [report::energy_savings(&base), report::energy_savings(&large)];
+    let g_sp_non = geomean(&sp.iter().map(|p| p.0).collect::<Vec<_>>());
+    let g_sp_layer = geomean(&sp.iter().map(|p| p.1).collect::<Vec<_>>());
+    let g_en_non = geomean(&en.iter().map(|p| p.0).collect::<Vec<_>>());
+    let g_en_layer = geomean(&en.iter().map(|p| p.1).collect::<Vec<_>>());
+    println!("geomean speedup {g_sp_non:.2}/{g_sp_layer:.2}, energy {g_en_non:.2}/{g_en_layer:.2}");
+    assert!(g_sp_non > 2.0 && g_sp_non < 4.0, "paper 2.63, got {g_sp_non:.2}");
+    assert!(g_sp_layer > 1.1 && g_sp_layer < 1.7, "paper 1.28, got {g_sp_layer:.2}");
+    assert!(g_en_non > 1.7 && g_en_non < 4.0, "paper 2.26, got {g_en_non:.2}");
+    assert!(g_en_layer > 1.05 && g_en_layer < 1.5, "paper 1.23, got {g_en_layer:.2}");
+}
+
+#[test]
+fn e5_trancim_rewrite_fraction() {
+    // Paper Sec. I: with 512-bit bandwidth, QK^T on a 2048x512 INT8 K
+    // matrix spends >57 % of its latency rewriting K in CIM macros.
+    let cfg = presets::streamdcim_default();
+    let op = Op {
+        name: "qkt",
+        kind: OpKind::MatMulDynamic,
+        stream: Stream::X,
+        batch: 1,
+        m: 2048,
+        k: 512,
+        n: 2048,
+        bits: 8,
+    };
+    let t = OpTiling::of(&cfg, &op);
+    let rewrite = t.rewrite_cycles(&cfg) as f64;
+    let compute = t.compute_cycles(cfg.macros_per_core) as f64;
+    let frac = rewrite / (rewrite + compute);
+    assert!(frac > 0.57, "rewrite fraction {frac:.3}");
+
+    // And Sec. I's compute-share claim: QK^T is 66.7 % of the MACs when
+    // Q and K generation are included.
+    let qkt_macs = (2048u64 * 512 * 2048) as f64;
+    let gen_macs = 2.0 * (2048u64 * 512 * 512) as f64;
+    assert!((qkt_macs / (qkt_macs + gen_macs) - 2.0 / 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn fig5_area_and_power_totals() {
+    use streamdcim::energy::area::AreaModel;
+    let cfg = presets::streamdcim_default();
+    let total = AreaModel::default().total_mm2(&cfg);
+    assert!((total - 12.10).abs() < 0.2, "area {total:.2} mm^2 (paper 12.10)");
+
+    // Peak on-chip power in the same regime as the paper's 122.77 mW max.
+    let runs = runs_for(presets::vilbert_base());
+    let tile = runs.iter().find(|r| r.dataflow == DataflowKind::TileStream).unwrap();
+    let onchip_mw = tile.energy.onchip_mj() / tile.energy.ms * 1e3;
+    assert!(
+        onchip_mw > 60.0 && onchip_mw < 190.0,
+        "on-chip power {onchip_mw:.1} mW (paper max 122.77)"
+    );
+}
+
+#[test]
+fn pruning_contributes_but_is_not_the_whole_story() {
+    // StreamDCIM must beat Layer-stream even with the DTPU disabled —
+    // the dataflow/pipeline contributions stand alone (paper challenges 2-3).
+    let mut cfg = presets::streamdcim_default();
+    cfg.features.token_pruning = false;
+    let model = presets::vilbert_base();
+    let runs = report::run_all(&cfg, &model);
+    let (_, s_layer) = report::speedups(&runs);
+    assert!(s_layer > 1.05, "no-pruning tile vs layer: {s_layer:.3}");
+
+    // and pruning adds on top
+    let cfg_p = presets::streamdcim_default();
+    let runs_p = report::run_all(&cfg_p, &model);
+    let (_, s_layer_p) = report::speedups(&runs_p);
+    assert!(s_layer_p > s_layer, "pruning should add speedup: {s_layer_p:.3} vs {s_layer:.3}");
+}
+
+#[test]
+fn utilization_is_sane() {
+    let runs = runs_for(presets::vilbert_base());
+    for r in &runs {
+        for (name, u) in &r.utilization {
+            assert!((0.0..=1.0).contains(u), "{} utilization {u} in {}", name, r.dataflow.name());
+        }
+        // cores must be meaningfully busy in streaming modes
+        if r.dataflow != DataflowKind::NonStream {
+            let tbr = r.utilization.iter().find(|(n, _)| n == "TBR-CIM").unwrap().1;
+            assert!(tbr > 0.2, "TBR-CIM idle ({tbr:.2}) under {}", r.dataflow.name());
+        }
+    }
+}
+
+#[test]
+fn per_layer_stats_cover_the_run() {
+    let runs = runs_for(presets::vilbert_base());
+    for r in &runs {
+        assert_eq!(r.per_layer.len() as u64, 6 + 12 + 6);
+        assert!(r.per_layer.iter().all(|l| l.end > l.start));
+        for w in r.per_layer.windows(2) {
+            assert!(w[1].start >= w[0].start, "layers out of order in {}", r.dataflow.name());
+        }
+        let last_end = r.per_layer.iter().map(|l| l.end).max().unwrap();
+        assert!(last_end <= r.cycles);
+    }
+}
+
+#[test]
+fn report_renders_all_figures() {
+    let cfg = presets::streamdcim_default();
+    let base = runs_for(presets::vilbert_base());
+    let tile = base.iter().find(|r| r.dataflow == DataflowKind::TileStream).unwrap();
+    let f5 = report::fig5(&cfg, tile);
+    assert!(f5.body.contains("paper: 12.10"));
+    let all = vec![
+        ("ViLBERT-base".to_string(), base),
+        ("ViLBERT-large".to_string(), runs_for(presets::vilbert_large())),
+    ];
+    assert!(report::fig6(&all).body.contains("geomean speedup"));
+    assert!(report::fig7(&all).body.contains("geomean energy saving"));
+    assert!(report::headline(&all).body.contains("geomean"));
+}

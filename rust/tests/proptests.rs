@@ -1,0 +1,196 @@
+//! Property-based tests on coordinator/simulator invariants, using the
+//! in-repo propcheck kit (deterministic, replayable by seed).
+
+use streamdcim::config::{presets, DataflowKind, PruningSchedule};
+use streamdcim::model::refimpl::{self, Mat};
+use streamdcim::model::{Op, OpKind, Stream};
+use streamdcim::prop_assert;
+use streamdcim::propcheck::Prop;
+use streamdcim::pruning::PruningPolicy;
+use streamdcim::sim::dtpu::top_k_indices;
+use streamdcim::sim::{OpTiling, Timeline};
+use streamdcim::util::json::Json;
+use streamdcim::util::prng::Rng;
+
+#[test]
+fn prop_topk_kept_scores_dominate_dropped() {
+    Prop::new("top-k keeps the k highest scores").cases(200).check(|rng| {
+        let n = rng.range_usize(1, 64);
+        let k = rng.range_usize(0, n);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let kept = top_k_indices(&scores, k);
+        prop_assert!(kept.len() == k, "kept {} != {k}", kept.len());
+        prop_assert!(kept.windows(2).all(|w| w[0] < w[1]), "not sorted: {kept:?}");
+        let dropped: Vec<usize> = (0..n).filter(|i| !kept.contains(i)).collect();
+        if let (Some(&min_k), Some(&max_d)) = (
+            kept.iter().min_by(|a, b| scores[**a].total_cmp(&scores[**b])),
+            dropped.iter().max_by(|a, b| scores[**a].total_cmp(&scores[**b])),
+        ) {
+            prop_assert!(
+                scores[min_k] >= scores[max_d],
+                "kept min {} < dropped max {}",
+                scores[min_k],
+                scores[max_d]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_timeline_never_overlaps_and_busy_is_conserved() {
+    Prop::new("timeline acquisitions are disjoint and ordered").cases(100).check(|rng| {
+        let mut t = Timeline::with_trace("x");
+        let mut total = 0u64;
+        for _ in 0..rng.range_usize(1, 40) {
+            let earliest = rng.range_u64(0, 1000);
+            let dur = rng.range_u64(0, 50);
+            let (s, e) = t.acquire(earliest, dur, "seg");
+            prop_assert!(s >= earliest, "started early");
+            prop_assert!(e - s == dur, "wrong duration");
+            total += dur;
+        }
+        prop_assert!(t.busy_cycles() == total, "busy {} != {total}", t.busy_cycles());
+        let segs = t.segments.as_ref().unwrap();
+        for w in segs.windows(2) {
+            prop_assert!(w[0].1 <= w[1].0, "segments overlap: {w:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiling_covers_shape() {
+    Prop::new("tiling covers the stationary operand exactly").cases(150).check(|rng| {
+        let cfg = presets::streamdcim_default();
+        let op = Op {
+            name: "op",
+            kind: OpKind::MatMulDynamic,
+            stream: Stream::X,
+            batch: rng.range_u64(1, 16),
+            m: rng.range_u64(1, 512),
+            k: rng.range_u64(1, 1024),
+            n: rng.range_u64(1, 1024),
+            bits: *[8u64, 16].get(rng.range_usize(0, 1)).unwrap(),
+        };
+        let t = OpTiling::of(&cfg, &op);
+        // tiles cover k x n per batch element
+        prop_assert!(
+            t.k_tiles * 32 >= op.k && t.n_tiles * 128 >= op.n,
+            "tiles too few: {t:?}"
+        );
+        prop_assert!(t.tiles == op.batch * t.k_tiles * t.n_tiles, "tile count");
+        prop_assert!(t.passes(8) >= 1 && t.passes(8) <= t.tiles, "passes bound");
+        prop_assert!(t.replay_factor(8) >= 1, "replay >= 1");
+        prop_assert!(t.replay_factor(8) <= t.n_tiles.max(1), "replay bounded by n tiles");
+        prop_assert!(t.rewrite_cycles(&cfg) >= t.rewrite_cycles_per_pass(&cfg, 8), "pass <= total");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruning_policy_monotonic_and_bounded() {
+    Prop::new("pruning targets are monotone, bounded, stage-aligned").cases(150).check(|rng| {
+        let stages = vec![128u64, 96, 64];
+        let policy = PruningPolicy::new(
+            PruningSchedule {
+                every: rng.range_u64(1, 3),
+                keep_ratio: 0.5 + rng.f64() * 0.5,
+                min_tokens: 64,
+            },
+            stages.clone(),
+        );
+        let n = rng.range_u64(64, 128);
+        let layer = rng.range_u64(0, 5);
+        let target = policy.target_tokens(n, layer);
+        prop_assert!(target <= n.max(64), "grew: {n} -> {target}");
+        prop_assert!(stages.contains(&target), "target {target} not a stage");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    Prop::new("json emit/parse roundtrip").cases(100).check(|rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.range_usize(0, 3) } else { rng.range_usize(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.f64() < 0.5),
+                2 => Json::Num((rng.range_u64(0, 1_000_000) as f64) / 8.0),
+                3 => Json::Str(format!("s{}-\"quote\"\n", rng.range_u64(0, 99))),
+                4 => Json::arr((0..rng.range_usize(0, 4)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::obj(
+                    vec![("a", gen(rng, depth + 1)), ("b", gen(rng, depth + 1))],
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        let text = v.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| format!("reparse: {e}"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gather_rows_preserves_content() {
+    Prop::new("DTPU gather keeps selected rows bit-identical").cases(100).check(|rng| {
+        let rows = rng.range_usize(1, 32);
+        let cols = rng.range_usize(1, 32);
+        let m = Mat::random_i16_grid(rng, rows, cols, 1.0);
+        let k = rng.range_usize(0, rows);
+        let scores: Vec<f32> = (0..rows).map(|_| rng.f32()).collect();
+        let idx = top_k_indices(&scores, k);
+        let g = m.gather_rows(&idx);
+        prop_assert!(g.rows == k, "rows {} != {k}", g.rows);
+        for (new_r, &old_r) in idx.iter().enumerate() {
+            prop_assert!(g.row(new_r) == m.row(old_r), "row {old_r} mutated");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_rows_stochastic() {
+    Prop::new("refimpl softmax rows are stochastic").cases(80).check(|rng| {
+        let rows = rng.range_usize(1, 16);
+        let cols = rng.range_usize(1, 64);
+        let mut m = Mat::random_i16_grid(rng, rows, cols, 5.0);
+        refimpl::softmax_rows(&mut m);
+        for r in 0..rows {
+            let s: f32 = m.row(r).iter().sum();
+            prop_assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+            prop_assert!(m.row(r).iter().all(|v| *v >= 0.0 && v.is_finite()), "bad probs");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tile_stream_never_slower_than_layer_stream() {
+    // routing/batching/state invariant of the coordinator's scheduling
+    // choice: on any workload shape, tile streaming must not lose.
+    Prop::new("tile <= layer cycles on random workloads").cases(12).check(|rng| {
+        let cfg = presets::streamdcim_default();
+        let mut model = presets::vilbert_base();
+        model.tokens_x = 256 * rng.range_u64(1, 16);
+        model.tokens_y = 256 * rng.range_u64(1, 16);
+        model.d_model = 256 * rng.range_u64(1, 4);
+        model.heads = model.d_model / 64;
+        model.d_ff = model.d_model * 4;
+        model.single_layers_x = rng.range_u64(0, 2);
+        model.single_layers_y = rng.range_u64(0, 2);
+        model.cross_layers = rng.range_u64(1, 3);
+        model.pruning = PruningSchedule::disabled();
+        let layer = streamdcim::dataflow::run(DataflowKind::LayerStream, &cfg, &model).cycles;
+        let tile = streamdcim::dataflow::run(DataflowKind::TileStream, &cfg, &model).cycles;
+        prop_assert!(
+            tile <= layer,
+            "tile {tile} > layer {layer} on {}x{} d{}",
+            model.tokens_x,
+            model.tokens_y,
+            model.d_model
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,142 @@
+//! PJRT runtime vs pure-Rust reference numerics (needs `make artifacts`).
+//!
+//! These tests prove the three layers compose: the Pallas kernels (L1)
+//! inside the JAX graph (L2), AOT-lowered to HLO text, loaded and executed
+//! from Rust (L3), match an independent Rust implementation of the same
+//! math on the same inputs.
+
+use std::path::{Path, PathBuf};
+
+use streamdcim::model::refimpl::{self, BlockWeights, Mat};
+use streamdcim::runtime::Runtime;
+use streamdcim::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+// PJRT handles are !Send, so each test loads its own runtime on its own
+// thread (compilation of the 9 artifacts takes a few seconds each).
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => Runtime::load(&dir).expect("artifacts load"),
+            None => {
+                eprintln!("skipped: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn manifest_covers_all_pruning_stages() {
+    let rt = &require_artifacts!();
+    for stage in rt.manifest.stages.clone() {
+        assert!(rt.manifest.block_for(stage).is_some(), "no block artifact for stage {stage}");
+    }
+    assert!(rt.artifact_names().len() >= 9);
+}
+
+#[test]
+fn matmul_artifact_matches_refimpl_exactly() {
+    let rt = &require_artifacts!();
+    let mut rng = Rng::new(100);
+    for (name, n) in [("matmul_64x64x64", 64usize), ("matmul_128x128x128", 128)] {
+        let a = Mat::random_i16_grid(&mut rng, n, n, 0.5);
+        let b = Mat::random_i16_grid(&mut rng, n, n, 0.5);
+        let out = rt
+            .execute(name, &[(&a.data, &[n, n]), (&b.data, &[n, n])])
+            .expect("execute matmul");
+        let want = refimpl::matmul(&a, &b);
+        let diff = max_abs_diff(&out[0], &want.data);
+        // same f32 values on the INT16 grid; tolerance covers accumulation
+        // order differences between the Pallas tiling and the ikj loop
+        assert!(diff < 1e-3, "{name}: max diff {diff}");
+    }
+}
+
+#[test]
+fn softmax_artifact_matches_refimpl() {
+    let rt = &require_artifacts!();
+    let mut rng = Rng::new(101);
+    let mut a = Mat::random_i16_grid(&mut rng, 128, 128, 3.0);
+    let out = rt.execute("softmax_128x128", &[(&a.data, &[128, 128])]).expect("softmax");
+    refimpl::softmax_rows(&mut a);
+    let diff = max_abs_diff(&out[0], &a.data);
+    assert!(diff < 1e-5, "max diff {diff}");
+    // rows sum to one
+    for r in 0..128 {
+        let s: f32 = out[0][r * 128..(r + 1) * 128].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn qkv_artifact_matches_refimpl() {
+    let rt = &require_artifacts!();
+    let mut rng = Rng::new(102);
+    let w = BlockWeights::random(&mut rng, 128, 512);
+    let i = Mat::random_i16_grid(&mut rng, 96, 128, 0.5);
+    let mut inputs: Vec<(&[f32], Vec<usize>)> = vec![(&i.data, vec![96, 128])];
+    inputs.extend(w.flat_inputs());
+    let refs: Vec<(&[f32], &[usize])> = inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+    let outs = rt.execute("qkv_n96_d128", &refs).expect("qkv");
+    for (out, wmat) in outs.iter().zip([&w.wq, &w.wk, &w.wv]) {
+        let want = refimpl::matmul(&i, wmat);
+        let diff = max_abs_diff(out, &want.data);
+        assert!(diff < 1e-3, "qkv diff {diff}");
+    }
+}
+
+#[test]
+fn encoder_block_artifact_matches_refimpl_all_stages() {
+    let rt = &require_artifacts!();
+    let mut rng = Rng::new(103);
+    let w = BlockWeights::random(&mut rng, 128, 512);
+    for n in [128usize, 96, 64] {
+        let ix = Mat::random_i16_grid(&mut rng, n, 128, 0.5);
+        let iy = Mat::random_i16_grid(&mut rng, n, 128, 0.5);
+        let name = format!("block_n{n}_d128_h4");
+        let (out, scores) = rt.run_block(&name, &ix, &iy, &w).expect("block");
+        let (want_out, want_scores) = refimpl::encoder_block(&w, &ix, &iy, 4);
+        let d_out = max_abs_diff(&out.data, &want_out.data);
+        let d_sc = max_abs_diff(&scores, &want_scores);
+        // cross-language f32 (XLA fusions vs plain loops): loose but tight
+        // enough to catch any real bug
+        assert!(d_out < 5e-3, "stage {n}: output diff {d_out}");
+        assert!(d_sc < 1e-4, "stage {n}: scores diff {d_sc}");
+        let s: f32 = scores.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "stage {n}: scores sum {s}");
+    }
+}
+
+#[test]
+fn execute_validates_shapes() {
+    let rt = &require_artifacts!();
+    let bad = vec![0.0f32; 16];
+    // wrong shape
+    assert!(rt.execute("matmul_64x64x64", &[(&bad, &[4, 4]), (&bad, &[4, 4])]).is_err());
+    // wrong arity
+    assert!(rt.execute("matmul_64x64x64", &[(&bad, &[4, 4])]).is_err());
+    // unknown artifact
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn single_modal_block_via_same_artifact() {
+    // passing iy = ix turns the cross-modal block into a single-modal one
+    let rt = &require_artifacts!();
+    let mut rng = Rng::new(104);
+    let w = BlockWeights::random(&mut rng, 128, 512);
+    let ix = Mat::random_i16_grid(&mut rng, 64, 128, 0.5);
+    let (out, scores) = rt.run_block("block_n64_d128_h4", &ix, &ix, &w).expect("block");
+    let (want, _) = refimpl::encoder_block(&w, &ix, &ix, 4);
+    assert!(max_abs_diff(&out.data, &want.data) < 5e-3);
+    assert_eq!(scores.len(), 64);
+}
