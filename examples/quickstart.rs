@@ -12,9 +12,10 @@ use streamdcim::config::presets;
 use streamdcim::model::refimpl::{BlockWeights, Mat};
 use streamdcim::report;
 use streamdcim::runtime::Runtime;
+use streamdcim::util::error::Result;
 use streamdcim::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // --- 1. the paper's headline experiment, one model -----------------
     let cfg = presets::streamdcim_default();
     let model = presets::vilbert_base();

@@ -20,16 +20,18 @@ use std::time::Instant;
 
 use streamdcim::config::presets;
 use streamdcim::coordinator::{Coordinator, Request};
+use streamdcim::ensure;
 use streamdcim::model::refimpl::Mat;
 use streamdcim::report;
+use streamdcim::util::error::Result;
 use streamdcim::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let n_requests = 48u64;
     let batch = 6usize;
     let model = presets::functional_small();
     let artifacts = PathBuf::from("artifacts");
-    anyhow::ensure!(
+    ensure!(
         artifacts.join("manifest.json").exists(),
         "artifacts missing — run `make artifacts` first"
     );

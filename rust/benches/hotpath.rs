@@ -11,16 +11,17 @@ use streamdcim::benchkit::{row, section, Bench};
 use streamdcim::config::{presets, DataflowKind};
 use streamdcim::dataflow;
 use streamdcim::model::refimpl::{self, BlockWeights, Mat};
+use streamdcim::sweep::Scenario;
 use streamdcim::util::prng::Rng;
 
 fn main() {
     section("L3 simulator throughput");
     let cfg = presets::streamdcim_default();
     let base = presets::vilbert_base();
-    let r = Bench::new("sim/vilbert_base/tile").iters(5).run(|| {
-        dataflow::run(DataflowKind::TileStream, &cfg, &base)
-    });
-    let run = dataflow::run(DataflowKind::TileStream, &cfg, &base);
+    let scenario =
+        Scenario::new(cfg.clone(), base.clone(), DataflowKind::TileStream, "full");
+    let r = Bench::new("sim/vilbert_base/tile").iters(5).run(|| scenario.run_report());
+    let run = scenario.run_report();
     let sim_cycles_per_sec = run.cycles as f64 / (r.mean_ns / 1e9);
     row("simulated cycles/s", format!("{:.2e}", sim_cycles_per_sec));
 

@@ -1,0 +1,62 @@
+//! CI bench-smoke: time the sweep engine on the tiny smoke preset with
+//! reduced iterations and emit a machine-readable JSON artifact
+//! (`bench_sweep_smoke.json`) for trajectory tracking across commits.
+//!
+//! Knobs (env):
+//! * `BENCH_SMOKE_ITERS` — timed iterations per sample batch (default 5).
+//! * `BENCH_SMOKE_OUT`   — artifact path (default `bench_sweep_smoke.json`).
+
+use std::time::Duration;
+
+use streamdcim::benchkit::{row, section, Bench};
+use streamdcim::config::presets;
+use streamdcim::sweep;
+use streamdcim::util::json::Json;
+
+fn main() {
+    let iters: u32 = std::env::var("BENCH_SMOKE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let out_path =
+        std::env::var("BENCH_SMOKE_OUT").unwrap_or_else(|_| "bench_sweep_smoke.json".into());
+
+    section("sweep smoke (tiny-smoke preset, 8 scenarios)");
+    let accel = presets::streamdcim_default();
+    let models = vec![presets::tiny_smoke()];
+    let scenarios = sweep::matrix_for(&accel, &models);
+    row("scenarios", scenarios.len());
+
+    let serial = Bench::new("sweep/tiny-smoke/serial")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| sweep::run_sweep(&scenarios, 1, 42));
+    let parallel = Bench::new("sweep/tiny-smoke/2-threads")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| sweep::run_sweep(&scenarios, 2, 42));
+
+    // smoke-check the determinism contract on every CI run
+    let a = sweep::run_sweep(&scenarios, 1, 42).to_json().to_string_pretty();
+    let b = sweep::run_sweep(&scenarios, 2, 42).to_json().to_string_pretty();
+    assert_eq!(a, b, "parallel aggregate diverged from serial");
+    row("determinism", "serial == 2-threads (bit-identical JSON)");
+
+    let bench_json = |r: &streamdcim::benchkit::BenchResult| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+        ])
+    };
+    let artifact = Json::obj(vec![
+        ("kind", Json::str("sweep-smoke")),
+        ("scenario_count", Json::num(scenarios.len() as f64)),
+        ("benches", Json::arr(vec![bench_json(&serial), bench_json(&parallel)])),
+        ("sweep", Json::parse(&a).expect("aggregate json reparses")),
+    ]);
+    std::fs::write(&out_path, artifact.to_string_pretty()).expect("write bench artifact");
+    row("artifact", &out_path);
+}

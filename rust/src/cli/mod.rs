@@ -12,13 +12,22 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
-    #[error("missing value for --{0}")]
     MissingValue(String),
-    #[error("missing command (try `streamdcim help`)")]
     MissingCommand,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(name) => write!(f, "missing value for --{name}"),
+            CliError::MissingCommand => write!(f, "missing command (try `streamdcim help`)"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Flags that take no value.
 const SWITCHES: &[&str] = &["trace", "verbose", "json", "no-pruning", "ref"];
@@ -69,9 +78,18 @@ USAGE: streamdcim <command> [options]
 
 COMMANDS
   run        simulate a model under one dataflow
-               --model base|large|small|microbench   (default base)
+               --model <preset>                      (default base; see below)
                --dataflow tile|layer|non             (default tile)
                --config <file.toml>  --json  --trace
+  sweep      run the full scenario matrix (dataflow x model x ablation)
+               --threads <n>       (default: available cores, max 8)
+               --models a,b,c      (default: the whole sweep registry)
+               --out <file.json>   write the aggregate JSON to a file
+               --seed <n>          shard-shuffle seed (default 42; does
+                                   not affect results — aggregates are
+                                   bit-identical for any seed/threads)
+               --config <file.toml> ([accel]/[energy]/[features] only)
+               --json
   report     regenerate a paper figure
                --figure fig5|fig6|fig7|headline|e5   (default headline)
                --config <file.toml>
@@ -83,6 +101,11 @@ COMMANDS
   artifacts  list loaded artifacts and their shapes
                --artifacts <dir>
   help       this text
+
+MODEL PRESETS
+  paper     : vilbert-base, vilbert-large, trancim-microbench
+  registry  : clip-dual, vit-bert-cross, audio-visual, vilbert-base-8k,
+              long-doc-vqa, mm-chat-edge, functional-small, tiny-smoke
 ";
 
 #[cfg(test)]

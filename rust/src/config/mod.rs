@@ -32,6 +32,15 @@ impl DataflowKind {
         }
     }
 
+    /// Short machine-readable name (scenario ids, CLI); `parse` accepts it.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            DataflowKind::NonStream => "non",
+            DataflowKind::LayerStream => "layer",
+            DataflowKind::TileStream => "tile",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "non" | "non-stream" | "nonstream" => Some(DataflowKind::NonStream),

@@ -124,6 +124,147 @@ pub fn functional_small() -> ModelConfig {
     }
 }
 
+/// CLIP-class dual-encoder (ViT-B/16 image tower + text tower): deep
+/// single-modal stacks, one late-fusion co-attention layer.  Token counts
+/// follow CLIP (196 patches + CLS, 77 text tokens); contrastive encoders
+/// keep every token, so pruning is off.
+pub fn clip_dual() -> ModelConfig {
+    ModelConfig {
+        name: "clip-dual".into(),
+        single_layers_x: 12,
+        single_layers_y: 12,
+        cross_layers: 1,
+        d_model: 768,
+        heads: 12,
+        d_ff: 3072,
+        tokens_x: 197,
+        tokens_y: 77,
+        bits: 16,
+        pruning: PruningSchedule::disabled(),
+    }
+}
+
+/// ViT-BERT cross-attention VQA stack: ViT-B/16 vision tokens attending
+/// to a BERT-base sequence through six co-attention layers.
+pub fn vit_bert_cross() -> ModelConfig {
+    ModelConfig {
+        name: "vit-bert-cross".into(),
+        single_layers_x: 12,
+        single_layers_y: 12,
+        cross_layers: 6,
+        d_model: 768,
+        heads: 12,
+        d_ff: 3072,
+        tokens_x: 196,
+        tokens_y: 512,
+        bits: 16,
+        pruning: PruningSchedule { every: 2, keep_ratio: 0.75, min_tokens: 128 },
+    }
+}
+
+/// Audio-visual encoder (AV-HuBERT-class): long audio-frame stream plus
+/// video patch tokens, with aggressive redundancy pruning on both.
+pub fn audio_visual() -> ModelConfig {
+    ModelConfig {
+        name: "audio-visual".into(),
+        single_layers_x: 4,
+        single_layers_y: 4,
+        cross_layers: 8,
+        d_model: 512,
+        heads: 8,
+        d_ff: 2048,
+        tokens_x: 784,
+        tokens_y: 1024,
+        bits: 16,
+        pruning: PruningSchedule { every: 2, keep_ratio: 0.7, min_tokens: 256 },
+    }
+}
+
+/// Long-context ViLBERT-base variant: 8k tokens per modality (dense video
+/// + long document), the regime where attention quadratics dominate.
+pub fn vilbert_base_8k() -> ModelConfig {
+    let mut m = vilbert_base();
+    m.name = "vilbert-base-8k".into();
+    m.tokens_x = 8192;
+    m.tokens_y = 8192;
+    m.pruning = PruningSchedule { every: 2, keep_ratio: 0.75, min_tokens: 1024 };
+    m
+}
+
+/// Long-document VQA: a BERT-large-width language stream over an 8k-token
+/// document cross-attending a moderate vision stream.
+pub fn long_doc_vqa() -> ModelConfig {
+    ModelConfig {
+        name: "long-doc-vqa".into(),
+        single_layers_x: 4,
+        single_layers_y: 12,
+        cross_layers: 6,
+        d_model: 1024,
+        heads: 16,
+        d_ff: 4096,
+        tokens_x: 2048,
+        tokens_y: 8192,
+        bits: 16,
+        pruning: PruningSchedule { every: 2, keep_ratio: 0.75, min_tokens: 1024 },
+    }
+}
+
+/// Edge multimodal chat assistant: narrow model, short vision prefix,
+/// longer text context, pruning every cross layer.
+pub fn mm_chat_edge() -> ModelConfig {
+    ModelConfig {
+        name: "mm-chat-edge".into(),
+        single_layers_x: 2,
+        single_layers_y: 4,
+        cross_layers: 4,
+        d_model: 384,
+        heads: 6,
+        d_ff: 1536,
+        tokens_x: 256,
+        tokens_y: 768,
+        bits: 16,
+        pruning: PruningSchedule { every: 1, keep_ratio: 0.75, min_tokens: 128 },
+    }
+}
+
+/// Tiny smoke model for CI: one layer of each kind at CPU-trivial sizes.
+/// The bench-smoke job and the sweep determinism test lean on it.
+pub fn tiny_smoke() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-smoke".into(),
+        single_layers_x: 1,
+        single_layers_y: 1,
+        cross_layers: 1,
+        d_model: 128,
+        heads: 4,
+        d_ff: 512,
+        tokens_x: 64,
+        tokens_y: 64,
+        bits: 16,
+        pruning: PruningSchedule { every: 1, keep_ratio: 0.75, min_tokens: 32 },
+    }
+}
+
+/// The workload registry the `sweep` subcommand enumerates: every preset
+/// that represents an end-to-end multimodal workload (the TranCIM
+/// microbenchmark is a single-op calibration shape and stays out).
+/// Ordering is part of the sweep's deterministic output — append, don't
+/// reorder.
+pub fn sweep_models() -> Vec<ModelConfig> {
+    vec![
+        tiny_smoke(),
+        functional_small(),
+        mm_chat_edge(),
+        clip_dual(),
+        vit_bert_cross(),
+        audio_visual(),
+        vilbert_base(),
+        vilbert_large(),
+        vilbert_base_8k(),
+        long_doc_vqa(),
+    ]
+}
+
 /// The Sec. I TranCIM microbenchmark: QK^T with a 2048x512 K matrix at
 /// INT8.  Used by the rewrite-fraction validation (experiment E5).
 pub fn trancim_microbench() -> ModelConfig {
@@ -148,6 +289,13 @@ pub fn model_by_name(name: &str) -> Option<ModelConfig> {
         "vilbert-large" | "large" => Some(vilbert_large()),
         "functional-small" | "small" | "functional" => Some(functional_small()),
         "trancim-microbench" | "microbench" => Some(trancim_microbench()),
+        "clip-dual" | "clip" => Some(clip_dual()),
+        "vit-bert-cross" | "vit-bert" => Some(vit_bert_cross()),
+        "audio-visual" | "av" => Some(audio_visual()),
+        "vilbert-base-8k" | "base-8k" => Some(vilbert_base_8k()),
+        "long-doc-vqa" | "longdoc" => Some(long_doc_vqa()),
+        "mm-chat-edge" | "edge" => Some(mm_chat_edge()),
+        "tiny-smoke" | "tiny" | "smoke" => Some(tiny_smoke()),
         _ => None,
     }
 }
@@ -182,6 +330,26 @@ mod tests {
         assert!(model_by_name("VILBERT-LARGE").is_some());
         assert!(model_by_name("functional").is_some());
         assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn sweep_registry_is_lookupable_and_well_formed() {
+        let models = sweep_models();
+        assert!(models.len() >= 10, "registry has {} models", models.len());
+        let mut names = std::collections::BTreeSet::new();
+        for m in &models {
+            assert!(names.insert(m.name.clone()), "duplicate preset {}", m.name);
+            let found = model_by_name(&m.name).expect("registry preset resolvable by name");
+            assert_eq!(found.name, m.name);
+            // shapes the simulator relies on
+            assert!(m.heads > 0 && m.d_model % m.heads == 0, "{}: heads", m.name);
+            assert!(m.tokens_x > 0 && m.tokens_y > 0, "{}: tokens", m.name);
+            assert!(m.cross_layers >= 1, "{}: needs a cross layer", m.name);
+            assert!(m.bits == 8 || m.bits == 16, "{}: bits", m.name);
+        }
+        // the CI smoke model must be the cheapest thing in the registry
+        let smoke = tiny_smoke();
+        assert!(models.iter().all(|m| m.tokens_x * m.tokens_y >= smoke.tokens_x * smoke.tokens_y));
     }
 
     #[test]

@@ -49,12 +49,19 @@ impl TomlVal {
 pub type Table = BTreeMap<String, TomlVal>;
 pub type Doc = BTreeMap<String, Table>;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse a TOML-subset document into `{section -> {key -> value}}`.
 /// Keys before the first section header land in section `""`.

@@ -22,11 +22,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::config::ModelConfig;
 use crate::model::refimpl::Mat;
 use crate::runtime::Runtime;
+use crate::util::error::Result;
 
 use super::stack::EncoderStack;
 

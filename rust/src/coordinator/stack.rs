@@ -8,12 +8,12 @@
 //! (an L3 operation — the paper's DTPU is outside the CIM cores too), and
 //! the next layer runs the smaller artifact.
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::config::ModelConfig;
 use crate::model::refimpl::{encoder_block, BlockWeights, Mat};
 use crate::pruning::PruningPolicy;
 use crate::runtime::Runtime;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 
 /// Per-layer weight pairs (X-stream block, Y-stream block).

@@ -2,8 +2,17 @@
 //!
 //! The coordinator's needs are modest: a worker pool consuming jobs from a
 //! shared queue, plus oneshot reply channels.  std::sync::mpsc covers the
-//! channels; this module adds the pool and a tiny `Oneshot` wrapper.
+//! channels; this module adds the pool and a tiny `Promise` handle.
+//!
+//! Panic safety: a panicking job must never take the pool down with it.
+//! Workers run every job under `catch_unwind`, so they survive, never
+//! poison the shared queue lock, and `Drop` can always join them.  For
+//! jobs submitted through [`ThreadPool::submit`], the captured panic
+//! payload travels back through the [`Promise`] and is re-raised in the
+//! *caller* via `resume_unwind` — the sweep engine sees the original
+//! panic instead of a deadlock or a dangling channel.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,11 +37,18 @@ impl ThreadPool {
                     .name(format!("worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().expect("poisoned job queue");
+                            // Jobs run outside this critical section, so a
+                            // panicking job cannot poison the lock; recover
+                            // from poison anyway rather than cascading.
+                            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // Contain panics: the worker (and with it the
+                            // whole pool) must outlive any single job.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // all senders dropped
                         }
                     })
@@ -42,6 +58,12 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget: a panic in `f` is contained in the worker (use
+    /// [`ThreadPool::submit`] when the caller must observe it).
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()
@@ -50,7 +72,8 @@ impl ThreadPool {
             .expect("worker queue closed");
     }
 
-    /// Submit a closure and get a handle to its result.
+    /// Submit a closure and get a handle to its result.  If the closure
+    /// panics, the panic is re-raised from [`Promise::wait`].
     pub fn submit<T, F>(&self, f: F) -> Promise<T>
     where
         T: Send + 'static,
@@ -58,7 +81,7 @@ impl ThreadPool {
     {
         let (tx, rx) = channel();
         self.spawn(move || {
-            let _ = tx.send(f());
+            let _ = tx.send(catch_unwind(AssertUnwindSafe(f)));
         });
         Promise { rx }
     }
@@ -66,6 +89,7 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
+        // Close the queue first so workers drain and exit, then join.
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -75,17 +99,28 @@ impl Drop for ThreadPool {
 
 /// Result handle for a submitted job.
 pub struct Promise<T> {
-    rx: Receiver<T>,
+    rx: Receiver<std::thread::Result<T>>,
 }
 
 impl<T> Promise<T> {
-    /// Block until the job completes.
+    /// Block until the job completes.  Re-raises the job's panic in the
+    /// calling thread if it panicked.
     pub fn wait(self) -> T {
-        self.rx.recv().expect("job panicked or pool dropped")
+        match self.rx.recv() {
+            Ok(Ok(v)) => v,
+            Ok(Err(payload)) => resume_unwind(payload),
+            Err(_) => panic!("pool dropped before job completed"),
+        }
     }
 
+    /// Non-blocking poll; `None` while pending.  Re-raises the job's
+    /// panic if it panicked.
     pub fn try_wait(&self) -> Option<T> {
-        self.rx.try_recv().ok()
+        match self.rx.try_recv() {
+            Ok(Ok(v)) => Some(v),
+            Ok(Err(payload)) => resume_unwind(payload),
+            Err(_) => None,
+        }
     }
 }
 
@@ -142,5 +177,40 @@ mod tests {
             p.wait();
         }
         assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_propagates_to_waiter() {
+        let pool = ThreadPool::new(2);
+        let p: Promise<u32> = pool.submit(|| panic!("job exploded"));
+        let err = catch_unwind(AssertUnwindSafe(|| p.wait())).unwrap_err();
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("job exploded"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = ThreadPool::new(1);
+        // the single worker hits several panics yet keeps serving
+        for _ in 0..3 {
+            let p: Promise<()> = pool.submit(|| panic!("boom"));
+            assert!(catch_unwind(AssertUnwindSafe(|| p.wait())).is_err());
+        }
+        assert_eq!(pool.submit(|| 7u32).wait(), 7);
+        assert_eq!(pool.threads(), 1);
+    } // drop must join without hanging
+
+    #[test]
+    fn drop_after_panic_does_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..8 {
+            pool.spawn(|| panic!("contained"));
+        }
+        drop(pool); // joins both workers; a hang here fails the test by timeout
     }
 }

@@ -4,6 +4,10 @@
 //! self-contained after `make artifacts`: simulation needs no artifacts at
 //! all; `serve` loads the AOT HLO text through the PJRT CPU client.
 
+// Same lint posture as lib.rs (authored offline without clippy).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::PathBuf;
 use std::process::ExitCode;
 
@@ -12,9 +16,11 @@ use streamdcim::config::{presets, toml, AccelConfig, DataflowKind, ModelConfig};
 use streamdcim::coordinator::{Coordinator, Request};
 use streamdcim::model::refimpl::Mat;
 use streamdcim::report;
+use streamdcim::sweep::{self, Scenario};
 use streamdcim::trace::render_gantt;
+use streamdcim::util::error::Result;
 use streamdcim::util::prng::Rng;
-use streamdcim::{dataflow, runtime};
+use streamdcim::{anyhow, bail, dataflow, runtime};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -27,6 +33,7 @@ fn main() -> ExitCode {
     };
     let result = match args.command.as_str() {
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -48,13 +55,13 @@ fn main() -> ExitCode {
     }
 }
 
-fn load_configs(args: &Args) -> anyhow::Result<(AccelConfig, ModelConfig)> {
+fn load_configs(args: &Args) -> Result<(AccelConfig, ModelConfig)> {
     let mut accel = presets::streamdcim_default();
     let mut model = presets::model_by_name(args.flag_or("model", "base"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", args.flag_or("model", "?")))?;
+        .ok_or_else(|| anyhow!("unknown model '{}'", args.flag_or("model", "?")))?;
     if let Some(path) = args.flag("config") {
         let text = std::fs::read_to_string(path)?;
-        let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         toml::apply_accel_overrides(&mut accel, &doc);
         toml::apply_model_overrides(&mut model, &doc);
     }
@@ -64,11 +71,12 @@ fn load_configs(args: &Args) -> anyhow::Result<(AccelConfig, ModelConfig)> {
     Ok((accel, model))
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> Result<()> {
     let (accel, model) = load_configs(args)?;
     let kind = DataflowKind::parse(args.flag_or("dataflow", "tile"))
-        .ok_or_else(|| anyhow::anyhow!("unknown dataflow"))?;
-    let r = dataflow::run(kind, &accel, &model);
+        .ok_or_else(|| anyhow!("unknown dataflow"))?;
+    let scenario = Scenario::new(accel.clone(), model.clone(), kind, "full");
+    let r = scenario.run_report();
     if args.has("json") {
         println!("{}", r.to_json().to_string_pretty());
     } else {
@@ -107,7 +115,75 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(args: &Args) -> anyhow::Result<()> {
+/// `streamdcim sweep`: enumerate the scenario matrix, shard it across the
+/// thread pool, and emit the deterministic aggregate (text or JSON).
+///
+/// The workloads come from `--models` / the registry, so only the
+/// accelerator-side sections of `--config` apply here; model-side flags
+/// are rejected rather than silently ignored.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.flag("model").is_some() || args.has("no-pruning") {
+        bail!("sweep enumerates --models/the registry; --model and --no-pruning do not apply");
+    }
+    let mut accel = presets::streamdcim_default();
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        toml::apply_accel_overrides(&mut accel, &doc);
+        if doc.contains_key("model") || doc.contains_key("pruning") {
+            eprintln!(
+                "warning: {path}: [model]/[pruning] sections are ignored by sweep \
+                 (workloads come from --models / the preset registry)"
+            );
+        }
+    }
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let threads = (args.flag_u64("threads", default_threads as u64) as usize).max(1);
+    let seed = args.flag_u64("seed", 42);
+
+    let models: Vec<ModelConfig> = match args.flag("models") {
+        Some(list) => {
+            let mut models: Vec<ModelConfig> = Vec::new();
+            for name in list.split(',') {
+                let m = presets::model_by_name(name.trim())
+                    .ok_or_else(|| anyhow!("unknown model '{}' in --models", name.trim()))?;
+                // aliases may resolve to the same preset; keep one copy so
+                // scenario ids stay unique and geomeans stay unweighted
+                if !models.iter().any(|existing| existing.name == m.name) {
+                    models.push(m);
+                }
+            }
+            models
+        }
+        None => presets::sweep_models(),
+    };
+    let scenarios = sweep::matrix_for(&accel, &models);
+    eprintln!(
+        "sweep: {} scenarios ({} models x 3 dataflows x ablations) on {} thread(s)",
+        scenarios.len(),
+        models.len(),
+        threads
+    );
+
+    let started = std::time::Instant::now();
+    let aggregate = sweep::run_sweep(&scenarios, threads, seed);
+    eprintln!("sweep finished in {:.2} s", started.elapsed().as_secs_f64());
+
+    let json = aggregate.to_json();
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, json.to_string_pretty())?;
+        eprintln!("aggregate JSON written to {path}");
+    }
+    if args.has("json") {
+        println!("{}", json.to_string_pretty());
+    } else {
+        println!("{}", aggregate.render_text());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
     let (accel, _) = load_configs(args)?;
     let figure = args.flag_or("figure", "headline");
     let both = || -> Vec<(String, Vec<streamdcim::metrics::RunReport>)> {
@@ -129,7 +205,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
         "fig7" => report::fig7(&both()),
         "headline" => report::headline(&both()),
         "e5" => e5_report(&accel),
-        other => anyhow::bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5)"),
+        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5)"),
     };
     println!("{}\n{}", fig.title, fig.body);
     Ok(())
@@ -163,7 +239,7 @@ fn e5_report(accel: &AccelConfig) -> report::FigureText {
     report::FigureText { title: "E5 — TranCIM rewrite-fraction microbenchmark".into(), body }
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let model = presets::functional_small();
     let artifacts = if args.has("ref") {
         None
@@ -219,7 +295,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::load(&dir)?;
     println!("{} artifacts in {:?} (fingerprint {})", rt.artifact_names().len(), dir, &rt.manifest.fingerprint[..12.min(rt.manifest.fingerprint.len())]);

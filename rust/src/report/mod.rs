@@ -22,7 +22,6 @@ pub fn fig6_rows(runs: &[RunReport]) -> Vec<(String, f64, f64)> {
     let non = find(runs, DataflowKind::NonStream).cycles as f64;
     runs.iter()
         .map(|r| (r.dataflow.name().to_string(), r.cycles as f64, non / r.cycles as f64))
-        .map(|(n, c, s)| (n, c, s))
         .collect()
 }
 

@@ -3,9 +3,9 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{anyhow, bail};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {

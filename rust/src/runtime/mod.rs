@@ -10,15 +10,17 @@
 //! Python is never on this path — the manifest + HLO text are plain files.
 
 pub mod manifest;
+pub mod xla_stub;
 
 pub use manifest::{ArtifactSpec, Manifest};
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use self::xla_stub as xla;
 use crate::model::refimpl::Mat;
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 /// A compiled artifact ready to execute.
 pub struct LoadedArtifact {

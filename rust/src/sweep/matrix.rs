@@ -1,0 +1,115 @@
+//! Scenario-matrix enumeration: dataflow x model preset x ablation /
+//! tile-size knob.
+//!
+//! Per model the matrix holds the paper's three-way comparison plus the
+//! tile-stream ablation column (Sec. III features individually) and two
+//! microarchitecture knobs that perturb the tile geometry:
+//!
+//! * `non/full`, `layer/full` — the two baselines (features don't apply).
+//! * `tile/full`              — StreamDCIM as configured.
+//! * `tile/no-pruning`        — DTPU off (challenge-1 contribution).
+//! * `tile/no-pingpong`       — rewrites serialize with compute.
+//! * `tile/no-hybrid`         — no mixed-stationary cross-forwarding.
+//! * `tile/tall-tiles`        — 2x arrays per macro: taller stationary
+//!                              tiles, fewer passes, costlier rewrites.
+//! * `tile/fast-port`         — 2x macro write-port width: cheaper
+//!                              rewrites, probing rewrite-boundedness.
+//!
+//! Matrix order is deterministic and is the canonical order of the
+//! aggregate report.
+
+use crate::config::{presets, AccelConfig, DataflowKind, ModelConfig};
+
+use super::Scenario;
+
+/// Tile-stream accelerator variants: (ablation label, config).
+pub fn tile_variants(base: &AccelConfig) -> Vec<(&'static str, AccelConfig)> {
+    let mut v = vec![("full", base.clone())];
+
+    let mut cfg = base.clone();
+    cfg.features.token_pruning = false;
+    v.push(("no-pruning", cfg));
+
+    let mut cfg = base.clone();
+    cfg.features.pingpong = false;
+    v.push(("no-pingpong", cfg));
+
+    let mut cfg = base.clone();
+    cfg.features.hybrid_mode = false;
+    v.push(("no-hybrid", cfg));
+
+    let mut cfg = base.clone();
+    cfg.arrays_per_macro *= 2;
+    v.push(("tall-tiles", cfg));
+
+    let mut cfg = base.clone();
+    cfg.macro_write_port_bits *= 2;
+    v.push(("fast-port", cfg));
+
+    v
+}
+
+/// Enumerate the scenario matrix for `models` on `accel`.
+pub fn matrix_for(accel: &AccelConfig, models: &[ModelConfig]) -> Vec<Scenario> {
+    let mut scenarios = Vec::new();
+    for model in models {
+        for df in [DataflowKind::NonStream, DataflowKind::LayerStream] {
+            scenarios.push(Scenario::new(accel.clone(), model.clone(), df, "full"));
+        }
+        for (ablation, cfg) in tile_variants(accel) {
+            scenarios.push(Scenario::new(cfg, model.clone(), DataflowKind::TileStream, ablation));
+        }
+    }
+    scenarios
+}
+
+/// The full matrix over the workload registry.
+pub fn full_matrix(accel: &AccelConfig) -> Vec<Scenario> {
+    matrix_for(accel, &presets::sweep_models())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn full_matrix_covers_the_acceptance_floor() {
+        let m = full_matrix(&presets::streamdcim_default());
+        assert!(m.len() >= 60, "matrix has only {} scenarios", m.len());
+        let ids: BTreeSet<String> = m.iter().map(|s| s.id()).collect();
+        assert_eq!(ids.len(), m.len(), "scenario ids must be unique");
+        // 3 dataflows x >= 10 models x ablations
+        let dataflows: BTreeSet<&str> = m.iter().map(|s| s.dataflow.slug()).collect();
+        assert_eq!(dataflows.len(), 3);
+        let models: BTreeSet<&str> = m.iter().map(|s| s.model.name.as_str()).collect();
+        assert!(models.len() >= 10);
+    }
+
+    #[test]
+    fn every_model_has_a_non_stream_baseline() {
+        let m = full_matrix(&presets::streamdcim_default());
+        let models: BTreeSet<&str> = m.iter().map(|s| s.model.name.as_str()).collect();
+        for model in models {
+            assert!(
+                m.iter().any(|s| s.model.name == model
+                    && s.dataflow == DataflowKind::NonStream
+                    && s.ablation == "full"),
+                "{model} lacks the non/full baseline"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_variants_perturb_what_they_claim() {
+        let base = presets::streamdcim_default();
+        let vs = tile_variants(&base);
+        let get = |name: &str| &vs.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert!(!get("no-pruning").features.token_pruning);
+        assert!(!get("no-pingpong").features.pingpong);
+        assert!(!get("no-hybrid").features.hybrid_mode);
+        assert_eq!(get("tall-tiles").arrays_per_macro, base.arrays_per_macro * 2);
+        assert_eq!(get("fast-port").macro_write_port_bits, base.macro_write_port_bits * 2);
+        assert!(get("full").features.token_pruning);
+    }
+}

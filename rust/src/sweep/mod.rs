@@ -1,0 +1,406 @@
+//! Parallel scenario-sweep engine.
+//!
+//! Turns the one-shot simulator into a throughput-oriented evaluation
+//! tool: [`matrix::full_matrix`] enumerates a scenario matrix (dataflow x
+//! workload-registry model x feature ablation x tile-geometry knob),
+//! [`run_sweep`] shards the scenarios across an [`exec::ThreadPool`], and
+//! the aggregate is a single ranked report with per-dataflow/ablation
+//! geomeans vs the Non-stream baseline — the paper's Fig. 6/7 three-way
+//! comparison generalized across the whole registry.
+//!
+//! Determinism contract: each scenario run is a pure function, results
+//! are re-ordered into canonical matrix order before aggregation, and the
+//! aggregate JSON carries no run-environment fields — so the output is
+//! **bit-identical** for any `threads` value and any shard-shuffle seed
+//! (`tests/sweep_determinism.rs` enforces this).
+
+pub mod matrix;
+pub mod scenario;
+
+pub use matrix::{full_matrix, matrix_for, tile_variants};
+pub use scenario::{Scenario, ScenarioResult};
+
+use crate::config::DataflowKind;
+use crate::exec::ThreadPool;
+use crate::util::geomean;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// One scenario outcome plus its baseline-relative metrics.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub result: ScenarioResult,
+    /// Cycles of this model's `non/full` baseline over this scenario's.
+    pub speedup_vs_non: f64,
+    /// Energy of this model's `non/full` baseline over this scenario's.
+    pub energy_saving_vs_non: f64,
+}
+
+/// Geomean summary of one (dataflow, ablation) column across all models.
+#[derive(Debug, Clone)]
+pub struct GroupSummary {
+    pub dataflow: DataflowKind,
+    pub ablation: &'static str,
+    pub models: usize,
+    pub geomean_speedup_vs_non: f64,
+    pub geomean_energy_saving_vs_non: f64,
+    /// 1-based rank by geomean speedup (ties keep matrix order).
+    pub rank: usize,
+}
+
+/// The paper-mirroring headline: Tile-stream (full) vs both baselines.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Headline {
+    pub tile_vs_non_speedup: f64,
+    pub tile_vs_layer_speedup: f64,
+    pub tile_vs_non_energy: f64,
+    pub tile_vs_layer_energy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Rows in canonical matrix order.
+    pub rows: Vec<SweepRow>,
+    /// Group summaries in matrix order, with ranking attached.
+    pub groups: Vec<GroupSummary>,
+    pub headline: Headline,
+}
+
+/// Run `scenarios` on `threads` workers and aggregate.
+///
+/// `seed` shuffles the *submission* order (coarse load balancing so the
+/// expensive long-context scenarios don't all land on one worker); it has
+/// no effect on the aggregate, which is assembled in matrix order.  A
+/// panicking scenario propagates its panic to this caller (see
+/// `exec::Promise::wait`) instead of deadlocking the pool.
+pub fn run_sweep(scenarios: &[Scenario], threads: usize, seed: u64) -> SweepReport {
+    let n = scenarios.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut order);
+
+    let mut results: Vec<Option<ScenarioResult>> = (0..n).map(|_| None).collect();
+    if threads <= 1 {
+        for &i in &order {
+            results[i] = Some(scenarios[i].run());
+        }
+    } else {
+        let pool = ThreadPool::new(threads);
+        let promises: Vec<(usize, crate::exec::Promise<ScenarioResult>)> = order
+            .iter()
+            .map(|&i| {
+                let s = scenarios[i].clone();
+                (i, pool.submit(move || s.run()))
+            })
+            .collect();
+        for (i, p) in promises {
+            results[i] = Some(p.wait());
+        }
+    }
+    aggregate(results.into_iter().map(|r| r.expect("all scenarios ran")).collect())
+}
+
+/// Assemble the deterministic aggregate from results in matrix order.
+pub fn aggregate(results: Vec<ScenarioResult>) -> SweepReport {
+    // Per-model non/full baselines: (model, cycles, energy mJ).
+    let baselines: Vec<(String, f64, f64)> = results
+        .iter()
+        .filter(|r| r.report.dataflow == DataflowKind::NonStream && r.ablation == "full")
+        .map(|r| (r.report.model.clone(), r.report.cycles as f64, r.report.energy.total_mj()))
+        .collect();
+
+    let rows: Vec<SweepRow> = results
+        .into_iter()
+        .map(|result| {
+            let base = baselines.iter().find(|(m, _, _)| *m == result.report.model);
+            let (speedup, saving) = match base {
+                Some((_, base_cycles, base_mj)) => (
+                    base_cycles / result.report.cycles as f64,
+                    base_mj / result.report.energy.total_mj(),
+                ),
+                // hand-built scenario lists may omit the baseline; report
+                // the scenario relative to itself rather than inventing one
+                None => (1.0, 1.0),
+            };
+            SweepRow { result, speedup_vs_non: speedup, energy_saving_vs_non: saving }
+        })
+        .collect();
+
+    // Group rows by (dataflow, ablation) in first-seen (matrix) order.
+    let mut groups: Vec<GroupSummary> = Vec::new();
+    {
+        let mut keys: Vec<(DataflowKind, &'static str)> = Vec::new();
+        for r in &rows {
+            let key = (r.result.report.dataflow, r.result.ablation);
+            if !keys.contains(&key) {
+                keys.push(key);
+            }
+        }
+        for (dataflow, ablation) in keys {
+            let members: Vec<&SweepRow> = rows
+                .iter()
+                .filter(|r| r.result.report.dataflow == dataflow && r.result.ablation == ablation)
+                .collect();
+            let speedups: Vec<f64> = members.iter().map(|r| r.speedup_vs_non).collect();
+            let savings: Vec<f64> = members.iter().map(|r| r.energy_saving_vs_non).collect();
+            groups.push(GroupSummary {
+                dataflow,
+                ablation,
+                models: members.len(),
+                geomean_speedup_vs_non: geomean(&speedups),
+                geomean_energy_saving_vs_non: geomean(&savings),
+                rank: 0,
+            });
+        }
+    }
+    // Rank by geomean speedup, stable on ties (matrix order).
+    let mut by_speed: Vec<usize> = (0..groups.len()).collect();
+    by_speed.sort_by(|&a, &b| {
+        groups[b]
+            .geomean_speedup_vs_non
+            .partial_cmp(&groups[a].geomean_speedup_vs_non)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for (rank, idx) in by_speed.into_iter().enumerate() {
+        groups[idx].rank = rank + 1;
+    }
+
+    // Headline: tile/full vs non/full and vs layer/full, per model.
+    let headline = {
+        let find = |model: &str, df: DataflowKind| {
+            rows.iter().find(|r| {
+                r.result.report.model == model
+                    && r.result.report.dataflow == df
+                    && r.result.ablation == "full"
+            })
+        };
+        let mut models: Vec<&str> = Vec::new();
+        for r in &rows {
+            let name = r.result.report.model.as_str();
+            if !models.contains(&name) {
+                models.push(name);
+            }
+        }
+        let mut sp_non = Vec::new();
+        let mut sp_layer = Vec::new();
+        let mut en_non = Vec::new();
+        let mut en_layer = Vec::new();
+        for m in &models {
+            if let (Some(non), Some(layer), Some(tile)) = (
+                find(m, DataflowKind::NonStream),
+                find(m, DataflowKind::LayerStream),
+                find(m, DataflowKind::TileStream),
+            ) {
+                let (nc, lc, tc) = (
+                    non.result.report.cycles as f64,
+                    layer.result.report.cycles as f64,
+                    tile.result.report.cycles as f64,
+                );
+                sp_non.push(nc / tc);
+                sp_layer.push(lc / tc);
+                let (ne, le, te) = (
+                    non.result.report.energy.total_mj(),
+                    layer.result.report.energy.total_mj(),
+                    tile.result.report.energy.total_mj(),
+                );
+                en_non.push(ne / te);
+                en_layer.push(le / te);
+            }
+        }
+        if sp_non.is_empty() {
+            Headline::default()
+        } else {
+            Headline {
+                tile_vs_non_speedup: geomean(&sp_non),
+                tile_vs_layer_speedup: geomean(&sp_layer),
+                tile_vs_non_energy: geomean(&en_non),
+                tile_vs_layer_energy: geomean(&en_layer),
+            }
+        }
+    };
+
+    SweepReport { rows, groups, headline }
+}
+
+impl SweepReport {
+    /// The aggregate as JSON.  Deliberately excludes thread count, seed,
+    /// wall-clock and any other run-environment detail: the JSON is a
+    /// function of the scenario matrix alone (the determinism contract).
+    pub fn to_json(&self) -> Json {
+        let mut models: Vec<&str> = Vec::new();
+        for r in &self.rows {
+            let name = r.result.report.model.as_str();
+            if !models.contains(&name) {
+                models.push(name);
+            }
+        }
+        Json::obj(vec![
+            ("scenario_count", Json::num(self.rows.len() as f64)),
+            ("models", Json::arr(models.into_iter().map(Json::str).collect())),
+            ("scenarios", Json::arr(self.rows.iter().map(row_json).collect())),
+            ("groups", Json::arr(self.groups.iter().map(group_json).collect())),
+            (
+                "headline",
+                Json::obj(vec![
+                    ("tile_vs_non_speedup", Json::num(self.headline.tile_vs_non_speedup)),
+                    ("tile_vs_layer_speedup", Json::num(self.headline.tile_vs_layer_speedup)),
+                    ("tile_vs_non_energy_saving", Json::num(self.headline.tile_vs_non_energy)),
+                    ("tile_vs_layer_energy_saving", Json::num(self.headline.tile_vs_layer_energy)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable ranked summary for the CLI.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("sweep: {} scenarios\n\n", self.rows.len()));
+
+        out.push_str("-- ranked (dataflow, ablation) groups, geomean over models --\n");
+        let mut ranked: Vec<&GroupSummary> = self.groups.iter().collect();
+        ranked.sort_by_key(|g| g.rank);
+        for g in ranked {
+            out.push_str(&format!(
+                "  #{:<2} {:<13} {:<12} speedup {:>6.2}x  energy saving {:>6.2}x  ({} models)\n",
+                g.rank,
+                g.dataflow.name(),
+                g.ablation,
+                g.geomean_speedup_vs_non,
+                g.geomean_energy_saving_vs_non,
+                g.models,
+            ));
+        }
+
+        out.push_str(&format!(
+            "\n-- headline (paper: 2.63x/1.28x speedup, 2.26x/1.23x energy) --\n  \
+             Tile-stream speedup      : {:.2}x vs Non-stream, {:.2}x vs Layer-stream\n  \
+             Tile-stream energy saving: {:.2}x vs Non-stream, {:.2}x vs Layer-stream\n",
+            self.headline.tile_vs_non_speedup,
+            self.headline.tile_vs_layer_speedup,
+            self.headline.tile_vs_non_energy,
+            self.headline.tile_vs_layer_energy,
+        ));
+
+        out.push_str("\n-- fastest scenarios (speedup vs each model's non/full) --\n");
+        let mut by_speed: Vec<&SweepRow> = self.rows.iter().collect();
+        by_speed.sort_by(|a, b| {
+            b.speedup_vs_non
+                .partial_cmp(&a.speedup_vs_non)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in by_speed.iter().take(10) {
+            out.push_str(&format!(
+                "  {:<40} {:>12} cycles  {:>6.2}x  {:>8.2} mJ\n",
+                r.result.id,
+                r.result.report.cycles,
+                r.speedup_vs_non,
+                r.result.report.energy.total_mj(),
+            ));
+        }
+        out
+    }
+}
+
+fn row_json(r: &SweepRow) -> Json {
+    let rep = &r.result.report;
+    Json::obj(vec![
+        ("id", Json::str(r.result.id.clone())),
+        ("model", Json::str(rep.model.clone())),
+        ("dataflow", Json::str(rep.dataflow.slug())),
+        ("ablation", Json::str(r.result.ablation)),
+        ("cycles", Json::num(rep.cycles as f64)),
+        ("ms", Json::num(rep.ms)),
+        ("energy_mj", Json::num(rep.energy.total_mj())),
+        ("avg_power_mw", Json::num(rep.energy.avg_power_mw)),
+        ("macs", Json::num(rep.activity.macs as f64)),
+        ("offchip_bits", Json::num(rep.activity.offchip_bits as f64)),
+        ("exposed_rewrite_cycles", Json::num(rep.exposed_rewrite() as f64)),
+        ("speedup_vs_non", Json::num(r.speedup_vs_non)),
+        ("energy_saving_vs_non", Json::num(r.energy_saving_vs_non)),
+    ])
+}
+
+fn group_json(g: &GroupSummary) -> Json {
+    Json::obj(vec![
+        ("dataflow", Json::str(g.dataflow.slug())),
+        ("ablation", Json::str(g.ablation)),
+        ("models", Json::num(g.models as f64)),
+        ("geomean_speedup_vs_non", Json::num(g.geomean_speedup_vs_non)),
+        ("geomean_energy_saving_vs_non", Json::num(g.geomean_energy_saving_vs_non)),
+        ("rank", Json::num(g.rank as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn small_matrix() -> Vec<Scenario> {
+        matrix_for(
+            &presets::streamdcim_default(),
+            &[presets::tiny_smoke(), presets::functional_small()],
+        )
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_small_matrix() {
+        let m = small_matrix();
+        let serial = run_sweep(&m, 1, 42).to_json().to_string_pretty();
+        let parallel = run_sweep(&m, 4, 42).to_json().to_string_pretty();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn shuffle_seed_does_not_change_aggregate() {
+        let m = small_matrix();
+        let a = run_sweep(&m, 3, 1).to_json().to_string_pretty();
+        let b = run_sweep(&m, 3, 999).to_json().to_string_pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn baselines_normalize_to_one() {
+        let m = small_matrix();
+        let rep = run_sweep(&m, 2, 42);
+        for r in &rep.rows {
+            if r.result.report.dataflow == DataflowKind::NonStream && r.result.ablation == "full" {
+                assert!((r.speedup_vs_non - 1.0).abs() < 1e-12, "{}", r.result.id);
+                assert!((r.energy_saving_vs_non - 1.0).abs() < 1e-12, "{}", r.result.id);
+            }
+        }
+    }
+
+    #[test]
+    fn groups_are_ranked_and_tile_beats_layer() {
+        let rep = run_sweep(&small_matrix(), 2, 42);
+        let find = |df: DataflowKind, ab: &str| {
+            rep.groups
+                .iter()
+                .find(|g| g.dataflow == df && g.ablation == ab)
+                .unwrap()
+        };
+        let tile = find(DataflowKind::TileStream, "full");
+        let layer = find(DataflowKind::LayerStream, "full");
+        let non = find(DataflowKind::NonStream, "full");
+        assert!(tile.geomean_speedup_vs_non > layer.geomean_speedup_vs_non);
+        assert!(layer.geomean_speedup_vs_non > non.geomean_speedup_vs_non);
+        assert!(tile.rank < layer.rank && layer.rank < non.rank);
+        let mut ranks: Vec<usize> = rep.groups.iter().map(|g| g.rank).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (1..=rep.groups.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn report_json_parses_and_carries_counts() {
+        let m = small_matrix();
+        let rep = run_sweep(&m, 2, 42);
+        let j = rep.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("scenario_count").and_then(|v| v.as_u64()), Some(m.len() as u64));
+        assert_eq!(
+            parsed.get("scenarios").and_then(|s| s.as_arr()).map(|a| a.len()),
+            Some(m.len())
+        );
+        assert!(parsed.get("headline").is_some());
+    }
+}

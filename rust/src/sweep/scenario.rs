@@ -1,0 +1,86 @@
+//! A [`Scenario`] is one fully-specified simulation point: accelerator
+//! config x workload x dataflow x ablation label.  Running one is a *pure*
+//! function of the scenario (no shared state, no RNG, no clock), which is
+//! what lets the sweep engine shard scenarios across threads and still
+//! aggregate bit-identical results in any execution order.  `main.rs`
+//! (`run` and `sweep`), the benches, and the tests all go through it.
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::dataflow;
+use crate::metrics::RunReport;
+
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub model: ModelConfig,
+    pub accel: AccelConfig,
+    pub dataflow: DataflowKind,
+    /// Feature/knob variant label ("full", "no-pruning", "tall-tiles", ...).
+    pub ablation: &'static str,
+}
+
+/// One scenario's outcome: the full simulator report plus identity.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub id: String,
+    pub ablation: &'static str,
+    pub report: RunReport,
+}
+
+impl Scenario {
+    pub fn new(
+        accel: AccelConfig,
+        model: ModelConfig,
+        dataflow: DataflowKind,
+        ablation: &'static str,
+    ) -> Self {
+        Scenario { model, accel, dataflow, ablation }
+    }
+
+    /// Stable identifier: `model/dataflow/ablation`.
+    pub fn id(&self) -> String {
+        format!("{}/{}/{}", self.model.name, self.dataflow.slug(), self.ablation)
+    }
+
+    /// The pure `Scenario -> RunReport` core.
+    pub fn run_report(&self) -> RunReport {
+        dataflow::run(self.dataflow, &self.accel, &self.model)
+    }
+
+    /// Run and tag with identity (what the sweep engine shards).
+    pub fn run(&self) -> ScenarioResult {
+        ScenarioResult { id: self.id(), ablation: self.ablation, report: self.run_report() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn id_is_model_dataflow_ablation() {
+        let s = Scenario::new(
+            presets::streamdcim_default(),
+            presets::tiny_smoke(),
+            DataflowKind::TileStream,
+            "full",
+        );
+        assert_eq!(s.id(), "tiny-smoke/tile/full");
+    }
+
+    #[test]
+    fn run_is_deterministic_and_matches_dataflow_run() {
+        let s = Scenario::new(
+            presets::streamdcim_default(),
+            presets::tiny_smoke(),
+            DataflowKind::LayerStream,
+            "full",
+        );
+        let a = s.run();
+        let b = s.run();
+        assert_eq!(a.report.cycles, b.report.cycles);
+        assert_eq!(a.report.activity, b.report.activity);
+        let direct = dataflow::run(s.dataflow, &s.accel, &s.model);
+        assert_eq!(a.report.cycles, direct.cycles);
+    }
+}

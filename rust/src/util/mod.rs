@@ -1,6 +1,7 @@
 //! Small self-contained substrates (offline environment: serde/serde_json
 //! are not in the vendored crate set, so the repo ships its own).
 
+pub mod error;
 pub mod json;
 pub mod prng;
 

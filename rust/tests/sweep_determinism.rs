@@ -1,0 +1,83 @@
+//! Sweep-engine determinism: the parallel sweep over the FULL scenario
+//! matrix must produce bit-identical aggregate JSON to a serial run, for
+//! any thread count and any shard-shuffle seed (seeded via util/prng).
+
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::sweep;
+use streamdcim::util::json::Json;
+
+#[test]
+fn full_matrix_parallel_sweep_is_bit_identical_to_serial() {
+    let scenarios = sweep::full_matrix(&presets::streamdcim_default());
+    assert!(scenarios.len() >= 60, "matrix has only {}", scenarios.len());
+
+    let serial = sweep::run_sweep(&scenarios, 1, 42).to_json().to_string_pretty();
+    let parallel = sweep::run_sweep(&scenarios, 8, 42).to_json().to_string_pretty();
+    assert_eq!(serial, parallel, "threads must not change the aggregate");
+
+    // and the shard-shuffle seed must not either
+    let reseeded = sweep::run_sweep(&scenarios, 8, 0xDEADBEEF).to_json().to_string_pretty();
+    assert_eq!(serial, reseeded, "shuffle seed must not change the aggregate");
+
+    // the output must be valid JSON of the expected shape
+    let parsed = Json::parse(&serial).expect("aggregate is valid json");
+    assert_eq!(
+        parsed.get("scenario_count").and_then(|v| v.as_u64()),
+        Some(scenarios.len() as u64)
+    );
+}
+
+#[test]
+fn full_matrix_headline_brackets_the_paper_claims() {
+    // Across the whole registry (not just the paper's two ViLBERT points)
+    // the three-way ordering must hold, and the tile-vs-layer advantage
+    // must stay in a plausible band around the paper's 1.28x.
+    let scenarios = sweep::full_matrix(&presets::streamdcim_default());
+    let report = sweep::run_sweep(&scenarios, 8, 42);
+    let h = &report.headline;
+    assert!(h.tile_vs_non_speedup > 1.5, "tile vs non {:.2}", h.tile_vs_non_speedup);
+    assert!(h.tile_vs_layer_speedup > 1.0, "tile vs layer {:.2}", h.tile_vs_layer_speedup);
+    assert!(h.tile_vs_non_energy > 1.0, "energy vs non {:.2}", h.tile_vs_non_energy);
+    assert!(h.tile_vs_layer_energy > 1.0, "energy vs layer {:.2}", h.tile_vs_layer_energy);
+
+    // tile/full must out-rank both baselines in the group ranking
+    let rank = |df: DataflowKind| {
+        report
+            .groups
+            .iter()
+            .find(|g| g.dataflow == df && g.ablation == "full")
+            .map(|g| g.rank)
+            .unwrap()
+    };
+    assert!(rank(DataflowKind::TileStream) < rank(DataflowKind::LayerStream));
+    assert!(rank(DataflowKind::LayerStream) < rank(DataflowKind::NonStream));
+}
+
+#[test]
+fn ablations_cost_performance_on_paper_scale_workloads() {
+    // On ViLBERT-base the feature ablations must each lose to tile/full
+    // (the paper's claim that every mechanism contributes).
+    let scenarios =
+        sweep::matrix_for(&presets::streamdcim_default(), &[presets::vilbert_base()]);
+    let report = sweep::run_sweep(&scenarios, 4, 42);
+    let speed = |ablation: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| {
+                r.result.report.dataflow == DataflowKind::TileStream && r.result.ablation == ablation
+            })
+            .map(|r| r.speedup_vs_non)
+            .unwrap()
+    };
+    let full = speed("full");
+    for ablation in ["no-pruning", "no-pingpong", "no-hybrid"] {
+        assert!(
+            speed(ablation) < full,
+            "{ablation} ({:.3}) should lose to full ({full:.3})",
+            speed(ablation)
+        );
+    }
+    // a wider write port can only help rewrite-bound schedules
+    assert!(speed("fast-port") >= full, "fast-port should not lose to full");
+}
