@@ -10,6 +10,10 @@
 //! cargo run --release --offline --example pruning_explorer
 //! ```
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::{presets, DataflowKind, PruningSchedule};
 use streamdcim::coordinator::EncoderStack;
 use streamdcim::dataflow;

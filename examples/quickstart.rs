@@ -6,6 +6,10 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::Path;
 
 use streamdcim::config::presets;
@@ -31,7 +35,10 @@ fn main() -> Result<()> {
         );
     }
     let (s_non, s_layer) = report::speedups(&runs);
-    println!("  Tile-stream speedup: {s_non:.2}x vs Non-stream (paper 2.86x), {s_layer:.2}x vs Layer-stream (paper 1.25x)");
+    println!(
+        "  Tile-stream speedup: {s_non:.2}x vs Non-stream (paper 2.86x), \
+         {s_layer:.2}x vs Layer-stream (paper 1.25x)"
+    );
 
     // --- 2. one encoder block through the AOT artifacts ----------------
     let dir = Path::new("artifacts");

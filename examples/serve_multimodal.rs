@@ -15,6 +15,10 @@
 //! make artifacts && cargo run --release --offline --example serve_multimodal
 //! ```
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::PathBuf;
 use std::time::Instant;
 

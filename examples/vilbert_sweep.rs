@@ -6,6 +6,10 @@
 //! cargo run --release --offline --example vilbert_sweep
 //! ```
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::presets;
 use streamdcim::report;
 
@@ -25,10 +29,14 @@ fn main() {
 
     // per-layer view of where Tile-stream wins on ViLBERT-base
     let base = &all[0].1;
-    let layer = base.iter().find(|r| r.dataflow == streamdcim::config::DataflowKind::LayerStream).unwrap();
-    let tile = base.iter().find(|r| r.dataflow == streamdcim::config::DataflowKind::TileStream).unwrap();
+    use streamdcim::config::DataflowKind;
+    let layer = base.iter().find(|r| r.dataflow == DataflowKind::LayerStream).unwrap();
+    let tile = base.iter().find(|r| r.dataflow == DataflowKind::TileStream).unwrap();
     println!("=== per-layer cycles, ViLBERT-base (Layer-stream vs Tile-stream) ===");
-    println!("{:<8} {:>14} {:>14} {:>9} {:>24}", "layer", "layer-stream", "tile-stream", "speedup", "exposed rewrite (layer)");
+    println!(
+        "{:<8} {:>14} {:>14} {:>9} {:>24}",
+        "layer", "layer-stream", "tile-stream", "speedup", "exposed rewrite (layer)"
+    );
     for (a, b) in layer.per_layer.iter().zip(&tile.per_layer) {
         println!(
             "{:<8} {:>14} {:>14} {:>8.2}x {:>24}",

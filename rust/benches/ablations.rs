@@ -7,6 +7,10 @@
 //!                        converge/diverge (A3).
 //! * `pruning_sweep`    — keep-ratio sweep, the Evo-ViT >1.6x claim (E7).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::benchkit::{row, section};
 use streamdcim::config::{presets, DataflowKind, Features, PruningSchedule};
 use streamdcim::dataflow;

@@ -3,6 +3,10 @@
 //! Area comes from the analytical 28nm model; power from the peak-activity
 //! ViLBERT-base Tile-stream run (the paper reports the maximum).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::benchkit::{row, section};
 use streamdcim::config::{presets, DataflowKind};
 use streamdcim::energy::area::AreaModel;

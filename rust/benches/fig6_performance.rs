@@ -4,6 +4,10 @@
 //! dataflows on ViLBERT-base and ViLBERT-large) and times the simulator
 //! itself while doing it.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::benchkit::{row, section, Bench};
 use streamdcim::config::presets;
 use streamdcim::report;

@@ -1,6 +1,10 @@
 //! Bench: regenerates **Fig. 7 — Energy Comparison** (experiment E4),
 //! normalized to the Non-stream solution as in the paper.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::benchkit::{row, section};
 use streamdcim::config::presets;
 use streamdcim::report;
@@ -29,7 +33,8 @@ fn main() {
             row(
                 &format!("{model}/{}", r.dataflow.name()),
                 format!(
-                    "{:.3} mJ  normalized {:.3}  components: mac {:.2} write {:.2} offchip {:.2} leak {:.2}",
+                    "{:.3} mJ  normalized {:.3}  components: \
+                     mac {:.2} write {:.2} offchip {:.2} leak {:.2}",
                     r.energy.total_mj(),
                     r.energy.total_mj() / non,
                     r.energy.cim_mac_mj,

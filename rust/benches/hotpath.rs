@@ -5,6 +5,10 @@
 //! * PJRT artifact execution latency (the serving request path) — only
 //!   when artifacts are present.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::Path;
 
 use streamdcim::benchkit::{row, section, Bench};

@@ -1,17 +1,38 @@
 //! CI bench-smoke: time the sweep engine on the tiny smoke preset with
 //! reduced iterations and emit a machine-readable JSON artifact
 //! (`bench_sweep_smoke.json`) for trajectory tracking across commits.
+//! Covers both simulation backends (analytic closed-form and the
+//! discrete-event engine) so the artifact tracks the engine's cost too.
 //!
 //! Knobs (env):
 //! * `BENCH_SMOKE_ITERS` — timed iterations per sample batch (default 5).
-//! * `BENCH_SMOKE_OUT`   — artifact path (default `bench_sweep_smoke.json`).
+//! * `BENCH_SMOKE_OUT`   — artifact path (default `bench_sweep_smoke.json`,
+//!   resolved against the *workspace root* when relative, so CI finds it
+//!   at one well-known path regardless of cargo's bench working dir).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use std::path::Path;
 use std::time::Duration;
 
 use streamdcim::benchkit::{row, section, Bench};
 use streamdcim::config::presets;
+use streamdcim::engine::Backend;
 use streamdcim::sweep;
 use streamdcim::util::json::Json;
+
+/// Resolve a relative artifact path against the workspace root (the
+/// parent of this package's manifest dir), never cargo's bench cwd.
+fn workspace_rooted(path: &str) -> std::path::PathBuf {
+    let p = Path::new(path);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(p)
+}
 
 fn main() {
     let iters: u32 = std::env::var("BENCH_SMOKE_ITERS")
@@ -20,11 +41,13 @@ fn main() {
         .unwrap_or(5);
     let out_path =
         std::env::var("BENCH_SMOKE_OUT").unwrap_or_else(|_| "bench_sweep_smoke.json".into());
+    let out_path = workspace_rooted(&out_path);
 
-    section("sweep smoke (tiny-smoke preset, 8 scenarios)");
+    section("sweep smoke (tiny-smoke preset, 8 scenarios, both backends)");
     let accel = presets::streamdcim_default();
     let models = vec![presets::tiny_smoke()];
     let scenarios = sweep::matrix_for(&accel, &models);
+    let scenarios_event = sweep::matrix_for_backend(&accel, &models, Backend::Event);
     row("scenarios", scenarios.len());
 
     let serial = Bench::new("sweep/tiny-smoke/serial")
@@ -35,12 +58,19 @@ fn main() {
         .iters(iters)
         .min_time(Duration::from_millis(20))
         .run(|| sweep::run_sweep(&scenarios, 2, 42));
+    let event = Bench::new("sweep/tiny-smoke/event-engine")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| sweep::run_sweep(&scenarios_event, 2, 42));
 
     // smoke-check the determinism contract on every CI run
     let a = sweep::run_sweep(&scenarios, 1, 42).to_json().to_string_pretty();
     let b = sweep::run_sweep(&scenarios, 2, 42).to_json().to_string_pretty();
     assert_eq!(a, b, "parallel aggregate diverged from serial");
-    row("determinism", "serial == 2-threads (bit-identical JSON)");
+    let ea = sweep::run_sweep(&scenarios_event, 1, 42).to_json().to_string_pretty();
+    let eb = sweep::run_sweep(&scenarios_event, 2, 42).to_json().to_string_pretty();
+    assert_eq!(ea, eb, "event-engine aggregate diverged from serial");
+    row("determinism", "serial == 2-threads (bit-identical JSON, both backends)");
 
     let bench_json = |r: &streamdcim::benchkit::BenchResult| {
         Json::obj(vec![
@@ -54,9 +84,13 @@ fn main() {
     let artifact = Json::obj(vec![
         ("kind", Json::str("sweep-smoke")),
         ("scenario_count", Json::num(scenarios.len() as f64)),
-        ("benches", Json::arr(vec![bench_json(&serial), bench_json(&parallel)])),
+        (
+            "benches",
+            Json::arr(vec![bench_json(&serial), bench_json(&parallel), bench_json(&event)]),
+        ),
         ("sweep", Json::parse(&a).expect("aggregate json reparses")),
+        ("sweep_event", Json::parse(&ea).expect("event aggregate json reparses")),
     ]);
     std::fs::write(&out_path, artifact.to_string_pretty()).expect("write bench artifact");
-    row("artifact", &out_path);
+    row("artifact", out_path.display());
 }

@@ -30,7 +30,7 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["trace", "verbose", "json", "no-pruning", "ref"];
+const SWITCHES: &[&str] = &["trace", "verbose", "json", "no-pruning", "ref", "gantt", "segments"];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
     let mut it = argv.into_iter().peekable();
@@ -80,16 +80,30 @@ COMMANDS
   run        simulate a model under one dataflow
                --model <preset>                      (default base; see below)
                --dataflow tile|layer|non             (default tile)
+               --engine analytic|event               (default analytic)
                --config <file.toml>  --json  --trace
   sweep      run the full scenario matrix (dataflow x model x ablation)
                --threads <n>       (default: available cores, max 8)
                --models a,b,c      (default: the whole sweep registry)
+               --engine analytic|event  simulation backend (default analytic)
                --out <file.json>   write the aggregate JSON to a file
                --seed <n>          shard-shuffle seed (default 42; does
                                    not affect results — aggregates are
                                    bit-identical for any seed/threads)
                --config <file.toml> ([accel]/[energy]/[features] only)
                --json
+  trace      event-engine pipeline trace (CycleTrace) for one run
+               --model <preset>    --dataflow tile|layer|non (default tile)
+               --config <file.toml>
+               --out <file.json>   deterministic trace artifact
+               --segments          include per-resource busy segments
+               --gantt             textual Gantt chart  --width <n> (100)
+  perf-gate  compare deterministic smoke-matrix cycles vs a baseline
+               --baseline <file>   committed baseline (BENCH_baseline.json)
+               --write-baseline <file>   regenerate the baseline
+               --tolerance <f>     geomean ratio tolerance (default 0.05)
+               --out <file.json>   write the diff artifact
+               --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
                --figure fig5|fig6|fig7|headline|e5   (default headline)
                --config <file.toml>

@@ -42,7 +42,8 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         let comp = t_qkt.compute_cycles(cfg.macros_per_core);
         let (c_start, c_end) =
             acc.cores[TBR].acquire(rw_end.max(qg_end), comp, "qkt");
-        account_matmul(acc, qkt, &t_qkt, t_qkt.replay_factor(cfg.macros_per_core), false, false);
+        let replay = t_qkt.replay_factor(cfg.macros_per_core);
+        account_matmul(&mut acc.activity, qkt, &t_qkt, replay, false, false);
 
         // --- softmax pipelined with QK^T read-out -----------------------
         let sm = find(&grp, "softmax").expect("softmax");
@@ -59,7 +60,8 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         exposed_total += rw_pv_end.saturating_sub(vg_end.max(sm_end)).min(rw_pv);
         let comp_pv = t_pv.compute_cycles(cfg.macros_per_core);
         let (_, pv_end) = acc.cores[TBR].acquire(rw_pv_end.max(sm_end), comp_pv, "pv");
-        account_matmul(acc, pv, &t_pv, t_pv.replay_factor(cfg.macros_per_core), false, false);
+        let replay_pv = t_pv.replay_factor(cfg.macros_per_core);
+        account_matmul(&mut acc.activity, pv, &t_pv, replay_pv, false, false);
 
         // --- projection + FFN (static weights, preloaded) ----------------
         let oproj = find(&grp, "o_proj").expect("o_proj");

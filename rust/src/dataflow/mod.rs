@@ -22,7 +22,7 @@ use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::metrics::RunReport;
 use crate::model::{build_graph, Layer, Op, OpGraph};
 use crate::sim::accel::{KCIM, QCIM, TBR};
-use crate::sim::{Accelerator, OpTiling};
+use crate::sim::{Accelerator, Activity, OpTiling};
 
 /// Where an op's matmul runs in the streaming dataflows (Fig. 3a mapping).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,14 +97,13 @@ pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunRep
 /// * `roundtrip`: Non-stream round-trips moving operand and result through
 ///   off-chip DRAM.
 pub(crate) fn account_matmul(
-    acc: &mut Accelerator,
+    a: &mut Activity,
     op: &Op,
     t: &OpTiling,
     replay_passes: u64,
     static_weights: bool,
     roundtrip: bool,
 ) {
-    let a = &mut acc.activity;
     a.macs += op.macs();
     a.cim_write_bits += t.stationary_bits();
     if static_weights {
@@ -160,8 +159,20 @@ pub(crate) fn exec_static_preloaded(
         end = end.max(e);
     }
     let exposed = ports_done.saturating_sub(earliest);
-    account_matmul(acc, op, &t, t.replay_factor(macros), true, false);
+    account_matmul(&mut acc.activity, op, &t, t.replay_factor(macros), true, false);
     (start, end, exposed)
+}
+
+/// Macros a dynamic matmul can use under tile streaming: hybrid-mode
+/// TBR-CIM macros hold both operand tiles; without hybrid mode half the
+/// macros are lost to staging conflicts.  Shared by the analytic
+/// tile-stream scheduler and the event engine's schedule lowering.
+pub fn dynamic_macros(cfg: &AccelConfig) -> u64 {
+    if cfg.features.hybrid_mode {
+        cfg.macros_per_core
+    } else {
+        (cfg.macros_per_core / 2).max(1)
+    }
 }
 
 /// SFU op execution helper.
@@ -231,7 +242,11 @@ mod tests {
     fn ops_by_stream_groups_cross_layer() {
         let model = presets::vilbert_base();
         let g = build_graph(&model);
-        let cross = g.layers.iter().find(|l| matches!(l.kind, crate::model::LayerKind::CrossModal)).unwrap();
+        let cross = g
+            .layers
+            .iter()
+            .find(|l| matches!(l.kind, crate::model::LayerKind::CrossModal))
+            .unwrap();
         let groups = ops_by_stream(cross);
         assert_eq!(groups.len(), 2); // X and Y streams
         for grp in &groups {
@@ -255,9 +270,9 @@ mod tests {
         };
         let t = OpTiling::of(&cfg, &op);
         let mut a1 = Accelerator::new(cfg.clone());
-        account_matmul(&mut a1, &op, &t, 1, false, false);
+        account_matmul(&mut a1.activity, &op, &t, 1, false, false);
         let mut a2 = Accelerator::new(cfg);
-        account_matmul(&mut a2, &op, &t, 1, false, true);
+        account_matmul(&mut a2.activity, &op, &t, 1, false, true);
         assert!(a2.activity.offchip_bits > a1.activity.offchip_bits);
         assert_eq!(a1.activity.macs, a2.activity.macs);
     }

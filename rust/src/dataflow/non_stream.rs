@@ -61,7 +61,7 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
                 chain = dma_out;
                 // stationary operands always arrive from off-chip here
                 // (weights and parked intermediates alike)
-                account_matmul(acc, op, &t, t.replay_factor(all_macros), true, false);
+                account_matmul(&mut acc.activity, op, &t, t.replay_factor(all_macros), true, false);
                 // plus the moving operand and result round-trips
                 acc.activity.offchip_bits +=
                     in_bits.saturating_sub(t.stationary_bits()) + out_bits;

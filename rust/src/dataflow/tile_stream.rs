@@ -26,7 +26,10 @@ use crate::model::{Layer, Op};
 use crate::sim::accel::TBR;
 use crate::sim::{Accelerator, OpTiling};
 
-use super::{account_matmul, exec_rank, exec_sfu, exec_static_preloaded, find, ops_by_stream, placement};
+use super::{
+    account_matmul, dynamic_macros, exec_rank, exec_sfu, exec_static_preloaded, find,
+    ops_by_stream, placement,
+};
 
 /// Schedule one dynamic matmul tile-by-tile with the ping-pong pipeline.
 ///
@@ -45,10 +48,13 @@ fn exec_dynamic_pingpong(
     let t = OpTiling::of(cfg, op);
     let hybrid = cfg.features.hybrid_mode;
     let pingpong = cfg.features.pingpong;
-    let macros = if hybrid { cfg.macros_per_core } else { cfg.macros_per_core / 2 };
+    let macros = dynamic_macros(cfg);
     let passes = t.passes(macros);
-    let rw_pass = t.rewrite_cycles_per_pass(cfg, macros);
     let comp_pass = t.m; // one row per cycle per pass
+
+    // Exact per-pass rewrite durations (the final pass may be partial).
+    let rw_by_pass: Vec<u64> =
+        (0..passes).map(|p| t.rewrite_cycles_for_pass(cfg, p, macros)).collect();
 
     let mut first_start = u64::MAX;
     // Start from the core's current ready time so contention with other
@@ -57,6 +63,7 @@ fn exec_dynamic_pingpong(
     let mut exposed = 0u64;
     let span = stat_end.saturating_sub(stat_start);
     for p in 0..passes {
+        let rw_pass = rw_by_pass[p as usize];
         // tile-granular producer decoupling: pass p's stationary tiles
         // stream out of the producing core proportionally to its progress
         let avail = stat_start + span * (p + 1) / passes;
@@ -83,7 +90,7 @@ fn exec_dynamic_pingpong(
     // cross-forwarding reuse: both operands stationary in hybrid macros,
     // so the moving operand streams exactly once
     let replay = if hybrid { 1 } else { t.replay_factor(macros) };
-    account_matmul(acc, op, &t, replay, false, false);
+    account_matmul(&mut acc.activity, op, &t, replay, false, false);
     (first_start.min(prev_end), prev_end, exposed)
 }
 

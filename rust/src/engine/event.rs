@@ -1,0 +1,299 @@
+//! Deterministic discrete-event execution of a [`TileSchedule`].
+//!
+//! The simulator is a classic completion-event loop over a binary heap
+//! keyed by `(cycle, task id)` — a total order, so the pop sequence (and
+//! therefore every derived number) is independent of insertion order.
+//! Each resource port is a single server that executes its tasks in
+//! creation (program) order: a task starts at
+//! `max(all-deps-finished, port-free)`; queued tasks behind a blocked
+//! head wait (head-of-line, like the analytic `Timeline`'s program-order
+//! `acquire`).  All state updates are monotone `max` accumulations, so
+//! the result is also independent of the order in which same-cycle
+//! completions resolve — `simulate_shuffled` exercises exactly that.
+//!
+//! Accounting per resource: `busy` (executing), `stall` (idle gaps
+//! between tasks — pipeline bubbles waiting on upstream data), plus the
+//! first-start / last-end window for fill/drain.  Per compute task the
+//! simulator attributes start delay caused specifically by *dynamic*
+//! rewrite dependencies (class `Rewrite`, tag != "preload") as exposed
+//! rewrite cycles — the pipeline bubble the paper's ping-pong scheme is
+//! designed to hide.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::schedule::{Task, TaskClass, TileSchedule};
+use crate::util::prng::Rng;
+
+/// Raw simulation outcome (see `engine::trace` for the derived report).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan: u64,
+    /// Per-task start/end cycles.
+    pub start: Vec<u64>,
+    pub end: Vec<u64>,
+    /// Per-task exposed-rewrite cycles (nonzero only for compute tasks).
+    pub exposed: Vec<u64>,
+    /// Per-resource counters.
+    pub busy: Vec<u64>,
+    pub stall: Vec<u64>,
+    pub first_start: Vec<u64>,
+    pub last_end: Vec<u64>,
+    pub tasks_on: Vec<u64>,
+    /// Per-resource busy segments (start, end, tag) for Gantt rendering.
+    pub segments: Vec<Vec<(u64, u64, &'static str)>>,
+    /// First compute-task start: the pipeline-fill latency.
+    pub fill_latency: u64,
+}
+
+pub fn simulate(s: &TileSchedule) -> SimResult {
+    run_sim(s, None)
+}
+
+/// Same simulation with the initial resource poll order and same-cycle
+/// completion fan-out shuffled by `seed`.  The result must be
+/// bit-identical to [`simulate`] — the determinism contract the
+/// engine tests enforce.
+pub fn simulate_shuffled(s: &TileSchedule, seed: u64) -> SimResult {
+    run_sim(s, Some(Rng::new(seed)))
+}
+
+struct Sim<'a> {
+    tasks: &'a [Task],
+    queues: Vec<VecDeque<usize>>,
+    dep_left: Vec<usize>,
+    /// Max end over finished deps.
+    ready: Vec<u64>,
+    /// Max end over finished deps that are not dynamic rewrites.
+    nonrw_ready: Vec<u64>,
+    res_free: Vec<u64>,
+    /// End of the latest non-rewrite task on each resource.
+    res_nonrw_end: Vec<u64>,
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    start: Vec<u64>,
+    end: Vec<u64>,
+    exposed: Vec<u64>,
+    busy: Vec<u64>,
+    stall: Vec<u64>,
+    first_start: Vec<u64>,
+    last_end: Vec<u64>,
+    tasks_on: Vec<u64>,
+    segments: Vec<Vec<(u64, u64, &'static str)>>,
+}
+
+impl<'a> Sim<'a> {
+    /// Start every runnable task at the head of resource `r`'s queue.
+    fn try_start(&mut self, r: usize) {
+        loop {
+            let head = match self.queues[r].front() {
+                Some(&h) => h,
+                None => break,
+            };
+            if self.dep_left[head] > 0 {
+                break;
+            }
+            let t = &self.tasks[head];
+            let start = self.ready[head].max(self.res_free[r]);
+            let end = start + t.dur;
+            if self.tasks_on[r] == 0 {
+                self.first_start[r] = start;
+            } else {
+                // gap between consecutive tasks: upstream-data bubble
+                self.stall[r] += start - self.res_free[r];
+            }
+            if t.class == TaskClass::Compute {
+                // delay beyond what non-rewrite inputs and the port's own
+                // pipeline would impose = exposed rewrite
+                let base = self.nonrw_ready[head].max(self.res_nonrw_end[r]);
+                self.exposed[head] = start.saturating_sub(base);
+            }
+            self.start[head] = start;
+            self.end[head] = end;
+            self.busy[r] += t.dur;
+            self.tasks_on[r] += 1;
+            self.res_free[r] = end;
+            self.last_end[r] = end;
+            if t.class != TaskClass::Rewrite {
+                self.res_nonrw_end[r] = end;
+            }
+            if t.dur > 0 {
+                self.segments[r].push((start, end, t.tag));
+            }
+            self.queues[r].pop_front();
+            self.heap.push(Reverse((end, head)));
+        }
+    }
+}
+
+fn run_sim(s: &TileSchedule, mut rng: Option<Rng>) -> SimResult {
+    let n = s.tasks.len();
+    let nres = s.n_resources();
+    let mut sim = Sim {
+        tasks: &s.tasks,
+        queues: vec![VecDeque::new(); nres],
+        dep_left: s.tasks.iter().map(|t| t.deps.len()).collect(),
+        ready: vec![0; n],
+        nonrw_ready: vec![0; n],
+        res_free: vec![0; nres],
+        res_nonrw_end: vec![0; nres],
+        heap: BinaryHeap::new(),
+        start: vec![0; n],
+        end: vec![0; n],
+        exposed: vec![0; n],
+        busy: vec![0; nres],
+        stall: vec![0; nres],
+        first_start: vec![u64::MAX; nres],
+        last_end: vec![0; nres],
+        tasks_on: vec![0; nres],
+        segments: vec![Vec::new(); nres],
+    };
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for t in &s.tasks {
+        sim.queues[t.res].push_back(t.id);
+        for &d in &t.deps {
+            succs[d].push(t.id);
+        }
+    }
+
+    // Seed: start dependency-free heads.  The poll order is irrelevant to
+    // the outcome (and shuffled to prove it).
+    let mut order: Vec<usize> = (0..nres).collect();
+    if let Some(r) = rng.as_mut() {
+        r.shuffle(&mut order);
+    }
+    for &r in &order {
+        sim.try_start(r);
+    }
+
+    // Completion-event loop, strictly ordered by (cycle, task id).
+    while let Some(Reverse((t_end, id))) = sim.heap.pop() {
+        let finished = &s.tasks[id];
+        let dyn_rw = finished.class == TaskClass::Rewrite && finished.tag != "preload";
+        let mut touched: Vec<usize> = Vec::new();
+        for &sx in &succs[id] {
+            sim.dep_left[sx] -= 1;
+            sim.ready[sx] = sim.ready[sx].max(t_end);
+            if !dyn_rw {
+                sim.nonrw_ready[sx] = sim.nonrw_ready[sx].max(t_end);
+            }
+            if sim.dep_left[sx] == 0 {
+                let r = s.tasks[sx].res;
+                if !touched.contains(&r) {
+                    touched.push(r);
+                }
+            }
+        }
+        if let Some(rg) = rng.as_mut() {
+            rg.shuffle(&mut touched);
+        }
+        for r in touched {
+            sim.try_start(r);
+        }
+    }
+
+    let makespan = sim.end.iter().copied().max().unwrap_or(0);
+    let fill_latency = s
+        .tasks
+        .iter()
+        .filter(|t| t.class == TaskClass::Compute)
+        .map(|t| sim.start[t.id])
+        .min()
+        .unwrap_or(0);
+    SimResult {
+        makespan,
+        start: sim.start,
+        end: sim.end,
+        exposed: sim.exposed,
+        busy: sim.busy,
+        stall: sim.stall,
+        first_start: sim.first_start,
+        last_end: sim.last_end,
+        tasks_on: sim.tasks_on,
+        segments: sim.segments,
+        fill_latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, DataflowKind};
+    use crate::engine::schedule;
+
+    fn sched(kind: DataflowKind) -> TileSchedule {
+        schedule::build(kind, &presets::streamdcim_default(), &presets::functional_small())
+    }
+
+    #[test]
+    fn every_task_runs_and_respects_deps() {
+        for kind in DataflowKind::ALL {
+            let s = sched(kind);
+            let r = simulate(&s);
+            for t in &s.tasks {
+                assert_eq!(r.end[t.id], r.start[t.id] + t.dur, "{kind:?} task {}", t.id);
+                for &d in &t.deps {
+                    assert!(
+                        r.start[t.id] >= r.end[d],
+                        "{kind:?}: task {} started before dep {d}",
+                        t.id
+                    );
+                }
+            }
+            assert!(r.makespan > 0);
+            assert_eq!(r.makespan, *r.end.iter().max().unwrap());
+        }
+    }
+
+    #[test]
+    fn resources_execute_in_order_without_overlap() {
+        let s = sched(DataflowKind::TileStream);
+        let r = simulate(&s);
+        for segs in &r.segments {
+            for w in segs.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlap: {w:?}");
+            }
+        }
+        // busy totals match task durations per resource
+        for res in 0..s.n_resources() {
+            let want: u64 =
+                s.tasks.iter().filter(|t| t.res == res).map(|t| t.dur).sum();
+            assert_eq!(r.busy[res], want, "resource {res}");
+        }
+    }
+
+    #[test]
+    fn shuffled_insertion_order_is_bit_identical() {
+        for kind in DataflowKind::ALL {
+            let s = sched(kind);
+            let base = simulate(&s);
+            for seed in [1u64, 0xBEEF, 0xDEAD_BEEF_CAFE] {
+                let alt = simulate_shuffled(&s, seed);
+                assert_eq!(base.makespan, alt.makespan, "{kind:?} seed {seed}");
+                assert_eq!(base.start, alt.start, "{kind:?} seed {seed}");
+                assert_eq!(base.end, alt.end, "{kind:?} seed {seed}");
+                assert_eq!(base.exposed, alt.exposed, "{kind:?} seed {seed}");
+                assert_eq!(base.stall, alt.stall, "{kind:?} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_stream_hides_more_rewrite_than_layer_stream() {
+        // paper-scale shapes: tiny models can fit a dynamic matmul in one
+        // pass, where ping-pong legitimately has nothing to hide
+        let cfg = presets::streamdcim_default();
+        let model = presets::vilbert_base();
+        let tile = schedule::build(DataflowKind::TileStream, &cfg, &model);
+        let layer = schedule::build(DataflowKind::LayerStream, &cfg, &model);
+        let rt = simulate(&tile);
+        let rl = simulate(&layer);
+        let exposed = |r: &SimResult| -> u64 { r.exposed.iter().sum() };
+        assert!(
+            exposed(&rt) < exposed(&rl),
+            "tile exposed {} >= layer exposed {}",
+            exposed(&rt),
+            exposed(&rl)
+        );
+        assert!(rt.makespan <= rl.makespan, "tile {} > layer {}", rt.makespan, rl.makespan);
+    }
+}

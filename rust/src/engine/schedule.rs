@@ -1,0 +1,640 @@
+//! Lowering from the op graph to a tile-level task DAG — the shared
+//! tile-schedule interface between the analytic backend (`dataflow/*`,
+//! closed-form `Timeline` arithmetic) and the event backend
+//! (`engine::event`, discrete-event execution of this DAG).
+//!
+//! Every hardware action becomes a [`Task`] bound to one resource port:
+//! CIM-core macro arrays, macro write ports, the off-chip channel, the
+//! SFU and the DTPU.  Dependencies encode the pipeline structure of each
+//! dataflow (paper Fig. 4):
+//!
+//! * **Non-stream** — a strict chain per op: DMA-in, rewrite, compute,
+//!   DMA-out; nothing overlaps anything.
+//! * **Layer-stream** — static weights preload on idle write ports;
+//!   dynamic operands (K^T, V) are rewritten at *layer* granularity, so
+//!   the QK^T/PV computes depend on the whole-operand rewrite task.
+//! * **Tile-stream** — dynamic matmuls are pass-granular: pass `p`'s
+//!   rewrite depends only on chunk `p` of the producing core's compute
+//!   (tile-based execution decoupling) and on compute pass `p-2`
+//!   finishing (the ping-pong buffer pair holds two passes); compute
+//!   pass `p` needs only its own rewrite plus the matching chunk of the
+//!   moving operand (cross-forwarding).
+//!
+//! Resource execution is **in program order** (the event simulator runs
+//! each port's tasks in creation order), mirroring the analytic model's
+//! program-order `Timeline::acquire` — which is what makes the relaxation
+//! argument hold: tile-stream's DAG only splits and weakens layer-stream
+//! dependencies, so its makespan cannot exceed layer-stream's.
+//!
+//! Activity counters are accumulated through the same
+//! `dataflow::account_matmul` bookkeeping as the analytic backend, so
+//! both backends agree *exactly* on total work (MACs, rewrite bits,
+//! traffic) and differ only in timing.
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::dataflow::{self, Placement};
+use crate::model::{Layer, Op, OpKind};
+use crate::sim::accel::TBR;
+use crate::sim::{Activity, OpTiling};
+
+/// What a task does — drives trace tags and rewrite-exposure accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskClass {
+    Compute,
+    Rewrite,
+    Dma,
+    Sfu,
+    Rank,
+}
+
+/// One unit of scheduled hardware work.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    /// Resource port index (see `TileSchedule::resource_name`).
+    pub res: usize,
+    pub dur: u64,
+    /// Tasks that must finish before this one starts (all ids < `id`).
+    pub deps: Vec<usize>,
+    pub class: TaskClass,
+    /// Trace tag ("compute", "pp-rewrite", "K-rewrite", "dma-in", ...).
+    pub tag: &'static str,
+    /// Owning layer index (for per-layer stats).
+    pub layer: usize,
+}
+
+/// Per-layer metadata carried alongside the task list.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub label: String,
+    pub macs: u64,
+}
+
+/// The lowered schedule: a task DAG plus the exact activity counters the
+/// analytic backend would produce for the same run.
+#[derive(Debug, Clone)]
+pub struct TileSchedule {
+    pub kind: DataflowKind,
+    pub tasks: Vec<Task>,
+    pub activity: Activity,
+    pub n_cores: usize,
+    pub layers: Vec<LayerMeta>,
+}
+
+/// Resource-index layout, the single source of truth shared by the
+/// builder and the finished schedule:
+/// cores | write ports | offchip | tbsn | sfu | dtpu.
+mod layout {
+    pub fn n_resources(n_cores: usize) -> usize {
+        2 * n_cores + 4
+    }
+    pub fn core(_n_cores: usize, c: usize) -> usize {
+        c
+    }
+    pub fn wport(n_cores: usize, c: usize) -> usize {
+        n_cores + c
+    }
+    pub fn offchip(n_cores: usize) -> usize {
+        2 * n_cores
+    }
+    pub fn tbsn(n_cores: usize) -> usize {
+        2 * n_cores + 1
+    }
+    pub fn sfu(n_cores: usize) -> usize {
+        2 * n_cores + 2
+    }
+    pub fn dtpu(n_cores: usize) -> usize {
+        2 * n_cores + 3
+    }
+}
+
+impl TileSchedule {
+    pub fn n_resources(&self) -> usize {
+        layout::n_resources(self.n_cores)
+    }
+    pub fn core_res(&self, c: usize) -> usize {
+        layout::core(self.n_cores, c)
+    }
+    pub fn wport_res(&self, c: usize) -> usize {
+        layout::wport(self.n_cores, c)
+    }
+    pub fn offchip_res(&self) -> usize {
+        layout::offchip(self.n_cores)
+    }
+    pub fn tbsn_res(&self) -> usize {
+        layout::tbsn(self.n_cores)
+    }
+    pub fn sfu_res(&self) -> usize {
+        layout::sfu(self.n_cores)
+    }
+    pub fn dtpu_res(&self) -> usize {
+        layout::dtpu(self.n_cores)
+    }
+
+    /// Names match the analytic `Accelerator`'s timelines.
+    pub fn resource_name(&self, r: usize) -> String {
+        const CORE_NAMES: [&str; 3] = ["Q-CIM", "K-CIM", "TBR-CIM"];
+        let n = self.n_cores;
+        if r < n {
+            CORE_NAMES.get(r).map(|s| s.to_string()).unwrap_or_else(|| format!("core{r}"))
+        } else if r < 2 * n {
+            format!("wport{}", r - n)
+        } else if r == self.offchip_res() {
+            "offchip".to_string()
+        } else if r == self.tbsn_res() {
+            "tbsn".to_string()
+        } else if r == self.sfu_res() {
+            "sfu".to_string()
+        } else {
+            "dtpu".to_string()
+        }
+    }
+}
+
+/// Lower `model` under `kind` on `cfg` to a task DAG.
+pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> TileSchedule {
+    let graph = dataflow::graph_for(kind, cfg, model);
+    let mut b = Builder {
+        cfg: cfg.clone(),
+        n_cores: cfg.cores as usize,
+        tasks: Vec::new(),
+        activity: Activity::default(),
+    };
+
+    // Initial token embeddings arrive from off-chip once (both modalities).
+    let in_bits = (model.tokens_x + model.tokens_y) * model.d_model * model.bits;
+    b.activity.offchip_bits += in_bits;
+    let off = b.offchip();
+    let embed_in =
+        b.push(off, cfg.offchip_cycles(in_bits), Vec::new(), TaskClass::Dma, "embed-in", 0);
+
+    let mut tail = vec![embed_in];
+    for layer in &graph.layers {
+        tail = match kind {
+            DataflowKind::NonStream => b.layer_non(layer, &tail),
+            DataflowKind::LayerStream => b.layer_streaming(layer, &tail, false),
+            DataflowKind::TileStream => b.layer_streaming(layer, &tail, true),
+        };
+    }
+
+    // Final pooled outputs leave the chip.
+    let last_idx = graph.layers.len().saturating_sub(1);
+    let out_tokens = graph.layers.last().map(|l| l.tokens_x + l.tokens_y).unwrap_or(0);
+    let out_bits = out_tokens * model.d_model * model.bits;
+    b.activity.offchip_bits += out_bits;
+    b.push(off, cfg.offchip_cycles(out_bits), tail, TaskClass::Dma, "embed-out", last_idx);
+
+    let layers = graph
+        .layers
+        .iter()
+        .map(|l| LayerMeta { label: l.kind.label().to_string(), macs: l.macs() })
+        .collect();
+    TileSchedule { kind, tasks: b.tasks, activity: b.activity, n_cores: cfg.cores as usize, layers }
+}
+
+struct Builder {
+    cfg: AccelConfig,
+    n_cores: usize,
+    tasks: Vec<Task>,
+    activity: Activity,
+}
+
+/// Dep for pass `p` out of a chunked producer (clamps for un-chunked
+/// producers like the single softmax task feeding every PV pass).
+fn pick(deps: &[usize], p: u64) -> usize {
+    deps[(p as usize).min(deps.len() - 1)]
+}
+
+impl Builder {
+    fn core(&self, c: usize) -> usize {
+        layout::core(self.n_cores, c)
+    }
+    fn wport(&self, c: usize) -> usize {
+        layout::wport(self.n_cores, c)
+    }
+    fn offchip(&self) -> usize {
+        layout::offchip(self.n_cores)
+    }
+    fn sfu(&self) -> usize {
+        layout::sfu(self.n_cores)
+    }
+    fn dtpu(&self) -> usize {
+        layout::dtpu(self.n_cores)
+    }
+
+    fn push(
+        &mut self,
+        res: usize,
+        dur: u64,
+        deps: Vec<usize>,
+        class: TaskClass,
+        tag: &'static str,
+        layer: usize,
+    ) -> usize {
+        let id = self.tasks.len();
+        self.tasks.push(Task { id, res, dur, deps, class, tag, layer });
+        id
+    }
+
+    fn sfu_task(&mut self, op: &Op, deps: Vec<usize>, layer: usize) -> usize {
+        let (cycles, ops) = crate::sim::sfu::sfu_cost(&self.cfg, op);
+        self.activity.sfu_ops += ops;
+        let r = self.sfu();
+        self.push(r, cycles, deps, TaskClass::Sfu, "sfu", layer)
+    }
+
+    fn rank_task(&mut self, tokens: u64, deps: Vec<usize>, layer: usize) -> usize {
+        let (cycles, ops) = crate::sim::dtpu::rank_cost(&self.cfg, tokens);
+        self.activity.dtpu_ops += ops;
+        let r = self.dtpu();
+        self.push(r, cycles, deps, TaskClass::Rank, "rank", layer)
+    }
+
+    /// Static-weight matmul with preloaded rewrite: the preload task has
+    /// no dependencies, so an idle write port hides it entirely (the
+    /// engine's equivalent of `dataflow::exec_static_preloaded`).
+    /// Returns the compute task ids (one per participating core).
+    fn static_preloaded(&mut self, op: &Op, data_deps: &[usize], layer: usize) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let t = OpTiling::of(&cfg, op);
+        let (macros, cores): (u64, Vec<usize>) = match dataflow::placement(op) {
+            Placement::Core(c) => (cfg.macros_per_core, vec![c]),
+            Placement::AllCores => {
+                (cfg.macros_per_core * cfg.cores, (0..self.n_cores).collect())
+            }
+        };
+        let rewrite = t.rewrite_cycles(&cfg) / cores.len() as u64;
+        let rw_ids: Vec<usize> = cores
+            .iter()
+            .map(|&c| {
+                let wp = self.wport(c);
+                self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer)
+            })
+            .collect();
+        let comp = t.compute_cycles(macros);
+        let comp_ids: Vec<usize> = cores
+            .iter()
+            .map(|&c| {
+                let mut deps = rw_ids.clone();
+                deps.extend_from_slice(data_deps);
+                let cr = self.core(c);
+                self.push(cr, comp, deps, TaskClass::Compute, "compute", layer)
+            })
+            .collect();
+        dataflow::account_matmul(&mut self.activity, op, &t, t.replay_factor(macros), true, false);
+        comp_ids
+    }
+
+    /// Single-core static matmul whose compute is split into `chunks`
+    /// pieces, so downstream dynamic passes can consume the operand as it
+    /// streams out (tile-granular producer decoupling).  Returns the
+    /// chunk task ids in order.
+    fn static_preloaded_chunked(
+        &mut self,
+        op: &Op,
+        data_deps: &[usize],
+        chunks: u64,
+        layer: usize,
+    ) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let t = OpTiling::of(&cfg, op);
+        let c = match dataflow::placement(op) {
+            Placement::Core(c) => c,
+            Placement::AllCores => return self.static_preloaded(op, data_deps, layer),
+        };
+        let wp = self.wport(c);
+        let rewrite = t.rewrite_cycles(&cfg);
+        let rw = self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer);
+        let comp = t.compute_cycles(cfg.macros_per_core);
+        let chunks = chunks.max(1);
+        let cr = self.core(c);
+        let mut ids = Vec::with_capacity(chunks as usize);
+        let mut prev: Option<usize> = None;
+        for i in 0..chunks {
+            // even split without drift: chunk i covers [i*comp/chunks, (i+1)*comp/chunks)
+            let dur = comp * (i + 1) / chunks - comp * i / chunks;
+            let mut deps = vec![rw];
+            match prev {
+                Some(p) => deps.push(p),
+                None => deps.extend_from_slice(data_deps),
+            }
+            let id = self.push(cr, dur, deps, TaskClass::Compute, "compute", layer);
+            ids.push(id);
+            prev = Some(id);
+        }
+        dataflow::account_matmul(
+            &mut self.activity,
+            op,
+            &t,
+            t.replay_factor(cfg.macros_per_core),
+            true,
+            false,
+        );
+        ids
+    }
+
+    /// Dynamic matmul at layer granularity (layer streaming): the whole
+    /// stationary operand is rewritten before any compute.  Compute is
+    /// still pass-serial on the macro array (one task per pass, so the
+    /// SFU can pipeline off the first pass, as the analytic model does).
+    fn dynamic_layer_granular(
+        &mut self,
+        op: &Op,
+        moving_deps: &[usize],
+        stationary_deps: &[usize],
+        layer: usize,
+        tag: &'static str,
+    ) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let t = OpTiling::of(&cfg, op);
+        let mpc = cfg.macros_per_core;
+        let wp = self.wport(TBR);
+        let rw_tag = if tag == "qkt" { "K-rewrite" } else { "V-rewrite" };
+        let rw = self.push(
+            wp,
+            t.rewrite_cycles(&cfg),
+            stationary_deps.to_vec(),
+            TaskClass::Rewrite,
+            rw_tag,
+            layer,
+        );
+        let cr = self.core(TBR);
+        let passes = t.passes(mpc);
+        let mut comps: Vec<usize> = Vec::with_capacity(passes as usize);
+        for p in 0..passes {
+            let mut deps = vec![rw];
+            match comps.last() {
+                Some(&prev) => deps.push(prev),
+                None => deps.extend_from_slice(moving_deps),
+            }
+            comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
+        }
+        dataflow::account_matmul(&mut self.activity, op, &t, t.replay_factor(mpc), false, false);
+        comps
+    }
+
+    /// Dynamic matmul pass-by-pass with the ping-pong rewrite pipeline
+    /// (tile streaming).  `moving_per_pass` feeds pass `p` its matching
+    /// producer chunk; `moving_every_pass` deps gate every pass (the
+    /// softmax output feeding PV).  Returns one compute task per pass.
+    fn dynamic_pingpong(
+        &mut self,
+        op: &Op,
+        moving_per_pass: &[usize],
+        moving_every_pass: &[usize],
+        stationary_deps: &[usize],
+        layer: usize,
+        tag: &'static str,
+    ) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let t = OpTiling::of(&cfg, op);
+        let macros = dataflow::dynamic_macros(&cfg);
+        let pingpong = cfg.features.pingpong;
+        let passes = t.passes(macros);
+        let cr = self.core(TBR);
+        let wp = self.wport(TBR);
+        let mut comps: Vec<usize> = Vec::with_capacity(passes as usize);
+        for p in 0..passes {
+            let rw_dur = t.rewrite_cycles_for_pass(&cfg, p, macros);
+            let mut rw_deps = vec![pick(stationary_deps, p)];
+            if pingpong && p >= 2 {
+                // only two buffers: pass p's rewrite reuses pass p-2's
+                rw_deps.push(comps[(p - 2) as usize]);
+            }
+            // ablation: without ping-pong the rewrite occupies the macro
+            // array itself, serializing with compute on the TBR core
+            let rw_res = if pingpong { wp } else { cr };
+            let rw = self.push(rw_res, rw_dur, rw_deps, TaskClass::Rewrite, "pp-rewrite", layer);
+            let mut deps = vec![rw];
+            if !moving_per_pass.is_empty() {
+                deps.push(pick(moving_per_pass, p));
+            }
+            deps.extend_from_slice(moving_every_pass);
+            comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
+        }
+        let replay = if cfg.features.hybrid_mode { 1 } else { t.replay_factor(macros) };
+        dataflow::account_matmul(&mut self.activity, op, &t, replay, false, false);
+        comps
+    }
+
+    /// Non-stream: every op is a standalone kernel launch on a strict
+    /// serial chain (DMA-in, rewrite, compute, DMA-out).
+    fn layer_non(&mut self, layer: &Layer, entry: &[usize]) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let all_macros = cfg.total_macros();
+        let n_cores = self.n_cores;
+        let off = self.offchip();
+        let mut chain: Vec<usize> = entry.to_vec();
+        for op in &layer.ops {
+            match op.kind {
+                OpKind::MatMulStatic | OpKind::MatMulDynamic => {
+                    let t = OpTiling::of(&cfg, op);
+                    // attention internals stay fused on-chip even here
+                    let fused_in = op.name == "pv";
+                    let fused_out = op.name == "qkt";
+                    let in_bits =
+                        if fused_in { 0 } else { t.moving_bits() } + t.stationary_bits();
+                    let dma_in = self.push(
+                        off,
+                        cfg.offchip_cycles(in_bits),
+                        chain.clone(),
+                        TaskClass::Dma,
+                        "dma-in",
+                        layer.index,
+                    );
+                    let rw = t.rewrite_cycles(&cfg) / n_cores as u64;
+                    let rw_ids: Vec<usize> = (0..n_cores)
+                        .map(|c| {
+                            let wp = self.wport(c);
+                            let deps = vec![dma_in];
+                            self.push(wp, rw, deps, TaskClass::Rewrite, "rewrite", layer.index)
+                        })
+                        .collect();
+                    let comp = t.compute_cycles(all_macros);
+                    let comp_ids: Vec<usize> = (0..n_cores)
+                        .map(|c| {
+                            let mut deps = rw_ids.clone();
+                            deps.push(dma_in);
+                            let cr = self.core(c);
+                            self.push(cr, comp, deps, TaskClass::Compute, "compute", layer.index)
+                        })
+                        .collect();
+                    let out_bits = if fused_out { 0 } else { t.output_bits() };
+                    let dma_out = self.push(
+                        off,
+                        cfg.offchip_cycles(out_bits),
+                        comp_ids,
+                        TaskClass::Dma,
+                        "dma-out",
+                        layer.index,
+                    );
+                    chain = vec![dma_out];
+                    dataflow::account_matmul(
+                        &mut self.activity,
+                        op,
+                        &t,
+                        t.replay_factor(all_macros),
+                        true,
+                        false,
+                    );
+                    self.activity.offchip_bits +=
+                        in_bits.saturating_sub(t.stationary_bits()) + out_bits;
+                }
+                OpKind::Softmax | OpKind::LayerNorm | OpKind::Gelu => {
+                    let id = self.sfu_task(op, chain.clone(), layer.index);
+                    chain = vec![id];
+                }
+                OpKind::PruneRank => {
+                    let id = self.rank_task(op.n, chain.clone(), layer.index);
+                    chain = vec![id];
+                }
+            }
+        }
+        chain
+    }
+
+    /// Shared streaming-layer shape; `tile` selects tile-granular dynamic
+    /// matmuls (ping-pong) vs layer-granular ones.
+    fn layer_streaming(&mut self, layer: &Layer, entry: &[usize], tile: bool) -> Vec<usize> {
+        let cfg = self.cfg.clone();
+        let macros = dataflow::dynamic_macros(&cfg);
+        let mut outs: Vec<usize> = Vec::new();
+        for grp in dataflow::ops_by_stream(layer) {
+            let li = layer.index;
+            let q = dataflow::find(&grp, "q_gen").expect("q_gen");
+            let k = dataflow::find(&grp, "k_gen").expect("k_gen");
+            let v = dataflow::find(&grp, "v_gen").expect("v_gen");
+            let qkt = dataflow::find(&grp, "qkt").expect("qkt");
+            let pv = dataflow::find(&grp, "pv").expect("pv");
+
+            // generation, parallel across the three cores
+            let (qg, kg, vg) = if tile {
+                let qkt_passes = OpTiling::of(&cfg, qkt).passes(macros);
+                let pv_passes = OpTiling::of(&cfg, pv).passes(macros);
+                (
+                    self.static_preloaded_chunked(q, entry, qkt_passes, li),
+                    self.static_preloaded_chunked(k, entry, qkt_passes, li),
+                    self.static_preloaded_chunked(v, entry, pv_passes, li),
+                )
+            } else {
+                (
+                    self.static_preloaded(q, entry, li),
+                    self.static_preloaded(k, entry, li),
+                    self.static_preloaded(v, entry, li),
+                )
+            };
+
+            // QK^T -> softmax -> PV.  The SFU pipelines off QK^T's first
+            // pass (row-streaming softmax, as in the analytic model); PV
+            // still gates on softmax AND the last QK^T pass.
+            let qkt_out = if tile {
+                self.dynamic_pingpong(qkt, &qg, &[], &kg, li, "qkt")
+            } else {
+                self.dynamic_layer_granular(qkt, &qg, &kg, li, "qkt")
+            };
+            let qkt_first = *qkt_out.first().expect("qkt pass");
+            let qkt_last = *qkt_out.last().expect("qkt pass");
+            let sm_op = dataflow::find(&grp, "softmax").expect("softmax");
+            let sm = self.sfu_task(sm_op, vec![qkt_first], li);
+            let pv_gate = [sm, qkt_last];
+            let pv_out = if tile {
+                self.dynamic_pingpong(pv, &[], &pv_gate, &vg, li, "pv")
+            } else {
+                self.dynamic_layer_granular(pv, &pv_gate, &vg, li, "pv")
+            };
+            let pv_last = vec![*pv_out.last().expect("pv pass")];
+
+            // projection + FFN (static, preloaded)
+            let oproj = dataflow::find(&grp, "o_proj").expect("o_proj");
+            let opj = self.static_preloaded(oproj, &pv_last, li);
+            let ln1 = dataflow::find(&grp, "ln1").expect("ln1");
+            let ln1_t = self.sfu_task(ln1, opj, li);
+            let ffn1 = dataflow::find(&grp, "ffn1").expect("ffn1");
+            let f1 = self.static_preloaded(ffn1, &[ln1_t], li);
+            let gelu = dataflow::find(&grp, "gelu").expect("gelu");
+            let g_t = self.sfu_task(gelu, f1, li);
+            let ffn2 = dataflow::find(&grp, "ffn2").expect("ffn2");
+            let f2 = self.static_preloaded(ffn2, &[g_t], li);
+            let ln2 = dataflow::find(&grp, "ln2").expect("ln2");
+            let ln2_t = self.sfu_task(ln2, f2, li);
+            outs.push(ln2_t);
+
+            // DTPU ranking (pruning layers only)
+            if let Some(rank) = dataflow::find(&grp, "rank") {
+                let r = self.rank_task(rank.n, pv_last.clone(), li);
+                outs.push(r);
+            }
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn deps_are_topological_by_id() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::functional_small();
+        for kind in crate::config::DataflowKind::ALL {
+            let s = build(kind, &cfg, &model);
+            assert!(!s.tasks.is_empty());
+            for t in &s.tasks {
+                assert_eq!(t.id, s.tasks.iter().position(|x| x.id == t.id).unwrap());
+                for &d in &t.deps {
+                    assert!(d < t.id, "{:?}: dep {d} >= id {}", kind, t.id);
+                }
+                assert!(t.res < s.n_resources());
+            }
+        }
+    }
+
+    #[test]
+    fn activity_matches_analytic_backend() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::functional_small();
+        for kind in crate::config::DataflowKind::ALL {
+            let s = build(kind, &cfg, &model);
+            let analytic = crate::dataflow::run(kind, &cfg, &model);
+            assert_eq!(s.activity, analytic.activity, "{kind:?} activity diverged");
+        }
+    }
+
+    #[test]
+    fn tile_schedule_has_pass_granular_rewrites() {
+        let cfg = presets::streamdcim_default();
+        // disable pruning so both dataflows lower the identical graph
+        let mut model = presets::vilbert_base();
+        model.pruning = crate::config::PruningSchedule::disabled();
+        let tile = build(DataflowKind::TileStream, &cfg, &model);
+        let layer = build(DataflowKind::LayerStream, &cfg, &model);
+        let count = |s: &TileSchedule, tag: &str| {
+            s.tasks.iter().filter(|t| t.tag == tag).count()
+        };
+        assert!(count(&tile, "pp-rewrite") > count(&layer, "K-rewrite"));
+        assert_eq!(count(&layer, "pp-rewrite"), 0);
+        // both carry the same dynamic rewrite volume in cycles
+        let rw_cycles = |s: &TileSchedule| -> u64 {
+            s.tasks
+                .iter()
+                .filter(|t| t.class == TaskClass::Rewrite && t.tag != "preload")
+                .map(|t| t.dur)
+                .sum()
+        };
+        assert_eq!(rw_cycles(&tile), rw_cycles(&layer));
+    }
+
+    #[test]
+    fn resource_names_match_accelerator() {
+        let cfg = presets::streamdcim_default();
+        let s = build(DataflowKind::TileStream, &cfg, &presets::tiny_smoke());
+        assert_eq!(s.resource_name(0), "Q-CIM");
+        assert_eq!(s.resource_name(2), "TBR-CIM");
+        assert_eq!(s.resource_name(s.wport_res(0)), "wport0");
+        assert_eq!(s.resource_name(s.offchip_res()), "offchip");
+        assert_eq!(s.resource_name(s.sfu_res()), "sfu");
+        assert_eq!(s.resource_name(s.dtpu_res()), "dtpu");
+    }
+}

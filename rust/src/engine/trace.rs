@@ -1,0 +1,191 @@
+//! [`CycleTrace`] — the deterministic per-run trace artifact the event
+//! engine emits: per-resource busy/stall/fill/drain cycles, the
+//! pipeline-fill latency, and the rewrite-hidden ratio (how much of the
+//! CIM rewriting the schedule overlapped with compute — the paper's
+//! Fig. 4b headline mechanism).  Flows into `RunReport`, the sweep
+//! aggregate JSON, and the `trace` CLI subcommand.
+
+use crate::util::json::Json;
+
+/// Occupancy summary of one resource port over the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceTrace {
+    pub name: String,
+    /// Cycles executing tasks.
+    pub busy: u64,
+    /// Idle cycles *between* tasks: pipeline bubbles waiting on upstream
+    /// producers.
+    pub stall: u64,
+    /// Idle cycles before the first task (pipeline fill).
+    pub fill: u64,
+    /// Idle cycles after the last task (pipeline drain).
+    pub drain: u64,
+    pub tasks: u64,
+    /// busy / makespan, in [0, 1].
+    pub utilization: f64,
+}
+
+/// The engine's cycle-level trace for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CycleTrace {
+    pub makespan: u64,
+    /// First compute-task start cycle.
+    pub fill_latency: u64,
+    /// Total cycles spent in rewrite tasks (preloads included).
+    pub total_rewrite_cycles: u64,
+    /// Rewrite cycles that delayed a compute task (not hidden).
+    pub exposed_rewrite_cycles: u64,
+    pub resources: Vec<ResourceTrace>,
+}
+
+impl CycleTrace {
+    /// Fraction of rewrite work hidden behind compute, in [0, 1].
+    pub fn rewrite_hidden_ratio(&self) -> f64 {
+        if self.total_rewrite_cycles == 0 {
+            return 1.0;
+        }
+        let exposed = self.exposed_rewrite_cycles.min(self.total_rewrite_cycles);
+        1.0 - exposed as f64 / self.total_rewrite_cycles as f64
+    }
+
+    /// Total stall cycles across all resources.
+    pub fn total_stall(&self) -> u64 {
+        self.resources.iter().map(|r| r.stall).sum()
+    }
+
+    /// Compact summary embedded in `RunReport::to_json` / sweep rows.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("fill_latency", Json::num(self.fill_latency as f64)),
+            ("rewrite_hidden_ratio", Json::num(self.rewrite_hidden_ratio())),
+            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite_cycles as f64)),
+            ("total_rewrite_cycles", Json::num(self.total_rewrite_cycles as f64)),
+            ("stall_cycles", Json::num(self.total_stall() as f64)),
+        ])
+    }
+
+    /// Full trace artifact (deterministic: no wall-clock, no environment).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("makespan", Json::num(self.makespan as f64)),
+            ("fill_latency", Json::num(self.fill_latency as f64)),
+            ("rewrite_hidden_ratio", Json::num(self.rewrite_hidden_ratio())),
+            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite_cycles as f64)),
+            ("total_rewrite_cycles", Json::num(self.total_rewrite_cycles as f64)),
+            (
+                "resources",
+                Json::arr(
+                    self.resources
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("busy", Json::num(r.busy as f64)),
+                                ("stall", Json::num(r.stall as f64)),
+                                ("fill", Json::num(r.fill as f64)),
+                                ("drain", Json::num(r.drain as f64)),
+                                ("tasks", Json::num(r.tasks as f64)),
+                                ("utilization", Json::num(r.utilization)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable per-resource table for the `trace` subcommand.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "makespan {} cycles | fill latency {} | rewrite hidden {:.1} % \
+             ({} of {} cycles exposed)\n",
+            self.makespan,
+            self.fill_latency,
+            self.rewrite_hidden_ratio() * 100.0,
+            self.exposed_rewrite_cycles,
+            self.total_rewrite_cycles,
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12} {:>8} {:>7}\n",
+            "resource", "busy", "stall", "fill", "drain", "tasks", "util%"
+        ));
+        for r in &self.resources {
+            out.push_str(&format!(
+                "{:<10} {:>12} {:>12} {:>12} {:>12} {:>8} {:>7.1}\n",
+                r.name,
+                r.busy,
+                r.stall,
+                r.fill,
+                r.drain,
+                r.tasks,
+                r.utilization * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> CycleTrace {
+        CycleTrace {
+            makespan: 1000,
+            fill_latency: 50,
+            total_rewrite_cycles: 400,
+            exposed_rewrite_cycles: 100,
+            resources: vec![
+                ResourceTrace {
+                    name: "Q-CIM".into(),
+                    busy: 600,
+                    stall: 100,
+                    fill: 50,
+                    drain: 250,
+                    tasks: 12,
+                    utilization: 0.6,
+                },
+                ResourceTrace {
+                    name: "sfu".into(),
+                    busy: 200,
+                    stall: 0,
+                    fill: 700,
+                    drain: 100,
+                    tasks: 3,
+                    utilization: 0.2,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn hidden_ratio_bounds() {
+        let t = trace();
+        assert!((t.rewrite_hidden_ratio() - 0.75).abs() < 1e-12);
+        let none = CycleTrace { total_rewrite_cycles: 0, ..trace() };
+        assert_eq!(none.rewrite_hidden_ratio(), 1.0);
+        let all = CycleTrace { exposed_rewrite_cycles: 9999, ..trace() };
+        assert_eq!(all.rewrite_hidden_ratio(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_resources() {
+        let t = trace();
+        let j = t.to_json().to_string_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("makespan").and_then(|v| v.as_u64()), Some(1000));
+        assert_eq!(parsed.get("resources").and_then(|r| r.as_arr()).map(|a| a.len()), Some(2));
+        let s = t.summary_json();
+        assert!(s.get("rewrite_hidden_ratio").is_some());
+        assert_eq!(s.get("stall_cycles").and_then(|v| v.as_u64()), Some(100));
+    }
+
+    #[test]
+    fn text_table_lists_resources() {
+        let txt = trace().render_text();
+        assert!(txt.contains("Q-CIM"));
+        assert!(txt.contains("sfu"));
+        assert!(txt.contains("rewrite hidden"));
+    }
+}

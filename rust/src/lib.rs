@@ -33,9 +33,11 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod energy;
+pub mod engine;
 pub mod exec;
 pub mod metrics;
 pub mod model;
+pub mod perfgate;
 pub mod propcheck;
 pub mod pruning;
 pub mod report;

@@ -14,13 +14,15 @@ use std::process::ExitCode;
 use streamdcim::cli::{self, Args};
 use streamdcim::config::{presets, toml, AccelConfig, DataflowKind, ModelConfig};
 use streamdcim::coordinator::{Coordinator, Request};
+use streamdcim::engine::{self, Backend};
 use streamdcim::model::refimpl::Mat;
 use streamdcim::report;
 use streamdcim::sweep::{self, Scenario};
-use streamdcim::trace::render_gantt;
+use streamdcim::trace::{render_gantt, render_gantt_lanes};
+use streamdcim::util::json::Json;
 use streamdcim::util::error::Result;
 use streamdcim::util::prng::Rng;
-use streamdcim::{anyhow, bail, dataflow, runtime};
+use streamdcim::{anyhow, bail, dataflow, perfgate, runtime};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -34,6 +36,8 @@ fn main() -> ExitCode {
     let result = match args.command.as_str() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "trace" => cmd_trace(&args),
+        "perf-gate" => cmd_perf_gate(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -75,15 +79,31 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (accel, model) = load_configs(args)?;
     let kind = DataflowKind::parse(args.flag_or("dataflow", "tile"))
         .ok_or_else(|| anyhow!("unknown dataflow"))?;
-    let scenario = Scenario::new(accel.clone(), model.clone(), kind, "full");
-    let r = scenario.run_report();
+    let backend = Backend::parse(args.flag_or("engine", "analytic"))
+        .ok_or_else(|| anyhow!("unknown engine (analytic|event)"))?;
+    // for the event backend, run the engine once and keep the lanes so a
+    // later --trace doesn't have to re-simulate
+    let mut event_run: Option<engine::EngineRun> = None;
+    let r = match backend {
+        Backend::Event => {
+            let full = engine::run_full(kind, &accel, &model);
+            let report = full.report.clone();
+            event_run = Some(full);
+            report
+        }
+        Backend::Analytic => {
+            Scenario::new(accel.clone(), model.clone(), kind, "full").run_report()
+        }
+    };
     if args.has("json") {
         println!("{}", r.to_json().to_string_pretty());
     } else {
         println!("model      : {}", r.model);
+        println!("engine     : {}", backend.name());
         println!("dataflow   : {}", r.dataflow.name());
         println!("cycles     : {} ({:.2} ms @ {} MHz)", r.cycles, r.ms, accel.freq_mhz);
-        println!("energy     : {:.2} mJ  (avg {:.1} mW)", r.energy.total_mj(), r.energy.avg_power_mw);
+        let e = &r.energy;
+        println!("energy     : {:.2} mJ  (avg {:.1} mW)", e.total_mj(), e.avg_power_mw);
         println!("macs       : {:.3} T", r.activity.macs as f64 / 1e12);
         println!("off-chip   : {:.1} Mb", r.activity.offchip_bits as f64 / 1e6);
         println!("exposed rw : {} cycles", r.exposed_rewrite());
@@ -91,26 +111,37 @@ fn cmd_run(args: &Args) -> Result<()> {
         for (name, u) in &r.utilization {
             println!("  {name:<10} {:>5.1} %", u * 100.0);
         }
+        if let Some(t) = &r.trace {
+            println!("-- engine trace --");
+            print!("{}", t.render_text());
+        }
     }
     if args.has("trace") {
-        // re-run the first layers with tracing for the gantt view
-        let mut acc = streamdcim::sim::Accelerator::with_trace(accel.clone());
-        let graph = dataflow::graph_for(kind, &accel, &model);
-        for layer in graph.layers.iter().take(2) {
-            match kind {
-                DataflowKind::NonStream => {
-                    dataflow::non_stream::run_layer(&mut acc, layer);
-                }
-                DataflowKind::LayerStream => {
-                    dataflow::layer_stream::run_layer(&mut acc, layer);
-                }
-                DataflowKind::TileStream => {
-                    dataflow::tile_stream::run_layer(&mut acc, layer);
+        if let Some(full) = &event_run {
+            // the event engine already produced real lanes; render those
+            // instead of re-running the other backend
+            println!("\n-- pipeline trace (event engine, full run) --");
+            println!("{}", render_gantt_lanes(&full.lanes, 0, full.trace.makespan, 100));
+        } else {
+            // re-run the first layers with tracing for the gantt view
+            let mut acc = streamdcim::sim::Accelerator::with_trace(accel.clone());
+            let graph = dataflow::graph_for(kind, &accel, &model);
+            for layer in graph.layers.iter().take(2) {
+                match kind {
+                    DataflowKind::NonStream => {
+                        dataflow::non_stream::run_layer(&mut acc, layer);
+                    }
+                    DataflowKind::LayerStream => {
+                        dataflow::layer_stream::run_layer(&mut acc, layer);
+                    }
+                    DataflowKind::TileStream => {
+                        dataflow::tile_stream::run_layer(&mut acc, layer);
+                    }
                 }
             }
+            println!("\n-- pipeline trace (first 2 layers) --");
+            println!("{}", render_gantt(&acc, 0, acc.makespan(), 100));
         }
-        println!("\n-- pipeline trace (first 2 layers) --");
-        println!("{}", render_gantt(&acc, 0, acc.makespan(), 100));
     }
     Ok(())
 }
@@ -158,12 +189,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => presets::sweep_models(),
     };
-    let scenarios = sweep::matrix_for(&accel, &models);
+    let backend = Backend::parse(args.flag_or("engine", "analytic"))
+        .ok_or_else(|| anyhow!("unknown engine (analytic|event)"))?;
+    let scenarios = sweep::matrix_for_backend(&accel, &models, backend);
     eprintln!(
-        "sweep: {} scenarios ({} models x 3 dataflows x ablations) on {} thread(s)",
+        "sweep: {} scenarios ({} models x 3 dataflows x ablations) on {} thread(s), {} backend",
         scenarios.len(),
         models.len(),
-        threads
+        threads,
+        backend.name()
     );
 
     let started = std::time::Instant::now();
@@ -179,6 +213,124 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         println!("{}", json.to_string_pretty());
     } else {
         println!("{}", aggregate.render_text());
+    }
+    Ok(())
+}
+
+/// `streamdcim trace`: run the event engine and emit its CycleTrace —
+/// per-resource busy/stall/fill/drain, pipeline-fill latency, rewrite
+/// hidden ratio — plus an optional Gantt chart and a deterministic JSON
+/// artifact (no wall-clock or environment fields).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let (accel, model) = load_configs(args)?;
+    let kind = DataflowKind::parse(args.flag_or("dataflow", "tile"))
+        .ok_or_else(|| anyhow!("unknown dataflow"))?;
+    let run = engine::run_full(kind, &accel, &model);
+    println!("model      : {}  dataflow: {}", run.report.model, kind.name());
+    print!("{}", run.trace.render_text());
+
+    if args.has("gantt") {
+        let width = args.flag_u64("width", 100).max(10) as usize;
+        println!("\n-- pipeline gantt --");
+        print!("{}", render_gantt_lanes(&run.lanes, 0, run.trace.makespan, width));
+    }
+
+    if let Some(path) = args.flag("out") {
+        let mut fields = vec![
+            ("kind", Json::str("cycle-trace")),
+            ("model", Json::str(run.report.model.clone())),
+            ("dataflow", Json::str(kind.slug())),
+            ("engine", Json::str(Backend::Event.slug())),
+            ("report", run.report.to_json()),
+            ("trace", run.trace.to_json()),
+        ];
+        if args.has("segments") {
+            let lanes = run
+                .lanes
+                .iter()
+                .map(|(name, segs)| {
+                    Json::obj(vec![
+                        ("name", Json::str(name.clone())),
+                        (
+                            "segments",
+                            Json::arr(
+                                segs.iter()
+                                    .map(|(s, e, tag)| {
+                                        Json::arr(vec![
+                                            Json::num(*s as f64),
+                                            Json::num(*e as f64),
+                                            Json::str(*tag),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect();
+            fields.push(("lanes", Json::arr(lanes)));
+        }
+        std::fs::write(path, Json::obj(fields).to_string_pretty())?;
+        eprintln!("trace artifact written to {path}");
+    }
+    Ok(())
+}
+
+/// `streamdcim perf-gate`: deterministic cycle-count regression gate (see
+/// `perfgate`).  Exit code is nonzero on regression so CI can gate on it.
+fn cmd_perf_gate(args: &Args) -> Result<()> {
+    let tolerance = args.flag_f64("tolerance", perfgate::DEFAULT_TOLERANCE);
+    let inflate = args.flag_f64("inflate", 1.0);
+    eprintln!("perf-gate: running the smoke matrix (analytic + event backends)...");
+    let measured = perfgate::smoke_entries(2);
+
+    // --write-baseline always records the *measured* cycles; --inflate
+    // only perturbs the gated side (otherwise the self-test could arm
+    // the gate with a corrupted baseline).
+    if let Some(path) = args.flag("write-baseline") {
+        std::fs::write(path, perfgate::baseline_json(&measured, false).to_string_pretty())?;
+        eprintln!("baseline written to {path} ({} scenarios)", measured.len());
+    }
+
+    let mut current = measured;
+    if (inflate - 1.0).abs() > 1e-12 {
+        eprintln!("perf-gate: self-test mode, inflating current cycles by {inflate}x");
+        for e in &mut current {
+            e.cycles = (e.cycles as f64 * inflate) as u64;
+        }
+    }
+
+    let Some(baseline_path) = args.flag("baseline") else {
+        if args.flag("write-baseline").is_none() {
+            bail!("perf-gate needs --baseline <file> and/or --write-baseline <file>");
+        }
+        return Ok(());
+    };
+    let text = std::fs::read_to_string(baseline_path)?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{baseline_path}: {e}"))?;
+    let (bootstrap, baseline) =
+        perfgate::parse_baseline(&doc).map_err(|e| anyhow!("{baseline_path}: {e}"))?;
+
+    if bootstrap {
+        eprintln!(
+            "perf-gate: {baseline_path} is a bootstrap baseline (no committed cycles); \
+             passing — commit a regenerated baseline (--write-baseline) to arm the gate"
+        );
+        if let Some(out) = args.flag("out") {
+            let diff = perfgate::compare(&current, &current, tolerance);
+            std::fs::write(out, diff.to_json().to_string_pretty())?;
+        }
+        return Ok(());
+    }
+
+    let outcome = perfgate::compare(&baseline, &current, tolerance);
+    print!("{}", outcome.render_text());
+    if let Some(out) = args.flag("out") {
+        std::fs::write(out, outcome.to_json().to_string_pretty())?;
+        eprintln!("diff artifact written to {out}");
+    }
+    if !outcome.pass {
+        bail!("perf-gate failed: {}", outcome.verdict);
     }
     Ok(())
 }
@@ -298,10 +450,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::load(&dir)?;
-    println!("{} artifacts in {:?} (fingerprint {})", rt.artifact_names().len(), dir, &rt.manifest.fingerprint[..12.min(rt.manifest.fingerprint.len())]);
+    let fp = &rt.manifest.fingerprint;
+    let n_arts = rt.artifact_names().len();
+    println!("{} artifacts in {:?} (fingerprint {})", n_arts, dir, &fp[..12.min(fp.len())]);
     for name in rt.artifact_names() {
         let s = rt.spec(name).unwrap();
-        println!("  {:<24} kind {:<14} inputs {:?} -> outputs {:?}", name, s.kind, s.inputs.len(), s.outputs);
+        let ins = s.inputs.len();
+        println!("  {:<24} kind {:<14} inputs {ins:?} -> outputs {:?}", name, s.kind, s.outputs);
     }
     Ok(())
 }

@@ -33,6 +33,9 @@ pub struct RunReport {
     pub per_layer: Vec<LayerStats>,
     /// (resource name, utilization in [0,1]) over the makespan.
     pub utilization: Vec<(String, f64)>,
+    /// Cycle-level pipeline trace; present only for event-engine runs
+    /// (the analytic backend cannot observe stalls and bubbles).
+    pub trace: Option<crate::engine::CycleTrace>,
 }
 
 impl RunReport {
@@ -62,6 +65,7 @@ impl RunReport {
             energy,
             per_layer,
             utilization,
+            trace: None,
         }
     }
 
@@ -71,7 +75,7 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::str(self.model.clone())),
             ("dataflow", Json::str(self.dataflow.name())),
             ("cycles", Json::num(self.cycles as f64)),
@@ -95,7 +99,11 @@ impl RunReport {
                 "per_layer_cycles",
                 Json::arr(self.per_layer.iter().map(|l| Json::num(l.cycles() as f64)).collect()),
             ),
-        ])
+        ];
+        if let Some(t) = &self.trace {
+            fields.push(("engine_trace", t.summary_json()));
+        }
+        Json::obj(fields)
     }
 }
 

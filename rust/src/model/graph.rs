@@ -90,7 +90,9 @@ impl Op {
     /// Bits of the stationary operand (the one written into CIM macros).
     pub fn stationary_bits(&self) -> u64 {
         match self.kind {
-            OpKind::MatMulStatic | OpKind::MatMulDynamic => self.batch * self.k * self.n * self.bits,
+            OpKind::MatMulStatic | OpKind::MatMulDynamic => {
+                self.batch * self.k * self.n * self.bits
+            }
             _ => 0,
         }
     }
@@ -158,7 +160,9 @@ fn attention_ops(
     let h = cfg.heads;
     let dh = d / h;
     let bits = cfg.bits;
-    let op = |name: &'static str, kind, batch, m, k, n| Op { name, kind, stream, batch, m, k, n, bits };
+    let op = |name: &'static str, kind, batch, m, k, n| {
+        Op { name, kind, stream, batch, m, k, n, bits }
+    };
     let mut ops = vec![
         op("q_gen", OpKind::MatMulStatic, 1, nq, d, d),
         op("k_gen", OpKind::MatMulStatic, 1, nk, d, d),

@@ -1,0 +1,321 @@
+//! Performance-regression gate for CI.
+//!
+//! Simulated cycle counts are *deterministic* (pure functions of the
+//! scenario), so the gate compares exact per-scenario cycles from the
+//! smoke matrix — analytic and event backends both — against a committed
+//! baseline (`BENCH_baseline.json` at the repo root) and fails when the
+//! geomean cycle ratio regresses beyond the tolerance.  The ±5% default
+//! absorbs deliberate model recalibrations; anything larger must ship a
+//! regenerated baseline in the same PR (`perf-gate --write-baseline`).
+//!
+//! A baseline with `"bootstrap": true` (committed from an environment
+//! that cannot run the simulator) passes with a warning; CI regenerates
+//! and uploads the real baseline as an artifact so it can be committed.
+
+use crate::config::presets;
+use crate::engine::Backend;
+use crate::sweep;
+use crate::util::geomean;
+use crate::util::json::Json;
+
+pub const DEFAULT_TOLERANCE: f64 = 0.05;
+
+/// One gated measurement: `<backend>::<model/dataflow/ablation>` cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GateEntry {
+    pub id: String,
+    pub cycles: u64,
+}
+
+/// Deterministic cycle counts for the smoke matrix (tiny-smoke preset,
+/// all dataflows and ablations) under both simulation backends.
+pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
+    let accel = presets::streamdcim_default();
+    let models = vec![presets::tiny_smoke()];
+    let mut out = Vec::new();
+    for backend in [Backend::Analytic, Backend::Event] {
+        let scenarios = sweep::matrix_for_backend(&accel, &models, backend);
+        let rep = sweep::run_sweep(&scenarios, threads, 42);
+        for row in &rep.rows {
+            out.push(GateEntry {
+                id: format!("{}::{}", backend.slug(), row.result.id),
+                cycles: row.result.report.cycles,
+            });
+        }
+    }
+    out
+}
+
+/// Serialize entries as a baseline document.
+pub fn baseline_json(entries: &[GateEntry], bootstrap: bool) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("perf-baseline")),
+        ("bootstrap", Json::Bool(bootstrap)),
+        ("tolerance", Json::num(DEFAULT_TOLERANCE)),
+        (
+            "scenarios",
+            Json::arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("id", Json::str(e.id.clone())),
+                            ("cycles", Json::num(e.cycles as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a baseline document. Returns (bootstrap, entries).
+pub fn parse_baseline(doc: &Json) -> Result<(bool, Vec<GateEntry>), String> {
+    if doc.get("kind").and_then(|k| k.as_str()) != Some("perf-baseline") {
+        return Err("not a perf-baseline document (missing kind)".into());
+    }
+    let bootstrap = doc.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+    let mut entries = Vec::new();
+    if let Some(arr) = doc.get("scenarios").and_then(|s| s.as_arr()) {
+        for item in arr {
+            let id = item
+                .get("id")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| "scenario entry missing id".to_string())?;
+            let cycles = item
+                .get("cycles")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("scenario {id} missing cycles"))?;
+            entries.push(GateEntry { id: id.to_string(), cycles });
+        }
+    }
+    Ok((bootstrap, entries))
+}
+
+/// One compared scenario.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub id: String,
+    pub baseline: u64,
+    pub current: u64,
+    /// current / baseline.
+    pub ratio: f64,
+}
+
+/// Comparison outcome of current vs baseline entries.
+#[derive(Debug, Clone)]
+pub struct GateOutcome {
+    pub rows: Vec<GateRow>,
+    /// Geomean of current/baseline cycle ratios over matched scenarios.
+    pub geomean_ratio: f64,
+    /// Baseline scenarios absent from the current run (always fails).
+    pub missing: Vec<String>,
+    /// Current scenarios absent from the baseline (reported, not fatal).
+    pub added: Vec<String>,
+    pub tolerance: f64,
+    pub pass: bool,
+    pub verdict: String,
+}
+
+/// Gate `current` against `baseline` at `tolerance`.
+pub fn compare(baseline: &[GateEntry], current: &[GateEntry], tolerance: f64) -> GateOutcome {
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for b in baseline {
+        match current.iter().find(|c| c.id == b.id) {
+            Some(c) => rows.push(GateRow {
+                id: b.id.clone(),
+                baseline: b.cycles,
+                current: c.cycles,
+                ratio: c.cycles.max(1) as f64 / b.cycles.max(1) as f64,
+            }),
+            None => missing.push(b.id.clone()),
+        }
+    }
+    let added: Vec<String> = current
+        .iter()
+        .filter(|c| !baseline.iter().any(|b| b.id == c.id))
+        .map(|c| c.id.clone())
+        .collect();
+    let ratios: Vec<f64> = rows.iter().map(|r| r.ratio).collect();
+    let geomean_ratio = if ratios.is_empty() { 1.0 } else { geomean(&ratios) };
+
+    let (pass, verdict) = if !missing.is_empty() {
+        let n = missing.len();
+        (false, format!("fail: {n} baseline scenario(s) missing from the current run"))
+    } else if rows.is_empty() {
+        (false, "fail: baseline has no scenarios to compare".to_string())
+    } else if geomean_ratio > 1.0 + tolerance {
+        (
+            false,
+            format!(
+                "fail: geomean cycles regressed {:.2}% (> {:.1}% tolerance)",
+                (geomean_ratio - 1.0) * 100.0,
+                tolerance * 100.0
+            ),
+        )
+    } else if geomean_ratio < 1.0 - tolerance {
+        (
+            true,
+            format!(
+                "pass: geomean improved {:.2}% beyond tolerance — regenerate the baseline",
+                (1.0 - geomean_ratio) * 100.0
+            ),
+        )
+    } else {
+        let pct = tolerance * 100.0;
+        (true, format!("pass: geomean ratio {geomean_ratio:.4} within ±{pct:.1}%"))
+    };
+
+    GateOutcome { rows, geomean_ratio, missing, added, tolerance, pass, verdict }
+}
+
+impl GateOutcome {
+    /// The diff artifact CI uploads.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("perf-gate-diff")),
+            ("pass", Json::Bool(self.pass)),
+            ("verdict", Json::str(self.verdict.clone())),
+            ("geomean_ratio", Json::num(self.geomean_ratio)),
+            ("tolerance", Json::num(self.tolerance)),
+            ("missing", Json::arr(self.missing.iter().map(|s| Json::str(s.clone())).collect())),
+            ("added", Json::arr(self.added.iter().map(|s| Json::str(s.clone())).collect())),
+            (
+                "scenarios",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::str(r.id.clone())),
+                                ("baseline_cycles", Json::num(r.baseline as f64)),
+                                ("current_cycles", Json::num(r.current as f64)),
+                                ("ratio", Json::num(r.ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "perf-gate: {} scenarios, geomean ratio {:.4} (tolerance ±{:.1}%)\n",
+            self.rows.len(),
+            self.geomean_ratio,
+            self.tolerance * 100.0
+        ));
+        let mut worst: Vec<&GateRow> = self.rows.iter().collect();
+        worst.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap_or(std::cmp::Ordering::Equal));
+        for r in worst.iter().take(8) {
+            out.push_str(&format!(
+                "  {:<44} {:>12} -> {:>12}  ({:+.2}%)\n",
+                r.id,
+                r.baseline,
+                r.current,
+                (r.ratio - 1.0) * 100.0
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("  MISSING from current run: {m}\n"));
+        }
+        for a in &self.added {
+            out.push_str(&format!("  new scenario (not in baseline): {a}\n"));
+        }
+        out.push_str(&self.verdict);
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries() -> Vec<GateEntry> {
+        (0..8)
+            .map(|i| GateEntry { id: format!("analytic::m/df/{i}"), cycles: 1000 + i * 100 })
+            .collect()
+    }
+
+    fn inflate(es: &[GateEntry], factor: f64) -> Vec<GateEntry> {
+        es.iter()
+            .map(|e| GateEntry { id: e.id.clone(), cycles: (e.cycles as f64 * factor) as u64 })
+            .collect()
+    }
+
+    #[test]
+    fn identical_runs_pass_at_unity() {
+        let base = entries();
+        let out = compare(&base, &base, DEFAULT_TOLERANCE);
+        assert!(out.pass, "{}", out.verdict);
+        assert!((out.geomean_ratio - 1.0).abs() < 1e-12);
+        assert!(out.missing.is_empty() && out.added.is_empty());
+    }
+
+    #[test]
+    fn injected_slowdown_fails_the_gate() {
+        let base = entries();
+        let slow = inflate(&base, 1.20);
+        let out = compare(&base, &slow, DEFAULT_TOLERANCE);
+        assert!(!out.pass, "20% inflation must fail: {}", out.verdict);
+        assert!(out.geomean_ratio > 1.15);
+        // but a within-tolerance wobble passes
+        let ok = compare(&base, &inflate(&base, 1.03), DEFAULT_TOLERANCE);
+        assert!(ok.pass, "{}", ok.verdict);
+    }
+
+    #[test]
+    fn big_improvement_passes_but_flags_stale_baseline() {
+        let base = entries();
+        let fast = inflate(&base, 0.80);
+        let out = compare(&base, &fast, DEFAULT_TOLERANCE);
+        assert!(out.pass);
+        assert!(out.verdict.contains("regenerate"), "{}", out.verdict);
+    }
+
+    #[test]
+    fn missing_scenario_fails() {
+        let base = entries();
+        let mut cur = base.clone();
+        cur.pop();
+        let out = compare(&base, &cur, DEFAULT_TOLERANCE);
+        assert!(!out.pass);
+        assert_eq!(out.missing.len(), 1);
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_bootstrap_flag() {
+        let es = entries();
+        let j = baseline_json(&es, false);
+        let (bootstrap, parsed) = parse_baseline(&j).unwrap();
+        assert!(!bootstrap);
+        assert_eq!(parsed, es);
+        let jb = baseline_json(&[], true);
+        let (bootstrap, parsed) = parse_baseline(&jb).unwrap();
+        assert!(bootstrap);
+        assert!(parsed.is_empty());
+        assert!(parse_baseline(&Json::obj(vec![("kind", Json::str("nope"))])).is_err());
+    }
+
+    #[test]
+    fn smoke_entries_are_deterministic_across_threads() {
+        let a = smoke_entries(1);
+        let b = smoke_entries(2);
+        assert_eq!(a, b);
+        assert!(a.len() >= 16, "both backends x 8 scenarios, got {}", a.len());
+        // every entry is backend-qualified and unique
+        let ids: std::collections::BTreeSet<&str> =
+            a.iter().map(|e| e.id.as_str()).collect();
+        assert_eq!(ids.len(), a.len());
+        assert!(a.iter().all(|e| e.id.contains("::")));
+        // diff artifact JSON parses
+        let out = compare(&a, &b, DEFAULT_TOLERANCE);
+        assert!(out.pass);
+        let parsed = Json::parse(&out.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("pass").and_then(|p| p.as_bool()), Some(true));
+    }
+}

@@ -110,7 +110,8 @@ pub fn fig6(all: &[(String, Vec<RunReport>)]) -> FigureText {
         let g_non = geomean(&per.iter().map(|p| p.0).collect::<Vec<_>>());
         let g_layer = geomean(&per.iter().map(|p| p.1).collect::<Vec<_>>());
         body.push_str(&format!(
-            "geomean speedup: {g_non:.2}x vs Non-stream (paper 2.63x), {g_layer:.2}x vs Layer-stream (paper 1.28x)\n"
+            "geomean speedup: {g_non:.2}x vs Non-stream (paper 2.63x), \
+             {g_layer:.2}x vs Layer-stream (paper 1.28x)\n"
         ));
     }
     FigureText { title: "Fig. 6 — Performance Comparison".into(), body }
@@ -134,7 +135,8 @@ pub fn fig7(all: &[(String, Vec<RunReport>)]) -> FigureText {
         }
         let (e_non, e_layer) = energy_savings(runs);
         body.push_str(&format!(
-            "  Tile-stream energy saving: {e_non:.2}x vs Non-stream, {e_layer:.2}x vs Layer-stream\n\n"
+            "  Tile-stream energy saving: {e_non:.2}x vs Non-stream, \
+             {e_layer:.2}x vs Layer-stream\n\n"
         ));
     }
     if all.len() >= 2 {
@@ -142,7 +144,8 @@ pub fn fig7(all: &[(String, Vec<RunReport>)]) -> FigureText {
         let g_non = geomean(&per.iter().map(|p| p.0).collect::<Vec<_>>());
         let g_layer = geomean(&per.iter().map(|p| p.1).collect::<Vec<_>>());
         body.push_str(&format!(
-            "geomean energy saving: {g_non:.2}x vs Non-stream (paper 2.26x), {g_layer:.2}x vs Layer-stream (paper 1.23x)\n"
+            "geomean energy saving: {g_non:.2}x vs Non-stream (paper 2.26x), \
+             {g_layer:.2}x vs Layer-stream (paper 1.23x)\n"
         ));
     }
     FigureText { title: "Fig. 7 — Energy Comparison (normalized to Non-stream)".into(), body }
@@ -153,8 +156,10 @@ pub fn headline(all: &[(String, Vec<RunReport>)]) -> FigureText {
     let sp: Vec<(f64, f64)> = all.iter().map(|(_, r)| speedups(r)).collect();
     let en: Vec<(f64, f64)> = all.iter().map(|(_, r)| energy_savings(r)).collect();
     let body = format!(
-        "geomean speedup      : {:.2}x vs Non-stream (paper 2.63x), {:.2}x vs Layer-stream (paper 1.28x)\n\
-         geomean energy saving: {:.2}x vs Non-stream (paper 2.26x), {:.2}x vs Layer-stream (paper 1.23x)\n",
+        "geomean speedup      : {:.2}x vs Non-stream (paper 2.63x), \
+         {:.2}x vs Layer-stream (paper 1.28x)\n\
+         geomean energy saving: {:.2}x vs Non-stream (paper 2.26x), \
+         {:.2}x vs Layer-stream (paper 1.23x)\n",
         geomean(&sp.iter().map(|p| p.0).collect::<Vec<_>>()),
         geomean(&sp.iter().map(|p| p.1).collect::<Vec<_>>()),
         geomean(&en.iter().map(|p| p.0).collect::<Vec<_>>()),

@@ -75,6 +75,22 @@ impl OpTiling {
         tiles * self.rows_per_tile * row_cycles
     }
 
+    /// Stationary tiles loaded by pass `p` (0-based): full passes hold
+    /// `macros` tiles, the final pass holds the remainder, so summing over
+    /// all `passes(macros)` passes covers `tiles` exactly once.
+    pub fn tiles_in_pass(&self, p: u64, macros: u64) -> u64 {
+        let m = macros.max(1);
+        self.tiles.saturating_sub(p * m).min(m)
+    }
+
+    /// Exact rewrite cycles of pass `p`; sums to [`Self::rewrite_cycles`]
+    /// across all passes (unlike the constant per-pass estimate, which
+    /// over-charges the final partial pass).
+    pub fn rewrite_cycles_for_pass(&self, cfg: &AccelConfig, p: u64, macros: u64) -> u64 {
+        let row_cycles = cfg.row_write_cycles(self.cols_per_tile, self.bits);
+        self.tiles_in_pass(p, macros) * self.rows_per_tile * row_cycles
+    }
+
     /// Bits of the stationary operand (written into CIM cells).
     pub fn stationary_bits(&self) -> u64 {
         self.tiles * self.rows_per_tile * self.cols_per_tile * self.bits
@@ -202,6 +218,24 @@ mod tests {
         // fits entirely -> replay 1
         let small = OpTiling::of(&cfg, &mk(1, 64, 32, 128, 16));
         assert_eq!(small.replay_factor(8), 1);
+    }
+
+    #[test]
+    fn per_pass_rewrite_sums_to_total() {
+        let cfg = presets::streamdcim_default();
+        // 9 tiles over 8 macros: one full pass + a 1-tile remainder pass
+        let t = OpTiling::of(&cfg, &mk(9, 64, 32, 128, 16));
+        assert_eq!(t.tiles, 9);
+        assert_eq!(t.passes(8), 2);
+        assert_eq!(t.tiles_in_pass(0, 8), 8);
+        assert_eq!(t.tiles_in_pass(1, 8), 1);
+        assert_eq!(t.tiles_in_pass(2, 8), 0);
+        let total: u64 = (0..t.passes(8)).map(|p| t.rewrite_cycles_for_pass(&cfg, p, 8)).sum();
+        assert_eq!(total, t.rewrite_cycles(&cfg));
+        // and the constant estimate bounds every exact pass from above
+        for p in 0..t.passes(8) {
+            assert!(t.rewrite_cycles_for_pass(&cfg, p, 8) <= t.rewrite_cycles_per_pass(&cfg, 8));
+        }
     }
 
     #[test]

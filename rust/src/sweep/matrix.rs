@@ -68,6 +68,20 @@ pub fn full_matrix(accel: &AccelConfig) -> Vec<Scenario> {
     matrix_for(accel, &presets::sweep_models())
 }
 
+/// [`matrix_for`] with every scenario pinned to `backend`.
+pub fn matrix_for_backend(
+    accel: &AccelConfig,
+    models: &[ModelConfig],
+    backend: crate::engine::Backend,
+) -> Vec<Scenario> {
+    matrix_for(accel, models).into_iter().map(|s| s.with_backend(backend)).collect()
+}
+
+/// [`full_matrix`] with every scenario pinned to `backend`.
+pub fn full_matrix_backend(accel: &AccelConfig, backend: crate::engine::Backend) -> Vec<Scenario> {
+    matrix_for_backend(accel, &presets::sweep_models(), backend)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

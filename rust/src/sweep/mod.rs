@@ -17,14 +17,22 @@
 pub mod matrix;
 pub mod scenario;
 
-pub use matrix::{full_matrix, matrix_for, tile_variants};
+pub use matrix::{full_matrix, full_matrix_backend, matrix_for, matrix_for_backend, tile_variants};
 pub use scenario::{Scenario, ScenarioResult};
 
 use crate::config::DataflowKind;
+use crate::engine::Backend;
 use crate::exec::ThreadPool;
 use crate::util::geomean;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
+
+/// The paper's attention-heavy evaluation presets: 4k-token-plus
+/// workloads where the quadratic attention (and therefore the dynamic
+/// rewrite pipeline) dominates — the models behind the 2.63x/1.28x
+/// headline.  Used for the attention-band entry in the aggregate JSON.
+pub const ATTENTION_PRESETS: &[&str] =
+    &["ViLBERT-base", "ViLBERT-large", "vilbert-base-8k", "long-doc-vqa"];
 
 /// One scenario outcome plus its baseline-relative metrics.
 #[derive(Debug, Clone)]
@@ -55,6 +63,9 @@ pub struct Headline {
     pub tile_vs_layer_speedup: f64,
     pub tile_vs_non_energy: f64,
     pub tile_vs_layer_energy: f64,
+    /// Tile-vs-non geomean restricted to [`ATTENTION_PRESETS`] (0.0 when
+    /// none of those models are in the sweep).
+    pub tile_vs_non_speedup_attention: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -184,6 +195,7 @@ pub fn aggregate(results: Vec<ScenarioResult>) -> SweepReport {
         let mut sp_layer = Vec::new();
         let mut en_non = Vec::new();
         let mut en_layer = Vec::new();
+        let mut sp_non_attention = Vec::new();
         for m in &models {
             if let (Some(non), Some(layer), Some(tile)) = (
                 find(m, DataflowKind::NonStream),
@@ -197,6 +209,9 @@ pub fn aggregate(results: Vec<ScenarioResult>) -> SweepReport {
                 );
                 sp_non.push(nc / tc);
                 sp_layer.push(lc / tc);
+                if ATTENTION_PRESETS.contains(m) {
+                    sp_non_attention.push(nc / tc);
+                }
                 let (ne, le, te) = (
                     non.result.report.energy.total_mj(),
                     layer.result.report.energy.total_mj(),
@@ -214,6 +229,11 @@ pub fn aggregate(results: Vec<ScenarioResult>) -> SweepReport {
                 tile_vs_layer_speedup: geomean(&sp_layer),
                 tile_vs_non_energy: geomean(&en_non),
                 tile_vs_layer_energy: geomean(&en_layer),
+                tile_vs_non_speedup_attention: if sp_non_attention.is_empty() {
+                    0.0
+                } else {
+                    geomean(&sp_non_attention)
+                },
             }
         }
     };
@@ -235,6 +255,7 @@ impl SweepReport {
         }
         Json::obj(vec![
             ("scenario_count", Json::num(self.rows.len() as f64)),
+            ("engine", Json::str(self.backend_slug())),
             ("models", Json::arr(models.into_iter().map(Json::str).collect())),
             ("scenarios", Json::arr(self.rows.iter().map(row_json).collect())),
             ("groups", Json::arr(self.groups.iter().map(group_json).collect())),
@@ -245,9 +266,27 @@ impl SweepReport {
                     ("tile_vs_layer_speedup", Json::num(self.headline.tile_vs_layer_speedup)),
                     ("tile_vs_non_energy_saving", Json::num(self.headline.tile_vs_non_energy)),
                     ("tile_vs_layer_energy_saving", Json::num(self.headline.tile_vs_layer_energy)),
+                    (
+                        "tile_vs_non_speedup_attention",
+                        Json::num(self.headline.tile_vs_non_speedup_attention),
+                    ),
                 ]),
             ),
         ])
+    }
+
+    /// The backend that produced the rows ("mixed" for hand-built lists).
+    pub fn backend_slug(&self) -> &'static str {
+        match self.rows.first().map(|r| r.result.backend) {
+            None => Backend::Analytic.slug(),
+            Some(first) => {
+                if self.rows.iter().all(|r| r.result.backend == first) {
+                    first.slug()
+                } else {
+                    "mixed"
+                }
+            }
+        }
     }
 
     /// Human-readable ranked summary for the CLI.
@@ -302,7 +341,7 @@ impl SweepReport {
 
 fn row_json(r: &SweepRow) -> Json {
     let rep = &r.result.report;
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::str(r.result.id.clone())),
         ("model", Json::str(rep.model.clone())),
         ("dataflow", Json::str(rep.dataflow.slug())),
@@ -316,7 +355,11 @@ fn row_json(r: &SweepRow) -> Json {
         ("exposed_rewrite_cycles", Json::num(rep.exposed_rewrite() as f64)),
         ("speedup_vs_non", Json::num(r.speedup_vs_non)),
         ("energy_saving_vs_non", Json::num(r.energy_saving_vs_non)),
-    ])
+    ];
+    if let Some(t) = &rep.trace {
+        fields.push(("engine_trace", t.summary_json()));
+    }
+    Json::obj(fields)
 }
 
 fn group_json(g: &GroupSummary) -> Json {

@@ -7,6 +7,7 @@
 
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::dataflow;
+use crate::engine::{self, Backend};
 use crate::metrics::RunReport;
 
 #[derive(Debug, Clone)]
@@ -16,6 +17,8 @@ pub struct Scenario {
     pub dataflow: DataflowKind,
     /// Feature/knob variant label ("full", "no-pruning", "tall-tiles", ...).
     pub ablation: &'static str,
+    /// Which simulation backend runs the scenario (analytic by default).
+    pub backend: Backend,
 }
 
 /// One scenario's outcome: the full simulator report plus identity.
@@ -23,6 +26,7 @@ pub struct Scenario {
 pub struct ScenarioResult {
     pub id: String,
     pub ablation: &'static str,
+    pub backend: Backend,
     pub report: RunReport,
 }
 
@@ -33,7 +37,13 @@ impl Scenario {
         dataflow: DataflowKind,
         ablation: &'static str,
     ) -> Self {
-        Scenario { model, accel, dataflow, ablation }
+        Scenario { model, accel, dataflow, ablation, backend: Backend::Analytic }
+    }
+
+    /// Select the simulation backend (builder style).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Stable identifier: `model/dataflow/ablation`.
@@ -43,12 +53,20 @@ impl Scenario {
 
     /// The pure `Scenario -> RunReport` core.
     pub fn run_report(&self) -> RunReport {
-        dataflow::run(self.dataflow, &self.accel, &self.model)
+        match self.backend {
+            Backend::Analytic => dataflow::run(self.dataflow, &self.accel, &self.model),
+            Backend::Event => engine::run(self.dataflow, &self.accel, &self.model),
+        }
     }
 
     /// Run and tag with identity (what the sweep engine shards).
     pub fn run(&self) -> ScenarioResult {
-        ScenarioResult { id: self.id(), ablation: self.ablation, report: self.run_report() }
+        ScenarioResult {
+            id: self.id(),
+            ablation: self.ablation,
+            backend: self.backend,
+            report: self.run_report(),
+        }
     }
 }
 
@@ -82,5 +100,25 @@ mod tests {
         assert_eq!(a.report.activity, b.report.activity);
         let direct = dataflow::run(s.dataflow, &s.accel, &s.model);
         assert_eq!(a.report.cycles, direct.cycles);
+    }
+
+    #[test]
+    fn event_backend_dispatches_to_engine() {
+        let s = Scenario::new(
+            presets::streamdcim_default(),
+            presets::tiny_smoke(),
+            DataflowKind::TileStream,
+            "full",
+        )
+        .with_backend(Backend::Event);
+        assert_eq!(s.backend, Backend::Event);
+        let r = s.run();
+        assert_eq!(r.backend, Backend::Event);
+        assert!(r.report.trace.is_some(), "event runs carry a CycleTrace");
+        let direct = engine::run(s.dataflow, &s.accel, &s.model);
+        assert_eq!(r.report.cycles, direct.cycles);
+        // same id namespace as the analytic matrix: the backend is a
+        // sweep-level property, not a scenario-id suffix
+        assert_eq!(r.id, "tiny-smoke/tile/full");
     }
 }

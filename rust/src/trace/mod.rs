@@ -1,27 +1,36 @@
-//! Pipeline trace rendering: turn `Timeline` busy segments into a textual
+//! Pipeline trace rendering: turn busy segments — from the analytic
+//! `Timeline`s or the event engine's per-resource lanes — into a textual
 //! Gantt chart (the tool used to eyeball Fig. 4b-style overlap).
 
 use crate::sim::Accelerator;
+
+/// One renderable lane: (resource name, busy segments).
+pub type Lane = (String, Vec<(u64, u64, &'static str)>);
 
 /// Render the accelerator's traced resources over `[from, to)` cycles,
 /// `width` characters wide.  Resources without tracing enabled are skipped
 /// (construct the accelerator with `Accelerator::with_trace`).
 pub fn render_gantt(acc: &Accelerator, from: u64, to: u64, width: usize) -> String {
-    let mut out = String::new();
-    let span = (to.saturating_sub(from)).max(1);
-    let lanes: Vec<&crate::sim::Timeline> = acc
+    let lanes: Vec<Lane> = acc
         .cores
         .iter()
         .chain(acc.write_ports.iter())
         .chain([&acc.offchip, &acc.tbsn, &acc.sfu, &acc.dtpu])
+        .filter_map(|t| t.segments.as_ref().map(|segs| (t.name.clone(), segs.clone())))
         .collect();
-    let name_w = lanes.iter().map(|l| l.name.len()).max().unwrap_or(8);
+    render_gantt_lanes(&lanes, from, to, width)
+}
+
+/// Render arbitrary lanes (the event engine's `EngineRun::lanes` path).
+pub fn render_gantt_lanes(lanes: &[Lane], from: u64, to: u64, width: usize) -> String {
+    let mut out = String::new();
+    let span = (to.saturating_sub(from)).max(1);
+    let name_w = lanes.iter().map(|(n, _)| n.len()).max().unwrap_or(8);
     out.push_str(&format!(
         "cycles {from}..{to} ({span} cycles, {} cycles/char)\n",
         (span as usize / width.max(1)).max(1)
     ));
-    for lane in lanes {
-        let Some(segs) = &lane.segments else { continue };
+    for (name, segs) in lanes {
         let mut row = vec![' '; width];
         for (s, e, tag) in segs {
             if *e <= from || *s >= to {
@@ -38,7 +47,7 @@ pub fn render_gantt(acc: &Accelerator, from: u64, to: u64, width: usize) -> Stri
         }
         out.push_str(&format!(
             "{:>width$} |{}|\n",
-            lane.name,
+            name,
             row.iter().collect::<String>(),
             width = name_w
         ));
@@ -91,6 +100,20 @@ mod tests {
         acc.cores[0].acquire(0, 10, "compute");
         let g = render_gantt(&acc, 0, 10, 20);
         assert!(!lane_rows(&g).contains('#'), "{g}");
+    }
+
+    #[test]
+    fn engine_lanes_render_like_timelines() {
+        let lanes: Vec<Lane> = vec![
+            ("TBR-CIM".into(), vec![(0, 40, "qkt"), (50, 90, "pv")]),
+            ("wport2".into(), vec![(0, 30, "pp-rewrite")]),
+            ("offchip".into(), vec![(10, 20, "embed-in")]),
+        ];
+        let g = render_gantt_lanes(&lanes, 0, 100, 50);
+        assert!(g.contains("TBR-CIM"));
+        assert!(g.contains('#'));
+        assert!(g.contains('~'));
+        assert!(g.contains('.'));
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Config-file + CLI integration: the `configs/` examples must parse and
 //! produce runnable configurations.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::cli;
 use streamdcim::config::{presets, toml};
 

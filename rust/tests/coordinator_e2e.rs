@@ -2,6 +2,10 @@
 //! artifacts, with DTPU pruning between stages (needs `make artifacts`;
 //! the refimpl-backed tests always run).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::{Path, PathBuf};
 
 use streamdcim::config::presets;

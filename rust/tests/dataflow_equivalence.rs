@@ -1,6 +1,10 @@
 //! Cross-dataflow invariants: the three schedules differ in timing and
 //! traffic, never in the computation performed.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::{presets, DataflowKind, PruningSchedule};
 use streamdcim::dataflow;
 use streamdcim::model::build_graph;

@@ -1,0 +1,143 @@
+//! Event-engine acceptance: determinism (threads, shard seeds, event
+//! insertion orders), the three-way pipeline ordering over the full
+//! scenario matrix, and the paper-plausible headline band — all on the
+//! discrete-event backend (`sweep --engine event`).
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::engine::{self, Backend};
+use streamdcim::sweep;
+use streamdcim::util::json::Json;
+
+#[test]
+fn full_event_matrix_ordering_band_and_thread_determinism() {
+    let scenarios = sweep::full_matrix_backend(&presets::streamdcim_default(), Backend::Event);
+    assert!(scenarios.len() >= 80, "matrix has only {}", scenarios.len());
+
+    let serial = sweep::run_sweep(&scenarios, 1, 42);
+    let parallel = sweep::run_sweep(&scenarios, 8, 42);
+    assert_eq!(
+        serial.to_json().to_string_pretty(),
+        parallel.to_json().to_string_pretty(),
+        "engine sweep must be bit-identical across --threads 1 vs --threads 8"
+    );
+
+    // aggregate JSON declares the backend
+    let parsed = Json::parse(&serial.to_json().to_string_pretty()).unwrap();
+    assert_eq!(parsed.get("engine").and_then(|e| e.as_str()), Some("event"));
+
+    // per model: tile-streaming <= layer-streaming <= non-streaming
+    let cycles = |model: &str, df: DataflowKind| -> u64 {
+        serial
+            .rows
+            .iter()
+            .find(|r| {
+                r.result.report.model == model
+                    && r.result.report.dataflow == df
+                    && r.result.ablation == "full"
+            })
+            .unwrap_or_else(|| panic!("{model} missing {df:?}/full"))
+            .result
+            .report
+            .cycles
+    };
+    let mut models: Vec<&str> = Vec::new();
+    for r in &serial.rows {
+        let name = r.result.report.model.as_str();
+        if !models.contains(&name) {
+            models.push(name);
+        }
+    }
+    assert!(models.len() >= 10);
+    for m in &models {
+        let (non, layer, tile) = (
+            cycles(m, DataflowKind::NonStream),
+            cycles(m, DataflowKind::LayerStream),
+            cycles(m, DataflowKind::TileStream),
+        );
+        assert!(tile <= layer, "{m}: tile {tile} > layer {layer}");
+        assert!(layer <= non, "{m}: layer {layer} > non {non}");
+    }
+
+    // headline band on the attention presets (paper: 2.63x vs non-stream)
+    let att = serial.headline.tile_vs_non_speedup_attention;
+    assert!(att > 1.3, "attention-preset tile-vs-non speedup {att:.2} below plausible band");
+    assert!(att < 8.0, "attention-preset tile-vs-non speedup {att:.2} above plausible band");
+    let h = parsed.get("headline").expect("headline in aggregate");
+    let att_json = h.get("tile_vs_non_speedup_attention").and_then(|v| v.as_f64()).unwrap();
+    assert!((att_json - att).abs() < 1e-9);
+
+    // every event row carries its trace summary
+    for row in parsed.get("scenarios").unwrap().as_arr().unwrap() {
+        assert!(row.get("engine_trace").is_some(), "row missing engine_trace");
+    }
+}
+
+#[test]
+fn small_event_matrix_is_seed_invariant() {
+    let scenarios = sweep::matrix_for_backend(
+        &presets::streamdcim_default(),
+        &[presets::tiny_smoke(), presets::functional_small()],
+        Backend::Event,
+    );
+    let a = sweep::run_sweep(&scenarios, 3, 1).to_json().to_string_pretty();
+    let b = sweep::run_sweep(&scenarios, 3, 999).to_json().to_string_pretty();
+    assert_eq!(a, b, "shard-shuffle seed must not change the event aggregate");
+}
+
+#[test]
+fn event_heap_insertion_order_is_irrelevant() {
+    // mirror tests/sweep_determinism.rs at the event level: seeded
+    // shuffles of the initial poll and completion fan-out must be
+    // bit-identical to the canonical order, for every dataflow
+    let cfg = presets::streamdcim_default();
+    for model in [presets::tiny_smoke(), presets::functional_small()] {
+        for kind in DataflowKind::ALL {
+            let sched = engine::schedule::build(kind, &cfg, &model);
+            let base = engine::event::simulate(&sched);
+            for seed in [7u64, 42, 0xDEAD_BEEF] {
+                let alt = engine::event::simulate_shuffled(&sched, seed);
+                assert_eq!(base.makespan, alt.makespan, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.start, alt.start, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.end, alt.end, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.exposed, alt.exposed, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.busy, alt.busy, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.stall, alt.stall, "{}/{kind:?}/{seed}", model.name);
+                assert_eq!(base.segments, alt.segments, "{}/{kind:?}/{seed}", model.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_feature_ablations_still_cost_performance() {
+    // the paper's mechanisms must each contribute under the event engine
+    let scenarios = sweep::matrix_for_backend(
+        &presets::streamdcim_default(),
+        &[presets::vilbert_base()],
+        Backend::Event,
+    );
+    let report = sweep::run_sweep(&scenarios, 4, 42);
+    let speed = |ablation: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| {
+                r.result.report.dataflow == DataflowKind::TileStream
+                    && r.result.ablation == ablation
+            })
+            .map(|r| r.speedup_vs_non)
+            .unwrap()
+    };
+    let full = speed("full");
+    for ablation in ["no-pruning", "no-pingpong", "no-hybrid"] {
+        assert!(
+            speed(ablation) < full,
+            "{ablation} ({:.3}) should lose to full ({full:.3})",
+            speed(ablation)
+        );
+    }
+}

@@ -1,6 +1,10 @@
 //! Full-stack simulator integration tests: the paper's headline claims
 //! (experiments E3-E6 in DESIGN.md) within reproduction bands.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::{presets, DataflowKind};
 use streamdcim::model::{Op, OpKind, Stream};
 use streamdcim::report;

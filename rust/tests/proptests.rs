@@ -1,6 +1,10 @@
 //! Property-based tests on coordinator/simulator invariants, using the
 //! in-repo propcheck kit (deterministic, replayable by seed).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::{presets, DataflowKind, PruningSchedule};
 use streamdcim::model::refimpl::{self, Mat};
 use streamdcim::model::{Op, OpKind, Stream};
@@ -84,6 +88,13 @@ fn prop_tiling_covers_shape() {
         prop_assert!(t.replay_factor(8) >= 1, "replay >= 1");
         prop_assert!(t.replay_factor(8) <= t.n_tiles.max(1), "replay bounded by n tiles");
         prop_assert!(t.rewrite_cycles(&cfg) >= t.rewrite_cycles_per_pass(&cfg, 8), "pass <= total");
+        let per_pass_sum: u64 =
+            (0..t.passes(8)).map(|p| t.rewrite_cycles_for_pass(&cfg, p, 8)).sum();
+        prop_assert!(
+            per_pass_sum == t.rewrite_cycles(&cfg),
+            "exact per-pass rewrites must sum to the total: {per_pass_sum} vs {}",
+            t.rewrite_cycles(&cfg)
+        );
         Ok(())
     });
 }
@@ -162,6 +173,79 @@ fn prop_softmax_rows_stochastic() {
             prop_assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
             prop_assert!(m.row(r).iter().all(|v| *v >= 0.0 && v.is_finite()), "bad probs");
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_engine_dominates_analytic_lower_bounds() {
+    // the event engine may schedule more conservatively than the analytic
+    // model, but it can never beat the serial work floor of any single
+    // resource — and both backends must agree exactly on total work
+    Prop::new("event makespan >= per-resource work floors").cases(8).check(|rng| {
+        let cfg = presets::streamdcim_default();
+        let mut model = presets::functional_small();
+        model.tokens_x = rng.range_u64(1, 96);
+        model.tokens_y = rng.range_u64(1, 96);
+        model.single_layers_x = rng.range_u64(0, 1);
+        model.single_layers_y = rng.range_u64(0, 1);
+        model.cross_layers = rng.range_u64(1, 2);
+        model.pruning = PruningSchedule::disabled();
+        for kind in DataflowKind::ALL {
+            let graph = streamdcim::dataflow::graph_for(kind, &cfg, &model);
+            let dyn_macros = match kind {
+                DataflowKind::NonStream => cfg.total_macros(),
+                DataflowKind::LayerStream => cfg.macros_per_core,
+                DataflowKind::TileStream => streamdcim::dataflow::dynamic_macros(&cfg),
+            };
+            let dyn_floor: u64 = graph
+                .ops()
+                .filter(|o| o.kind == OpKind::MatMulDynamic)
+                .map(|o| OpTiling::of(&cfg, o).compute_cycles(dyn_macros))
+                .sum();
+            let sfu_floor: u64 = graph
+                .ops()
+                .map(|o| streamdcim::sim::sfu::sfu_cost(&cfg, o).0)
+                .sum();
+            let eng = streamdcim::engine::run(kind, &cfg, &model);
+            let ana = streamdcim::dataflow::run(kind, &cfg, &model);
+            prop_assert!(
+                eng.cycles >= dyn_floor,
+                "{kind:?}: engine {} < dynamic-matmul floor {dyn_floor}",
+                eng.cycles
+            );
+            prop_assert!(
+                eng.cycles >= sfu_floor,
+                "{kind:?}: engine {} < SFU floor {sfu_floor}",
+                eng.cycles
+            );
+            prop_assert!(
+                eng.activity == ana.activity,
+                "{kind:?}: engine and analytic disagree on total work"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_tile_never_slower_than_event_layer() {
+    // the engine must preserve the paper's ordering on random workloads
+    Prop::new("event tile <= event layer cycles").cases(6).check(|rng| {
+        let cfg = presets::streamdcim_default();
+        let mut model = presets::functional_small();
+        model.tokens_x = 32 * rng.range_u64(1, 8);
+        model.tokens_y = 32 * rng.range_u64(1, 8);
+        model.cross_layers = rng.range_u64(1, 2);
+        model.pruning = PruningSchedule::disabled();
+        let layer = streamdcim::engine::run(DataflowKind::LayerStream, &cfg, &model).cycles;
+        let tile = streamdcim::engine::run(DataflowKind::TileStream, &cfg, &model).cycles;
+        prop_assert!(
+            tile <= layer,
+            "event tile {tile} > layer {layer} on {}x{}",
+            model.tokens_x,
+            model.tokens_y
+        );
         Ok(())
     });
 }

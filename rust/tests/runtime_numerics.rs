@@ -5,6 +5,10 @@
 //! from Rust (L3), match an independent Rust implementation of the same
 //! math on the same inputs.
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use std::path::{Path, PathBuf};
 
 use streamdcim::model::refimpl::{self, BlockWeights, Mat};

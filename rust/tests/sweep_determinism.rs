@@ -2,6 +2,10 @@
 //! matrix must produce bit-identical aggregate JSON to a serial run, for
 //! any thread count and any shard-shuffle seed (seeded via util/prng).
 
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
 use streamdcim::config::{presets, DataflowKind};
 use streamdcim::sweep;
 use streamdcim::util::json::Json;
@@ -65,7 +69,8 @@ fn ablations_cost_performance_on_paper_scale_workloads() {
             .rows
             .iter()
             .find(|r| {
-                r.result.report.dataflow == DataflowKind::TileStream && r.result.ablation == ablation
+                r.result.report.dataflow == DataflowKind::TileStream
+                    && r.result.ablation == ablation
             })
             .map(|r| r.speedup_vs_non)
             .unwrap()
