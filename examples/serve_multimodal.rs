@@ -1,15 +1,18 @@
 //! END-TO-END DRIVER (deliverable (b)/E2E): serve batched multimodal
-//! requests through the full three-layer stack on a real small workload.
+//! requests through the full three-layer stack, then push the same
+//! workload class through the sharded serving fabric.
 //!
 //! * L1/L2: the encoder-block artifacts were authored as JAX + Pallas
 //!   kernels and AOT-lowered to HLO text (`make artifacts`).
-//! * L3: this binary starts the Rust coordinator, which loads the
-//!   artifacts via PJRT, batches incoming requests, runs the ViLBERT-style
+//! * L3 functional path: the Rust coordinator loads the artifacts via
+//!   PJRT (falling back to the pure-Rust reference when they are
+//!   absent), batches incoming requests, runs the ViLBERT-style
 //!   cross-modal stack with DTPU token pruning between stages
-//!   (128 -> 96 -> 64 tokens), and reports latency/throughput.
-//! * The cycle-level simulator prices the same workload on StreamDCIM
-//!   silicon, so every serving run also reports simulated accelerator
-//!   latency/energy under all three dataflows.
+//!   (128 -> 96 -> 64 tokens), and reports latency/throughput — with
+//!   every batch additionally priced in engine cycles.
+//! * L3 traffic path: the serving fabric replays a deterministic
+//!   arrival trace through bounded queues, the continuous batcher, and
+//!   policy-routed engine-priced shards, under all three dataflows.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --offline --example serve_multimodal
@@ -22,11 +25,11 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use streamdcim::config::presets;
-use streamdcim::coordinator::{Coordinator, Request};
-use streamdcim::ensure;
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::coordinator::{Coordinator, CoordinatorConfig, Request};
+use streamdcim::engine::Backend;
 use streamdcim::model::refimpl::Mat;
-use streamdcim::report;
+use streamdcim::serve::{self, ArrivalKind, ServeConfig};
 use streamdcim::util::error::Result;
 use streamdcim::util::prng::Rng;
 
@@ -35,15 +38,18 @@ fn main() -> Result<()> {
     let batch = 6usize;
     let model = presets::functional_small();
     let artifacts = PathBuf::from("artifacts");
-    ensure!(
-        artifacts.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
+    let have_artifacts = artifacts.join("manifest.json").exists();
 
     println!("== StreamDCIM end-to-end serving driver ==");
-    println!("loading + compiling artifacts (PJRT CPU)...");
+    let mut cfg = CoordinatorConfig::reference(vec![128, 96, 64], batch, 42);
+    if have_artifacts {
+        println!("loading + compiling artifacts (PJRT CPU)...");
+        cfg.artifact_dir = Some(artifacts);
+    } else {
+        println!("artifacts missing (`make artifacts`) — pure-rust reference path");
+    }
     let t0 = Instant::now();
-    let coord = Coordinator::start(Some(artifacts), &model, vec![128, 96, 64], batch, 42)?;
+    let coord = Coordinator::start(cfg, &model)?;
     println!("leader ready in {:.2} s", t0.elapsed().as_secs_f64());
 
     // synthetic VQA-shaped workload: 128 vision tokens + 128 language
@@ -64,39 +70,59 @@ fn main() -> Result<()> {
     for w in waiters {
         let resp = w.recv().expect("leader alive")?;
         assert_eq!(resp.stages, vec![128, 96, 64]);
+        assert!(resp.batch_sim_cycles > 0);
         pruned_to = resp.x.rows;
     }
     let wall = t1.elapsed();
     let stats = coord.shutdown();
 
-    println!("\n-- serving results --");
+    println!("\n-- functional serving results --");
     println!("requests      : {}", stats.served);
     println!("wall time     : {:.2} s", wall.as_secs_f64());
     println!("throughput    : {:.2} req/s", stats.served as f64 / wall.as_secs_f64());
     println!(
-        "latency       : mean {:.1} ms   p50 {:.1} ms   p95 {:.1} ms",
+        "latency       : mean {:.1} ms   p50 {:.1} ms   p95 {:.1} ms   p99 {:.1} ms",
         stats.mean_latency_us() / 1e3,
         stats.percentile_us(0.5) as f64 / 1e3,
-        stats.percentile_us(0.95) as f64 / 1e3
+        stats.percentile_us(0.95) as f64 / 1e3,
+        stats.percentile_us(0.99) as f64 / 1e3
     );
     println!("mean batch    : {:.2}", stats.mean_batch());
+    println!(
+        "engine cycles : {} total ({:.2} served per busy Mcycle on silicon)",
+        stats.sim_cycles,
+        stats.served_per_busy_megacycle()
+    );
+    if let Some(h) = stats.rewrite_hidden {
+        println!("rewrite hidden: {:.1} %", h * 100.0);
+    }
     println!("token pruning : 128 -> 96 -> 64 (final {} tokens/modality)", pruned_to);
 
-    // --- what would this cost on StreamDCIM silicon? -------------------
-    println!("\n-- simulated accelerator cost for the same workload --");
-    let cfg = presets::streamdcim_default();
-    let runs = report::run_all(&cfg, &model);
-    for r in &runs {
+    // --- the same workload class through the sharded fabric ------------
+    println!("\n-- closed-loop traffic through the serving fabric --");
+    let mut accel = presets::streamdcim_default();
+    accel.serving.shards = 4;
+    let models = vec![model];
+    let mean_gap = serve::auto_gap(&accel, Backend::Event, &models);
+    for dataflow in DataflowKind::ALL {
+        let rep = serve::simulate(&ServeConfig {
+            accel: accel.clone(),
+            models: models.clone(),
+            dataflow,
+            backend: Backend::Event,
+            arrival: ArrivalKind::Poisson,
+            requests: 64,
+            mean_gap,
+        });
+        let s = &rep.stats;
         println!(
-            "  {:<13} {:>10} cycles  {:>7.3} ms/request  {:>8.4} mJ/request",
-            r.dataflow.name(),
-            r.cycles,
-            r.ms,
-            r.energy.total_mj()
+            "  {:<13} {:>7.2} served/Mcycle   p99 {:>9} cycles   {:>3} rejected",
+            dataflow.name(),
+            s.served_per_megacycle(),
+            s.latency.p99(),
+            s.rejected
         );
     }
-    let (s_non, s_layer) = report::speedups(&runs);
-    println!("  Tile-stream: {s_non:.2}x vs Non-stream, {s_layer:.2}x vs Layer-stream");
     println!("\nserve_multimodal OK");
     Ok(())
 }

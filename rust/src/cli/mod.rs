@@ -30,7 +30,7 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["trace", "verbose", "json", "no-pruning", "ref", "gantt", "segments"];
+const SWITCHES: &[&str] = &["trace", "json", "no-pruning", "gantt", "segments", "matrix"];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
     let mut it = argv.into_iter().peekable();
@@ -105,13 +105,24 @@ COMMANDS
                --out <file.json>   write the diff artifact
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
-               --figure fig5|fig6|fig7|headline|e5   (default headline)
+               --figure fig5|fig6|fig7|headline|e5|serving  (default headline)
                --config <file.toml>
-  serve      end-to-end serving demo over AOT artifacts
-               --artifacts <dir>   (default artifacts)
-               --requests <n>      (default 32)
-               --batch <n>         (default 4)
-               --seed <n>          --ref (pure-rust reference, no PJRT)
+  serve      closed-loop traffic through the sharded serving fabric
+               --shards <n>        accelerator shards (default 2)
+               --policy round-robin|least-loaded|modality-affinity
+               --arrival uniform|poisson|burst       (default poisson)
+               --requests <n>      arrival-trace length (default 256)
+               --gap <cycles>      mean inter-arrival gap (default: auto,
+                                   tile-priced near-saturation)
+               --models a,b,c      workload mix (default: small registry mix)
+               --dataflow tile|layer|non             (default tile)
+               --engine analytic|event               (default event)
+               --queue-depth <n>   per-modality admission bound
+               --batch <n>         max batch size  --seed <n> arrival seed
+               --out <file.json>   deterministic serve artifact
+               --config <file.toml> ([serving] + [accel] sections)
+               --matrix            run the shards x policy x dataflow
+                                   serving sweep (--threads <n>)  --json
   artifacts  list loaded artifacts and their shapes
                --artifacts <dir>
   help       this text

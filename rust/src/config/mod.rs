@@ -51,6 +51,81 @@ impl DataflowKind {
     }
 }
 
+/// Shard-routing policy of the serving fabric (`serve::router`): how a
+/// formed batch is placed onto one of the accelerator shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutePolicy {
+    /// Rotate through shards in index order, skipping busy ones.
+    RoundRobin,
+    /// Pick the free shard with the fewest accumulated busy cycles.
+    LeastLoaded,
+    /// Pin each modality to `modality % shards` when that shard is free,
+    /// falling back to least-loaded (keeps modality-specific CIM macro
+    /// contents warm across batches).
+    ModalityAffinity,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::ModalityAffinity];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "Round-robin",
+            RoutePolicy::LeastLoaded => "Least-loaded",
+            RoutePolicy::ModalityAffinity => "Modality-affinity",
+        }
+    }
+
+    /// Short machine-readable name (artifact ids, CLI); `parse` accepts it.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::ModalityAffinity => "modality-affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" | "leastloaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            "modality-affinity" | "affinity" | "ma" => Some(RoutePolicy::ModalityAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-fabric knobs: how many accelerator shards the fabric places
+/// batches on, the per-modality admission-queue bound, the batcher's
+/// maximum batch size, the arrival-trace seed, and the routing policy.
+/// All deterministic — the fabric has no wall-clock and no ambient RNG.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Accelerator instances behind the router (each its own simulation).
+    pub shards: u64,
+    /// Admission-queue bound per modality; arrivals beyond it are
+    /// rejected (bounded backpressure, never unbounded growth).
+    pub queue_depth: u64,
+    /// Maximum requests the continuous batcher packs into one batch.
+    pub batch_size: u64,
+    /// Seed of the deterministic request-arrival generator.
+    pub arrival_seed: u64,
+    pub policy: RoutePolicy,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            shards: 2,
+            queue_depth: 64,
+            batch_size: 8,
+            arrival_seed: 42,
+            policy: RoutePolicy::LeastLoaded,
+        }
+    }
+}
+
 /// Feature toggles for ablation studies (paper features individually).
 #[derive(Debug, Clone, Copy)]
 pub struct Features {
@@ -111,6 +186,8 @@ pub struct AccelConfig {
     pub dtpu_tokens_per_cycle: u64,
     pub features: Features,
     pub energy: EnergyConfig,
+    /// Serving-fabric knobs (shard count, queue bound, batcher, policy).
+    pub serving: ServingConfig,
 }
 
 impl AccelConfig {
@@ -259,6 +336,25 @@ mod tests {
         }
         assert_eq!(DataflowKind::parse("streamdcim"), Some(DataflowKind::TileStream));
         assert_eq!(DataflowKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn route_policy_parse_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.slug()), Some(p));
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("ll"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn serving_defaults_are_sane() {
+        let s = presets::streamdcim_default().serving;
+        assert!(s.shards >= 1);
+        assert!(s.queue_depth >= 1);
+        assert!(s.batch_size >= 1);
+        assert_eq!(s.policy, RoutePolicy::LeastLoaded);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{AccelConfig, Features, ModelConfig};
+use super::{AccelConfig, Features, ModelConfig, RoutePolicy};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlVal {
@@ -194,6 +194,15 @@ pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
         set_f64!(t, "dtpu_pj_per_op", cfg.energy.dtpu_pj_per_op);
         set_f64!(t, "leakage_mw", cfg.energy.leakage_mw);
     }
+    if let Some(t) = doc.get("serving") {
+        set_u64!(t, "shards", cfg.serving.shards);
+        set_u64!(t, "queue_depth", cfg.serving.queue_depth);
+        set_u64!(t, "batch_size", cfg.serving.batch_size);
+        set_u64!(t, "arrival_seed", cfg.serving.arrival_seed);
+        if let Some(p) = t.get("policy").and_then(|v| v.as_str()).and_then(RoutePolicy::parse) {
+            cfg.serving.policy = p;
+        }
+    }
     if let Some(t) = doc.get("features") {
         let mut f = Features {
             hybrid_mode: cfg.features.hybrid_mode,
@@ -250,6 +259,10 @@ offchip_bus_bits = 1_024
 offchip_pj_per_bit = 2.5
 [features]
 pingpong = false
+[serving]
+shards = 4
+queue_depth = 16
+policy = "modality-affinity"
 [model]
 name = "tiny"
 tokens_x = 256
@@ -279,6 +292,11 @@ keep_ratio = 0.5
         assert!((accel.energy.offchip_pj_per_bit - 2.5).abs() < 1e-12);
         assert!(!accel.features.pingpong);
         assert!(accel.features.hybrid_mode); // untouched
+        assert_eq!(accel.serving.shards, 4);
+        assert_eq!(accel.serving.queue_depth, 16);
+        assert_eq!(accel.serving.policy, RoutePolicy::ModalityAffinity);
+        assert_eq!(accel.serving.batch_size, 8); // untouched default
+        assert_eq!(accel.serving.arrival_seed, 42); // untouched default
         assert_eq!(model.name, "tiny");
         assert_eq!(model.tokens_x, 256);
         assert!((model.pruning.keep_ratio - 0.5).abs() < 1e-12);

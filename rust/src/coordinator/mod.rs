@@ -1,12 +1,16 @@
-//! Serving coordinator (Layer 3): the request-path owner.
+//! Serving coordinator (Layer 3): the functional end of the request
+//! path.  For cycle-accurate multi-shard traffic simulation see the
+//! [`crate::serve`] fabric — both sides price batches through the same
+//! engine-backed cost model, so they agree on what serving costs.
 //!
 //! * [`stack`]  — the multimodal encoder stack: chains encoder-block
 //!   artifacts across pruning stages, with the DTPU gather between them.
 //! * [`server`] — the leader loop: request queue, dynamic batcher, a
-//!   worker owning the PJRT runtime, and serving statistics.
+//!   worker owning the PJRT runtime, engine-priced batch costs, and
+//!   serving statistics.
 
 pub mod server;
 pub mod stack;
 
-pub use server::{Coordinator, Request, Response, ServeStats};
+pub use server::{Coordinator, CoordinatorConfig, Request, Response, ServeStats};
 pub use stack::{EncoderStack, ForwardResult};

@@ -1,4 +1,8 @@
-//! The leader loop: request queue, dynamic batcher, runtime worker.
+//! The leader loop: request queue, dynamic batcher, runtime worker —
+//! now engine-backed: every served batch is also priced in simulated
+//! StreamDCIM cycles by the same cost model the serving fabric uses
+//! (`serve::cost`), so functional serving and the cycle-level engine
+//! share one notion of what a batch costs.
 //!
 //! Architecture (vLLM-router-like, scaled to one box):
 //!
@@ -7,14 +11,16 @@
 //!                                             | owns Runtime + EncoderStack
 //!                                             | (PJRT objects never cross
 //!                                             |  threads: created in-loop)
+//!                                             | prices each batch via the
+//!                                             | engine-backed CostModel
 //!                                             +--> per-request Response
 //! ```
 //!
 //! The PJRT runtime is constructed *inside* the leader thread (its handles
 //! are not `Send`), which is also the honest model of the hardware: one
-//! accelerator, one command queue.  Batching drains up to `batch_size`
-//! queued requests per iteration so artifact/cache warmth is amortized and
-//! queueing delay is visible in the stats.
+//! accelerator, one command queue.  For multi-accelerator serving use the
+//! sharded fabric (`serve::fabric`) — this coordinator is the
+//! functional-numerics end of the same request path.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -23,9 +29,12 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::anyhow;
-use crate::config::ModelConfig;
+use crate::config::{presets, AccelConfig, DataflowKind, ModelConfig};
+use crate::engine::Backend;
+use crate::metrics::LatencyStats;
 use crate::model::refimpl::Mat;
 use crate::runtime::Runtime;
+use crate::serve::cost::{BatchCost, CostModel};
 use crate::util::error::Result;
 
 use super::stack::EncoderStack;
@@ -51,33 +60,34 @@ pub struct Response {
     pub exec_us: u128,
     /// Batch this request was served in.
     pub batch_size: usize,
+    /// Engine-priced cycles of that whole batch on StreamDCIM silicon.
+    pub batch_sim_cycles: u64,
 }
 
+/// Serving statistics: wall-clock latencies (microseconds, via the
+/// shared [`LatencyStats`] accumulator — `u128` totals, zero-served
+/// guards, p50/p95/p99) plus the engine-priced cycle ledger.
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub served: u64,
     pub batches: u64,
-    pub total_latency_us: u128,
-    pub max_latency_us: u128,
-    pub latencies_us: Vec<u128>,
+    /// Wall-clock latency samples in microseconds.
+    pub latency_us: LatencyStats,
+    /// Total engine-priced cycles across all served batches.
+    pub sim_cycles: u64,
+    /// Rewrite-hidden ratio of the priced runs (event backend only).
+    pub rewrite_hidden: Option<f64>,
 }
 
 impl ServeStats {
     pub fn mean_latency_us(&self) -> f64 {
-        if self.served == 0 {
-            0.0
-        } else {
-            self.total_latency_us as f64 / self.served as f64
-        }
+        self.latency_us.mean()
     }
-    pub fn percentile_us(&self, p: f64) -> u128 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
+    pub fn max_latency_us(&self) -> u64 {
+        self.latency_us.max()
+    }
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.latency_us.percentile(p)
     }
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
@@ -85,6 +95,58 @@ impl ServeStats {
         } else {
             self.served as f64 / self.batches as f64
         }
+    }
+    /// Serving throughput on simulated silicon: requests per megacycle
+    /// of accumulated *busy* batch cycles.  Not comparable to the
+    /// fabric's `ServeStats::served_per_megacycle`, whose denominator is
+    /// the closed-loop makespan (idle and queueing cycles included).
+    pub fn served_per_busy_megacycle(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            0.0
+        } else {
+            self.served as f64 / (self.sim_cycles as f64 / 1e6)
+        }
+    }
+}
+
+/// How a coordinator executes and prices requests.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// `None` serves through the pure-Rust reference implementation (no
+    /// artifacts needed — used in tests); `Some` loads PJRT artifacts.
+    pub artifact_dir: Option<PathBuf>,
+    /// Accelerator the cost model prices batches on.
+    pub accel: AccelConfig,
+    /// Dataflow the cost model prices batches under.
+    pub dataflow: DataflowKind,
+    /// Simulation backend for pricing (event gives pipeline-fill
+    /// amortization and the rewrite-hidden ratio).
+    pub backend: Backend,
+    /// Compiled pruning stages the encoder stack walks.
+    pub stages: Vec<u64>,
+    pub batch_size: usize,
+    /// Weight-initialization seed of the encoder stack.
+    pub seed: u64,
+}
+
+impl CoordinatorConfig {
+    /// Reference-implementation serving (no artifacts) on the default
+    /// accelerator, tile-stream dataflow, event-engine pricing.
+    pub fn reference(stages: Vec<u64>, batch_size: usize, seed: u64) -> Self {
+        CoordinatorConfig {
+            artifact_dir: None,
+            accel: presets::streamdcim_default(),
+            dataflow: DataflowKind::TileStream,
+            backend: Backend::Event,
+            stages,
+            batch_size,
+            seed,
+        }
+    }
+
+    /// Same, serving through PJRT artifacts in `dir`.
+    pub fn with_artifacts(dir: PathBuf, stages: Vec<u64>, batch_size: usize, seed: u64) -> Self {
+        CoordinatorConfig { artifact_dir: Some(dir), ..Self::reference(stages, batch_size, seed) }
     }
 }
 
@@ -101,20 +163,19 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the leader. `artifact_dir = None` serves through the pure-Rust
-    /// reference implementation (no artifacts needed — used in tests).
-    pub fn start(
-        artifact_dir: Option<PathBuf>,
-        model: &ModelConfig,
-        stages: Vec<u64>,
-        batch_size: usize,
-        seed: u64,
-    ) -> Result<Self> {
+    /// Start the leader with `cfg` serving `model`.
+    pub fn start(cfg: CoordinatorConfig, model: &ModelConfig) -> Result<Self> {
         let (tx, rx) = channel::<Job>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let stats2 = Arc::clone(&stats);
         let model = model.clone();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+
+        // Price one batch up front (pure, cached): the leader only needs
+        // the resulting BatchCost, not the whole cost model.
+        let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
+        let cost = cm.cost(&model);
+        let CoordinatorConfig { artifact_dir, stages, batch_size, seed, .. } = cfg;
 
         let handle = std::thread::Builder::new()
             .name("leader".into())
@@ -137,7 +198,7 @@ impl Coordinator {
                     }
                 };
                 let stack = EncoderStack::new(&model, stages, seed);
-                leader_loop(rx, runtime, stack, batch_size.max(1), &stats2);
+                leader_loop(rx, runtime, stack, batch_size.max(1), cost, &stats2);
             })
             .map_err(|e| anyhow!("spawn leader: {e}"))?;
 
@@ -184,6 +245,7 @@ fn leader_loop(
     runtime: Option<Runtime>,
     stack: EncoderStack,
     batch_size: usize,
+    cost: BatchCost,
     stats: &Mutex<ServeStats>,
 ) {
     loop {
@@ -201,9 +263,12 @@ fn leader_loop(
             }
         }
         let bsize = batch.len();
+        let batch_sim_cycles = cost.batch_cycles(bsize as u64);
         {
             let mut s = stats.lock().expect("stats poisoned");
             s.batches += 1;
+            s.sim_cycles += batch_sim_cycles;
+            s.rewrite_hidden = cost.rewrite_hidden;
         }
         for (req, enqueued, reply) in batch {
             let exec_start = Instant::now();
@@ -221,13 +286,12 @@ fn leader_loop(
                 latency_us,
                 exec_us,
                 batch_size: bsize,
+                batch_sim_cycles,
             });
             {
                 let mut s = stats.lock().expect("stats poisoned");
                 s.served += 1;
-                s.total_latency_us += latency_us;
-                s.max_latency_us = s.max_latency_us.max(latency_us);
-                s.latencies_us.push(latency_us);
+                s.latency_us.record(latency_us.min(u64::MAX as u128) as u64);
             }
             let _ = reply.send(resp);
         }
@@ -237,7 +301,6 @@ fn leader_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets;
     use crate::util::prng::Rng;
 
     fn req(id: u64, rng: &mut Rng) -> Request {
@@ -248,11 +311,15 @@ mod tests {
         }
     }
 
+    fn start_ref(batch: usize, seed: u64) -> Coordinator {
+        let model = presets::functional_small();
+        Coordinator::start(CoordinatorConfig::reference(vec![128, 96, 64], batch, seed), &model)
+            .unwrap()
+    }
+
     #[test]
     fn serves_through_refimpl() {
-        let model = presets::functional_small();
-        let coord =
-            Coordinator::start(None, &model, vec![128, 96, 64], 4, 42).unwrap();
+        let coord = start_ref(4, 42);
         let mut rng = Rng::new(9);
         let waiters: Vec<_> = (0..6).map(|i| coord.submit(req(i, &mut rng))).collect();
         for (i, w) in waiters.into_iter().enumerate() {
@@ -261,18 +328,22 @@ mod tests {
             assert_eq!(resp.x.rows, 64); // pruned to the last stage
             assert_eq!(resp.stages, vec![128, 96, 64]);
             assert!(resp.batch_size >= 1);
+            assert!(resp.batch_sim_cycles > 0, "every batch carries engine cycles");
         }
         let stats = coord.shutdown();
         assert_eq!(stats.served, 6);
         assert!(stats.mean_latency_us() > 0.0);
         assert!(stats.percentile_us(0.95) >= stats.percentile_us(0.5));
+        assert!(stats.latency_us.p99() >= stats.latency_us.p50());
+        assert!(stats.sim_cycles > 0);
+        assert!(stats.served_per_busy_megacycle() > 0.0);
+        let hidden = stats.rewrite_hidden.expect("event pricing observes overlap");
+        assert!((0.0..=1.0).contains(&hidden));
     }
 
     #[test]
-    fn batching_groups_queued_requests() {
-        let model = presets::functional_small();
-        let coord =
-            Coordinator::start(None, &model, vec![128, 96, 64], 8, 42).unwrap();
+    fn batching_groups_queued_requests_and_amortizes_cycles() {
+        let coord = start_ref(8, 42);
         let mut rng = Rng::new(10);
         // submit a burst; at least some should share a batch
         let waiters: Vec<_> = (0..12).map(|i| coord.submit(req(i, &mut rng))).collect();
@@ -282,19 +353,46 @@ mod tests {
         assert_eq!(stats.served, 12);
         assert!(stats.batches <= 12);
         assert!(sizes.iter().all(|&s| s >= 1));
+        // engine pricing: total cycles cannot exceed 12 unbatched runs
+        let model = presets::functional_small();
+        let solo = CostModel::new(
+            presets::streamdcim_default(),
+            DataflowKind::TileStream,
+            Backend::Event,
+        )
+        .cost(&model)
+        .batch_cycles(1);
+        assert!(stats.sim_cycles <= 12 * solo);
+        assert!(stats.sim_cycles > 0);
     }
 
     #[test]
     fn deterministic_responses_across_coordinators() {
-        let model = presets::functional_small();
         let run = || {
-            let coord =
-                Coordinator::start(None, &model, vec![128, 96, 64], 1, 42).unwrap();
+            let coord = start_ref(1, 42);
             let mut rng = Rng::new(11);
             let resp = coord.submit(req(0, &mut rng)).recv().unwrap().unwrap();
             coord.shutdown();
-            resp.x.data
+            (resp.x.data, resp.batch_sim_cycles)
         };
-        assert_eq!(run(), run());
+        let (a_data, a_cycles) = run();
+        let (b_data, b_cycles) = run();
+        assert_eq!(a_data, b_data);
+        assert_eq!(a_cycles, b_cycles, "engine pricing is deterministic");
+    }
+
+    #[test]
+    fn analytic_pricing_has_no_hidden_ratio() {
+        let model = presets::functional_small();
+        let cfg = CoordinatorConfig {
+            backend: Backend::Analytic,
+            ..CoordinatorConfig::reference(vec![128, 96, 64], 2, 7)
+        };
+        let coord = Coordinator::start(cfg, &model).unwrap();
+        let mut rng = Rng::new(12);
+        let resp = coord.submit(req(0, &mut rng)).recv().unwrap().unwrap();
+        assert!(resp.batch_sim_cycles > 0);
+        let stats = coord.shutdown();
+        assert!(stats.rewrite_hidden.is_none());
     }
 }

@@ -17,7 +17,49 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::prng::Rng;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Run `jobs` on `threads` workers and return the results **in job
+/// order**, regardless of execution order.  `seed` shuffles only the
+/// submission order (coarse load balancing so expensive jobs spread
+/// across workers); because every slot is written back by job index, the
+/// output is bit-identical for any `threads`/`seed` combination — the
+/// shared determinism contract of the scenario sweep and the serving
+/// sweep.  `threads <= 1` runs inline without a pool.
+pub fn run_ordered<T: Send + 'static>(
+    jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    threads: usize,
+    seed: u64,
+) -> Vec<T> {
+    let n = jobs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut order);
+
+    let mut jobs: Vec<Option<Box<dyn FnOnce() -> T + Send + 'static>>> =
+        jobs.into_iter().map(Some).collect();
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    if threads <= 1 {
+        for &i in &order {
+            let job = jobs[i].take().expect("job taken once");
+            slots[i] = Some(job());
+        }
+    } else {
+        let pool = ThreadPool::new(threads);
+        let promises: Vec<(usize, Promise<T>)> = order
+            .iter()
+            .map(|&i| {
+                let job = jobs[i].take().expect("job taken once");
+                (i, pool.submit(job))
+            })
+            .collect();
+        for (i, p) in promises {
+            slots[i] = Some(p.wait());
+        }
+    }
+    slots.into_iter().map(|s| s.expect("all jobs ran")).collect()
+}
 
 /// Fixed-size thread pool. Dropping the pool joins all workers.
 pub struct ThreadPool {
@@ -204,6 +246,18 @@ mod tests {
         assert_eq!(pool.submit(|| 7u32).wait(), 7);
         assert_eq!(pool.threads(), 1);
     } // drop must join without hanging
+
+    #[test]
+    fn run_ordered_preserves_job_order_across_threads_and_seeds() {
+        let make_jobs = || -> Vec<Box<dyn FnOnce() -> usize + Send>> {
+            (0..24).map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>).collect()
+        };
+        let want: Vec<usize> = (0..24).map(|i| i * i).collect();
+        assert_eq!(run_ordered(make_jobs(), 1, 42), want);
+        assert_eq!(run_ordered(make_jobs(), 4, 42), want);
+        assert_eq!(run_ordered(make_jobs(), 4, 0xDEADBEEF), want);
+        assert_eq!(run_ordered(Vec::<Box<dyn FnOnce() -> u8 + Send>>::new(), 3, 1), vec![]);
+    }
 
     #[test]
     fn drop_after_panic_does_not_deadlock() {

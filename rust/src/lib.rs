@@ -9,8 +9,9 @@
 //!   `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3 (this crate)** — the cycle-level StreamDCIM simulator (CIM
 //!   macros, TBSN, DTPU, SFU, the three dataflows), the PJRT runtime that
-//!   executes the AOT artifacts for functional numerics, and the serving
-//!   coordinator.
+//!   executes the AOT artifacts for functional numerics, the serving
+//!   coordinator, and the sharded serving fabric ([`serve`]) that drives
+//!   closed-loop traffic through engine-priced accelerator shards.
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only; the `streamdcim` binary is self-contained afterwards.
@@ -42,6 +43,7 @@ pub mod propcheck;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod trace;

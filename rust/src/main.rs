@@ -1,8 +1,9 @@
 //! `streamdcim` — leader entrypoint.
 //!
 //! See `streamdcim help` (cli::USAGE) for commands.  The binary is fully
-//! self-contained after `make artifacts`: simulation needs no artifacts at
-//! all; `serve` loads the AOT HLO text through the PJRT CPU client.
+//! self-contained: simulation and the serving fabric need no artifacts
+//! at all (the PJRT functional path is exercised by
+//! `examples/serve_multimodal.rs` after `make artifacts`).
 
 // Same lint posture as lib.rs (authored offline without clippy).
 #![allow(unknown_lints)]
@@ -13,16 +14,13 @@ use std::process::ExitCode;
 
 use streamdcim::cli::{self, Args};
 use streamdcim::config::{presets, toml, AccelConfig, DataflowKind, ModelConfig};
-use streamdcim::coordinator::{Coordinator, Request};
 use streamdcim::engine::{self, Backend};
-use streamdcim::model::refimpl::Mat;
 use streamdcim::report;
 use streamdcim::sweep::{self, Scenario};
 use streamdcim::trace::{render_gantt, render_gantt_lanes};
 use streamdcim::util::json::Json;
 use streamdcim::util::error::Result;
-use streamdcim::util::prng::Rng;
-use streamdcim::{anyhow, bail, dataflow, perfgate, runtime};
+use streamdcim::{anyhow, bail, dataflow, perfgate, runtime, serve};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -357,7 +355,8 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig7" => report::fig7(&both()),
         "headline" => report::headline(&both()),
         "e5" => e5_report(&accel),
-        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5)"),
+        "serving" => report::serving(&accel),
+        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5|serving)"),
     };
     println!("{}\n{}", fig.title, fig.body);
     Ok(())
@@ -391,59 +390,103 @@ fn e5_report(accel: &AccelConfig) -> report::FigureText {
     report::FigureText { title: "E5 — TranCIM rewrite-fraction microbenchmark".into(), body }
 }
 
+/// `streamdcim serve`: closed-loop traffic simulation through the
+/// sharded serving fabric — deterministic arrivals, bounded admission
+/// queues, continuous batching, policy-routed engine-priced shards.
+/// `--matrix` runs the shards x policy x dataflow serving sweep instead.
+/// The `--out` artifact is deterministic (no wall-clock, no environment
+/// fields), so CI can diff re-runs bit-for-bit.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = presets::functional_small();
-    let artifacts = if args.has("ref") {
-        None
-    } else {
-        Some(PathBuf::from(args.flag_or("artifacts", "artifacts")))
-    };
-    let n_req = args.flag_u64("requests", 32);
-    let batch = args.flag_u64("batch", 4) as usize;
-    let seed = args.flag_u64("seed", 42);
-    let stages = vec![128, 96, 64];
-
-    println!(
-        "starting coordinator: {} requests, batch {batch}, {}",
-        n_req,
-        if artifacts.is_some() { "PJRT artifacts" } else { "pure-rust reference" }
-    );
-    let started = std::time::Instant::now();
-    let coord = Coordinator::start(artifacts, &model, stages, batch, seed)?;
-    println!("leader ready in {:.2} s", started.elapsed().as_secs_f64());
-
-    let mut rng = Rng::new(seed);
-    let t0 = std::time::Instant::now();
-    let waiters: Vec<_> = (0..n_req)
-        .map(|id| {
-            coord.submit(Request {
-                id,
-                ix: Mat::random_i16_grid(&mut rng, 128, 128, 0.5),
-                iy: Mat::random_i16_grid(&mut rng, 128, 128, 0.5),
-            })
-        })
-        .collect();
-    for w in waiters {
-        let resp = w.recv().expect("leader gone")?;
-        if args.has("verbose") {
-            println!(
-                "  req {:>3}  stages {:?}  exec {:>8} us  batch {}",
-                resp.id, resp.stages, resp.exec_us, resp.batch_size
-            );
-        }
+    let mut accel = presets::streamdcim_default();
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        toml::apply_accel_overrides(&mut accel, &doc);
     }
-    let wall = t0.elapsed();
-    let stats = coord.shutdown();
-    println!("served {} requests in {:.2} s", stats.served, wall.as_secs_f64());
-    println!("throughput : {:.2} req/s", stats.served as f64 / wall.as_secs_f64());
-    println!(
-        "latency    : mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
-        stats.mean_latency_us() / 1e3,
-        stats.percentile_us(0.5) as f64 / 1e3,
-        stats.percentile_us(0.95) as f64 / 1e3,
-        stats.max_latency_us as f64 / 1e3
-    );
-    println!("mean batch : {:.2}", stats.mean_batch());
+    // CLI flags override the [serving] section
+    accel.serving.shards = args.flag_u64("shards", accel.serving.shards).max(1);
+    accel.serving.queue_depth = args.flag_u64("queue-depth", accel.serving.queue_depth).max(1);
+    accel.serving.batch_size = args.flag_u64("batch", accel.serving.batch_size).max(1);
+    accel.serving.arrival_seed = args.flag_u64("seed", accel.serving.arrival_seed);
+    if let Some(p) = args.flag("policy") {
+        accel.serving.policy = streamdcim::config::RoutePolicy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy (round-robin|least-loaded|modality-affinity)"))?;
+    }
+    let backend = Backend::parse(args.flag_or("engine", "event"))
+        .ok_or_else(|| anyhow!("unknown engine (analytic|event)"))?;
+    let requests = args.flag_u64("requests", 256);
+
+    if args.has("matrix") {
+        // the matrix fixes shards/policy/dataflow/arrival/gap/mix itself;
+        // reject flags it would silently ignore rather than mislead
+        for fixed in ["shards", "policy", "dataflow", "arrival", "gap", "models"] {
+            if args.flag(fixed).is_some() {
+                bail!(
+                    "--matrix enumerates shards x policy x dataflow on the standard \
+                     mix with auto gaps; --{fixed} does not apply"
+                );
+            }
+        }
+        let default_threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        let threads = (args.flag_u64("threads", default_threads as u64) as usize).max(1);
+        let scenarios = serve::serve_matrix(&accel, backend, requests);
+        eprintln!(
+            "serve matrix: {} scenarios (shards x policy x dataflow) on {} thread(s), {} backend",
+            scenarios.len(),
+            threads,
+            backend.name()
+        );
+        let rep = serve::run_serve_sweep(&scenarios, threads, 42);
+        let json = rep.to_json();
+        if let Some(path) = args.flag("out") {
+            std::fs::write(path, json.to_string_pretty())?;
+            eprintln!("serve-sweep artifact written to {path}");
+        }
+        if args.has("json") {
+            println!("{}", json.to_string_pretty());
+        } else {
+            println!("{}", rep.render_text());
+        }
+        return Ok(());
+    }
+
+    let dataflow = DataflowKind::parse(args.flag_or("dataflow", "tile"))
+        .ok_or_else(|| anyhow!("unknown dataflow"))?;
+    let arrival = serve::ArrivalKind::parse(args.flag_or("arrival", "poisson"))
+        .ok_or_else(|| anyhow!("unknown arrival process (uniform|poisson|burst)"))?;
+    let models: Vec<ModelConfig> = match args.flag("models") {
+        Some(list) => {
+            let mut models: Vec<ModelConfig> = Vec::new();
+            for name in list.split(',') {
+                let m = presets::model_by_name(name.trim())
+                    .ok_or_else(|| anyhow!("unknown model '{}' in --models", name.trim()))?;
+                if !models.iter().any(|existing| existing.name == m.name) {
+                    models.push(m);
+                }
+            }
+            models
+        }
+        None => serve::sweep::mix_models(),
+    };
+    let mean_gap = match args.flag("gap") {
+        Some(g) => g.parse::<u64>().map_err(|_| anyhow!("--gap must be an integer"))?,
+        // near-saturation gap, always priced on tile-stream so every
+        // dataflow serves the same arrival trace
+        None => serve::auto_gap(&accel, backend, &models),
+    };
+
+    let cfg = serve::ServeConfig { accel, models, dataflow, backend, arrival, requests, mean_gap };
+    let rep = serve::simulate(&cfg);
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, rep.to_json().to_string_pretty())?;
+        eprintln!("serve artifact written to {path}");
+    }
+    if args.has("json") {
+        println!("{}", rep.to_json().to_string_pretty());
+    } else {
+        print!("{}", rep.render_text());
+    }
     Ok(())
 }
 

@@ -5,6 +5,94 @@ use crate::energy::EnergyBreakdown;
 use crate::sim::{Accelerator, Activity};
 use crate::util::json::Json;
 
+/// Latency accumulator shared by the serving layers (coordinator
+/// wall-clock microseconds, fabric simulated cycles).  Sums are `u128`
+/// so no realistic sample stream can overflow, means are `f64`, and
+/// every accessor guards the zero-sample case.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyStats {
+    total: u128,
+    max: u64,
+    samples: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, v: u64) {
+        self.total += v as u128;
+        self.max = self.max.max(v);
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.total as f64 / self.samples.len() as f64
+        }
+    }
+
+    fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Nearest rank of `p` in an already-sorted sample vector.
+    fn rank(sorted: &[u64], p: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Nearest-rank percentile; `p` is clamped to [0, 1] and the empty
+    /// histogram reports 0.
+    pub fn percentile(&self, p: f64) -> u64 {
+        Self::rank(&self.sorted(), p)
+    }
+
+    /// (p50, p95, p99) from a single sort — use this when reporting all
+    /// three instead of three `percentile` calls.
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        let v = self.sorted();
+        (Self::rank(&v, 0.50), Self::rank(&v, 0.95), Self::rank(&v, 0.99))
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// Summary object for artifacts; `unit` names the sample unit.
+    pub fn to_json(&self, unit: &str) -> Json {
+        let (p50, p95, p99) = self.percentiles();
+        Json::obj(vec![
+            ("unit", Json::str(unit)),
+            ("count", Json::num(self.count() as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(p50 as f64)),
+            ("p95", Json::num(p95 as f64)),
+            ("p99", Json::num(p99 as f64)),
+            ("max", Json::num(self.max as f64)),
+        ])
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct LayerStats {
     pub index: usize,
@@ -111,6 +199,33 @@ impl RunReport {
 mod tests {
     use super::*;
     use crate::config::presets;
+
+    #[test]
+    fn latency_stats_guards_and_percentiles() {
+        let empty = LatencyStats::default();
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.percentile(0.99), 0);
+        assert_eq!(empty.max(), 0);
+
+        let mut s = LatencyStats::default();
+        for v in 1..=100u64 {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+        assert_eq!(s.p50(), 51); // round(49.5) rounds half away from zero
+        assert_eq!(s.p95(), 95);
+        assert_eq!(s.p99(), 99);
+        assert_eq!(s.max(), 100);
+        assert!(s.p50() <= s.p95() && s.p95() <= s.p99());
+        assert_eq!(s.percentiles(), (s.p50(), s.p95(), s.p99()));
+        // out-of-range p clamps instead of panicking
+        assert_eq!(s.percentile(2.0), 100);
+        assert_eq!(s.percentile(-1.0), 1);
+        let j = s.to_json("cycles").to_string_pretty();
+        assert!(j.contains("\"p99\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
 
     #[test]
     fn report_from_accel() {

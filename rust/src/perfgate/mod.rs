@@ -2,7 +2,8 @@
 //!
 //! Simulated cycle counts are *deterministic* (pure functions of the
 //! scenario), so the gate compares exact per-scenario cycles from the
-//! smoke matrix — analytic and event backends both — against a committed
+//! smoke matrix — analytic and event backends both, plus the serving
+//! fabric's makespan on a fixed arrival trace — against a committed
 //! baseline (`BENCH_baseline.json` at the repo root) and fails when the
 //! geomean cycle ratio regresses beyond the tolerance.  The ±5% default
 //! absorbs deliberate model recalibrations; anything larger must ship a
@@ -12,15 +13,18 @@
 //! that cannot run the simulator) passes with a warning; CI regenerates
 //! and uploads the real baseline as an artifact so it can be committed.
 
-use crate::config::presets;
+use crate::config::{presets, DataflowKind};
 use crate::engine::Backend;
+use crate::serve;
 use crate::sweep;
 use crate::util::geomean;
 use crate::util::json::Json;
 
 pub const DEFAULT_TOLERANCE: f64 = 0.05;
 
-/// One gated measurement: `<backend>::<model/dataflow/ablation>` cycles.
+/// One gated measurement: `<backend>::<model/dataflow/ablation>` cycles
+/// (per-run scenarios) or `serve::<backend>::<dataflow>/...` makespans
+/// (serving-throughput scenarios).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GateEntry {
     pub id: String,
@@ -28,7 +32,11 @@ pub struct GateEntry {
 }
 
 /// Deterministic cycle counts for the smoke matrix (tiny-smoke preset,
-/// all dataflows and ablations) under both simulation backends.
+/// all dataflows and ablations) under both simulation backends, plus a
+/// serving-throughput scenario per backend x dataflow: the fabric's
+/// makespan over a fixed small arrival trace, so regressions anywhere
+/// on the request path (admission, batching, routing, pricing) trip the
+/// gate too.
 pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
     let accel = presets::streamdcim_default();
     let models = vec![presets::tiny_smoke()];
@@ -40,6 +48,25 @@ pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
             out.push(GateEntry {
                 id: format!("{}::{}", backend.slug(), row.result.id),
                 cycles: row.result.report.cycles,
+            });
+        }
+    }
+    for backend in [Backend::Analytic, Backend::Event] {
+        let mean_gap = serve::auto_gap(&accel, backend, &models);
+        for dataflow in DataflowKind::ALL {
+            let cfg = serve::ServeConfig {
+                accel: accel.clone(),
+                models: models.clone(),
+                dataflow,
+                backend,
+                arrival: serve::ArrivalKind::Poisson,
+                requests: 64,
+                mean_gap,
+            };
+            let rep = serve::simulate(&cfg);
+            out.push(GateEntry {
+                id: format!("serve::{}::{}", backend.slug(), cfg.id()),
+                cycles: rep.stats.makespan,
             });
         }
     }
@@ -306,12 +333,17 @@ mod tests {
         let a = smoke_entries(1);
         let b = smoke_entries(2);
         assert_eq!(a, b);
-        assert!(a.len() >= 16, "both backends x 8 scenarios, got {}", a.len());
+        assert!(a.len() >= 22, "run scenarios + 6 serving scenarios, got {}", a.len());
         // every entry is backend-qualified and unique
         let ids: std::collections::BTreeSet<&str> =
             a.iter().map(|e| e.id.as_str()).collect();
         assert_eq!(ids.len(), a.len());
         assert!(a.iter().all(|e| e.id.contains("::")));
+        // the serving-throughput scenarios are present for both backends
+        let serve_ids: Vec<&str> =
+            a.iter().map(|e| e.id.as_str()).filter(|id| id.starts_with("serve::")).collect();
+        assert_eq!(serve_ids.len(), 6, "2 backends x 3 dataflows: {serve_ids:?}");
+        assert!(serve_ids.iter().any(|id| id.contains("event") && id.contains("tile")));
         // diff artifact JSON parses
         let out = compare(&a, &b, DEFAULT_TOLERANCE);
         assert!(out.pass);

@@ -4,7 +4,9 @@
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::dataflow;
 use crate::energy::area::AreaModel;
+use crate::engine::Backend;
 use crate::metrics::RunReport;
+use crate::serve;
 use crate::util::geomean;
 
 /// All three dataflows on one model.
@@ -168,6 +170,56 @@ pub fn headline(all: &[(String, Vec<RunReport>)]) -> FigureText {
     FigureText { title: "Headline (geomean over ViLBERT-base/-large)".into(), body }
 }
 
+/// Serving-level comparison: the same arrival trace through the sharded
+/// fabric under each dataflow (event-engine pricing).  The serving
+/// analogue of Fig. 6 — throughput of a *loaded multi-shard system*
+/// rather than latency of one inference.
+pub fn serving(accel: &AccelConfig) -> FigureText {
+    let models = serve::sweep::mix_models();
+    let backend = Backend::Event;
+    let mean_gap = serve::auto_gap(accel, backend, &models);
+    let requests = 96;
+    let mut body = String::new();
+    body.push_str(&format!(
+        "{} shard(s), {} policy, poisson arrivals (mean gap {} cycles, {} requests)\n",
+        accel.serving.shards.max(1),
+        accel.serving.policy.name(),
+        mean_gap,
+        requests
+    ));
+    let mut spm = Vec::new();
+    for dataflow in DataflowKind::ALL {
+        let cfg = serve::ServeConfig {
+            accel: accel.clone(),
+            models: models.clone(),
+            dataflow,
+            backend,
+            arrival: serve::ArrivalKind::Poisson,
+            requests,
+            mean_gap,
+        };
+        let rep = serve::simulate(&cfg);
+        let s = &rep.stats;
+        body.push_str(&format!(
+            "  {:<13} {:>7.2} served/Mcycle  {:>4} served  {:>4} rejected  p99 {:>9} cy\n",
+            dataflow.name(),
+            s.served_per_megacycle(),
+            s.served,
+            s.rejected,
+            s.latency.p99(),
+        ));
+        spm.push(s.served_per_megacycle());
+    }
+    if spm.len() == 3 && spm[0] > 0.0 && spm[1] > 0.0 {
+        body.push_str(&format!(
+            "  Tile-stream serving throughput: {:.2}x vs Non-stream, {:.2}x vs Layer-stream\n",
+            spm[2] / spm[0],
+            spm[2] / spm[1]
+        ));
+    }
+    FigureText { title: "Serving — same traffic through the sharded fabric".into(), body }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +238,13 @@ mod tests {
         let (e_non, e_layer) = energy_savings(&runs);
         assert!(e_non > 1.0, "energy vs non ({e_non})");
         assert!(e_layer > 1.0, "energy vs layer ({e_layer})");
+    }
+
+    #[test]
+    fn serving_figure_shows_tile_advantage() {
+        let fig = serving(&presets::streamdcim_default());
+        assert!(fig.body.contains("Tile-stream"));
+        assert!(fig.body.contains("served/Mcycle"));
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Deterministic request-arrival generation.
+//!
+//! A trace is a pure function of `(kind, requests, mean_gap, n_models,
+//! seed)` — no wall-clock, no ambient RNG — so two fabric runs over the
+//! same parameters see the *same* request stream even when they serve it
+//! with different dataflows, shard counts, or routing policies.  That is
+//! what makes serving-level comparisons (tile vs non on one trace)
+//! meaningful, and what the resume/perfgate determinism rules require.
+
+use crate::util::prng::Rng;
+
+/// Which modality class a request belongs to; the fabric keeps one
+/// admission queue per modality and the affinity router pins modalities
+/// to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    Vision,
+    Language,
+    AudioVisual,
+}
+
+impl Modality {
+    pub const ALL: [Modality; 3] = [Modality::Vision, Modality::Language, Modality::AudioVisual];
+
+    pub fn index(&self) -> usize {
+        match self {
+            Modality::Vision => 0,
+            Modality::Language => 1,
+            Modality::AudioVisual => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Modality::Vision => "vision",
+            Modality::Language => "language",
+            Modality::AudioVisual => "audio-visual",
+        }
+    }
+}
+
+/// Shape of the inter-arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrivalKind {
+    /// Fixed `mean_gap` cycles between requests.
+    Uniform,
+    /// Exponential inter-arrival times with mean `mean_gap` (a Poisson
+    /// process), drawn from the seeded PRNG.
+    Poisson,
+    /// Bursts of [`BURST_SIZE`] back-to-back requests, bursts spaced so
+    /// the long-run rate matches `mean_gap`.
+    Burst,
+}
+
+/// Requests per burst in [`ArrivalKind::Burst`] traces.
+pub const BURST_SIZE: u64 = 8;
+
+impl ArrivalKind {
+    pub const ALL: [ArrivalKind; 3] =
+        [ArrivalKind::Uniform, ArrivalKind::Poisson, ArrivalKind::Burst];
+
+    pub fn slug(&self) -> &'static str {
+        match self {
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Burst => "burst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "fixed" => Some(ArrivalKind::Uniform),
+            "poisson" | "exp" | "exponential" => Some(ArrivalKind::Poisson),
+            "burst" | "bursty" => Some(ArrivalKind::Burst),
+            _ => None,
+        }
+    }
+}
+
+/// One request in the arrival trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrivalEvent {
+    pub id: u64,
+    /// Arrival cycle (non-decreasing along the trace).
+    pub cycle: u64,
+    pub modality: Modality,
+    /// Index into the fabric's workload mix.
+    pub model: usize,
+}
+
+/// Generate a trace of `requests` arrivals over `n_models` workloads.
+/// `mean_gap` is the mean inter-arrival time in cycles (0 collapses the
+/// whole trace onto cycle 0).
+pub fn generate(
+    kind: ArrivalKind,
+    requests: u64,
+    mean_gap: u64,
+    n_models: usize,
+    seed: u64,
+) -> Vec<ArrivalEvent> {
+    assert!(n_models > 0, "arrival trace needs a non-empty workload mix");
+    let mut rng = Rng::new(seed);
+    let mut trace = Vec::with_capacity(requests as usize);
+    let mut cycle: u64 = 0;
+    for id in 0..requests {
+        if id > 0 {
+            cycle += match kind {
+                ArrivalKind::Uniform => mean_gap,
+                ArrivalKind::Poisson => {
+                    // inverse-CDF exponential; f64() < 1.0 keeps ln finite
+                    let u = rng.f64();
+                    (-(1.0 - u).ln() * mean_gap as f64).round() as u64
+                }
+                ArrivalKind::Burst => {
+                    if id % BURST_SIZE == 0 {
+                        mean_gap * BURST_SIZE
+                    } else {
+                        0
+                    }
+                }
+            };
+        }
+        let modality = Modality::ALL[rng.range_usize(0, Modality::ALL.len() - 1)];
+        let model = rng.range_usize(0, n_models - 1);
+        trace.push(ArrivalEvent { id, cycle, modality, model });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_kind_parse_roundtrip() {
+        for k in ArrivalKind::ALL {
+            assert_eq!(ArrivalKind::parse(k.slug()), Some(k));
+        }
+        assert_eq!(ArrivalKind::parse("exp"), Some(ArrivalKind::Poisson));
+        assert_eq!(ArrivalKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_monotone() {
+        for kind in ArrivalKind::ALL {
+            let a = generate(kind, 100, 500, 3, 42);
+            let b = generate(kind, 100, 500, 3, 42);
+            assert_eq!(a, b, "{kind:?} trace must be a pure function of its inputs");
+            assert_eq!(a.len(), 100);
+            assert!(a.windows(2).all(|w| w[0].cycle <= w[1].cycle), "{kind:?} not monotone");
+            assert!(a.iter().all(|e| e.model < 3));
+            // ids are the trace order
+            assert!(a.iter().enumerate().all(|(i, e)| e.id == i as u64));
+        }
+    }
+
+    #[test]
+    fn seeds_change_the_trace() {
+        let a = generate(ArrivalKind::Poisson, 64, 500, 3, 1);
+        let b = generate(ArrivalKind::Poisson, 64, 500, 3, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_gap_is_exact_and_burst_clusters() {
+        let u = generate(ArrivalKind::Uniform, 10, 100, 1, 7);
+        assert!(u.windows(2).all(|w| w[1].cycle - w[0].cycle == 100));
+
+        let b = generate(ArrivalKind::Burst, 24, 100, 1, 7);
+        // within a burst, arrivals share a cycle
+        assert_eq!(b[0].cycle, b[7].cycle);
+        assert!(b[8].cycle > b[7].cycle);
+        assert_eq!(b[8].cycle, b[15].cycle);
+    }
+
+    #[test]
+    fn zero_gap_collapses_to_cycle_zero() {
+        let t = generate(ArrivalKind::Uniform, 16, 0, 2, 3);
+        assert!(t.iter().all(|e| e.cycle == 0));
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_plausible() {
+        let t = generate(ArrivalKind::Poisson, 2000, 100, 1, 11);
+        let span = t.last().unwrap().cycle - t[0].cycle;
+        let mean = span as f64 / (t.len() - 1) as f64;
+        assert!((mean - 100.0).abs() < 10.0, "observed mean gap {mean}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Engine-backed batch pricing: every batch the fabric (or the
+//! coordinator) serves is costed by the *same* simulation backends that
+//! power `run`/`sweep`, so serving-level numbers inherit the cycle-level
+//! model instead of inventing an ad-hoc one.
+//!
+//! A [`CostModel`] is pinned to one `(AccelConfig, DataflowKind,
+//! Backend)` triple — one accelerator shard's execution mode — and
+//! memoizes per-workload [`BatchCost`]s: simulation runs are pure
+//! functions of their inputs, so each (model, dataflow, backend) point
+//! is simulated exactly once per fabric run.
+//!
+//! Batch semantics: the first request of a batch pays the full run
+//! (`first` cycles); each additional same-model request streams through
+//! the warm pipeline and skips the pipeline-fill latency the event
+//! engine measured (`per_extra = first - fill`).  The analytic backend
+//! has no pipeline notion, so batching amortizes nothing there
+//! (`per_extra == first`) — an honest difference between the backends.
+
+use std::collections::BTreeMap;
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::dataflow;
+use crate::engine::{self, Backend};
+
+/// Cycle/energy price of serving one batch of a given workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchCost {
+    /// Cycles of a single-request batch (the full simulated run).
+    pub first: u64,
+    /// Marginal cycles of each additional request in the same batch.
+    pub per_extra: u64,
+    /// Energy of one request, mJ (batching does not change the work).
+    pub energy_mj: f64,
+    /// Rewrite-hidden ratio of the underlying run; `None` for the
+    /// analytic backend, which cannot observe overlap.
+    pub rewrite_hidden: Option<f64>,
+}
+
+impl BatchCost {
+    /// Total cycles a shard is busy serving a batch of `n` requests.
+    pub fn batch_cycles(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.first + (n - 1) * self.per_extra
+    }
+}
+
+/// Memoized `(model -> BatchCost)` pricing for one shard configuration.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    accel: AccelConfig,
+    dataflow: DataflowKind,
+    backend: Backend,
+    cache: BTreeMap<String, BatchCost>,
+}
+
+impl CostModel {
+    pub fn new(accel: AccelConfig, dataflow: DataflowKind, backend: Backend) -> Self {
+        CostModel { accel, dataflow, backend, cache: BTreeMap::new() }
+    }
+
+    pub fn dataflow(&self) -> DataflowKind {
+        self.dataflow
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Price `model` on this shard configuration (memoized).
+    pub fn cost(&mut self, model: &ModelConfig) -> BatchCost {
+        if let Some(c) = self.cache.get(&model.name) {
+            return *c;
+        }
+        let cost = match self.backend {
+            Backend::Event => {
+                let run = engine::run_full(self.dataflow, &self.accel, model);
+                let first = run.report.cycles;
+                let fill = run.trace.fill_latency.min(first);
+                BatchCost {
+                    first,
+                    per_extra: first - fill,
+                    energy_mj: run.report.energy.total_mj(),
+                    rewrite_hidden: Some(run.trace.rewrite_hidden_ratio()),
+                }
+            }
+            Backend::Analytic => {
+                let report = dataflow::run(self.dataflow, &self.accel, model);
+                BatchCost {
+                    first: report.cycles,
+                    per_extra: report.cycles,
+                    energy_mj: report.energy.total_mj(),
+                    rewrite_hidden: None,
+                }
+            }
+        };
+        self.cache.insert(model.name.clone(), cost);
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn event_costs_amortize_fill_and_match_engine() {
+        let mut cm = CostModel::new(
+            presets::streamdcim_default(),
+            DataflowKind::TileStream,
+            Backend::Event,
+        );
+        let model = presets::tiny_smoke();
+        let c = cm.cost(&model);
+        let direct = engine::run(DataflowKind::TileStream, &presets::streamdcim_default(), &model);
+        assert_eq!(c.first, direct.cycles);
+        assert!(c.per_extra <= c.first, "warm pipeline can only be cheaper");
+        assert!(c.per_extra > 0);
+        assert!(c.rewrite_hidden.is_some());
+        assert_eq!(c.batch_cycles(1), c.first);
+        assert_eq!(c.batch_cycles(4), c.first + 3 * c.per_extra);
+        assert_eq!(c.batch_cycles(0), 0);
+        // memoized: second lookup returns the identical cost
+        assert_eq!(cm.cost(&model), c);
+    }
+
+    #[test]
+    fn analytic_costs_have_no_amortization_or_trace() {
+        let mut cm = CostModel::new(
+            presets::streamdcim_default(),
+            DataflowKind::NonStream,
+            Backend::Analytic,
+        );
+        let c = cm.cost(&presets::tiny_smoke());
+        assert_eq!(c.per_extra, c.first);
+        assert!(c.rewrite_hidden.is_none());
+        assert!(c.energy_mj > 0.0);
+    }
+
+    #[test]
+    fn tile_batches_cost_less_than_non_batches() {
+        let accel = presets::streamdcim_default();
+        let model = presets::functional_small();
+        let cost_of = |df| CostModel::new(accel.clone(), df, Backend::Event).cost(&model);
+        let tile = cost_of(DataflowKind::TileStream);
+        let non = cost_of(DataflowKind::NonStream);
+        assert!(tile.batch_cycles(8) < non.batch_cycles(8));
+    }
+}

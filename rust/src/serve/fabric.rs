@@ -1,0 +1,393 @@
+//! The closed-loop serving fabric: a deterministic discrete-event
+//! simulation of the whole request path.
+//!
+//! ```text
+//!   arrival trace ──admit──> [vision queue]───┐
+//!   (seeded, no    ──admit──> [language q. ]──┼─> continuous batcher
+//!    wall-clock)   ──admit──> [audio-vis q.]──┘        │ same-model
+//!        │ full queue => reject (backpressure)         │ batches <= B
+//!        v                                             v
+//!    rejected++                                  shard router
+//!                                      (round-robin | least-loaded |
+//!                                       modality-affinity)
+//!                                                      │
+//!                              ┌───────────┬───────────┤
+//!                              v           v           v
+//!                          shard 0     shard 1  ...  shard N-1
+//!                        (each an engine-priced accelerator
+//!                         instance; batch cost = fill + B*steady)
+//! ```
+//!
+//! The event loop is keyed by `(cycle, event kind, sequence)` — a total
+//! order — and every component (arrival generator, batcher, router, cost
+//! model) is deterministic, so a fabric run is a pure function of its
+//! [`ServeConfig`] and the emitted artifact is bit-identical across
+//! processes, thread counts, and repetitions.
+//!
+//! Batching is work-conserving (vLLM-style continuous batching): a batch
+//! is formed the moment a shard is free and any queue is non-empty, so
+//! multi-request batches emerge exactly when arrivals outpace service.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::{AccelConfig, DataflowKind, ModelConfig, RoutePolicy};
+use crate::engine::Backend;
+use crate::util::json::Json;
+
+use super::arrival::{self, ArrivalEvent, ArrivalKind, Modality};
+use super::cost::CostModel;
+use super::router::{Router, ShardLoad};
+use super::stats::{ServeStats, ShardStats};
+
+/// Everything a fabric run depends on.  Serving knobs (shards, queue
+/// depth, batch size, arrival seed, policy) live in `accel.serving`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub accel: AccelConfig,
+    /// Workload mix the arrival trace draws from (non-empty).
+    pub models: Vec<ModelConfig>,
+    pub dataflow: DataflowKind,
+    pub backend: Backend,
+    pub arrival: ArrivalKind,
+    pub requests: u64,
+    /// Mean inter-arrival gap in cycles.
+    pub mean_gap: u64,
+}
+
+/// Stable serving-scenario identity shared by configs, reports, sweep
+/// rows, and perfgate entries: `shardsN/policy/dataflow/arrival`.
+pub fn scenario_id(
+    shards: u64,
+    policy: RoutePolicy,
+    dataflow: DataflowKind,
+    arrival: ArrivalKind,
+) -> String {
+    format!("shards{shards}/{}/{}/{}", policy.slug(), dataflow.slug(), arrival.slug())
+}
+
+impl ServeConfig {
+    /// Stable identity: `shardsN/policy/dataflow/arrival`.
+    pub fn id(&self) -> String {
+        scenario_id(
+            self.accel.serving.shards,
+            self.accel.serving.policy,
+            self.dataflow,
+            self.arrival,
+        )
+    }
+}
+
+/// A near-saturation mean inter-arrival gap for `models` on `accel`:
+/// the mean single-request **tile-stream** cost divided by the shard
+/// count.  Always priced on tile-stream — never on the dataflow being
+/// served — so every dataflow evaluated at this gap sees the *same*
+/// arrival trace and serving-level comparisons stay apples-to-apples.
+pub fn auto_gap(accel: &AccelConfig, backend: Backend, models: &[ModelConfig]) -> u64 {
+    assert!(!models.is_empty(), "auto_gap needs a workload mix");
+    let mut cm = CostModel::new(accel.clone(), DataflowKind::TileStream, backend);
+    let sum: u64 = models.iter().map(|m| cm.cost(m).first).sum();
+    let mean = sum / models.len() as u64;
+    (mean / accel.serving.shards.max(1)).max(1)
+}
+
+/// One fabric run: configuration identity plus measured statistics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub models: Vec<String>,
+    pub dataflow: DataflowKind,
+    pub backend: Backend,
+    pub policy: RoutePolicy,
+    pub shards: u64,
+    pub queue_depth: u64,
+    pub batch_size: u64,
+    pub arrival: ArrivalKind,
+    pub arrival_seed: u64,
+    pub requests: u64,
+    pub mean_gap: u64,
+    pub stats: ServeStats,
+}
+
+impl ServeReport {
+    /// Same identity as the [`ServeConfig`] that produced this report.
+    pub fn id(&self) -> String {
+        scenario_id(self.shards, self.policy, self.dataflow, self.arrival)
+    }
+
+    /// The deterministic serve artifact: configuration + stats, no
+    /// wall-clock or environment fields.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("serve-report")),
+            ("models", Json::arr(self.models.iter().map(|m| Json::str(m.clone())).collect())),
+            ("dataflow", Json::str(self.dataflow.slug())),
+            ("engine", Json::str(self.backend.slug())),
+            ("policy", Json::str(self.policy.slug())),
+            ("shards", Json::num(self.shards as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("arrival", Json::str(self.arrival.slug())),
+            ("arrival_seed", Json::num(self.arrival_seed as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("mean_gap_cycles", Json::num(self.mean_gap as f64)),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fabric     : {} shard(s), {} policy, {} dataflow, {} engine\n",
+            self.shards,
+            self.policy.name(),
+            self.dataflow.name(),
+            self.backend.name()
+        ));
+        out.push_str(&format!(
+            "arrivals   : {} requests, {} process, mean gap {} cycles, seed {}\n",
+            self.requests,
+            self.arrival.slug(),
+            self.mean_gap,
+            self.arrival_seed
+        ));
+        out.push_str(&format!("workloads  : {}\n", self.models.join(", ")));
+        out.push_str(&self.stats.render_text());
+        out
+    }
+}
+
+struct Shard {
+    busy_until: u64,
+    busy: u64,
+    batches: u64,
+    served: u64,
+}
+
+/// Run the closed loop: arrivals -> bounded queues -> batcher -> router
+/// -> engine-priced shards.  Pure function of `cfg`.
+pub fn simulate(cfg: &ServeConfig) -> ServeReport {
+    assert!(!cfg.models.is_empty(), "serve fabric needs a workload mix");
+    let serving = cfg.accel.serving.clone();
+    let n_shards = serving.shards.max(1) as usize;
+    let queue_depth = serving.queue_depth.max(1) as usize;
+    let batch_size = serving.batch_size.max(1) as usize;
+
+    // Price every workload once up front (memoized pure simulations).
+    let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
+    let costs: Vec<super::cost::BatchCost> = cfg.models.iter().map(|m| cm.cost(m)).collect();
+
+    let trace = arrival::generate(
+        cfg.arrival,
+        cfg.requests,
+        cfg.mean_gap,
+        cfg.models.len(),
+        serving.arrival_seed,
+    );
+
+    let mut queues: Vec<VecDeque<ArrivalEvent>> =
+        (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
+    let mut shards: Vec<Shard> = (0..n_shards)
+        .map(|_| Shard { busy_until: 0, busy: 0, batches: 0, served: 0 })
+        .collect();
+    let mut router = Router::new(serving.policy);
+    let mut stats = ServeStats { submitted: cfg.requests, ..Default::default() };
+    let mut depth_sum: u128 = 0;
+    let mut depth_samples: u64 = 0;
+    let mut hidden_sum = 0.0f64;
+    let mut hidden_n: u64 = 0;
+    let mut last_completion: u64 = 0;
+
+    // Event heap keyed (cycle, kind, seq): kind 0 = arrival (seq = trace
+    // index), kind 1 = shard-free (seq = shard index).  Total order =>
+    // deterministic pop sequence.
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
+    for (i, a) in trace.iter().enumerate() {
+        heap.push(Reverse((a.cycle, 0, i as u64)));
+    }
+
+    while let Some(Reverse((now, kind, seq))) = heap.pop() {
+        if kind == 0 {
+            // admission: bounded per-modality queues, reject on overflow
+            let a = trace[seq as usize];
+            let q = &mut queues[a.modality.index()];
+            if q.len() >= queue_depth {
+                stats.rejected += 1;
+            } else {
+                q.push_back(a);
+            }
+            let max_one = queues.iter().map(|q| q.len()).max().unwrap_or(0) as u64;
+            stats.max_queue_depth = stats.max_queue_depth.max(max_one);
+        }
+
+        // work-conserving dispatch: as long as a shard is free and any
+        // queue holds work, form a batch and place it
+        loop {
+            if !shards.iter().any(|s| s.busy_until <= now) {
+                break;
+            }
+            // oldest-head-first queue selection (tie: lowest modality idx)
+            let Some(qi) = (0..queues.len())
+                .filter(|&i| !queues[i].is_empty())
+                .min_by_key(|&i| (queues[i].front().expect("non-empty").cycle, i))
+            else {
+                break;
+            };
+            let head = queues[qi].pop_front().expect("non-empty queue");
+            let mut batch = vec![head];
+            // same-workload continuation: only requests for the head's
+            // model share its compiled schedule
+            while batch.len() < batch_size
+                && queues[qi].front().is_some_and(|r| r.model == head.model)
+            {
+                batch.push(queues[qi].pop_front().expect("front checked"));
+            }
+
+            let loads: Vec<ShardLoad> = shards
+                .iter()
+                .map(|s| ShardLoad { busy_until: s.busy_until, busy: s.busy })
+                .collect();
+            let si = router
+                .route(&loads, head.modality, now)
+                .expect("a free shard was checked above");
+            let cost = costs[head.model];
+            let cycles = cost.batch_cycles(batch.len() as u64);
+            let end = now + cycles;
+            let shard = &mut shards[si];
+            shard.busy_until = end;
+            shard.busy += cycles;
+            shard.batches += 1;
+            shard.served += batch.len() as u64;
+            stats.batches += 1;
+            stats.served += batch.len() as u64;
+            last_completion = last_completion.max(end);
+            for r in &batch {
+                stats.latency.record(end - r.cycle);
+                stats.energy_mj += cost.energy_mj;
+                if let Some(h) = cost.rewrite_hidden {
+                    hidden_sum += h;
+                    hidden_n += 1;
+                }
+            }
+            heap.push(Reverse((end, 1, si as u64)));
+        }
+
+        if kind == 0 {
+            // standing queue depth after same-cycle dispatch: what an
+            // arriving request actually waits behind
+            depth_sum += queues.iter().map(|q| q.len() as u128).sum::<u128>();
+            depth_samples += 1;
+        }
+    }
+
+    stats.makespan = last_completion.max(trace.last().map(|a| a.cycle).unwrap_or(0));
+    stats.mean_queue_depth =
+        if depth_samples == 0 { 0.0 } else { depth_sum as f64 / depth_samples as f64 };
+    stats.rewrite_hidden = if hidden_n == 0 { None } else { Some(hidden_sum / hidden_n as f64) };
+    stats.per_shard = shards
+        .into_iter()
+        .map(|s| ShardStats { busy: s.busy, batches: s.batches, served: s.served })
+        .collect();
+
+    ServeReport {
+        models: cfg.models.iter().map(|m| m.name.clone()).collect(),
+        dataflow: cfg.dataflow,
+        backend: cfg.backend,
+        policy: serving.policy,
+        shards: n_shards as u64,
+        queue_depth: queue_depth as u64,
+        batch_size: batch_size as u64,
+        arrival: cfg.arrival,
+        arrival_seed: serving.arrival_seed,
+        requests: cfg.requests,
+        mean_gap: cfg.mean_gap,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn base_cfg() -> ServeConfig {
+        let mut accel = presets::streamdcim_default();
+        accel.serving.shards = 2;
+        accel.serving.queue_depth = 32;
+        accel.serving.batch_size = 4;
+        let models = vec![presets::tiny_smoke()];
+        let mean_gap = auto_gap(&accel, Backend::Analytic, &models);
+        ServeConfig {
+            accel,
+            models,
+            dataflow: DataflowKind::TileStream,
+            backend: Backend::Analytic,
+            arrival: ArrivalKind::Poisson,
+            requests: 64,
+            mean_gap,
+        }
+    }
+
+    #[test]
+    fn fabric_is_deterministic_and_accounts_every_request() {
+        let cfg = base_cfg();
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+        let s = &a.stats;
+        assert_eq!(s.submitted, 64);
+        assert_eq!(s.served + s.rejected, s.submitted, "every request served or rejected");
+        assert!(s.served > 0);
+        assert_eq!(s.latency.count(), s.served);
+        assert!(s.makespan > 0);
+        assert_eq!(s.per_shard.iter().map(|p| p.served).sum::<u64>(), s.served);
+        assert_eq!(s.per_shard.iter().map(|p| p.batches).sum::<u64>(), s.batches);
+    }
+
+    #[test]
+    fn makespan_dominates_busiest_shard() {
+        let cfg = base_cfg();
+        let s = simulate(&cfg).stats;
+        let max_busy = s.per_shard.iter().map(|p| p.busy).max().unwrap();
+        assert!(s.makespan >= max_busy, "makespan {} < busiest shard {}", s.makespan, max_busy);
+        assert!(s.total_busy() <= cfg.accel.serving.shards * s.makespan);
+    }
+
+    #[test]
+    fn overload_is_bounded_and_rejects() {
+        let mut cfg = base_cfg();
+        cfg.accel.serving.shards = 1;
+        cfg.accel.serving.queue_depth = 8;
+        cfg.arrival = ArrivalKind::Uniform;
+        cfg.mean_gap = 1; // far beyond service capacity
+        cfg.requests = 300;
+        let s = simulate(&cfg).stats;
+        assert!(s.rejected > 0, "overload must shed load");
+        assert!(s.max_queue_depth <= 8, "queue grew past its bound: {}", s.max_queue_depth);
+        assert_eq!(s.served + s.rejected, 300);
+        assert!(s.mean_batch() > 1.0, "overload must trigger batching");
+    }
+
+    #[test]
+    fn light_load_serves_everything_unbatched() {
+        let mut cfg = base_cfg();
+        cfg.mean_gap *= 50; // ample slack between arrivals
+        cfg.arrival = ArrivalKind::Uniform;
+        cfg.requests = 16;
+        let s = simulate(&cfg).stats;
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.served, 16);
+        assert!((s.mean_batch() - 1.0).abs() < 1e-12, "no queue pressure => singleton batches");
+        assert_eq!(s.mean_queue_depth, 0.0, "idle fabric has no standing queue");
+    }
+
+    #[test]
+    fn id_and_event_backend_hidden_ratio() {
+        let mut cfg = base_cfg();
+        cfg.backend = Backend::Event;
+        cfg.requests = 24;
+        let rep = simulate(&cfg);
+        assert_eq!(cfg.id(), "shards2/least-loaded/tile/poisson");
+        let h = rep.stats.rewrite_hidden.expect("event backend observes overlap");
+        assert!((0.0..=1.0).contains(&h));
+    }
+}

@@ -1,0 +1,35 @@
+//! The serving fabric (Layer 3's request path, unified with the
+//! cycle-level engine): a sharded multi-accelerator serving simulator
+//! driven by closed-loop traffic.
+//!
+//! * [`arrival`] — deterministic seeded request-arrival generation
+//!   (uniform / poisson / burst), no wall-clock anywhere.
+//! * [`cost`]    — engine-backed batch pricing: every served batch is
+//!   costed by the same analytic/event backends as `run`/`sweep`.
+//! * [`router`]  — shard placement policies (round-robin, least-loaded,
+//!   modality-affinity).
+//! * [`fabric`]  — the closed loop: bounded per-modality admission
+//!   queues -> continuous batcher -> router -> N engine-priced shards,
+//!   emitting a deterministic [`ServeReport`] artifact.
+//! * [`stats`]   — [`ServeStats`]: p50/p95/p99 latency, queue depth,
+//!   shard utilization, rejects, rewrite-hidden ratio, energy.
+//! * [`sweep`]   — the shards x policy x dataflow serving matrix with a
+//!   thread-count-independent aggregate.
+//!
+//! Determinism contract (shared with `sweep` and `engine`): a fabric
+//! run is a pure function of its [`ServeConfig`]; artifacts carry no
+//! wall-clock, thread-count, or environment fields.
+
+pub mod arrival;
+pub mod cost;
+pub mod fabric;
+pub mod router;
+pub mod stats;
+pub mod sweep;
+
+pub use arrival::{ArrivalEvent, ArrivalKind, Modality};
+pub use cost::{BatchCost, CostModel};
+pub use fabric::{auto_gap, simulate, ServeConfig, ServeReport};
+pub use router::Router;
+pub use stats::{ServeStats, ShardStats};
+pub use sweep::{run_serve_sweep, serve_matrix, ServeScenario, ServeSweepReport};

@@ -1,0 +1,128 @@
+//! Shard routing: place a formed batch onto one of the free accelerator
+//! shards under a [`RoutePolicy`].
+//!
+//! Every policy is a deterministic function of `(policy state, shard
+//! loads, batch modality)` — ties always break toward the lowest shard
+//! index — so the fabric's placement sequence is reproducible.
+
+use crate::config::RoutePolicy;
+
+use super::arrival::Modality;
+
+/// Per-shard load summary the router decides on.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLoad {
+    /// Cycle at which the shard next goes idle.
+    pub busy_until: u64,
+    /// Accumulated busy cycles over the run.
+    pub busy: u64,
+}
+
+/// Deterministic shard selector; holds the round-robin cursor.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick a shard for a batch of `modality` among the shards that are
+    /// free at `now` (`busy_until <= now`).  Returns `None` when every
+    /// shard is busy.
+    pub fn route(&mut self, shards: &[ShardLoad], modality: Modality, now: u64) -> Option<usize> {
+        let n = shards.len();
+        let free = |i: usize| shards[i].busy_until <= now;
+        if n == 0 || !(0..n).any(free) {
+            return None;
+        }
+        let least_loaded_free = || -> usize {
+            (0..n)
+                .filter(|&i| free(i))
+                .min_by_key(|&i| (shards[i].busy, i))
+                .expect("at least one free shard")
+        };
+        let pick = match self.policy {
+            RoutePolicy::RoundRobin => {
+                // first free shard at or after the cursor, wrapping
+                let start = self.rr_next % n;
+                let pick = (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&i| free(i))
+                    .expect("at least one free shard");
+                self.rr_next = (pick + 1) % n;
+                pick
+            }
+            RoutePolicy::LeastLoaded => least_loaded_free(),
+            RoutePolicy::ModalityAffinity => {
+                let home = modality.index() % n;
+                if free(home) {
+                    home
+                } else {
+                    least_loaded_free()
+                }
+            }
+        };
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(v: &[(u64, u64)]) -> Vec<ShardLoad> {
+        v.iter().map(|&(busy_until, busy)| ShardLoad { busy_until, busy }).collect()
+    }
+
+    #[test]
+    fn round_robin_rotates_over_free_shards() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let free3 = loads(&[(0, 0), (0, 0), (0, 0)]);
+        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(0));
+        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(1));
+        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(2));
+        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(0));
+        // busy shards are skipped
+        let one_busy = loads(&[(0, 0), (100, 0), (0, 0)]);
+        assert_eq!(r.route(&one_busy, Modality::Vision, 0), Some(2));
+    }
+
+    #[test]
+    fn least_loaded_picks_min_busy_with_index_ties() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        let l = loads(&[(0, 500), (0, 100), (0, 100)]);
+        assert_eq!(r.route(&l, Modality::Language, 0), Some(1), "tie breaks low index");
+        let busy_min = loads(&[(0, 500), (99, 0), (0, 100)]);
+        assert_eq!(r.route(&busy_min, Modality::Language, 0), Some(2), "busy shard excluded");
+    }
+
+    #[test]
+    fn affinity_pins_modality_then_falls_back() {
+        let mut r = Router::new(RoutePolicy::ModalityAffinity);
+        let free = loads(&[(0, 900), (0, 0)]);
+        // language -> 1 % 2 = 1
+        assert_eq!(r.route(&free, Modality::Language, 0), Some(1));
+        // audio-visual -> 2 % 2 = 0 even though shard 0 carries more load
+        assert_eq!(r.route(&free, Modality::AudioVisual, 0), Some(0));
+        // home busy -> least-loaded free
+        let home_busy = loads(&[(0, 900), (50, 0)]);
+        assert_eq!(r.route(&home_busy, Modality::Language, 0), Some(0));
+    }
+
+    #[test]
+    fn all_busy_routes_nowhere() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        let busy = loads(&[(10, 0), (20, 0)]);
+        assert_eq!(r.route(&busy, Modality::Vision, 5), None);
+        // and frees up once the clock passes busy_until
+        assert_eq!(r.route(&busy, Modality::Vision, 10), Some(0));
+    }
+}

@@ -1,0 +1,211 @@
+//! Serving statistics: what the fabric measures about one closed-loop
+//! run.  Everything is in simulated cycles (never wall-clock), so the
+//! whole struct — and the JSON artifact derived from it — is a pure
+//! function of the serve configuration.
+
+use crate::metrics::LatencyStats;
+use crate::util::json::Json;
+
+/// Occupancy of one accelerator shard over the run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardStats {
+    /// Busy cycles (sum of served batch costs).
+    pub busy: u64,
+    pub batches: u64,
+    pub served: u64,
+}
+
+impl ShardStats {
+    pub fn utilization(&self, makespan: u64) -> f64 {
+        if makespan == 0 {
+            0.0
+        } else {
+            (self.busy as f64 / makespan as f64).min(1.0)
+        }
+    }
+}
+
+/// The fabric's per-run statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// Requests in the arrival trace.
+    pub submitted: u64,
+    /// Requests that completed service.
+    pub served: u64,
+    /// Requests refused at admission (their modality queue was full).
+    pub rejected: u64,
+    /// Batches dispatched to shards.
+    pub batches: u64,
+    /// Last completion cycle (or last arrival when nothing was served).
+    pub makespan: u64,
+    /// Per-request latency in cycles: completion - arrival (queueing
+    /// plus batch service).
+    pub latency: LatencyStats,
+    /// Largest admission-queue depth observed (bounded by the config's
+    /// `queue_depth`).
+    pub max_queue_depth: u64,
+    /// Mean standing queue (total queued requests after same-cycle
+    /// dispatch), sampled at every arrival — ~0 on an idle fabric.
+    pub mean_queue_depth: f64,
+    pub per_shard: Vec<ShardStats>,
+    /// Served-request-weighted rewrite-hidden ratio (each served
+    /// request contributes its workload's ratio once); `None` under the
+    /// analytic backend (it cannot observe overlap).
+    pub rewrite_hidden: Option<f64>,
+    /// Energy of all served requests, mJ.
+    pub energy_mj: f64,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// The serving-throughput headline: served requests per million
+    /// simulated cycles.
+    pub fn served_per_megacycle(&self) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            self.served as f64 / (self.makespan as f64 / 1e6)
+        }
+    }
+
+    pub fn total_busy(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.busy).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch", Json::num(self.mean_batch())),
+            ("makespan_cycles", Json::num(self.makespan as f64)),
+            ("served_per_megacycle", Json::num(self.served_per_megacycle())),
+            ("latency", self.latency.to_json("cycles")),
+            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
+            ("mean_queue_depth", Json::num(self.mean_queue_depth)),
+            (
+                "rewrite_hidden_ratio",
+                match self.rewrite_hidden {
+                    Some(r) => Json::num(r),
+                    None => Json::Null,
+                },
+            ),
+            ("energy_mj", Json::num(self.energy_mj)),
+            (
+                "shards",
+                Json::arr(
+                    self.per_shard
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("busy_cycles", Json::num(s.busy as f64)),
+                                ("batches", Json::num(s.batches as f64)),
+                                ("served", Json::num(s.served as f64)),
+                                ("utilization", Json::num(s.utilization(self.makespan))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable block for the `serve` subcommand.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests   : {} submitted, {} served, {} rejected ({} batches, mean {:.2}/batch)\n",
+            self.submitted,
+            self.served,
+            self.rejected,
+            self.batches,
+            self.mean_batch()
+        ));
+        out.push_str(&format!(
+            "makespan   : {} cycles   throughput {:.2} served/Mcycle\n",
+            self.makespan,
+            self.served_per_megacycle()
+        ));
+        let (p50, p95, p99) = self.latency.percentiles();
+        out.push_str(&format!(
+            "latency    : mean {:.0}  p50 {p50}  p95 {p95}  p99 {p99}  max {} cycles\n",
+            self.latency.mean(),
+            self.latency.max()
+        ));
+        out.push_str(&format!(
+            "queues     : max depth {}  mean depth {:.2}\n",
+            self.max_queue_depth, self.mean_queue_depth
+        ));
+        if let Some(r) = self.rewrite_hidden {
+            out.push_str(&format!("rewrite    : {:.1} % hidden behind compute\n", r * 100.0));
+        }
+        out.push_str(&format!("energy     : {:.3} mJ served\n", self.energy_mj));
+        for (i, s) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                "  shard {i}  : {:>6.1} % busy  {:>5} batches  {:>6} served\n",
+                s.utilization(self.makespan) * 100.0,
+                s.batches,
+                s.served
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_guards_hold() {
+        let s = ServeStats::default();
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.served_per_megacycle(), 0.0);
+        assert_eq!(s.total_busy(), 0);
+        let j = s.to_json().to_string_pretty();
+        assert!(Json::parse(&j).is_ok());
+        assert!(j.contains("\"rewrite_hidden_ratio\": null"));
+    }
+
+    #[test]
+    fn throughput_and_json_shape() {
+        let mut s = ServeStats {
+            submitted: 12,
+            served: 10,
+            rejected: 2,
+            batches: 5,
+            makespan: 2_000_000,
+            per_shard: vec![
+                ShardStats { busy: 1_500_000, batches: 3, served: 6 },
+                ShardStats { busy: 400_000, batches: 2, served: 4 },
+            ],
+            rewrite_hidden: Some(0.9),
+            energy_mj: 1.25,
+            ..Default::default()
+        };
+        for v in [100u64, 200, 300] {
+            s.latency.record(v);
+        }
+        assert!((s.served_per_megacycle() - 5.0).abs() < 1e-12);
+        assert!((s.mean_batch() - 2.0).abs() < 1e-12);
+        assert_eq!(s.total_busy(), 1_900_000);
+        assert!((s.per_shard[0].utilization(s.makespan) - 0.75).abs() < 1e-12);
+        let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("served").and_then(|v| v.as_u64()), Some(10));
+        assert_eq!(
+            parsed.get("latency").and_then(|l| l.get("p95")).and_then(|v| v.as_u64()),
+            Some(300)
+        );
+        let txt = s.render_text();
+        assert!(txt.contains("served/Mcycle"));
+        assert!(txt.contains("shard 0"));
+    }
+}

@@ -1,0 +1,262 @@
+//! Serving-level scenario sweep: shards x routing policy x dataflow on
+//! one shared workload mix and arrival process, so tile-streaming's
+//! advantage is measurable at the *serving* level (requests per
+//! megacycle through a loaded multi-shard fabric), not just per-run.
+//!
+//! Same determinism contract as `sweep`: rows are assembled in canonical
+//! matrix order via [`exec::run_ordered`], the aggregate JSON carries no
+//! run-environment fields, and the artifact is bit-identical for any
+//! thread count and shard-shuffle seed.
+
+use crate::config::{presets, AccelConfig, DataflowKind, RoutePolicy};
+use crate::engine::Backend;
+use crate::exec;
+use crate::util::geomean;
+use crate::util::json::Json;
+
+use super::arrival::ArrivalKind;
+use super::fabric::{self, ServeConfig, ServeReport};
+
+/// Shard counts the serving matrix spans.
+pub const SHARD_POINTS: [u64; 3] = [1, 2, 4];
+
+/// The workload mix every serving scenario draws arrivals from: the
+/// three cheapest registry presets, so the matrix stays CI-friendly
+/// while still mixing modalities and model shapes.
+pub fn mix_models() -> Vec<crate::config::ModelConfig> {
+    vec![presets::tiny_smoke(), presets::functional_small(), presets::mm_chat_edge()]
+}
+
+/// One fully-specified serving point.
+#[derive(Debug, Clone)]
+pub struct ServeScenario {
+    pub id: String,
+    pub cfg: ServeConfig,
+}
+
+/// Enumerate shards x policy x dataflow (canonical order).  All
+/// scenarios with the same shard count share one arrival trace: the gap
+/// is derived from tile-stream pricing only (see [`fabric::auto_gap`]),
+/// never from the dataflow being served.
+pub fn serve_matrix(accel: &AccelConfig, backend: Backend, requests: u64) -> Vec<ServeScenario> {
+    let models = mix_models();
+    let mut out = Vec::new();
+    for &shards in &SHARD_POINTS {
+        let mut sharded = accel.clone();
+        sharded.serving.shards = shards;
+        let mean_gap = fabric::auto_gap(&sharded, backend, &models);
+        for policy in RoutePolicy::ALL {
+            let mut a = sharded.clone();
+            a.serving.policy = policy;
+            for dataflow in DataflowKind::ALL {
+                let cfg = ServeConfig {
+                    accel: a.clone(),
+                    models: models.clone(),
+                    dataflow,
+                    backend,
+                    arrival: ArrivalKind::Poisson,
+                    requests,
+                    mean_gap,
+                };
+                out.push(ServeScenario { id: cfg.id(), cfg });
+            }
+        }
+    }
+    out
+}
+
+/// Serving-level headline over the matrix.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeHeadline {
+    /// Geomean over (shards, policy) points of tile-stream
+    /// served-per-megacycle over non-stream on the same arrival trace.
+    pub tile_vs_non_throughput: f64,
+    /// Same vs layer-stream.
+    pub tile_vs_layer_throughput: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeSweepReport {
+    /// Rows in canonical matrix order.
+    pub rows: Vec<ServeReport>,
+    pub headline: ServeHeadline,
+}
+
+/// Run `scenarios` on `threads` workers and aggregate deterministically.
+pub fn run_serve_sweep(scenarios: &[ServeScenario], threads: usize, seed: u64) -> ServeSweepReport {
+    let jobs: Vec<Box<dyn FnOnce() -> ServeReport + Send>> = scenarios
+        .iter()
+        .map(|s| {
+            let cfg = s.cfg.clone();
+            Box::new(move || fabric::simulate(&cfg)) as Box<dyn FnOnce() -> ServeReport + Send>
+        })
+        .collect();
+    aggregate(exec::run_ordered(jobs, threads, seed))
+}
+
+/// Assemble the aggregate from rows in matrix order.
+pub fn aggregate(rows: Vec<ServeReport>) -> ServeSweepReport {
+    // pair tile against each baseline within one (shards, policy) point
+    let find = |shards: u64, policy: RoutePolicy, df: DataflowKind| {
+        rows.iter().find(|r| r.shards == shards && r.policy == policy && r.dataflow == df)
+    };
+    let mut vs_non = Vec::new();
+    let mut vs_layer = Vec::new();
+    for r in &rows {
+        if r.dataflow != DataflowKind::TileStream {
+            continue;
+        }
+        let tile = r.stats.served_per_megacycle();
+        if tile <= 0.0 {
+            continue;
+        }
+        if let Some(non) = find(r.shards, r.policy, DataflowKind::NonStream) {
+            let base = non.stats.served_per_megacycle();
+            if base > 0.0 {
+                vs_non.push(tile / base);
+            }
+        }
+        if let Some(layer) = find(r.shards, r.policy, DataflowKind::LayerStream) {
+            let base = layer.stats.served_per_megacycle();
+            if base > 0.0 {
+                vs_layer.push(tile / base);
+            }
+        }
+    }
+    let headline = ServeHeadline {
+        tile_vs_non_throughput: if vs_non.is_empty() { 0.0 } else { geomean(&vs_non) },
+        tile_vs_layer_throughput: if vs_layer.is_empty() { 0.0 } else { geomean(&vs_layer) },
+    };
+    ServeSweepReport { rows, headline }
+}
+
+impl ServeSweepReport {
+    /// The backend that produced the rows ("mixed" for hand-built lists).
+    pub fn backend_slug(&self) -> &'static str {
+        match self.rows.first().map(|r| r.backend) {
+            None => Backend::Analytic.slug(),
+            Some(first) => {
+                if self.rows.iter().all(|r| r.backend == first) {
+                    first.slug()
+                } else {
+                    "mixed"
+                }
+            }
+        }
+    }
+
+    /// Deterministic aggregate artifact (no environment fields).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("serve-sweep")),
+            ("scenario_count", Json::num(self.rows.len() as f64)),
+            ("engine", Json::str(self.backend_slug())),
+            (
+                "scenarios",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::str(r.id())),
+                                ("report", r.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "headline",
+                Json::obj(vec![
+                    (
+                        "tile_vs_non_served_per_megacycle",
+                        Json::num(self.headline.tile_vs_non_throughput),
+                    ),
+                    (
+                        "tile_vs_layer_served_per_megacycle",
+                        Json::num(self.headline.tile_vs_layer_throughput),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Ranked human-readable summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("serve sweep: {} scenarios\n\n", self.rows.len()));
+        out.push_str("-- ranked by served requests per megacycle --\n");
+        let mut ranked: Vec<&ServeReport> = self.rows.iter().collect();
+        ranked.sort_by(|a, b| {
+            b.stats
+                .served_per_megacycle()
+                .partial_cmp(&a.stats.served_per_megacycle())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in ranked.iter().take(12) {
+            out.push_str(&format!(
+                "  shards{:<2} {:<18} {:<12} {:>8.2} served/Mcycle  p99 {:>9} cy  rej {:>4}\n",
+                r.shards,
+                r.policy.slug(),
+                r.dataflow.slug(),
+                r.stats.served_per_megacycle(),
+                r.stats.latency.p99(),
+                r.stats.rejected,
+            ));
+        }
+        out.push_str(&format!(
+            "\n-- serving headline --\n  Tile-stream throughput: {:.2}x vs Non-stream, \
+             {:.2}x vs Layer-stream (same arrival traces)\n",
+            self.headline.tile_vs_non_throughput, self.headline.tile_vs_layer_throughput,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_canonical_and_unique() {
+        let m = serve_matrix(&presets::streamdcim_default(), Backend::Analytic, 32);
+        assert_eq!(m.len(), SHARD_POINTS.len() * RoutePolicy::ALL.len() * DataflowKind::ALL.len());
+        let ids: std::collections::BTreeSet<&str> = m.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids.len(), m.len(), "scenario ids must be unique");
+        // gap is shared within a shard group and tile-derived
+        for w in m.windows(2) {
+            if w[0].cfg.accel.serving.shards == w[1].cfg.accel.serving.shards {
+                assert_eq!(w[0].cfg.mean_gap, w[1].cfg.mean_gap, "trace differs inside a group");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_threads() {
+        let m = serve_matrix(&presets::streamdcim_default(), Backend::Analytic, 24);
+        let serial = run_serve_sweep(&m, 1, 42).to_json().to_string_pretty();
+        let parallel = run_serve_sweep(&m, 4, 42).to_json().to_string_pretty();
+        assert_eq!(serial, parallel);
+        let reseeded = run_serve_sweep(&m, 4, 999).to_json().to_string_pretty();
+        assert_eq!(serial, reseeded);
+        let parsed = Json::parse(&serial).unwrap();
+        assert_eq!(parsed.get("scenario_count").and_then(|v| v.as_u64()), Some(m.len() as u64));
+    }
+
+    #[test]
+    fn headline_favors_tile_streaming() {
+        let m = serve_matrix(&presets::streamdcim_default(), Backend::Analytic, 32);
+        let rep = run_serve_sweep(&m, 2, 42);
+        assert!(
+            rep.headline.tile_vs_non_throughput > 1.0,
+            "tile vs non {:.3}",
+            rep.headline.tile_vs_non_throughput
+        );
+        assert!(
+            rep.headline.tile_vs_layer_throughput >= 1.0,
+            "tile vs layer {:.3}",
+            rep.headline.tile_vs_layer_throughput
+        );
+        assert!(rep.render_text().contains("serving headline"));
+    }
+}

@@ -22,10 +22,9 @@ pub use scenario::{Scenario, ScenarioResult};
 
 use crate::config::DataflowKind;
 use crate::engine::Backend;
-use crate::exec::ThreadPool;
+use crate::exec;
 use crate::util::geomean;
 use crate::util::json::Json;
-use crate::util::prng::Rng;
 
 /// The paper's attention-heavy evaluation presets: 4k-token-plus
 /// workloads where the quadratic attention (and therefore the dynamic
@@ -85,29 +84,14 @@ pub struct SweepReport {
 /// panicking scenario propagates its panic to this caller (see
 /// `exec::Promise::wait`) instead of deadlocking the pool.
 pub fn run_sweep(scenarios: &[Scenario], threads: usize, seed: u64) -> SweepReport {
-    let n = scenarios.len();
-    let mut order: Vec<usize> = (0..n).collect();
-    Rng::new(seed).shuffle(&mut order);
-
-    let mut results: Vec<Option<ScenarioResult>> = (0..n).map(|_| None).collect();
-    if threads <= 1 {
-        for &i in &order {
-            results[i] = Some(scenarios[i].run());
-        }
-    } else {
-        let pool = ThreadPool::new(threads);
-        let promises: Vec<(usize, crate::exec::Promise<ScenarioResult>)> = order
-            .iter()
-            .map(|&i| {
-                let s = scenarios[i].clone();
-                (i, pool.submit(move || s.run()))
-            })
-            .collect();
-        for (i, p) in promises {
-            results[i] = Some(p.wait());
-        }
-    }
-    aggregate(results.into_iter().map(|r| r.expect("all scenarios ran")).collect())
+    let jobs: Vec<Box<dyn FnOnce() -> ScenarioResult + Send>> = scenarios
+        .iter()
+        .map(|s| {
+            let s = s.clone();
+            Box::new(move || s.run()) as Box<dyn FnOnce() -> ScenarioResult + Send>
+        })
+        .collect();
+    aggregate(exec::run_ordered(jobs, threads, seed))
 }
 
 /// Assemble the deterministic aggregate from results in matrix order.

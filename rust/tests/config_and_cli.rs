@@ -42,13 +42,25 @@ fn cli_full_command_lines() {
     assert_eq!(a.flag("dataflow"), Some("layer"));
     assert!(a.has("json"));
 
-    let argv: Vec<String> = ["serve", "--artifacts", "artifacts", "--requests=16", "--ref"]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
+    let argv: Vec<String> = [
+        "serve",
+        "--shards",
+        "4",
+        "--policy",
+        "least-loaded",
+        "--arrival",
+        "poisson",
+        "--requests=16",
+        "--matrix",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
     let a = cli::parse(argv).unwrap();
     assert_eq!(a.flag_u64("requests", 0), 16);
-    assert!(a.has("ref"));
+    assert_eq!(a.flag_u64("shards", 0), 4);
+    assert_eq!(a.flag("policy"), Some("least-loaded"));
+    assert!(a.has("matrix"));
 }
 
 #[test]
@@ -64,7 +76,25 @@ fn ablation_config_disables_features() {
 
 #[test]
 fn usage_mentions_every_command() {
-    for cmd in ["run", "report", "serve", "artifacts"] {
+    for cmd in ["run", "sweep", "trace", "perf-gate", "report", "serve", "artifacts"] {
         assert!(cli::USAGE.contains(cmd), "USAGE missing {cmd}");
     }
+    // the serving fabric's knobs are documented
+    for flag in ["--shards", "--policy", "--arrival", "--matrix", "--gap"] {
+        assert!(cli::USAGE.contains(flag), "USAGE missing {flag}");
+    }
+}
+
+#[test]
+fn serving_config_round_trips_through_toml() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let text = std::fs::read_to_string(dir.join("serving_fabric.toml")).unwrap();
+    let doc = toml::parse(&text).unwrap();
+    let mut accel = presets::streamdcim_default();
+    toml::apply_accel_overrides(&mut accel, &doc);
+    assert_eq!(accel.serving.shards, 4);
+    assert_eq!(accel.serving.queue_depth, 32);
+    assert_eq!(accel.serving.batch_size, 8);
+    assert_eq!(accel.serving.arrival_seed, 7);
+    assert_eq!(accel.serving.policy, streamdcim::config::RoutePolicy::LeastLoaded);
 }

@@ -1,6 +1,8 @@
 //! End-to-end coordinator tests: the serving path over real PJRT
 //! artifacts, with DTPU pruning between stages (needs `make artifacts`;
-//! the refimpl-backed tests always run).
+//! the refimpl-backed tests always run).  Every batch is additionally
+//! priced in engine cycles — the coordinator and the serving fabric
+//! share one cost model.
 
 // Same lint posture as lib.rs (authored offline without clippy in the loop).
 #![allow(unknown_lints)]
@@ -9,7 +11,7 @@
 use std::path::{Path, PathBuf};
 
 use streamdcim::config::presets;
-use streamdcim::coordinator::{Coordinator, Request};
+use streamdcim::coordinator::{Coordinator, CoordinatorConfig, Request};
 use streamdcim::model::refimpl::Mat;
 use streamdcim::util::prng::Rng;
 
@@ -33,8 +35,8 @@ fn pjrt_serving_end_to_end() {
         return;
     };
     let model = presets::functional_small();
-    let coord = Coordinator::start(Some(dir), &model, vec![128, 96, 64], 4, 42)
-        .expect("coordinator start");
+    let cfg = CoordinatorConfig::with_artifacts(dir, vec![128, 96, 64], 4, 42);
+    let coord = Coordinator::start(cfg, &model).expect("coordinator start");
     let mut rng = Rng::new(7);
     let waiters: Vec<_> = (0..8).map(|i| coord.submit(request(i, &mut rng))).collect();
     for (i, w) in waiters.into_iter().enumerate() {
@@ -45,10 +47,12 @@ fn pjrt_serving_end_to_end() {
         assert_eq!(resp.y.rows, 64);
         assert!(resp.x.data.iter().all(|v| v.is_finite()));
         assert!(resp.exec_us > 0);
+        assert!(resp.batch_sim_cycles > 0, "every batch is engine-priced");
     }
     let stats = coord.shutdown();
     assert_eq!(stats.served, 8);
     assert!(stats.mean_batch() >= 1.0);
+    assert!(stats.sim_cycles > 0);
 }
 
 #[test]
@@ -61,8 +65,9 @@ fn pjrt_serving_matches_refimpl_serving() {
     };
     let model = presets::functional_small();
     let run = |artifacts: Option<PathBuf>| {
-        let coord =
-            Coordinator::start(artifacts, &model, vec![128, 96, 64], 1, 42).unwrap();
+        let mut cfg = CoordinatorConfig::reference(vec![128, 96, 64], 1, 42);
+        cfg.artifact_dir = artifacts;
+        let coord = Coordinator::start(cfg, &model).unwrap();
         let mut rng = Rng::new(8);
         let resp = coord.submit(request(0, &mut rng)).recv().unwrap().unwrap();
         coord.shutdown();
@@ -72,6 +77,8 @@ fn pjrt_serving_matches_refimpl_serving() {
     let rref = run(None);
     assert_eq!(pjrt.stages, rref.stages);
     assert_eq!(pjrt.x.rows, rref.x.rows);
+    // identical cost-model inputs => identical engine pricing
+    assert_eq!(pjrt.batch_sim_cycles, rref.batch_sim_cycles);
     let max_diff = pjrt
         .x
         .data
@@ -99,7 +106,8 @@ fn pjrt_serving_matches_refimpl_serving() {
 #[test]
 fn refimpl_serving_under_load() {
     let model = presets::functional_small();
-    let coord = Coordinator::start(None, &model, vec![128, 96, 64], 8, 1).unwrap();
+    let coord =
+        Coordinator::start(CoordinatorConfig::reference(vec![128, 96, 64], 8, 1), &model).unwrap();
     let mut rng = Rng::new(2);
     let waiters: Vec<_> = (0..32).map(|i| coord.submit(request(i, &mut rng))).collect();
     let mut max_batch = 0;
@@ -112,12 +120,29 @@ fn refimpl_serving_under_load() {
     assert!(stats.batches < 32, "burst must produce multi-request batches");
     assert!(max_batch > 1);
     assert!(stats.percentile_us(0.95) >= stats.percentile_us(0.5));
+    assert!(stats.latency_us.p99() >= stats.latency_us.p95());
+    // batching amortizes pipeline fill: priced cycles beat 32 solo runs
+    let solo = streamdcim::serve::CostModel::new(
+        presets::streamdcim_default(),
+        streamdcim::config::DataflowKind::TileStream,
+        streamdcim::engine::Backend::Event,
+    )
+    .cost(&model)
+    .batch_cycles(1);
+    assert!(
+        stats.sim_cycles <= 32 * solo,
+        "batched {} cycles must not exceed {} solo cycles",
+        stats.sim_cycles,
+        32 * solo
+    );
+    assert!(stats.served_per_busy_megacycle() > 0.0);
 }
 
 #[test]
 fn coordinator_survives_drop_without_shutdown() {
     let model = presets::functional_small();
-    let coord = Coordinator::start(None, &model, vec![128, 96, 64], 2, 3).unwrap();
+    let coord =
+        Coordinator::start(CoordinatorConfig::reference(vec![128, 96, 64], 2, 3), &model).unwrap();
     let mut rng = Rng::new(4);
     let w = coord.submit(request(0, &mut rng));
     let _ = w.recv().unwrap().unwrap();
