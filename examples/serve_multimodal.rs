@@ -116,12 +116,24 @@ fn main() -> Result<()> {
         });
         let s = &rep.stats;
         println!(
-            "  {:<13} {:>7.2} served/Mcycle   p99 {:>9} cycles   {:>3} rejected",
+            "  {:<13} {:>7.2} served/Mcycle   p99 {:>9} cycles   {:>3} rejected   \
+             cim util {:>5.1} %",
             dataflow.name(),
             s.served_per_megacycle(),
             s.latency.p99(),
-            s.rejected
+            s.rejected,
+            s.intra_macro_utilization * 100.0
         );
+        // per-shard intra-macro CIM utilization (cim::OccupancyLedger,
+        // request-weighted) next to classic busy-time occupancy
+        for (i, sh) in s.per_shard.iter().enumerate() {
+            println!(
+                "      shard {i}: {:>5.1} % busy   {:>4} served   intra-macro {:>5.1} %",
+                sh.utilization(s.makespan) * 100.0,
+                sh.served,
+                sh.intra_macro_utilization() * 100.0
+            );
+        }
     }
     println!("\nserve_multimodal OK");
     Ok(())

@@ -58,7 +58,10 @@ fn hybrid_ablation() {
     section("A1 — hybrid reconfigurable mode (challenge 1)");
     let on = run_tile(&presets::streamdcim_default());
     let mut cfg = presets::streamdcim_default();
-    cfg.features = Features { hybrid_mode: false, ..Features::default() };
+    cfg.features = Features {
+        mode_policy: streamdcim::cim::ModePolicy::ForcedNormal,
+        ..Features::default()
+    };
     let off = run_tile(&cfg);
     row("hybrid on", format!("{on} cycles"));
     row("hybrid off", format!("{off} cycles"));

@@ -43,7 +43,7 @@ fn main() {
         std::env::var("BENCH_SMOKE_OUT").unwrap_or_else(|_| "bench_sweep_smoke.json".into());
     let out_path = workspace_rooted(&out_path);
 
-    section("sweep smoke (tiny-smoke preset, 8 scenarios, both backends)");
+    section("sweep smoke (tiny-smoke preset, full ablation matrix, both backends)");
     let accel = presets::streamdcim_default();
     let models = vec![presets::tiny_smoke()];
     let scenarios = sweep::matrix_for(&accel, &models);

@@ -1,0 +1,691 @@
+//! Reconfigurable CIM-macro microarchitecture (paper Sec. II, Fig. 3).
+//!
+//! StreamDCIM's first headline feature is a *tile-based reconfigurable
+//! CIM macro*: each macro is a grid of dual-mode sub-arrays that can
+//! operate in **normal** mode (one stationary operand, conventional
+//! weight-stationary execution) or in the **hybrid reconfigurable**
+//! mode (both operand tiles resident, enabling mixed-stationary
+//! cross-forwarding).  This module is the single source of truth for
+//! that microarchitecture:
+//!
+//! * [`MacroGeometry`]   — sub-arrays x rows x cols, write-port width;
+//!   every tiling/rewrite computation derives from it.
+//! * [`MacroMode`] / [`ModePolicy`] — the per-macro operating mode and
+//!   the config-level policy that selects it (`auto` reconfigures per
+//!   op class, the ablations force one mode).
+//! * [`ModeSchedule`]    — derived from a [`DataflowKind`]: which mode
+//!   each op class runs in, how many macros a pass spans, how rewrites
+//!   are exposed, and the moving-operand replay factor.
+//! * [`OccupancyLedger`] — occupied vs. idle macro cells per pass:
+//!   intra-macro utilization %, partial-tile waste, replay traffic.
+//!   Accumulated identically by both simulation backends (it is a pure
+//!   function of the schedule, never of event timing), so analytic and
+//!   event runs agree exactly on every utilization counter.
+//!
+//! The ledger turns the paper's Fig. 3 claim — the hybrid mode raises
+//! intra-macro CIM utilization — into a measured, regression-gated
+//! artifact (`report --figure utilization`, `tests/cim_utilization.rs`).
+
+use crate::config::{AccelConfig, DataflowKind};
+use crate::sim::OpTiling;
+use crate::util::ceil_div;
+
+/// Operating mode of one macro group for one op class (Fig. 3b/c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacroMode {
+    /// Conventional weight-stationary: one operand tile per macro;
+    /// dynamic operands need staging rewrites and per-pass replay.
+    Normal,
+    /// Hybrid reconfigurable cross-forwarding: both operand tiles
+    /// resident in the dual-mode sub-arrays, so the moving operand
+    /// streams exactly once (no replay) — at the cost of halving the
+    /// stationary capacity available to a single operand.
+    HybridXF,
+}
+
+impl MacroMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MacroMode::Normal => "Normal",
+            MacroMode::HybridXF => "Hybrid-XF",
+        }
+    }
+
+    pub fn slug(&self) -> &'static str {
+        match self {
+            MacroMode::Normal => "normal",
+            MacroMode::HybridXF => "hybrid-xf",
+        }
+    }
+}
+
+/// Config-level mode policy (replaces the old `features.hybrid_mode`
+/// bool; `hybrid_mode = true/false` still parses as a deprecated TOML
+/// alias for `auto`/`normal`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModePolicy {
+    /// Reconfigure per op class (the paper's design): hybrid for
+    /// dynamic matmuls on the TBR group, normal for static weights.
+    Auto,
+    /// Ablation: macros locked in normal mode — dynamic matmuls lose
+    /// half their macros to staging conflicts and replay returns.
+    ForcedNormal,
+    /// Ablation: macros locked in hybrid mode — static matmuls lose
+    /// half their stationary capacity to the unused second operand.
+    ForcedHybrid,
+}
+
+impl ModePolicy {
+    pub const ALL: [ModePolicy; 3] =
+        [ModePolicy::Auto, ModePolicy::ForcedNormal, ModePolicy::ForcedHybrid];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModePolicy::Auto => "Auto",
+            ModePolicy::ForcedNormal => "Forced-normal",
+            ModePolicy::ForcedHybrid => "Forced-hybrid",
+        }
+    }
+
+    pub fn slug(&self) -> &'static str {
+        match self {
+            ModePolicy::Auto => "auto",
+            ModePolicy::ForcedNormal => "normal",
+            ModePolicy::ForcedHybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" | "reconfigurable" => Some(ModePolicy::Auto),
+            "normal" | "forced-normal" | "no-hybrid" => Some(ModePolicy::ForcedNormal),
+            "hybrid" | "forced-hybrid" | "hybrid-xf" => Some(ModePolicy::ForcedHybrid),
+            _ => None,
+        }
+    }
+}
+
+/// The macro's physical grid: `sub_arrays` SRAM-CIM arrays of
+/// `rows_per_array x cols` cells, rewritten through one serial write
+/// port.  Built from an [`AccelConfig`] via [`AccelConfig::geometry`];
+/// all tiling/rewrite math routes through this struct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroGeometry {
+    /// Dual-mode sub-arrays per macro (paper: 8).
+    pub sub_arrays: u64,
+    /// Rows per sub-array (paper: 4).
+    pub rows_per_array: u64,
+    /// Bit-line columns (paper: 128).
+    pub cols: u64,
+    /// Bits per CIM cell (paper: 16).
+    pub cell_bits: u64,
+    /// Write-port width in bits per cycle.
+    pub write_port_bits: u64,
+    /// Per-row write setup cycles (word-line charge + verify).
+    pub row_setup_cycles: u64,
+}
+
+impl MacroGeometry {
+    /// Contraction rows held stationary per macro (paper: 8*4 = 32).
+    pub fn rows(&self) -> u64 {
+        self.sub_arrays * self.rows_per_array
+    }
+
+    /// Cells in one macro.
+    pub fn cells(&self) -> u64 {
+        self.rows() * self.cols
+    }
+
+    /// Storage bits of one macro.
+    pub fn storage_bits(&self) -> u64 {
+        self.cells() * self.cell_bits
+    }
+
+    /// Cycles to rewrite one macro row of `cols` values at `bits`
+    /// precision through the serial write port.
+    pub fn row_write_cycles(&self, cols: u64, bits: u64) -> u64 {
+        ceil_div(cols * bits, self.write_port_bits.max(1)) + self.row_setup_cycles
+    }
+}
+
+/// How many times the moving operand is re-streamed in a blocked
+/// weight-stationary (normal-mode) schedule with `macros` resident
+/// tiles.  Passes that advance along k stream *disjoint* k-slices (no
+/// replay); passes that advance along n re-stream the same k rows.
+/// With `kt` k-tiles and `nt` n-tiles per batch element, a pass holds
+/// `g = max(1, macros / min(kt, macros))` n-tiles worth of full-k
+/// stationary data, so the moving operand streams `ceil(nt / g)`
+/// times.  Hybrid-mode cross-forwarding eliminates this replay — the
+/// paper's "more frequent reuse of stored data" ([`ModeSchedule::replay`]).
+pub fn replay_factor(k_tiles: u64, n_tiles: u64, macros: u64) -> u64 {
+    let kt = k_tiles.max(1);
+    let g = (macros.max(1) / kt.min(macros.max(1))).max(1);
+    ceil_div(n_tiles.max(1), g)
+}
+
+/// How a matmul's stationary-operand rewrite meets its compute on the
+/// macro group (drives the occupancy window of the ledger).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RewriteExposure {
+    /// Static weights preloaded during earlier compute: the rewrite
+    /// occupies no window of its own.
+    Preloaded,
+    /// Ping-pong fine-grained pipeline: pass p+1's rewrite hides
+    /// behind pass p's compute; steady-state pass cost is
+    /// max(compute, rewrite).
+    PingPong,
+    /// Pass-granular but serialized with compute (the no-pingpong
+    /// ablation): every pass pays compute + rewrite.
+    PassSerial,
+    /// Whole-operand rewrite before any compute (layer-granular and
+    /// non-streaming modes), split across `ports` parallel write ports.
+    WholeOp { ports: u64 },
+}
+
+/// The macro-level execution plan for one matmul class under one
+/// dataflow: operating mode, pass width, group footprint, exposure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpPlan {
+    pub mode: MacroMode,
+    /// Macros that hold stationary tiles each pass (pass width).
+    pub active: u64,
+    /// Macros physically reserved by the op's macro group (staging or
+    /// second-operand macros included — the occupancy denominator).
+    pub reserved: u64,
+    pub exposure: RewriteExposure,
+    /// Cross-forwarding is live: BOTH operand tiles are resident, so
+    /// the moving operand streams exactly once.  True only for dynamic
+    /// matmuls in hybrid mode — a static op on forced-hybrid macros
+    /// reserves the second-operand sub-arrays without filling them and
+    /// still replays.
+    pub cross_forwarding: bool,
+}
+
+/// Per-dataflow macro operating schedule, derived once per run and
+/// consumed identically by the analytic backend (`dataflow/*`) and the
+/// event backend (`engine/schedule.rs`) — the single place that knows
+/// which mode each op class runs in and what that costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModeSchedule {
+    pub dataflow: DataflowKind,
+    /// Mode of the TBR group for dynamic matmuls (QK^T, PV).
+    pub dynamic_mode: MacroMode,
+    /// Mode static-weight matmuls execute in.
+    pub static_mode: MacroMode,
+    macros_per_core: u64,
+    total_macros: u64,
+    cores: u64,
+    pingpong: bool,
+}
+
+impl ModeSchedule {
+    /// Derive the schedule for `kind` on `cfg`.  The baselines' rigid
+    /// microarchitectures cannot cross-forward (paper challenge 1), so
+    /// the mode policy only steers tile streaming.
+    pub fn derive(kind: DataflowKind, cfg: &AccelConfig) -> Self {
+        let (dynamic_mode, static_mode) = match kind {
+            DataflowKind::NonStream | DataflowKind::LayerStream => {
+                (MacroMode::Normal, MacroMode::Normal)
+            }
+            DataflowKind::TileStream => match cfg.features.mode_policy {
+                ModePolicy::Auto => (MacroMode::HybridXF, MacroMode::Normal),
+                ModePolicy::ForcedNormal => (MacroMode::Normal, MacroMode::Normal),
+                ModePolicy::ForcedHybrid => (MacroMode::HybridXF, MacroMode::HybridXF),
+            },
+        };
+        ModeSchedule {
+            dataflow: kind,
+            dynamic_mode,
+            static_mode,
+            macros_per_core: cfg.macros_per_core,
+            total_macros: cfg.total_macros(),
+            cores: cfg.cores,
+            pingpong: cfg.features.pingpong,
+        }
+    }
+
+    /// Plan for a dynamic matmul (K^T / V stationary).
+    pub fn dynamic_plan(&self) -> OpPlan {
+        match self.dataflow {
+            DataflowKind::NonStream => OpPlan {
+                mode: MacroMode::Normal,
+                active: self.total_macros,
+                reserved: self.total_macros,
+                exposure: RewriteExposure::WholeOp { ports: self.cores },
+                cross_forwarding: false,
+            },
+            DataflowKind::LayerStream => OpPlan {
+                mode: MacroMode::Normal,
+                active: self.macros_per_core,
+                reserved: self.macros_per_core,
+                exposure: RewriteExposure::WholeOp { ports: 1 },
+                cross_forwarding: false,
+            },
+            DataflowKind::TileStream => OpPlan {
+                mode: self.dynamic_mode,
+                // normal mode loses half the macros to staging
+                // conflicts between the input and weight operands
+                active: match self.dynamic_mode {
+                    MacroMode::HybridXF => self.macros_per_core,
+                    MacroMode::Normal => (self.macros_per_core / 2).max(1),
+                },
+                reserved: self.macros_per_core,
+                exposure: if self.pingpong {
+                    RewriteExposure::PingPong
+                } else {
+                    RewriteExposure::PassSerial
+                },
+                cross_forwarding: self.dynamic_mode == MacroMode::HybridXF,
+            },
+        }
+    }
+
+    /// Plan for a static-weight matmul `granted` macros wide (one core
+    /// or all cores, per placement).
+    pub fn static_plan(&self, granted: u64) -> OpPlan {
+        if self.dataflow == DataflowKind::NonStream {
+            // every non-stream kernel launch uses all macros and fully
+            // exposes its rewrite across the parallel write ports
+            return OpPlan {
+                mode: MacroMode::Normal,
+                active: self.total_macros,
+                reserved: self.total_macros,
+                exposure: RewriteExposure::WholeOp { ports: self.cores },
+                cross_forwarding: false,
+            };
+        }
+        OpPlan {
+            mode: self.static_mode,
+            // forced-hybrid macros keep half their sub-arrays wired for
+            // a second operand that static weights never use — so they
+            // do NOT cross-forward (no second operand to forward)
+            active: match self.static_mode {
+                MacroMode::HybridXF => (granted / 2).max(1),
+                MacroMode::Normal => granted,
+            },
+            reserved: granted,
+            exposure: RewriteExposure::Preloaded,
+            cross_forwarding: false,
+        }
+    }
+
+    /// Moving-operand replay factor of one matmul under `plan`: live
+    /// cross-forwarding (dynamic matmuls in hybrid mode) keeps both
+    /// operands resident, so the moving operand streams exactly once;
+    /// every other plan replays per blocked weight-stationary sweep of
+    /// its `active` pass width.
+    pub fn replay(&self, t: &OpTiling, plan: &OpPlan) -> u64 {
+        if plan.cross_forwarding {
+            1
+        } else {
+            replay_factor(t.k_tiles, t.n_tiles, plan.active)
+        }
+    }
+
+    /// Macros that carry the dual-mode reconfiguration muxing under
+    /// this schedule (prices the hybrid area/energy overhead).
+    pub fn hybrid_capable_macros(&self) -> u64 {
+        match (self.dynamic_mode, self.static_mode) {
+            (MacroMode::Normal, MacroMode::Normal) => 0,
+            // forced-hybrid runs static ops in hybrid mode on every core
+            (_, MacroMode::HybridXF) => self.total_macros,
+            // the paper's design: only the TBR group reconfigures
+            (MacroMode::HybridXF, MacroMode::Normal) => self.macros_per_core,
+        }
+    }
+}
+
+/// Occupied vs. idle macro cells, accumulated per pass over a run.
+///
+/// * `used_cell_cycles`  — useful MAC work: each MAC activates one cell
+///   for one cycle, so this equals the op's exact MAC count.
+/// * `alloc_cell_cycles` — cells reserved on the op's macro group over
+///   its occupancy window: compute passes plus whatever rewrite time
+///   the dataflow fails to hide ([`RewriteExposure`]).
+/// * `partial_tile_waste_cells` — cells of resident stationary tiles
+///   never filled because k/n do not divide the macro geometry.
+/// * `replay_bits` — moving-operand bits re-streamed beyond the first
+///   sweep (normal-mode blocked execution; zero under cross-forwarding).
+///
+/// Intra-macro utilization = used / alloc.  A pure function of the
+/// tile schedule — never of event timing — so both simulation backends
+/// report bit-identical counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OccupancyLedger {
+    pub used_cell_cycles: u64,
+    pub alloc_cell_cycles: u64,
+    pub partial_tile_waste_cells: u64,
+    pub replay_bits: u64,
+}
+
+impl OccupancyLedger {
+    pub fn add(&mut self, other: &OccupancyLedger) {
+        self.used_cell_cycles += other.used_cell_cycles;
+        self.alloc_cell_cycles += other.alloc_cell_cycles;
+        self.partial_tile_waste_cells += other.partial_tile_waste_cells;
+        self.replay_bits += other.replay_bits;
+    }
+
+    /// Intra-macro CIM utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.alloc_cell_cycles == 0 {
+            0.0
+        } else {
+            (self.used_cell_cycles as f64 / self.alloc_cell_cycles as f64).min(1.0)
+        }
+    }
+
+    /// Ledger of one matmul execution under `plan`.  `row_write_cycles`
+    /// is the per-row rewrite cost at the op's precision
+    /// (`geom.row_write_cycles(t.cols_per_tile, t.bits)`).
+    pub fn account(
+        geom: &MacroGeometry,
+        t: &OpTiling,
+        plan: &OpPlan,
+        replay: u64,
+        row_write_cycles: u64,
+    ) -> OccupancyLedger {
+        let active = plan.active.max(1);
+        let passes = ceil_div(t.tiles, active).max(1);
+        // exact edge-aware occupancy: summed over all tiles, the
+        // occupied cells of a (ki, ni) tile telescope to k x n per
+        // batch element regardless of edge clamps
+        let occupied_cells = t.batch * t.k * t.n;
+        let footprint_cells = t.tiles * geom.cells();
+        let rw_per_tile = t.rows_per_tile * row_write_cycles;
+        let rw_total = t.tiles * rw_per_tile;
+        let window = match plan.exposure {
+            RewriteExposure::Preloaded => passes * t.m,
+            RewriteExposure::PingPong => {
+                // steady state max(compute, rewrite) per pass; the
+                // final pass rewrites only its remainder tiles
+                let rw_full = t.tiles.min(active) * rw_per_tile;
+                let rw_last = (t.tiles - (passes - 1) * active) * rw_per_tile;
+                (passes - 1) * rw_full.max(t.m) + rw_last.max(t.m)
+            }
+            RewriteExposure::PassSerial => passes * t.m + rw_total,
+            RewriteExposure::WholeOp { ports } => passes * t.m + rw_total / ports.max(1),
+        };
+        OccupancyLedger {
+            used_cell_cycles: t.batch * t.m * t.k * t.n,
+            alloc_cell_cycles: plan.reserved.max(1) * geom.cells() * window,
+            partial_tile_waste_cells: footprint_cells.saturating_sub(occupied_cells),
+            replay_bits: t.moving_bits() * (replay.max(1) - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::{Op, OpKind, Stream};
+
+    fn mk(batch: u64, m: u64, k: u64, n: u64, bits: u64) -> Op {
+        Op {
+            name: "op",
+            kind: OpKind::MatMulDynamic,
+            stream: Stream::X,
+            batch,
+            m,
+            k,
+            n,
+            bits,
+        }
+    }
+
+    #[test]
+    fn geometry_matches_paper_macro() {
+        let g = presets::streamdcim_default().geometry();
+        assert_eq!(g.rows(), 32); // 8 sub-arrays x 4 rows
+        assert_eq!(g.cols, 128);
+        assert_eq!(g.cells(), 32 * 128);
+        assert_eq!(g.storage_bits(), 32 * 128 * 16);
+        // 128 cols x 16b over a 128b port + 3 setup cycles
+        assert_eq!(g.row_write_cycles(128, 16), 16 + 3);
+        assert!(g.row_write_cycles(128, 8) < g.row_write_cycles(128, 16));
+    }
+
+    #[test]
+    fn mode_policy_parse_roundtrip() {
+        for p in ModePolicy::ALL {
+            assert_eq!(ModePolicy::parse(p.slug()), Some(p));
+            assert_eq!(ModePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ModePolicy::parse("no-hybrid"), Some(ModePolicy::ForcedNormal));
+        assert_eq!(ModePolicy::parse("forced-hybrid"), Some(ModePolicy::ForcedHybrid));
+        assert_eq!(ModePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn replay_factor_by_tiling_shape() {
+        let cfg = presets::streamdcim_default();
+        // PV-like: k huge (k-partitioned passes), n one tile -> no replay
+        let pv = OpTiling::of(&cfg, &mk(12, 4096, 4096, 64, 16));
+        assert_eq!(replay_factor(pv.k_tiles, pv.n_tiles, 8), 1);
+        // QK^T-like: kt=2, nt=32; 8 macros hold 4 n-tiles of full k
+        let qkt = OpTiling::of(&cfg, &mk(12, 4096, 64, 4096, 16));
+        assert_eq!(replay_factor(qkt.k_tiles, qkt.n_tiles, 8), 8);
+        // FFN-like with all 24 macros: kt=24 >= 24 -> one n-tile per sweep
+        let ffn = OpTiling::of(&cfg, &mk(1, 4096, 768, 3072, 16));
+        assert_eq!(replay_factor(ffn.k_tiles, ffn.n_tiles, 24), 24);
+        // fits entirely -> replay 1
+        let small = OpTiling::of(&cfg, &mk(1, 64, 32, 128, 16));
+        assert_eq!(replay_factor(small.k_tiles, small.n_tiles, 8), 1);
+    }
+
+    #[test]
+    fn replay_factor_bounds_hold_across_shapes() {
+        // 1 <= replay <= n_tiles for any tiling shape and macro count
+        for kt in [1u64, 2, 3, 7, 24, 128] {
+            for nt in [1u64, 2, 5, 32, 100] {
+                for macros in [1u64, 4, 8, 24] {
+                    let r = replay_factor(kt, nt, macros);
+                    assert!(r >= 1, "replay {r} < 1 for kt={kt} nt={nt} m={macros}");
+                    assert!(r <= nt, "replay {r} > nt={nt} for kt={kt} m={macros}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_schedule_mirrors_dataflow_semantics() {
+        let cfg = presets::streamdcim_default();
+        let tile = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        assert_eq!(tile.dynamic_mode, MacroMode::HybridXF);
+        assert_eq!(tile.static_mode, MacroMode::Normal);
+        assert_eq!(tile.dynamic_plan().active, cfg.macros_per_core);
+        assert_eq!(tile.dynamic_plan().exposure, RewriteExposure::PingPong);
+        assert_eq!(tile.static_plan(8).active, 8);
+        assert_eq!(tile.hybrid_capable_macros(), cfg.macros_per_core);
+
+        let layer = ModeSchedule::derive(DataflowKind::LayerStream, &cfg);
+        assert_eq!(layer.dynamic_mode, MacroMode::Normal);
+        assert_eq!(layer.dynamic_plan().active, cfg.macros_per_core);
+        assert_eq!(layer.dynamic_plan().exposure, RewriteExposure::WholeOp { ports: 1 });
+        assert_eq!(layer.hybrid_capable_macros(), 0);
+
+        let non = ModeSchedule::derive(DataflowKind::NonStream, &cfg);
+        assert_eq!(non.dynamic_plan().active, cfg.total_macros());
+        assert_eq!(non.static_plan(8).active, cfg.total_macros());
+        assert_eq!(
+            non.dynamic_plan().exposure,
+            RewriteExposure::WholeOp { ports: cfg.cores }
+        );
+    }
+
+    #[test]
+    fn mode_policy_steers_tile_stream_only() {
+        let mut cfg = presets::streamdcim_default();
+        cfg.features.mode_policy = ModePolicy::ForcedNormal;
+        let tile = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        assert_eq!(tile.dynamic_mode, MacroMode::Normal);
+        // staging conflicts halve the dynamic pass width
+        assert_eq!(tile.dynamic_plan().active, cfg.macros_per_core / 2);
+        assert_eq!(tile.dynamic_plan().reserved, cfg.macros_per_core);
+        assert_eq!(tile.hybrid_capable_macros(), 0);
+
+        cfg.features.mode_policy = ModePolicy::ForcedHybrid;
+        let forced = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        assert_eq!(forced.static_mode, MacroMode::HybridXF);
+        // static weights lose half their capacity to the unused operand
+        assert_eq!(forced.static_plan(8).active, 4);
+        assert_eq!(forced.static_plan(8).reserved, 8);
+        assert_eq!(forced.hybrid_capable_macros(), cfg.total_macros());
+
+        // the baselines' rigid microarchitecture ignores the policy
+        for kind in [DataflowKind::NonStream, DataflowKind::LayerStream] {
+            let s = ModeSchedule::derive(kind, &cfg);
+            assert_eq!(s.dynamic_mode, MacroMode::Normal);
+            assert_eq!(s.static_mode, MacroMode::Normal);
+        }
+    }
+
+    #[test]
+    fn hybrid_replay_is_one_normal_replays() {
+        let cfg = presets::streamdcim_default();
+        let t = OpTiling::of(&cfg, &mk(12, 4096, 64, 4096, 16));
+        let tile = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        assert_eq!(tile.replay(&t, &tile.dynamic_plan()), 1);
+        let layer = ModeSchedule::derive(DataflowKind::LayerStream, &cfg);
+        assert!(layer.replay(&t, &layer.dynamic_plan()) > 1);
+    }
+
+    #[test]
+    fn forced_hybrid_static_ops_still_replay() {
+        // locking macros in hybrid mode does NOT grant static weights
+        // cross-forwarding: there is no second resident operand, so the
+        // halved pass width replays MORE, never less
+        let mut cfg = presets::streamdcim_default();
+        cfg.features.mode_policy = ModePolicy::ForcedHybrid;
+        let forced = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        let auto_cfg = presets::streamdcim_default();
+        let auto = ModeSchedule::derive(DataflowKind::TileStream, &auto_cfg);
+        // FFN-like stationary operand spread over all cores' macros
+        let t = OpTiling::of(&auto_cfg, &mk(1, 4096, 768, 3072, 16));
+        let fp = forced.static_plan(24);
+        let ap = auto.static_plan(24);
+        assert!(!fp.cross_forwarding && !ap.cross_forwarding);
+        assert!(
+            forced.replay(&t, &fp) >= auto.replay(&t, &ap),
+            "forced-hybrid static replay {} < auto {}",
+            forced.replay(&t, &fp),
+            auto.replay(&t, &ap)
+        );
+        assert!(forced.replay(&t, &fp) > 1);
+        // only dynamic matmuls in hybrid mode cross-forward
+        assert!(forced.dynamic_plan().cross_forwarding);
+        assert!(!ModeSchedule::derive(DataflowKind::LayerStream, &auto_cfg)
+            .dynamic_plan()
+            .cross_forwarding);
+    }
+
+    #[test]
+    fn ledger_used_is_exact_macs_and_bounded_by_alloc() {
+        let cfg = presets::streamdcim_default();
+        let geom = cfg.geometry();
+        let sched = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        let plan = sched.dynamic_plan();
+        let op = mk(3, 256, 48, 300, 16); // k, n NOT divisible by 32/128
+        let t = OpTiling::of(&cfg, &op);
+        let rwc = cfg.row_write_cycles(t.cols_per_tile, t.bits);
+        let led = OccupancyLedger::account(&geom, &t, &plan, sched.replay(&t, &plan), rwc);
+        assert_eq!(led.used_cell_cycles, op.macs());
+        assert!(led.alloc_cell_cycles >= led.used_cell_cycles);
+        assert!(led.utilization() > 0.0 && led.utilization() <= 1.0);
+        // edge clamps waste cells: 2 k-tiles x 3 n-tiles of 32x128 hold 48x300
+        let expect_waste = t.tiles * geom.cells() - 3 * 48 * 300;
+        assert_eq!(led.partial_tile_waste_cells, expect_waste);
+        assert!(expect_waste > 0);
+        // hybrid cross-forwarding: no replay traffic
+        assert_eq!(led.replay_bits, 0);
+    }
+
+    #[test]
+    fn exposure_orders_utilization() {
+        // same op, same macros: pingpong >= pass-serial, preloaded best
+        let cfg = presets::streamdcim_default();
+        let geom = cfg.geometry();
+        let op = mk(12, 4096, 64, 4096, 16);
+        let t = OpTiling::of(&cfg, &op);
+        let rwc = cfg.row_write_cycles(t.cols_per_tile, t.bits);
+        let base = OpPlan {
+            mode: MacroMode::HybridXF,
+            active: 8,
+            reserved: 8,
+            exposure: RewriteExposure::Preloaded,
+            cross_forwarding: true,
+        };
+        let util = |exposure| {
+            OccupancyLedger::account(&geom, &t, &OpPlan { exposure, ..base }, 1, rwc)
+                .utilization()
+        };
+        let pre = util(RewriteExposure::Preloaded);
+        let pp = util(RewriteExposure::PingPong);
+        let ps = util(RewriteExposure::PassSerial);
+        let wo = util(RewriteExposure::WholeOp { ports: 1 });
+        assert!(pre >= pp, "preloaded {pre} < pingpong {pp}");
+        assert!(pp > ps, "pingpong {pp} <= pass-serial {ps}");
+        // whole-op and pass-serial expose the same total rewrite
+        assert!((ps - wo).abs() < 1e-12, "pass-serial {ps} != whole-op {wo}");
+    }
+
+    #[test]
+    fn staging_halves_normal_mode_dynamic_utilization() {
+        // the Fig. 3 claim: hybrid raises intra-macro utilization
+        let cfg = presets::streamdcim_default();
+        let geom = cfg.geometry();
+        let op = mk(12, 4096, 64, 4096, 16);
+        let t = OpTiling::of(&cfg, &op);
+        let rwc = cfg.row_write_cycles(t.cols_per_tile, t.bits);
+        let hybrid = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        let mut cfg_n = cfg.clone();
+        cfg_n.features.mode_policy = ModePolicy::ForcedNormal;
+        let normal = ModeSchedule::derive(DataflowKind::TileStream, &cfg_n);
+        let lh = OccupancyLedger::account(
+            &geom,
+            &t,
+            &hybrid.dynamic_plan(),
+            hybrid.replay(&t, &hybrid.dynamic_plan()),
+            rwc,
+        );
+        let ln = OccupancyLedger::account(
+            &geom,
+            &t,
+            &normal.dynamic_plan(),
+            normal.replay(&t, &normal.dynamic_plan()),
+            rwc,
+        );
+        assert!(
+            lh.utilization() > ln.utilization(),
+            "hybrid {} <= normal {}",
+            lh.utilization(),
+            ln.utilization()
+        );
+        assert_eq!(lh.replay_bits, 0);
+        assert!(ln.replay_bits > 0, "normal mode must replay the moving operand");
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut a = OccupancyLedger::default();
+        a.add(&OccupancyLedger {
+            used_cell_cycles: 5,
+            alloc_cell_cycles: 10,
+            partial_tile_waste_cells: 2,
+            replay_bits: 7,
+        });
+        a.add(&OccupancyLedger {
+            used_cell_cycles: 5,
+            alloc_cell_cycles: 10,
+            partial_tile_waste_cells: 1,
+            replay_bits: 0,
+        });
+        assert_eq!(a.used_cell_cycles, 10);
+        assert_eq!(a.alloc_cell_cycles, 20);
+        assert_eq!(a.partial_tile_waste_cells, 3);
+        assert_eq!(a.replay_bits, 7);
+        assert!((a.utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(OccupancyLedger::default().utilization(), 0.0);
+    }
+}

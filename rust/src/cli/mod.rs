@@ -105,8 +105,10 @@ COMMANDS
                --out <file.json>   write the diff artifact
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
-               --figure fig5|fig6|fig7|headline|e5|serving  (default headline)
-               --config <file.toml>
+               --figure fig5|fig6|fig7|headline|e5|serving|utilization
+                                                     (default headline)
+               --config <file.toml>     (utilization: intra-macro CIM
+                                         occupancy by dataflow, cim::)
   serve      closed-loop traffic through the sharded serving fabric
                --shards <n>        accelerator shards (default 2)
                --policy round-robin|least-loaded|modality-affinity

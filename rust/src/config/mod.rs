@@ -4,6 +4,7 @@
 pub mod presets;
 pub mod toml;
 
+use crate::cim::{MacroGeometry, ModePolicy};
 use crate::util::ceil_div;
 
 /// Which streaming solution schedules the accelerator (paper Sec. III).
@@ -129,9 +130,11 @@ impl Default for ServingConfig {
 /// Feature toggles for ablation studies (paper features individually).
 #[derive(Debug, Clone, Copy)]
 pub struct Features {
-    /// TBR-CIM hybrid reconfigurable mode (Challenge 1). Off => macros are
-    /// plain weight-stationary and dynamic operands need staging rewrites.
-    pub hybrid_mode: bool,
+    /// TBR-CIM macro mode policy (Challenge 1): `Auto` reconfigures per
+    /// op class (the paper's hybrid mode for dynamic matmuls);
+    /// `ForcedNormal`/`ForcedHybrid` lock the macros for ablations.
+    /// Replaces the old `hybrid_mode` bool (`cim::ModePolicy`).
+    pub mode_policy: ModePolicy,
     /// Ping-pong fine-grained compute-rewriting pipeline (Challenge 3).
     /// Off => rewrites serialize with compute even in tile streaming.
     pub pingpong: bool,
@@ -141,7 +144,7 @@ pub struct Features {
 
 impl Default for Features {
     fn default() -> Self {
-        Features { hybrid_mode: true, pingpong: true, token_pruning: true }
+        Features { mode_policy: ModePolicy::Auto, pingpong: true, token_pruning: true }
     }
 }
 
@@ -191,13 +194,25 @@ pub struct AccelConfig {
 }
 
 impl AccelConfig {
+    /// The CIM-macro microarchitecture this config describes — the
+    /// single source of truth for tiling and rewrite math (`cim`).
+    pub fn geometry(&self) -> MacroGeometry {
+        MacroGeometry {
+            sub_arrays: self.arrays_per_macro,
+            rows_per_array: self.array_rows,
+            cols: self.array_cols,
+            cell_bits: self.cell_bits,
+            write_port_bits: self.macro_write_port_bits,
+            row_setup_cycles: self.cim_row_setup_cycles,
+        }
+    }
     /// Contraction rows held stationary per macro (paper: 8*4 = 32).
     pub fn macro_rows(&self) -> u64 {
-        self.arrays_per_macro * self.array_rows
+        self.geometry().rows()
     }
     /// Output columns per macro (paper: 128).
     pub fn macro_cols(&self) -> u64 {
-        self.array_cols
+        self.geometry().cols
     }
     /// Total macros across all cores.
     pub fn total_macros(&self) -> u64 {
@@ -205,11 +220,11 @@ impl AccelConfig {
     }
     /// Storage bits of one macro.
     pub fn macro_bits(&self) -> u64 {
-        self.macro_rows() * self.macro_cols() * self.cell_bits
+        self.geometry().storage_bits()
     }
     /// Cycles to rewrite one macro row of `cols` values at `bits` precision.
     pub fn row_write_cycles(&self, cols: u64, bits: u64) -> u64 {
-        ceil_div(cols * bits, self.macro_write_port_bits) + self.cim_row_setup_cycles
+        self.geometry().row_write_cycles(cols, bits)
     }
     /// Cycles to stream `bits` over the off-chip channel (excl. queueing).
     pub fn offchip_cycles(&self, bits: u64) -> u64 {
@@ -306,6 +321,17 @@ mod tests {
         assert_eq!(c.macro_cols(), 128);
         assert_eq!(c.total_macros(), 24); // 3 cores x 8 macros
         assert_eq!(c.macro_bits(), 32 * 128 * 16);
+    }
+
+    #[test]
+    fn geometry_mirrors_accel_fields_and_policy_defaults_to_auto() {
+        let c = presets::streamdcim_default();
+        let g = c.geometry();
+        assert_eq!(g.rows(), c.macro_rows());
+        assert_eq!(g.cols, c.macro_cols());
+        assert_eq!(g.storage_bits(), c.macro_bits());
+        assert_eq!(g.row_write_cycles(128, 16), c.row_write_cycles(128, 16));
+        assert_eq!(c.features.mode_policy, ModePolicy::Auto);
     }
 
     #[test]

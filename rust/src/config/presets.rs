@@ -266,6 +266,28 @@ pub fn sweep_models() -> Vec<ModelConfig> {
     ]
 }
 
+/// Utilization-sensitive smoke preset: head dim (30) and token counts
+/// (72/56) deliberately NOT divisible by the default 32x128 macro
+/// geometry, so partial-tile waste and the exact final-partial-pass
+/// rewrite clamp are exercised.  Gated by the perf-gate smoke matrix;
+/// kept out of the sweep registry (it is a calibration shape, like the
+/// TranCIM microbenchmark).
+pub fn ragged_edge() -> ModelConfig {
+    ModelConfig {
+        name: "ragged-edge".into(),
+        single_layers_x: 1,
+        single_layers_y: 1,
+        cross_layers: 1,
+        d_model: 120,
+        heads: 4,
+        d_ff: 440,
+        tokens_x: 72,
+        tokens_y: 56,
+        bits: 16,
+        pruning: PruningSchedule { every: 1, keep_ratio: 0.75, min_tokens: 32 },
+    }
+}
+
 /// The Sec. I TranCIM microbenchmark: QK^T with a 2048x512 K matrix at
 /// INT8.  Used by the rewrite-fraction validation (experiment E5).
 pub fn trancim_microbench() -> ModelConfig {
@@ -297,6 +319,7 @@ pub fn model_by_name(name: &str) -> Option<ModelConfig> {
         "long-doc-vqa" | "longdoc" => Some(long_doc_vqa()),
         "mm-chat-edge" | "edge" => Some(mm_chat_edge()),
         "tiny-smoke" | "tiny" | "smoke" => Some(tiny_smoke()),
+        "ragged-edge" | "ragged" => Some(ragged_edge()),
         _ => None,
     }
 }
@@ -351,6 +374,21 @@ mod tests {
         // the CI smoke model must be the cheapest thing in the registry
         let smoke = tiny_smoke();
         assert!(models.iter().all(|m| m.tokens_x * m.tokens_y >= smoke.tokens_x * smoke.tokens_y));
+    }
+
+    #[test]
+    fn ragged_edge_defies_the_macro_geometry() {
+        let m = ragged_edge();
+        let c = streamdcim_default();
+        assert_eq!(m.d_model % m.heads, 0);
+        let head_dim = m.d_model / m.heads;
+        assert_ne!(head_dim % c.macro_rows(), 0, "head dim must not tile evenly");
+        assert_ne!(m.tokens_x % c.macro_cols(), 0, "tokens_x must not tile evenly");
+        assert_ne!(m.tokens_y % c.macro_cols(), 0, "tokens_y must not tile evenly");
+        assert_ne!(m.d_ff % c.macro_cols(), 0, "d_ff must not tile evenly");
+        assert_eq!(model_by_name("ragged-edge").unwrap().name, m.name);
+        // a calibration shape: not part of the sweep registry
+        assert!(sweep_models().iter().all(|s| s.name != m.name));
     }
 
     #[test]

@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use super::{AccelConfig, Features, ModelConfig, RoutePolicy};
+use super::{AccelConfig, ModelConfig, RoutePolicy};
+use crate::cim::ModePolicy;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlVal {
@@ -203,22 +204,44 @@ pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
             cfg.serving.policy = p;
         }
     }
+    // deprecated alias: [features].hybrid_mode = true/false maps onto
+    // the mode policy (true = auto reconfiguration, false = forced
+    // normal).  Applied FIRST so a named mode_policy key — in [macro]
+    // or [features] — always wins over the legacy alias.
+    if let Some(v) = doc
+        .get("features")
+        .and_then(|t| t.get("hybrid_mode"))
+        .and_then(|v| v.as_bool())
+    {
+        cfg.features.mode_policy = if v { ModePolicy::Auto } else { ModePolicy::ForcedNormal };
+    }
+    // [macro]: the CIM-macro microarchitecture by its own name (the
+    // [accel] spellings of the same knobs keep working)
+    if let Some(t) = doc.get("macro") {
+        set_u64!(t, "sub_arrays", cfg.arrays_per_macro);
+        set_u64!(t, "array_rows", cfg.array_rows);
+        set_u64!(t, "array_cols", cfg.array_cols);
+        set_u64!(t, "cell_bits", cfg.cell_bits);
+        set_u64!(t, "write_port_bits", cfg.macro_write_port_bits);
+        set_u64!(t, "row_setup_cycles", cfg.cim_row_setup_cycles);
+        if let Some(p) =
+            t.get("mode_policy").and_then(|v| v.as_str()).and_then(ModePolicy::parse)
+        {
+            cfg.features.mode_policy = p;
+        }
+    }
     if let Some(t) = doc.get("features") {
-        let mut f = Features {
-            hybrid_mode: cfg.features.hybrid_mode,
-            pingpong: cfg.features.pingpong,
-            token_pruning: cfg.features.token_pruning,
-        };
-        if let Some(v) = t.get("hybrid_mode").and_then(|v| v.as_bool()) {
-            f.hybrid_mode = v;
+        if let Some(p) =
+            t.get("mode_policy").and_then(|v| v.as_str()).and_then(ModePolicy::parse)
+        {
+            cfg.features.mode_policy = p;
         }
         if let Some(v) = t.get("pingpong").and_then(|v| v.as_bool()) {
-            f.pingpong = v;
+            cfg.features.pingpong = v;
         }
         if let Some(v) = t.get("token_pruning").and_then(|v| v.as_bool()) {
-            f.token_pruning = v;
+            cfg.features.token_pruning = v;
         }
-        cfg.features = f;
     }
 }
 
@@ -291,7 +314,7 @@ keep_ratio = 0.5
         assert_eq!(accel.offchip_bus_bits, 1024);
         assert!((accel.energy.offchip_pj_per_bit - 2.5).abs() < 1e-12);
         assert!(!accel.features.pingpong);
-        assert!(accel.features.hybrid_mode); // untouched
+        assert_eq!(accel.features.mode_policy, ModePolicy::Auto); // untouched
         assert_eq!(accel.serving.shards, 4);
         assert_eq!(accel.serving.queue_depth, 16);
         assert_eq!(accel.serving.policy, RoutePolicy::ModalityAffinity);
@@ -300,6 +323,41 @@ keep_ratio = 0.5
         assert_eq!(model.name, "tiny");
         assert_eq!(model.tokens_x, 256);
         assert!((model.pruning.keep_ratio - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hybrid_mode_alias_and_macro_section() {
+        // deprecated bool alias
+        let doc = parse("[features]\nhybrid_mode = false\n").unwrap();
+        let mut accel = presets::streamdcim_default();
+        apply_accel_overrides(&mut accel, &doc);
+        assert_eq!(accel.features.mode_policy, ModePolicy::ForcedNormal);
+        let doc = parse("[features]\nhybrid_mode = true\n").unwrap();
+        apply_accel_overrides(&mut accel, &doc);
+        assert_eq!(accel.features.mode_policy, ModePolicy::Auto);
+        // the named policy wins over the alias when both are present
+        let doc = parse("[features]\nhybrid_mode = true\nmode_policy = \"hybrid\"\n").unwrap();
+        apply_accel_overrides(&mut accel, &doc);
+        assert_eq!(accel.features.mode_policy, ModePolicy::ForcedHybrid);
+        // ... including a [macro].mode_policy in the same document (the
+        // alias must never clobber a named key, whichever section)
+        let doc =
+            parse("[features]\nhybrid_mode = true\n[macro]\nmode_policy = \"normal\"\n").unwrap();
+        apply_accel_overrides(&mut accel, &doc);
+        assert_eq!(accel.features.mode_policy, ModePolicy::ForcedNormal);
+        // [macro] section: geometry + policy under the subsystem's name
+        let doc = parse(
+            "[macro]\nsub_arrays = 16\narray_cols = 256\nwrite_port_bits = 64\n\
+             mode_policy = \"normal\"\n",
+        )
+        .unwrap();
+        let mut accel = presets::streamdcim_default();
+        apply_accel_overrides(&mut accel, &doc);
+        assert_eq!(accel.arrays_per_macro, 16);
+        assert_eq!(accel.array_cols, 256);
+        assert_eq!(accel.macro_write_port_bits, 64);
+        assert_eq!(accel.features.mode_policy, ModePolicy::ForcedNormal);
+        assert_eq!(accel.geometry().rows(), 16 * accel.array_rows);
     }
 
     #[test]

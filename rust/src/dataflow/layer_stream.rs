@@ -9,6 +9,8 @@
 //! stationary operand is resident, so the full rewrite latency is exposed
 //! as a pipeline bubble (57 %+ of QK^T latency in the Sec. I example).
 
+use crate::cim::ModeSchedule;
+use crate::config::DataflowKind;
 use crate::metrics::LayerStats;
 use crate::model::Layer;
 use crate::sim::accel::TBR;
@@ -18,6 +20,8 @@ use super::{account_matmul, exec_sfu, exec_static_preloaded, find, ops_by_stream
 
 pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
     let cfg = acc.cfg.clone();
+    let sched = ModeSchedule::derive(DataflowKind::LayerStream, &cfg);
+    let dyn_plan = sched.dynamic_plan();
     let start = acc.makespan();
     let mut exposed_total = 0;
     let mut layer_end = start;
@@ -29,9 +33,9 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         let v = find(&grp, "v_gen").expect("v_gen");
         // static preload queueing is not counted as "exposed rewrite":
         // the metric tracks the paper's dynamic-rewrite pipeline bubbles
-        let (_, qg_end, _) = exec_static_preloaded(acc, q, start, placement(q));
-        let (_, kg_end, _) = exec_static_preloaded(acc, k, start, placement(k));
-        let (_, vg_end, _) = exec_static_preloaded(acc, v, start, placement(v));
+        let (_, qg_end, _) = exec_static_preloaded(acc, q, start, placement(q), &sched);
+        let (_, kg_end, _) = exec_static_preloaded(acc, k, start, placement(k), &sched);
+        let (_, vg_end, _) = exec_static_preloaded(acc, v, start, placement(v), &sched);
 
         // --- QK^T: layer-granular K^T rewrite, fully exposed ------------
         let qkt = find(&grp, "qkt").expect("qkt");
@@ -39,11 +43,10 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         let rw = t_qkt.rewrite_cycles(&cfg);
         let (_, rw_end) = acc.write_ports[TBR].acquire(kg_end, rw, "K-rewrite");
         exposed_total += rw_end.saturating_sub(kg_end.max(qg_end));
-        let comp = t_qkt.compute_cycles(cfg.macros_per_core);
+        let comp = t_qkt.compute_cycles(dyn_plan.active);
         let (c_start, c_end) =
             acc.cores[TBR].acquire(rw_end.max(qg_end), comp, "qkt");
-        let replay = t_qkt.replay_factor(cfg.macros_per_core);
-        account_matmul(&mut acc.activity, qkt, &t_qkt, replay, false, false);
+        account_matmul(&mut acc.activity, &cfg, qkt, &t_qkt, &sched, &dyn_plan, false, false);
 
         // --- softmax pipelined with QK^T read-out -----------------------
         let sm = find(&grp, "softmax").expect("softmax");
@@ -58,22 +61,21 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         let rw_pv = t_pv.rewrite_cycles(&cfg);
         let (_, rw_pv_end) = acc.write_ports[TBR].acquire(vg_end, rw_pv, "V-rewrite");
         exposed_total += rw_pv_end.saturating_sub(vg_end.max(sm_end)).min(rw_pv);
-        let comp_pv = t_pv.compute_cycles(cfg.macros_per_core);
+        let comp_pv = t_pv.compute_cycles(dyn_plan.active);
         let (_, pv_end) = acc.cores[TBR].acquire(rw_pv_end.max(sm_end), comp_pv, "pv");
-        let replay_pv = t_pv.replay_factor(cfg.macros_per_core);
-        account_matmul(&mut acc.activity, pv, &t_pv, replay_pv, false, false);
+        account_matmul(&mut acc.activity, &cfg, pv, &t_pv, &sched, &dyn_plan, false, false);
 
         // --- projection + FFN (static weights, preloaded) ----------------
         let oproj = find(&grp, "o_proj").expect("o_proj");
-        let (_, op_end, _) = exec_static_preloaded(acc, oproj, pv_end, placement(oproj));
+        let (_, op_end, _) = exec_static_preloaded(acc, oproj, pv_end, placement(oproj), &sched);
         let ln1 = find(&grp, "ln1").expect("ln1");
         let (_, ln1_end) = exec_sfu(acc, ln1, op_end);
         let ffn1 = find(&grp, "ffn1").expect("ffn1");
-        let (_, f1_end, _) = exec_static_preloaded(acc, ffn1, ln1_end, placement(ffn1));
+        let (_, f1_end, _) = exec_static_preloaded(acc, ffn1, ln1_end, placement(ffn1), &sched);
         let gelu = find(&grp, "gelu").expect("gelu");
         let (_, g_end) = exec_sfu(acc, gelu, f1_end);
         let ffn2 = find(&grp, "ffn2").expect("ffn2");
-        let (_, f2_end, _) = exec_static_preloaded(acc, ffn2, g_end, placement(ffn2));
+        let (_, f2_end, _) = exec_static_preloaded(acc, ffn2, g_end, placement(ffn2), &sched);
         let ln2 = find(&grp, "ln2").expect("ln2");
         let (_, stream_end) = exec_sfu(acc, ln2, f2_end);
 

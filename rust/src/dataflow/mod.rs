@@ -18,6 +18,7 @@ pub mod layer_stream;
 pub mod non_stream;
 pub mod tile_stream;
 
+use crate::cim::{ModeSchedule, OpPlan};
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::metrics::RunReport;
 use crate::model::{build_graph, Layer, Op, OpGraph};
@@ -88,22 +89,28 @@ pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunRep
 // Shared accounting + scheduling helpers used by the three dataflows.
 // ---------------------------------------------------------------------------
 
-/// Record the energy-relevant traffic of one matmul execution.
+/// Record the energy-relevant traffic and macro occupancy of one matmul
+/// execution.  The replay factor and the intra-macro occupancy ledger
+/// both come from the [`ModeSchedule`]/[`OpPlan`] (the `cim` subsystem
+/// is the only place that knows what each macro mode costs), so the
+/// analytic and event backends — which share this function — agree
+/// exactly on every Activity counter.
 ///
 /// * `static_weights`: stationary operand fetched from off-chip (weights);
 ///   dynamic operands travel over the TBSN from the producing core.
-/// * `replay_passes`: how many times the moving operand is re-streamed
-///   (blocked weight-stationary execution replays activations per pass).
 /// * `roundtrip`: Non-stream round-trips moving operand and result through
 ///   off-chip DRAM.
 pub(crate) fn account_matmul(
     a: &mut Activity,
+    cfg: &AccelConfig,
     op: &Op,
     t: &OpTiling,
-    replay_passes: u64,
+    sched: &ModeSchedule,
+    plan: &OpPlan,
     static_weights: bool,
     roundtrip: bool,
 ) {
+    let replay = sched.replay(t, plan);
     a.macs += op.macs();
     a.cim_write_bits += t.stationary_bits();
     if static_weights {
@@ -111,8 +118,8 @@ pub(crate) fn account_matmul(
     } else {
         a.tbsn_bits += t.stationary_bits();
     }
-    a.tbsn_bits += t.moving_bits() * replay_passes.max(1);
-    a.buffer_bits += t.moving_bits() * replay_passes.max(1) + t.output_bits();
+    a.tbsn_bits += t.moving_bits() * replay.max(1);
+    a.buffer_bits += t.moving_bits() * replay.max(1) + t.output_bits();
     if roundtrip {
         a.offchip_bits += t.moving_bits() + t.output_bits();
         if !static_weights {
@@ -120,6 +127,13 @@ pub(crate) fn account_matmul(
             a.offchip_bits += t.stationary_bits();
         }
     }
+    a.occupancy.add(&crate::cim::OccupancyLedger::account(
+        &cfg.geometry(),
+        t,
+        plan,
+        replay,
+        cfg.row_write_cycles(t.cols_per_tile, t.bits),
+    ));
 }
 
 /// Execute a static-weight matmul whose rewrite is *preloaded* (overlapped
@@ -132,15 +146,20 @@ pub(crate) fn exec_static_preloaded(
     op: &Op,
     earliest: u64,
     place: Placement,
+    sched: &ModeSchedule,
 ) -> (u64, u64, u64) {
     // geometry fields are Copy; read them out before taking &mut borrows
     let cfg = &acc.cfg;
     let t = OpTiling::of(cfg, op);
-    let (macros, cores): (u64, Vec<usize>) = match place {
+    let (granted, cores): (u64, Vec<usize>) = match place {
         Placement::Core(c) => (cfg.macros_per_core, vec![c]),
         Placement::AllCores => (cfg.macros_per_core * cfg.cores, (0..cfg.cores as usize).collect()),
     };
+    // the mode schedule decides how many of the granted macros a
+    // static op can actually fill (forced-hybrid halves them)
+    let plan = sched.static_plan(granted);
     let rewrite = t.rewrite_cycles(cfg) / cores.len() as u64;
+    let compute = t.compute_cycles(plan.active);
     // Preload: ports may start before `earliest`.
     let preload_from = earliest.saturating_sub(rewrite);
     let mut ports_done = 0;
@@ -148,7 +167,6 @@ pub(crate) fn exec_static_preloaded(
         let (_, e) = acc.write_ports[c].acquire(preload_from, rewrite, "preload");
         ports_done = ports_done.max(e);
     }
-    let compute = t.compute_cycles(macros);
     let per_core = compute; // each core runs its share of passes in lockstep
     let start_at = earliest.max(ports_done);
     let mut end = 0;
@@ -159,20 +177,8 @@ pub(crate) fn exec_static_preloaded(
         end = end.max(e);
     }
     let exposed = ports_done.saturating_sub(earliest);
-    account_matmul(&mut acc.activity, op, &t, t.replay_factor(macros), true, false);
+    account_matmul(&mut acc.activity, &acc.cfg, op, &t, sched, &plan, true, false);
     (start, end, exposed)
-}
-
-/// Macros a dynamic matmul can use under tile streaming: hybrid-mode
-/// TBR-CIM macros hold both operand tiles; without hybrid mode half the
-/// macros are lost to staging conflicts.  Shared by the analytic
-/// tile-stream scheduler and the event engine's schedule lowering.
-pub fn dynamic_macros(cfg: &AccelConfig) -> u64 {
-    if cfg.features.hybrid_mode {
-        cfg.macros_per_core
-    } else {
-        (cfg.macros_per_core / 2).max(1)
-    }
 }
 
 /// SFU op execution helper.
@@ -269,12 +275,17 @@ mod tests {
             bits: 16,
         };
         let t = OpTiling::of(&cfg, &op);
+        let sched = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+        let plan = sched.dynamic_plan();
         let mut a1 = Accelerator::new(cfg.clone());
-        account_matmul(&mut a1.activity, &op, &t, 1, false, false);
-        let mut a2 = Accelerator::new(cfg);
-        account_matmul(&mut a2.activity, &op, &t, 1, false, true);
+        account_matmul(&mut a1.activity, &cfg, &op, &t, &sched, &plan, false, false);
+        let mut a2 = Accelerator::new(cfg.clone());
+        account_matmul(&mut a2.activity, &cfg, &op, &t, &sched, &plan, false, true);
         assert!(a2.activity.offchip_bits > a1.activity.offchip_bits);
         assert_eq!(a1.activity.macs, a2.activity.macs);
+        // both record the same macro occupancy (traffic differs only)
+        assert_eq!(a1.activity.occupancy, a2.activity.occupancy);
+        assert!(a1.activity.occupancy.used_cell_cycles > 0);
     }
 
     #[test]
@@ -283,15 +294,18 @@ mod tests {
         let model = presets::vilbert_base();
         let g = build_graph(&model);
         let op = find(&g.layers[0].ops.iter().collect::<Vec<_>>(), "q_gen").unwrap();
+        let sched = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
         let mut acc = Accelerator::new(cfg);
         // Plenty of lead time: rewrite fully hidden.
         let t = OpTiling::of(&acc.cfg.clone(), op);
         let lead = t.rewrite_cycles(&acc.cfg) + 100;
-        let (_, _, exposed) = exec_static_preloaded(&mut acc, op, lead, Placement::Core(QCIM));
+        let (_, _, exposed) =
+            exec_static_preloaded(&mut acc, op, lead, Placement::Core(QCIM), &sched);
         assert_eq!(exposed, 0);
         // No lead time on a fresh accelerator: partially exposed.
         let mut acc2 = Accelerator::new(presets::streamdcim_default());
-        let (_, _, exposed2) = exec_static_preloaded(&mut acc2, op, 0, Placement::Core(QCIM));
+        let (_, _, exposed2) =
+            exec_static_preloaded(&mut acc2, op, 0, Placement::Core(QCIM), &sched);
         assert!(exposed2 > 0);
     }
 }

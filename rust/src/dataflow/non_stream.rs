@@ -10,6 +10,8 @@
 //! behind.  Softmax/layernorm/GELU run fused on the SFU as results stream
 //! out of the macros (even conventional macros do this much on-chip).
 
+use crate::cim::ModeSchedule;
+use crate::config::DataflowKind;
 use crate::metrics::LayerStats;
 use crate::model::{Layer, OpKind};
 use crate::sim::{Accelerator, OpTiling};
@@ -18,6 +20,7 @@ use super::account_matmul;
 
 pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
     let cfg = acc.cfg.clone();
+    let sched = ModeSchedule::derive(DataflowKind::NonStream, &cfg);
     let start = acc.makespan();
     let mut chain = start;
     let mut exposed = 0;
@@ -60,8 +63,11 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
                     acc.offchip.acquire(c_end, cfg.offchip_cycles(out_bits), "dma-out");
                 chain = dma_out;
                 // stationary operands always arrive from off-chip here
-                // (weights and parked intermediates alike)
-                account_matmul(&mut acc.activity, op, &t, t.replay_factor(all_macros), true, false);
+                // (weights and parked intermediates alike); non-stream
+                // has ONE plan for both op classes — all macros, fully
+                // exposed rewrite — so no per-kind branch
+                let plan = sched.static_plan(all_macros);
+                account_matmul(&mut acc.activity, &cfg, op, &t, &sched, &plan, true, false);
                 // plus the moving operand and result round-trips
                 acc.activity.offchip_bits +=
                     in_bits.saturating_sub(t.stationary_bits()) + out_bits;

@@ -17,18 +17,22 @@
 //!    timeline here.
 //!
 //! Ablations: `features.pingpong = false` serializes rewrites with compute
-//! (per-pass, still tile-granular); `features.hybrid_mode = false` halves
-//! the macros usable by dynamic matmuls (staging conflicts between the
-//! input and weight operands) and restores per-pass replay traffic.
+//! (per-pass, still tile-granular); `features.mode_policy = ForcedNormal`
+//! halves the macros usable by dynamic matmuls (staging conflicts between
+//! the input and weight operands) and restores per-pass replay traffic;
+//! `ForcedHybrid` halves the stationary capacity static weights can fill.
+//! All of that is encoded once in [`crate::cim::ModeSchedule`] and
+//! consumed identically here and by the event engine.
 
+use crate::cim::ModeSchedule;
+use crate::config::DataflowKind;
 use crate::metrics::LayerStats;
 use crate::model::{Layer, Op};
 use crate::sim::accel::TBR;
 use crate::sim::{Accelerator, OpTiling};
 
 use super::{
-    account_matmul, dynamic_macros, exec_rank, exec_sfu, exec_static_preloaded, find,
-    ops_by_stream, placement,
+    account_matmul, exec_rank, exec_sfu, exec_static_preloaded, find, ops_by_stream, placement,
 };
 
 /// Schedule one dynamic matmul tile-by-tile with the ping-pong pipeline.
@@ -43,12 +47,15 @@ fn exec_dynamic_pingpong(
     moving_ready: u64,
     stat_start: u64,
     stat_end: u64,
+    sched: &ModeSchedule,
 ) -> (u64, u64, u64) {
     let cfg = &acc.cfg;
     let t = OpTiling::of(cfg, op);
-    let hybrid = cfg.features.hybrid_mode;
-    let pingpong = cfg.features.pingpong;
-    let macros = dynamic_macros(cfg);
+    let plan = sched.dynamic_plan();
+    // timing branches on the plan's exposure, the same source the
+    // occupancy ledger uses — never on the raw feature bool
+    let pingpong = plan.exposure == crate::cim::RewriteExposure::PingPong;
+    let macros = plan.active;
     let passes = t.passes(macros);
     let comp_pass = t.m; // one row per cycle per pass
 
@@ -88,13 +95,13 @@ fn exec_dynamic_pingpong(
         prev_end = ce;
     }
     // cross-forwarding reuse: both operands stationary in hybrid macros,
-    // so the moving operand streams exactly once
-    let replay = if hybrid { 1 } else { t.replay_factor(macros) };
-    account_matmul(&mut acc.activity, op, &t, replay, false, false);
+    // so the moving operand streams exactly once (sched.replay)
+    account_matmul(&mut acc.activity, &acc.cfg, op, &t, sched, &plan, false, false);
     (first_start.min(prev_end), prev_end, exposed)
 }
 
 pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
+    let sched = ModeSchedule::derive(DataflowKind::TileStream, &acc.cfg);
     let start = acc.makespan();
     let mut exposed_total = 0;
     let mut layer_end = start;
@@ -106,16 +113,16 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         let v = find(&grp, "v_gen").expect("v_gen");
         // static preload queueing is not "exposed rewrite" (see
         // layer_stream.rs — the metric tracks dynamic-rewrite bubbles)
-        let (qg_start, _qg_end, _) = exec_static_preloaded(acc, q, start, placement(q));
-        let (kg_start, kg_end, _) = exec_static_preloaded(acc, k, start, placement(k));
-        let (vg_start, vg_end, _) = exec_static_preloaded(acc, v, start, placement(v));
+        let (qg_start, _qg_end, _) = exec_static_preloaded(acc, q, start, placement(q), &sched);
+        let (kg_start, kg_end, _) = exec_static_preloaded(acc, k, start, placement(k), &sched);
+        let (vg_start, vg_end, _) = exec_static_preloaded(acc, v, start, placement(v), &sched);
 
         // --- QK^T with cross-forwarding + ping-pong ---------------------
         // Q rows stream as generated; K^T tiles land in hybrid macros as
         // K-CIM produces them.
         let qkt = find(&grp, "qkt").expect("qkt");
         let (qkt_start, qkt_end, e4) =
-            exec_dynamic_pingpong(acc, qkt, qg_start + 1, kg_start, kg_end);
+            exec_dynamic_pingpong(acc, qkt, qg_start + 1, kg_start, kg_end, &sched);
         exposed_total += e4;
 
         // softmax pipelined with QK^T row read-out
@@ -128,20 +135,20 @@ pub fn run_layer(acc: &mut Accelerator, layer: &Layer) -> LayerStats {
         //     from the SFU (tile decoupling lets PV start with the first
         //     P rows, modelled via sm pipelining above) ------------------
         let pv = find(&grp, "pv").expect("pv");
-        let (_, pv_end, e5) = exec_dynamic_pingpong(acc, pv, sm_end, vg_start, vg_end);
+        let (_, pv_end, e5) = exec_dynamic_pingpong(acc, pv, sm_end, vg_start, vg_end, &sched);
         exposed_total += e5;
 
         // --- projection + FFN (static, preloaded, all cores) ------------
         let oproj = find(&grp, "o_proj").expect("o_proj");
-        let (_, op_end, _) = exec_static_preloaded(acc, oproj, pv_end, placement(oproj));
+        let (_, op_end, _) = exec_static_preloaded(acc, oproj, pv_end, placement(oproj), &sched);
         let ln1 = find(&grp, "ln1").expect("ln1");
         let (_, ln1_end) = exec_sfu(acc, ln1, op_end);
         let ffn1 = find(&grp, "ffn1").expect("ffn1");
-        let (_, f1_end, _) = exec_static_preloaded(acc, ffn1, ln1_end, placement(ffn1));
+        let (_, f1_end, _) = exec_static_preloaded(acc, ffn1, ln1_end, placement(ffn1), &sched);
         let gelu = find(&grp, "gelu").expect("gelu");
         let (_, g_end) = exec_sfu(acc, gelu, f1_end);
         let ffn2 = find(&grp, "ffn2").expect("ffn2");
-        let (_, f2_end, _) = exec_static_preloaded(acc, ffn2, g_end, placement(ffn2));
+        let (_, f2_end, _) = exec_static_preloaded(acc, ffn2, g_end, placement(ffn2), &sched);
         let ln2 = find(&grp, "ln2").expect("ln2");
         let (_, mut stream_end) = exec_sfu(acc, ln2, f2_end);
 
@@ -225,7 +232,8 @@ mod tests {
         let g = build_graph(&model);
         let cfg_on = presets::streamdcim_default();
         let mut cfg_off = presets::streamdcim_default();
-        cfg_off.features = Features { hybrid_mode: false, ..Features::default() };
+        cfg_off.features =
+            Features { mode_policy: crate::cim::ModePolicy::ForcedNormal, ..Features::default() };
         let mut on = Accelerator::new(cfg_on);
         let mut off = Accelerator::new(cfg_off);
         let mut t_on = 0;

@@ -7,7 +7,8 @@
 //! published 28nm digital-CIM floorplans (TranCIM, MulTCIM).  The *shape*
 //! of the breakdown is the reproducible claim, not the third decimal.
 
-use crate::config::AccelConfig;
+use crate::cim::ModeSchedule;
+use crate::config::{AccelConfig, DataflowKind};
 
 /// 28nm area constants (mm^2).
 #[derive(Debug, Clone)]
@@ -16,7 +17,10 @@ pub struct AreaModel {
     /// accumulator + dual-mode reconfiguration muxing).
     pub macro_mm2: f64,
     /// Extra per-macro overhead for the hybrid reconfigurable mode
-    /// (dual-mode sub-array adder trees) — TBR-CIM core only.
+    /// (dual-mode sub-array adder trees).  Which macros pay it comes
+    /// from the mode schedule, not a constant: the paper's `auto`
+    /// policy equips only the TBR group, `forced-hybrid` all macros,
+    /// and a no-hybrid design drops the dual-mode trees entirely.
     pub hybrid_overhead_mm2: f64,
     /// SRAM buffer, per KB.
     pub sram_mm2_per_kb: f64,
@@ -43,14 +47,17 @@ impl Default for AreaModel {
 }
 
 impl AreaModel {
-    /// (module name, area mm^2) breakdown for a config.
+    /// (module name, area mm^2) breakdown for a config.  The hybrid
+    /// overhead is priced per hybrid-capable macro as derived from the
+    /// tile-stream mode schedule of this config.
     pub fn breakdown(&self, cfg: &AccelConfig) -> Vec<(String, f64)> {
         let macros = cfg.total_macros() as f64;
-        let tbr_macros = cfg.macros_per_core as f64; // hybrid-capable core
+        let hybrid_macros =
+            ModeSchedule::derive(DataflowKind::TileStream, cfg).hybrid_capable_macros() as f64;
         let buf_kb = (cfg.input_buf_kb + cfg.weight_buf_kb + cfg.output_buf_kb) as f64;
         vec![
             ("CIM macros".to_string(), macros * self.macro_mm2),
-            ("Hybrid reconfig (TBR)".to_string(), tbr_macros * self.hybrid_overhead_mm2),
+            ("Hybrid reconfig (TBR)".to_string(), hybrid_macros * self.hybrid_overhead_mm2),
             ("Buffers (192 KB)".to_string(), buf_kb * self.sram_mm2_per_kb),
             ("TBSN + scheduler".to_string(), self.tbsn_mm2),
             ("SFU".to_string(), self.sfu_mm2),
@@ -100,5 +107,31 @@ mod tests {
         for (name, a) in AreaModel::default().breakdown(&cfg) {
             assert!(a > 0.0, "{name} has non-positive area");
         }
+    }
+
+    #[test]
+    fn hybrid_overhead_priced_from_mode_schedule() {
+        use crate::cim::ModePolicy;
+        let auto = presets::streamdcim_default();
+        let mut none = presets::streamdcim_default();
+        none.features.mode_policy = ModePolicy::ForcedNormal;
+        let mut all = presets::streamdcim_default();
+        all.features.mode_policy = ModePolicy::ForcedHybrid;
+        let m = AreaModel::default();
+        // no-hybrid silicon drops the dual-mode trees; forced-hybrid
+        // equips every macro, not just the TBR group
+        assert!(m.total_mm2(&none) < m.total_mm2(&auto));
+        assert!(m.total_mm2(&all) > m.total_mm2(&auto));
+        let overhead = |cfg: &crate::config::AccelConfig| {
+            m.breakdown(cfg)
+                .iter()
+                .find(|(n, _)| n.starts_with("Hybrid"))
+                .map(|(_, a)| *a)
+                .unwrap()
+        };
+        assert_eq!(overhead(&none), 0.0);
+        let per_macro = AreaModel::default().hybrid_overhead_mm2;
+        assert!((overhead(&auto) - auto.macros_per_core as f64 * per_macro).abs() < 1e-12);
+        assert!((overhead(&all) - all.total_macros() as f64 * per_macro).abs() < 1e-12);
     }
 }

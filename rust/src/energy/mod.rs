@@ -129,6 +129,7 @@ mod tests {
             tbsn_bits: 50,
             sfu_ops: 10,
             dtpu_ops: 5,
+            ..Default::default()
         };
         let e = EnergyBreakdown::compute(&cfg, &a, 100);
         let sum: f64 = e.components().iter().map(|(_, v)| v).sum();

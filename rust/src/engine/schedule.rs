@@ -31,6 +31,7 @@
 //! both backends agree *exactly* on total work (MACs, rewrite bits,
 //! traffic) and differ only in timing.
 
+use crate::cim::ModeSchedule;
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::dataflow::{self, Placement};
 use crate::model::{Layer, Op, OpKind};
@@ -131,12 +132,12 @@ impl TileSchedule {
         layout::dtpu(self.n_cores)
     }
 
-    /// Names match the analytic `Accelerator`'s timelines.
+    /// Names match the analytic `Accelerator`'s timelines (the shared
+    /// `sim::accel::core_name` covers `cores > 3` configs too).
     pub fn resource_name(&self, r: usize) -> String {
-        const CORE_NAMES: [&str; 3] = ["Q-CIM", "K-CIM", "TBR-CIM"];
         let n = self.n_cores;
         if r < n {
-            CORE_NAMES.get(r).map(|s| s.to_string()).unwrap_or_else(|| format!("core{r}"))
+            crate::sim::accel::core_name(r)
         } else if r < 2 * n {
             format!("wport{}", r - n)
         } else if r == self.offchip_res() {
@@ -156,6 +157,7 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
     let graph = dataflow::graph_for(kind, cfg, model);
     let mut b = Builder {
         cfg: cfg.clone(),
+        sched: ModeSchedule::derive(kind, cfg),
         n_cores: cfg.cores as usize,
         tasks: Vec::new(),
         activity: Activity::default(),
@@ -194,6 +196,9 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
 
 struct Builder {
     cfg: AccelConfig,
+    /// The dataflow's macro operating schedule — the same one the
+    /// analytic backend derives, so both agree on modes and occupancy.
+    sched: ModeSchedule,
     n_cores: usize,
     tasks: Vec<Task>,
     activity: Activity,
@@ -256,13 +261,15 @@ impl Builder {
     /// Returns the compute task ids (one per participating core).
     fn static_preloaded(&mut self, op: &Op, data_deps: &[usize], layer: usize) -> Vec<usize> {
         let cfg = self.cfg.clone();
+        let sched = self.sched;
         let t = OpTiling::of(&cfg, op);
-        let (macros, cores): (u64, Vec<usize>) = match dataflow::placement(op) {
+        let (granted, cores): (u64, Vec<usize>) = match dataflow::placement(op) {
             Placement::Core(c) => (cfg.macros_per_core, vec![c]),
             Placement::AllCores => {
                 (cfg.macros_per_core * cfg.cores, (0..self.n_cores).collect())
             }
         };
+        let plan = sched.static_plan(granted);
         let rewrite = t.rewrite_cycles(&cfg) / cores.len() as u64;
         let rw_ids: Vec<usize> = cores
             .iter()
@@ -271,7 +278,7 @@ impl Builder {
                 self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer)
             })
             .collect();
-        let comp = t.compute_cycles(macros);
+        let comp = t.compute_cycles(plan.active);
         let comp_ids: Vec<usize> = cores
             .iter()
             .map(|&c| {
@@ -281,7 +288,7 @@ impl Builder {
                 self.push(cr, comp, deps, TaskClass::Compute, "compute", layer)
             })
             .collect();
-        dataflow::account_matmul(&mut self.activity, op, &t, t.replay_factor(macros), true, false);
+        dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, true, false);
         comp_ids
     }
 
@@ -297,15 +304,17 @@ impl Builder {
         layer: usize,
     ) -> Vec<usize> {
         let cfg = self.cfg.clone();
+        let sched = self.sched;
         let t = OpTiling::of(&cfg, op);
         let c = match dataflow::placement(op) {
             Placement::Core(c) => c,
             Placement::AllCores => return self.static_preloaded(op, data_deps, layer),
         };
+        let plan = sched.static_plan(cfg.macros_per_core);
         let wp = self.wport(c);
         let rewrite = t.rewrite_cycles(&cfg);
         let rw = self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer);
-        let comp = t.compute_cycles(cfg.macros_per_core);
+        let comp = t.compute_cycles(plan.active);
         let chunks = chunks.max(1);
         let cr = self.core(c);
         let mut ids = Vec::with_capacity(chunks as usize);
@@ -322,14 +331,7 @@ impl Builder {
             ids.push(id);
             prev = Some(id);
         }
-        dataflow::account_matmul(
-            &mut self.activity,
-            op,
-            &t,
-            t.replay_factor(cfg.macros_per_core),
-            true,
-            false,
-        );
+        dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, true, false);
         ids
     }
 
@@ -346,8 +348,9 @@ impl Builder {
         tag: &'static str,
     ) -> Vec<usize> {
         let cfg = self.cfg.clone();
+        let sched = self.sched;
         let t = OpTiling::of(&cfg, op);
-        let mpc = cfg.macros_per_core;
+        let plan = sched.dynamic_plan();
         let wp = self.wport(TBR);
         let rw_tag = if tag == "qkt" { "K-rewrite" } else { "V-rewrite" };
         let rw = self.push(
@@ -359,7 +362,7 @@ impl Builder {
             layer,
         );
         let cr = self.core(TBR);
-        let passes = t.passes(mpc);
+        let passes = t.passes(plan.active);
         let mut comps: Vec<usize> = Vec::with_capacity(passes as usize);
         for p in 0..passes {
             let mut deps = vec![rw];
@@ -369,7 +372,7 @@ impl Builder {
             }
             comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
         }
-        dataflow::account_matmul(&mut self.activity, op, &t, t.replay_factor(mpc), false, false);
+        dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, false, false);
         comps
     }
 
@@ -387,9 +390,12 @@ impl Builder {
         tag: &'static str,
     ) -> Vec<usize> {
         let cfg = self.cfg.clone();
+        let sched = self.sched;
         let t = OpTiling::of(&cfg, op);
-        let macros = dataflow::dynamic_macros(&cfg);
-        let pingpong = cfg.features.pingpong;
+        let plan = sched.dynamic_plan();
+        let macros = plan.active;
+        // same exposure source as the occupancy ledger (cim::OpPlan)
+        let pingpong = plan.exposure == crate::cim::RewriteExposure::PingPong;
         let passes = t.passes(macros);
         let cr = self.core(TBR);
         let wp = self.wport(TBR);
@@ -412,8 +418,7 @@ impl Builder {
             deps.extend_from_slice(moving_every_pass);
             comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
         }
-        let replay = if cfg.features.hybrid_mode { 1 } else { t.replay_factor(macros) };
-        dataflow::account_matmul(&mut self.activity, op, &t, replay, false, false);
+        dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, false, false);
         comps
     }
 
@@ -421,6 +426,7 @@ impl Builder {
     /// serial chain (DMA-in, rewrite, compute, DMA-out).
     fn layer_non(&mut self, layer: &Layer, entry: &[usize]) -> Vec<usize> {
         let cfg = self.cfg.clone();
+        let sched = self.sched;
         let all_macros = cfg.total_macros();
         let n_cores = self.n_cores;
         let off = self.offchip();
@@ -469,11 +475,17 @@ impl Builder {
                         layer.index,
                     );
                     chain = vec![dma_out];
+                    // non-stream has ONE plan for both op classes (all
+                    // macros, fully exposed rewrite) — mirror of
+                    // dataflow::non_stream's accounting
+                    let plan = sched.static_plan(all_macros);
                     dataflow::account_matmul(
                         &mut self.activity,
+                        &cfg,
                         op,
                         &t,
-                        t.replay_factor(all_macros),
+                        &sched,
+                        &plan,
                         true,
                         false,
                     );
@@ -497,7 +509,7 @@ impl Builder {
     /// matmuls (ping-pong) vs layer-granular ones.
     fn layer_streaming(&mut self, layer: &Layer, entry: &[usize], tile: bool) -> Vec<usize> {
         let cfg = self.cfg.clone();
-        let macros = dataflow::dynamic_macros(&cfg);
+        let macros = self.sched.dynamic_plan().active;
         let mut outs: Vec<usize> = Vec::new();
         for grp in dataflow::ops_by_stream(layer) {
             let li = layer.index;
@@ -636,5 +648,28 @@ mod tests {
         assert_eq!(s.resource_name(s.offchip_res()), "offchip");
         assert_eq!(s.resource_name(s.sfu_res()), "sfu");
         assert_eq!(s.resource_name(s.dtpu_res()), "dtpu");
+    }
+
+    #[test]
+    fn extra_cores_get_stable_names_and_still_simulate() {
+        // cores > 3: names come from the shared sim::accel::core_name,
+        // matching what the analytic Accelerator would report
+        let mut cfg = presets::streamdcim_default();
+        cfg.cores = 5;
+        for kind in DataflowKind::ALL {
+            let s = build(kind, &cfg, &presets::tiny_smoke());
+            assert_eq!(s.n_cores, 5);
+            assert_eq!(s.resource_name(0), "Q-CIM");
+            assert_eq!(s.resource_name(2), "TBR-CIM");
+            assert_eq!(s.resource_name(3), "core3");
+            assert_eq!(s.resource_name(4), "core4");
+            assert_eq!(s.resource_name(s.wport_res(4)), "wport4");
+            let acc = crate::sim::Accelerator::new(cfg.clone());
+            for c in 0..5 {
+                assert_eq!(s.resource_name(c), acc.cores[c].name, "{kind:?} core {c}");
+            }
+            let r = crate::engine::event::simulate(&s);
+            assert!(r.makespan > 0, "{kind:?} must simulate with 5 cores");
+        }
     }
 }

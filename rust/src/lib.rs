@@ -29,6 +29,7 @@
 #![allow(clippy::style, clippy::complexity)]
 
 pub mod benchkit;
+pub mod cim;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

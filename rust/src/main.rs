@@ -356,7 +356,8 @@ fn cmd_report(args: &Args) -> Result<()> {
         "headline" => report::headline(&both()),
         "e5" => e5_report(&accel),
         "serving" => report::serving(&accel),
-        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5|serving)"),
+        "utilization" | "util" => report::utilization(&both()),
+        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5|serving|utilization)"),
     };
     println!("{}\n{}", fig.title, fig.body);
     Ok(())

@@ -162,6 +162,14 @@ impl RunReport {
         self.per_layer.iter().map(|l| l.exposed_rewrite).sum()
     }
 
+    /// Intra-macro CIM utilization in [0, 1]: useful MAC cell-cycles
+    /// over the cell-cycles the schedule reserved on the macro groups
+    /// (`cim::OccupancyLedger`).  Schedule-derived, so analytic and
+    /// event backends report the identical value.
+    pub fn intra_macro_utilization(&self) -> f64 {
+        self.activity.occupancy.utilization()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("model", Json::str(self.model.clone())),
@@ -174,6 +182,12 @@ impl RunReport {
             ("offchip_bits", Json::num(self.activity.offchip_bits as f64)),
             ("cim_write_bits", Json::num(self.activity.cim_write_bits as f64)),
             ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite() as f64)),
+            ("intra_macro_utilization", Json::num(self.intra_macro_utilization())),
+            (
+                "partial_tile_waste_cells",
+                Json::num(self.activity.occupancy.partial_tile_waste_cells as f64),
+            ),
+            ("replay_bits", Json::num(self.activity.occupancy.replay_bits as f64)),
             (
                 "utilization",
                 Json::obj(
@@ -250,6 +264,7 @@ mod tests {
         assert!(r.ms > 0.0);
         let j = r.to_json().to_string_pretty();
         assert!(j.contains("Tile-stream"));
+        assert!(j.contains("intra_macro_utilization"));
         assert!(crate::util::json::Json::parse(&j).is_ok());
     }
 }

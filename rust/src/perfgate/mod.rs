@@ -32,11 +32,13 @@ pub struct GateEntry {
 }
 
 /// Deterministic cycle counts for the smoke matrix (tiny-smoke preset,
-/// all dataflows and ablations) under both simulation backends, plus a
-/// serving-throughput scenario per backend x dataflow: the fabric's
-/// makespan over a fixed small arrival trace, so regressions anywhere
-/// on the request path (admission, batching, routing, pricing) trip the
-/// gate too.
+/// all dataflows and ablations) under both simulation backends, plus
+/// two utilization-sensitive scenarios (the ragged-edge preset, whose
+/// odd k/n defy the macro geometry — gating the exact final-partial-pass
+/// rewrite clamp and the occupancy path), plus a serving-throughput
+/// scenario per backend x dataflow: the fabric's makespan over a fixed
+/// small arrival trace, so regressions anywhere on the request path
+/// (admission, batching, routing, pricing) trip the gate too.
 pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
     let accel = presets::streamdcim_default();
     let models = vec![presets::tiny_smoke()];
@@ -48,6 +50,18 @@ pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
             out.push(GateEntry {
                 id: format!("{}::{}", backend.slug(), row.result.id),
                 cycles: row.result.report.cycles,
+            });
+        }
+    }
+    for backend in [Backend::Analytic, Backend::Event] {
+        for dataflow in [DataflowKind::TileStream, DataflowKind::LayerStream] {
+            let s =
+                sweep::Scenario::new(accel.clone(), presets::ragged_edge(), dataflow, "full")
+                    .with_backend(backend);
+            let r = s.run();
+            out.push(GateEntry {
+                id: format!("{}::{}", backend.slug(), r.id),
+                cycles: r.report.cycles,
             });
         }
     }
@@ -333,7 +347,15 @@ mod tests {
         let a = smoke_entries(1);
         let b = smoke_entries(2);
         assert_eq!(a, b);
-        assert!(a.len() >= 22, "run scenarios + 6 serving scenarios, got {}", a.len());
+        assert!(a.len() >= 26, "run + ragged + serving scenarios, got {}", a.len());
+        // the utilization-sensitive ragged-geometry scenarios are gated
+        // under both backends
+        let ragged: Vec<&str> = a
+            .iter()
+            .map(|e| e.id.as_str())
+            .filter(|id| id.contains("ragged-edge"))
+            .collect();
+        assert_eq!(ragged.len(), 4, "2 backends x 2 dataflows: {ragged:?}");
         // every entry is backend-qualified and unique
         let ids: std::collections::BTreeSet<&str> =
             a.iter().map(|e| e.id.as_str()).collect();

@@ -34,6 +34,10 @@ pub struct BatchCost {
     /// Rewrite-hidden ratio of the underlying run; `None` for the
     /// analytic backend, which cannot observe overlap.
     pub rewrite_hidden: Option<f64>,
+    /// Intra-macro CIM utilization of the underlying run in [0, 1]
+    /// (`cim::OccupancyLedger`).  Schedule-derived, so both backends
+    /// report it.
+    pub intra_macro_utilization: f64,
 }
 
 impl BatchCost {
@@ -83,6 +87,7 @@ impl CostModel {
                     per_extra: first - fill,
                     energy_mj: run.report.energy.total_mj(),
                     rewrite_hidden: Some(run.trace.rewrite_hidden_ratio()),
+                    intra_macro_utilization: run.report.intra_macro_utilization(),
                 }
             }
             Backend::Analytic => {
@@ -92,6 +97,7 @@ impl CostModel {
                     per_extra: report.cycles,
                     energy_mj: report.energy.total_mj(),
                     rewrite_hidden: None,
+                    intra_macro_utilization: report.intra_macro_utilization(),
                 }
             }
         };
@@ -137,6 +143,23 @@ mod tests {
         assert_eq!(c.per_extra, c.first);
         assert!(c.rewrite_hidden.is_none());
         assert!(c.energy_mj > 0.0);
+        // the analytic backend still prices macro occupancy
+        assert!(c.intra_macro_utilization > 0.0 && c.intra_macro_utilization <= 1.0);
+    }
+
+    #[test]
+    fn both_backends_price_identical_utilization() {
+        // the occupancy ledger is schedule-derived, never timing-derived
+        let accel = presets::streamdcim_default();
+        let model = presets::tiny_smoke();
+        for df in [DataflowKind::TileStream, DataflowKind::NonStream] {
+            let a = CostModel::new(accel.clone(), df, Backend::Analytic).cost(&model);
+            let e = CostModel::new(accel.clone(), df, Backend::Event).cost(&model);
+            assert_eq!(
+                a.intra_macro_utilization, e.intra_macro_utilization,
+                "{df:?}: backends disagree on utilization"
+            );
+        }
     }
 
     #[test]

@@ -161,6 +161,8 @@ struct Shard {
     busy: u64,
     batches: u64,
     served: u64,
+    /// Per-request intra-macro utilization sum (ShardStats::cim_util_sum).
+    cim_util_sum: f64,
 }
 
 /// Run the closed loop: arrivals -> bounded queues -> batcher -> router
@@ -187,7 +189,7 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
     let mut queues: Vec<VecDeque<ArrivalEvent>> =
         (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
     let mut shards: Vec<Shard> = (0..n_shards)
-        .map(|_| Shard { busy_until: 0, busy: 0, batches: 0, served: 0 })
+        .map(|_| Shard { busy_until: 0, busy: 0, batches: 0, served: 0, cim_util_sum: 0.0 })
         .collect();
     let mut router = Router::new(serving.policy);
     let mut stats = ServeStats { submitted: cfg.requests, ..Default::default() };
@@ -257,6 +259,7 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
             shard.busy += cycles;
             shard.batches += 1;
             shard.served += batch.len() as u64;
+            shard.cim_util_sum += cost.intra_macro_utilization * batch.len() as f64;
             stats.batches += 1;
             stats.served += batch.len() as u64;
             last_completion = last_completion.max(end);
@@ -285,8 +288,18 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
     stats.rewrite_hidden = if hidden_n == 0 { None } else { Some(hidden_sum / hidden_n as f64) };
     stats.per_shard = shards
         .into_iter()
-        .map(|s| ShardStats { busy: s.busy, batches: s.batches, served: s.served })
+        .map(|s| ShardStats {
+            busy: s.busy,
+            batches: s.batches,
+            served: s.served,
+            cim_util_sum: s.cim_util_sum,
+        })
         .collect();
+    stats.intra_macro_utilization = if stats.served == 0 {
+        0.0
+    } else {
+        stats.per_shard.iter().map(|s| s.cim_util_sum).sum::<f64>() / stats.served as f64
+    };
 
     ServeReport {
         models: cfg.models.iter().map(|m| m.name.clone()).collect(),
@@ -389,5 +402,21 @@ mod tests {
         assert_eq!(cfg.id(), "shards2/least-loaded/tile/poisson");
         let h = rep.stats.rewrite_hidden.expect("event backend observes overlap");
         assert!((0.0..=1.0).contains(&h));
+    }
+
+    #[test]
+    fn utilization_surfaces_in_serve_stats() {
+        let cfg = base_cfg();
+        let rep = simulate(&cfg);
+        let s = &rep.stats;
+        // single-workload mix: the weighted mean equals the workload's
+        // own utilization, and every serving shard reports it
+        let u = s.intra_macro_utilization;
+        assert!(u > 0.0 && u <= 1.0, "fabric utilization {u}");
+        for sh in s.per_shard.iter().filter(|sh| sh.served > 0) {
+            assert!((sh.intra_macro_utilization() - u).abs() < 1e-9);
+        }
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("intra_macro_utilization"));
     }
 }

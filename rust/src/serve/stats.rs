@@ -13,6 +13,10 @@ pub struct ShardStats {
     pub busy: u64,
     pub batches: u64,
     pub served: u64,
+    /// Sum over served requests of their workload's intra-macro CIM
+    /// utilization (`cim::OccupancyLedger`); divide by `served` for
+    /// the shard's request-weighted mean.
+    pub cim_util_sum: f64,
 }
 
 impl ShardStats {
@@ -21,6 +25,15 @@ impl ShardStats {
             0.0
         } else {
             (self.busy as f64 / makespan as f64).min(1.0)
+        }
+    }
+
+    /// Request-weighted mean intra-macro CIM utilization of this shard.
+    pub fn intra_macro_utilization(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.cim_util_sum / self.served as f64
         }
     }
 }
@@ -52,6 +65,9 @@ pub struct ServeStats {
     /// request contributes its workload's ratio once); `None` under the
     /// analytic backend (it cannot observe overlap).
     pub rewrite_hidden: Option<f64>,
+    /// Served-request-weighted intra-macro CIM utilization across all
+    /// shards (both backends report it — schedule-derived).
+    pub intra_macro_utilization: f64,
     /// Energy of all served requests, mJ.
     pub energy_mj: f64,
 }
@@ -98,6 +114,7 @@ impl ServeStats {
                     None => Json::Null,
                 },
             ),
+            ("intra_macro_utilization", Json::num(self.intra_macro_utilization)),
             ("energy_mj", Json::num(self.energy_mj)),
             (
                 "shards",
@@ -110,6 +127,10 @@ impl ServeStats {
                                 ("batches", Json::num(s.batches as f64)),
                                 ("served", Json::num(s.served as f64)),
                                 ("utilization", Json::num(s.utilization(self.makespan))),
+                                (
+                                    "intra_macro_utilization",
+                                    Json::num(s.intra_macro_utilization()),
+                                ),
                             ])
                         })
                         .collect(),
@@ -147,13 +168,18 @@ impl ServeStats {
         if let Some(r) = self.rewrite_hidden {
             out.push_str(&format!("rewrite    : {:.1} % hidden behind compute\n", r * 100.0));
         }
+        out.push_str(&format!(
+            "cim util   : {:.1} % intra-macro (request-weighted)\n",
+            self.intra_macro_utilization * 100.0
+        ));
         out.push_str(&format!("energy     : {:.3} mJ served\n", self.energy_mj));
         for (i, s) in self.per_shard.iter().enumerate() {
             out.push_str(&format!(
-                "  shard {i}  : {:>6.1} % busy  {:>5} batches  {:>6} served\n",
+                "  shard {i}  : {:>6.1} % busy  {:>5} batches  {:>6} served  cim {:>5.1} %\n",
                 s.utilization(self.makespan) * 100.0,
                 s.batches,
-                s.served
+                s.served,
+                s.intra_macro_utilization() * 100.0
             ));
         }
         out
@@ -184,10 +210,11 @@ mod tests {
             batches: 5,
             makespan: 2_000_000,
             per_shard: vec![
-                ShardStats { busy: 1_500_000, batches: 3, served: 6 },
-                ShardStats { busy: 400_000, batches: 2, served: 4 },
+                ShardStats { busy: 1_500_000, batches: 3, served: 6, cim_util_sum: 4.2 },
+                ShardStats { busy: 400_000, batches: 2, served: 4, cim_util_sum: 2.0 },
             ],
             rewrite_hidden: Some(0.9),
+            intra_macro_utilization: 0.62,
             energy_mj: 1.25,
             ..Default::default()
         };
@@ -198,6 +225,8 @@ mod tests {
         assert!((s.mean_batch() - 2.0).abs() < 1e-12);
         assert_eq!(s.total_busy(), 1_900_000);
         assert!((s.per_shard[0].utilization(s.makespan) - 0.75).abs() < 1e-12);
+        assert!((s.per_shard[0].intra_macro_utilization() - 0.7).abs() < 1e-12);
+        assert!((s.per_shard[1].intra_macro_utilization() - 0.5).abs() < 1e-12);
         let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();
         assert_eq!(parsed.get("served").and_then(|v| v.as_u64()), Some(10));
         assert_eq!(

@@ -1,5 +1,6 @@
 //! The assembled accelerator: resource timelines + activity counters.
 
+use crate::cim::OccupancyLedger;
 use crate::config::AccelConfig;
 use crate::sim::resource::{Cycle, Timeline};
 
@@ -7,6 +8,15 @@ use crate::sim::resource::{Cycle, Timeline};
 pub const QCIM: usize = 0;
 pub const KCIM: usize = 1;
 pub const TBR: usize = 2;
+
+/// Canonical core names: the paper's three-role floorplan first, then
+/// synthesized `core{i}` names for configs with `cores > 3`.  Shared by
+/// the analytic [`Accelerator`] and the event engine's resource layout
+/// (`engine::schedule`), so traces stay stable across backends.
+pub fn core_name(i: usize) -> String {
+    const NAMES: [&str; 3] = ["Q-CIM", "K-CIM", "TBR-CIM"];
+    NAMES.get(i).map(|s| s.to_string()).unwrap_or_else(|| format!("core{i}"))
+}
 
 /// Energy-relevant activity counters, accumulated during a run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -25,6 +35,10 @@ pub struct Activity {
     pub sfu_ops: u64,
     /// DTPU compare-select ops.
     pub dtpu_ops: u64,
+    /// Intra-macro occupancy accounting (used vs. idle macro cells per
+    /// pass, partial-tile waste, replay traffic).  Schedule-derived, so
+    /// analytic and event backends agree exactly (`cim`).
+    pub occupancy: OccupancyLedger,
 }
 
 impl Activity {
@@ -36,6 +50,7 @@ impl Activity {
         self.tbsn_bits += other.tbsn_bits;
         self.sfu_ops += other.sfu_ops;
         self.dtpu_ops += other.dtpu_ops;
+        self.occupancy.add(&other.occupancy);
     }
 }
 
@@ -73,10 +88,7 @@ impl Accelerator {
                 Timeline::new(name)
             }
         };
-        let names = ["Q-CIM", "K-CIM", "TBR-CIM"];
-        let cores = (0..cfg.cores as usize)
-            .map(|i| mk(names.get(i).map(|s| s.to_string()).unwrap_or(format!("core{i}"))))
-            .collect();
+        let cores = (0..cfg.cores as usize).map(|i| mk(core_name(i))).collect();
         let write_ports = (0..cfg.cores as usize)
             .map(|i| mk(format!("wport{i}")))
             .collect();
@@ -134,6 +146,21 @@ mod tests {
         assert_eq!(acc.cores[KCIM].name, "K-CIM");
         assert_eq!(acc.cores[TBR].name, "TBR-CIM");
         assert_eq!(acc.write_ports.len(), 3);
+    }
+
+    #[test]
+    fn core_names_scale_past_the_paper_floorplan() {
+        let mut cfg = presets::streamdcim_default();
+        cfg.cores = 5;
+        let acc = Accelerator::new(cfg);
+        assert_eq!(acc.cores.len(), 5);
+        assert_eq!(acc.cores[QCIM].name, "Q-CIM");
+        assert_eq!(acc.cores[KCIM].name, "K-CIM");
+        assert_eq!(acc.cores[TBR].name, "TBR-CIM");
+        assert_eq!(acc.cores[3].name, "core3");
+        assert_eq!(acc.cores[4].name, "core4");
+        assert_eq!(acc.write_ports.len(), 5);
+        assert_eq!(core_name(11), "core11");
     }
 
     #[test]

@@ -31,9 +31,13 @@ pub struct OpTiling {
 }
 
 impl OpTiling {
+    /// Place `op`'s stationary operand onto the macro sub-array grid
+    /// ([`crate::cim::MacroGeometry`]): one tile per macro, clamped to
+    /// the rows/cols the operand actually fills.
     pub fn of(cfg: &AccelConfig, op: &Op) -> Self {
-        let rows = cfg.macro_rows();
-        let cols = cfg.macro_cols();
+        let geom = cfg.geometry();
+        let rows = geom.rows();
+        let cols = geom.cols;
         let k_tiles = ceil_div(op.k.max(1), rows);
         let n_tiles = ceil_div(op.n.max(1), cols);
         OpTiling {
@@ -68,13 +72,6 @@ impl OpTiling {
         self.tiles * self.rows_per_tile * row_cycles
     }
 
-    /// Cycles to rewrite the tiles of a single pass (`macros` tiles).
-    pub fn rewrite_cycles_per_pass(&self, cfg: &AccelConfig, macros: u64) -> u64 {
-        let row_cycles = cfg.row_write_cycles(self.cols_per_tile, self.bits);
-        let tiles = self.tiles.min(macros.max(1));
-        tiles * self.rows_per_tile * row_cycles
-    }
-
     /// Stationary tiles loaded by pass `p` (0-based): full passes hold
     /// `macros` tiles, the final pass holds the remainder, so summing over
     /// all `passes(macros)` passes covers `tiles` exactly once.
@@ -84,8 +81,9 @@ impl OpTiling {
     }
 
     /// Exact rewrite cycles of pass `p`; sums to [`Self::rewrite_cycles`]
-    /// across all passes (unlike the constant per-pass estimate, which
-    /// over-charges the final partial pass).
+    /// across all passes.  This is the ONLY per-pass rewrite API: the
+    /// old constant-per-pass estimate over-charged the final partial
+    /// pass and was deleted in favour of this exact clamp.
     pub fn rewrite_cycles_for_pass(&self, cfg: &AccelConfig, p: u64, macros: u64) -> u64 {
         let row_cycles = cfg.row_write_cycles(self.cols_per_tile, self.bits);
         self.tiles_in_pass(p, macros) * self.rows_per_tile * row_cycles
@@ -99,22 +97,6 @@ impl OpTiling {
     /// Bits of the moving operand, streamed once.
     pub fn moving_bits(&self) -> u64 {
         self.batch * self.m * self.k * self.bits
-    }
-
-    /// How many times the moving operand is re-streamed in a blocked
-    /// weight-stationary schedule with `macros` resident tiles.
-    ///
-    /// Passes that advance along k stream *disjoint* k-slices (no replay);
-    /// passes that advance along n re-stream the same k rows.  With
-    /// kt k-tiles and nt n-tiles per batch element, a pass holds
-    /// `g = max(1, macros / min(kt, macros))` n-tiles worth of full-k
-    /// stationary data, so the moving operand is streamed `ceil(nt / g)`
-    /// times.  (Cross-forwarding's hybrid mode eliminates this replay —
-    /// the paper's "more frequent reuse of stored data".)
-    pub fn replay_factor(&self, macros: u64) -> u64 {
-        let kt = self.k_tiles.max(1);
-        let g = (macros.max(1) / kt.min(macros.max(1))).max(1);
-        ceil_div(self.n_tiles.max(1), g)
     }
 
     /// Bits of the output, streamed once.
@@ -204,23 +186,6 @@ mod tests {
     }
 
     #[test]
-    fn replay_factor_by_tiling_shape() {
-        let cfg = presets::streamdcim_default();
-        // PV-like: k huge (k-partitioned passes), n one tile -> no replay
-        let pv = OpTiling::of(&cfg, &mk(12, 4096, 4096, 64, 16));
-        assert_eq!(pv.replay_factor(8), 1);
-        // QK^T-like: kt=2, nt=32; 8 macros hold 4 n-tiles of full k
-        let qkt = OpTiling::of(&cfg, &mk(12, 4096, 64, 4096, 16));
-        assert_eq!(qkt.replay_factor(8), 8);
-        // FFN-like with all 24 macros: kt=24 >= 24 -> one n-tile per sweep
-        let ffn = OpTiling::of(&cfg, &mk(1, 4096, 768, 3072, 16));
-        assert_eq!(ffn.replay_factor(24), 24);
-        // fits entirely -> replay 1
-        let small = OpTiling::of(&cfg, &mk(1, 64, 32, 128, 16));
-        assert_eq!(small.replay_factor(8), 1);
-    }
-
-    #[test]
     fn per_pass_rewrite_sums_to_total() {
         let cfg = presets::streamdcim_default();
         // 9 tiles over 8 macros: one full pass + a 1-tile remainder pass
@@ -232,9 +197,41 @@ mod tests {
         assert_eq!(t.tiles_in_pass(2, 8), 0);
         let total: u64 = (0..t.passes(8)).map(|p| t.rewrite_cycles_for_pass(&cfg, p, 8)).sum();
         assert_eq!(total, t.rewrite_cycles(&cfg));
-        // and the constant estimate bounds every exact pass from above
-        for p in 0..t.passes(8) {
-            assert!(t.rewrite_cycles_for_pass(&cfg, p, 8) <= t.rewrite_cycles_per_pass(&cfg, 8));
+        // the exact clamp charges the remainder pass only its own tile
+        assert_eq!(
+            t.rewrite_cycles_for_pass(&cfg, 1, 8) * 8,
+            t.rewrite_cycles_for_pass(&cfg, 0, 8)
+        );
+    }
+
+    #[test]
+    fn per_pass_rewrite_sums_for_uneven_shapes() {
+        // k and n deliberately NOT divisible by the 32x128 macro, plus a
+        // partial final pass: the exact per-pass clamp must still tile
+        // the whole rewrite with no double-charge on the remainder
+        let cfg = presets::streamdcim_default();
+        for (batch, m, k, n) in [(1, 64, 48, 300), (3, 17, 33, 129), (5, 9, 100, 500)] {
+            let t = OpTiling::of(&cfg, &mk(batch, m, k, n, 16));
+            for macros in [1u64, 3, 8, 24] {
+                let passes = t.passes(macros);
+                let total: u64 =
+                    (0..passes).map(|p| t.rewrite_cycles_for_pass(&cfg, p, macros)).sum();
+                assert_eq!(
+                    total,
+                    t.rewrite_cycles(&cfg),
+                    "{batch}x{m}x{k}x{n} over {macros} macros"
+                );
+                // beyond the last pass there is nothing left to rewrite
+                assert_eq!(t.rewrite_cycles_for_pass(&cfg, passes, macros), 0);
+                // a partial final pass costs strictly less than a full one
+                if t.tiles % macros != 0 && passes > 1 {
+                    assert!(
+                        t.rewrite_cycles_for_pass(&cfg, passes - 1, macros)
+                            < t.rewrite_cycles_for_pass(&cfg, 0, macros),
+                        "final-pass clamp missing for {batch}x{m}x{k}x{n}/{macros}"
+                    );
+                }
+            }
         }
     }
 

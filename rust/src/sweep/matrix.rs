@@ -6,18 +6,26 @@
 //! microarchitecture knobs that perturb the tile geometry:
 //!
 //! * `non/full`, `layer/full` — the two baselines (features don't apply).
-//! * `tile/full`              — StreamDCIM as configured.
+//! * `tile/full`              — StreamDCIM as configured (`auto` mode
+//!                              policy: hybrid for dynamic matmuls).
 //! * `tile/no-pruning`        — DTPU off (challenge-1 contribution).
 //! * `tile/no-pingpong`       — rewrites serialize with compute.
-//! * `tile/no-hybrid`         — no mixed-stationary cross-forwarding.
-//! * `tile/tall-tiles`        — 2x arrays per macro: taller stationary
-//!                              tiles, fewer passes, costlier rewrites.
+//! * `tile/no-hybrid`         — macros forced to normal mode: no
+//!                              mixed-stationary cross-forwarding.
+//! * `tile/forced-hybrid`     — macros locked in hybrid mode: static
+//!                              weights lose half their capacity.
+//! * `tile/tall-tiles`        — 2x sub-arrays per macro: taller
+//!                              stationary tiles, fewer passes,
+//!                              costlier rewrites.
+//! * `tile/wide-cols`         — 2x bit-line columns: wider tiles,
+//!                              fewer n-tiles, slower row writes.
 //! * `tile/fast-port`         — 2x macro write-port width: cheaper
 //!                              rewrites, probing rewrite-boundedness.
 //!
 //! Matrix order is deterministic and is the canonical order of the
 //! aggregate report.
 
+use crate::cim::ModePolicy;
 use crate::config::{presets, AccelConfig, DataflowKind, ModelConfig};
 
 use super::Scenario;
@@ -35,12 +43,20 @@ pub fn tile_variants(base: &AccelConfig) -> Vec<(&'static str, AccelConfig)> {
     v.push(("no-pingpong", cfg));
 
     let mut cfg = base.clone();
-    cfg.features.hybrid_mode = false;
+    cfg.features.mode_policy = ModePolicy::ForcedNormal;
     v.push(("no-hybrid", cfg));
+
+    let mut cfg = base.clone();
+    cfg.features.mode_policy = ModePolicy::ForcedHybrid;
+    v.push(("forced-hybrid", cfg));
 
     let mut cfg = base.clone();
     cfg.arrays_per_macro *= 2;
     v.push(("tall-tiles", cfg));
+
+    let mut cfg = base.clone();
+    cfg.array_cols *= 2;
+    v.push(("wide-cols", cfg));
 
     let mut cfg = base.clone();
     cfg.macro_write_port_bits *= 2;
@@ -121,9 +137,15 @@ mod tests {
         let get = |name: &str| &vs.iter().find(|(n, _)| *n == name).unwrap().1;
         assert!(!get("no-pruning").features.token_pruning);
         assert!(!get("no-pingpong").features.pingpong);
-        assert!(!get("no-hybrid").features.hybrid_mode);
+        assert_eq!(get("no-hybrid").features.mode_policy, ModePolicy::ForcedNormal);
+        assert_eq!(get("forced-hybrid").features.mode_policy, ModePolicy::ForcedHybrid);
         assert_eq!(get("tall-tiles").arrays_per_macro, base.arrays_per_macro * 2);
+        assert_eq!(get("wide-cols").array_cols, base.array_cols * 2);
         assert_eq!(get("fast-port").macro_write_port_bits, base.macro_write_port_bits * 2);
         assert!(get("full").features.token_pruning);
+        assert_eq!(get("full").features.mode_policy, ModePolicy::Auto);
+        // the macro-geometry axis really changes the derived geometry
+        assert_eq!(get("tall-tiles").geometry().rows(), base.geometry().rows() * 2);
+        assert_eq!(get("wide-cols").geometry().cols, base.geometry().cols * 2);
     }
 }

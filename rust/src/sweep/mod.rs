@@ -337,6 +337,8 @@ fn row_json(r: &SweepRow) -> Json {
         ("macs", Json::num(rep.activity.macs as f64)),
         ("offchip_bits", Json::num(rep.activity.offchip_bits as f64)),
         ("exposed_rewrite_cycles", Json::num(rep.exposed_rewrite() as f64)),
+        ("intra_macro_utilization", Json::num(rep.intra_macro_utilization())),
+        ("replay_bits", Json::num(rep.activity.occupancy.replay_bits as f64)),
         ("speedup_vs_non", Json::num(r.speedup_vs_non)),
         ("energy_saving_vs_non", Json::num(r.energy_saving_vs_non)),
     ];

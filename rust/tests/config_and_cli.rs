@@ -65,13 +65,28 @@ fn cli_full_command_lines() {
 
 #[test]
 fn ablation_config_disables_features() {
+    // hybrid_mode=false is the deprecated TOML alias for the forced-normal
+    // macro mode policy (cim::ModePolicy)
     let text = "[features]\nhybrid_mode = false\npingpong = false\ntoken_pruning = false\n";
     let doc = toml::parse(text).unwrap();
     let mut accel = presets::streamdcim_default();
     toml::apply_accel_overrides(&mut accel, &doc);
-    assert!(!accel.features.hybrid_mode);
+    assert_eq!(accel.features.mode_policy, streamdcim::cim::ModePolicy::ForcedNormal);
     assert!(!accel.features.pingpong);
     assert!(!accel.features.token_pruning);
+}
+
+#[test]
+fn macro_section_configures_geometry_and_mode_policy() {
+    let text = "[macro]\nsub_arrays = 4\narray_cols = 64\nmode_policy = \"hybrid\"\n";
+    let doc = toml::parse(text).unwrap();
+    let mut accel = presets::streamdcim_default();
+    toml::apply_accel_overrides(&mut accel, &doc);
+    assert_eq!(accel.arrays_per_macro, 4);
+    assert_eq!(accel.array_cols, 64);
+    assert_eq!(accel.features.mode_policy, streamdcim::cim::ModePolicy::ForcedHybrid);
+    assert_eq!(accel.geometry().rows(), 4 * accel.array_rows);
+    assert_eq!(accel.geometry().cols, 64);
 }
 
 #[test]

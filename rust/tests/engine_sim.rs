@@ -133,7 +133,7 @@ fn engine_feature_ablations_still_cost_performance() {
             .unwrap()
     };
     let full = speed("full");
-    for ablation in ["no-pruning", "no-pingpong", "no-hybrid"] {
+    for ablation in ["no-pruning", "no-pingpong", "no-hybrid", "forced-hybrid"] {
         assert!(
             speed(ablation) < full,
             "{ablation} ({:.3}) should lose to full ({full:.3})",

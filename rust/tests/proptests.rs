@@ -85,9 +85,10 @@ fn prop_tiling_covers_shape() {
         );
         prop_assert!(t.tiles == op.batch * t.k_tiles * t.n_tiles, "tile count");
         prop_assert!(t.passes(8) >= 1 && t.passes(8) <= t.tiles, "passes bound");
-        prop_assert!(t.replay_factor(8) >= 1, "replay >= 1");
-        prop_assert!(t.replay_factor(8) <= t.n_tiles.max(1), "replay bounded by n tiles");
-        prop_assert!(t.rewrite_cycles(&cfg) >= t.rewrite_cycles_per_pass(&cfg, 8), "pass <= total");
+        prop_assert!(
+            t.rewrite_cycles(&cfg) >= t.rewrite_cycles_for_pass(&cfg, 0, 8),
+            "pass <= total"
+        );
         let per_pass_sum: u64 =
             (0..t.passes(8)).map(|p| t.rewrite_cycles_for_pass(&cfg, p, 8)).sum();
         prop_assert!(
@@ -193,11 +194,8 @@ fn prop_event_engine_dominates_analytic_lower_bounds() {
         model.pruning = PruningSchedule::disabled();
         for kind in DataflowKind::ALL {
             let graph = streamdcim::dataflow::graph_for(kind, &cfg, &model);
-            let dyn_macros = match kind {
-                DataflowKind::NonStream => cfg.total_macros(),
-                DataflowKind::LayerStream => cfg.macros_per_core,
-                DataflowKind::TileStream => streamdcim::dataflow::dynamic_macros(&cfg),
-            };
+            let dyn_macros =
+                streamdcim::cim::ModeSchedule::derive(kind, &cfg).dynamic_plan().active;
             let dyn_floor: u64 = graph
                 .ops()
                 .filter(|o| o.kind == OpKind::MatMulDynamic)
@@ -226,6 +224,54 @@ fn prop_event_engine_dominates_analytic_lower_bounds() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_backends_agree_on_activity_across_mode_geometry_dataflow() {
+    // analytic and event must produce identical Activity — macs,
+    // cim_write_bits, tbsn_bits, occupancy ledger — over the full
+    // macro-mode x geometry x dataflow matrix, including ragged token
+    // counts that defy the macro geometry
+    use streamdcim::cim::ModePolicy;
+    Prop::new("backend Activity identical across mode x geometry x dataflow").cases(6).check(
+        |rng| {
+            let mut cfg = presets::streamdcim_default();
+            cfg.features.mode_policy =
+                ModePolicy::ALL[rng.range_usize(0, ModePolicy::ALL.len() - 1)];
+            cfg.features.pingpong = rng.f64() < 0.5;
+            cfg.arrays_per_macro = [4u64, 8, 16][rng.range_usize(0, 2)];
+            cfg.array_cols = [64u64, 128, 256][rng.range_usize(0, 2)];
+            cfg.macro_write_port_bits = [64u64, 128][rng.range_usize(0, 1)];
+            let mut model = presets::functional_small();
+            model.tokens_x = rng.range_u64(17, 90);
+            model.tokens_y = rng.range_u64(17, 90);
+            model.single_layers_x = 0;
+            model.single_layers_y = 0;
+            model.cross_layers = 1;
+            model.pruning = PruningSchedule::disabled();
+            for kind in DataflowKind::ALL {
+                let ana = streamdcim::dataflow::run(kind, &cfg, &model);
+                let eng = streamdcim::engine::run(kind, &cfg, &model);
+                prop_assert!(
+                    ana.activity == eng.activity,
+                    "{kind:?}/{:?}: backends disagree ({:?} vs {:?})",
+                    cfg.features.mode_policy,
+                    ana.activity,
+                    eng.activity
+                );
+                prop_assert!(
+                    ana.activity.occupancy.used_cell_cycles > 0,
+                    "{kind:?}: no occupancy recorded"
+                );
+                prop_assert!(
+                    (ana.intra_macro_utilization() - eng.intra_macro_utilization()).abs()
+                        < 1e-15,
+                    "{kind:?}: utilization diverged"
+                );
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -29,6 +29,17 @@ fn full_matrix_parallel_sweep_is_bit_identical_to_serial() {
         parsed.get("scenario_count").and_then(|v| v.as_u64()),
         Some(scenarios.len() as u64)
     );
+
+    // the utilization figure rides in every row and is therefore
+    // byte-identical across threads/seeds along with the rest
+    for row in parsed.get("scenarios").unwrap().as_arr().unwrap() {
+        let u = row
+            .get("intra_macro_utilization")
+            .and_then(|v| v.as_f64())
+            .expect("row missing intra_macro_utilization");
+        assert!((0.0..=1.0).contains(&u), "utilization out of range: {u}");
+        assert!(row.get("replay_bits").is_some(), "row missing replay_bits");
+    }
 }
 
 #[test]
@@ -76,7 +87,7 @@ fn ablations_cost_performance_on_paper_scale_workloads() {
             .unwrap()
     };
     let full = speed("full");
-    for ablation in ["no-pruning", "no-pingpong", "no-hybrid"] {
+    for ablation in ["no-pruning", "no-pingpong", "no-hybrid", "forced-hybrid"] {
         assert!(
             speed(ablation) < full,
             "{ablation} ({:.3}) should lose to full ({full:.3})",
