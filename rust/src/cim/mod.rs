@@ -25,6 +25,26 @@
 //! The ledger turns the paper's Fig. 3 claim — the hybrid mode raises
 //! intra-macro CIM utilization — into a measured, regression-gated
 //! artifact (`report --figure utilization`, `tests/cim_utilization.rs`).
+//! The written tour is `docs/macro.md`.
+//!
+//! # Example
+//!
+//! Derive the tile-streaming mode schedule and confirm the paper's
+//! design: dynamic matmuls cross-forward in hybrid mode at full pass
+//! width, static weights stay in normal mode:
+//!
+//! ```
+//! use streamdcim::cim::{MacroMode, ModeSchedule};
+//! use streamdcim::config::{presets, DataflowKind};
+//!
+//! let cfg = presets::streamdcim_default();
+//! let sched = ModeSchedule::derive(DataflowKind::TileStream, &cfg);
+//! assert_eq!(sched.dynamic_mode, MacroMode::HybridXF);
+//! assert_eq!(sched.static_mode, MacroMode::Normal);
+//! let plan = sched.dynamic_plan();
+//! assert!(plan.cross_forwarding);
+//! assert_eq!(plan.active, cfg.macros_per_core);
+//! ```
 
 use crate::config::{AccelConfig, DataflowKind};
 use crate::sim::OpTiling;

@@ -105,10 +105,33 @@ COMMANDS
                --out <file.json>   write the diff artifact
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
-               --figure fig5|fig6|fig7|headline|e5|serving|utilization
-                                                     (default headline)
+               --figure fig5|fig6|fig7|headline|e5|serving|utilization|
+                        frontier                      (default headline)
                --config <file.toml>     (utilization: intra-macro CIM
-                                         occupancy by dataflow, cim::)
+                                         occupancy by dataflow, cim::;
+                                         frontier: a small dse run)
+  dse        deterministic design-space exploration (Pareto frontier)
+               --model <preset>    workload every point is priced on
+                                   (default base)
+               --objectives a,b,c  cycles|energy|area|utilization|
+                                   throughput (default cycles,energy,area)
+               --budget <n>        max design points priced (default 64;
+                                   0 = the whole space; over-budget
+                                   spaces are seeded-sample trimmed,
+                                   the paper's default point always kept)
+               --engine analytic|event|both          (default analytic)
+               --requests <n>      serving-trace length per point
+                                   (48; 0 = skip serving pricing)
+               --threads <n>       worker threads (artifact identical
+                                   for any value)
+               --seed <n>          sampling seed (default 42)
+               --out <file.json>   ranked multi-objective artifact
+               --frontier-out <file.json>   frontier-only artifact
+               --config <file.toml>  --json
+  config     print the merged configuration as canonical TOML
+               --model <preset>    --config <file.toml>
+               (deprecated aliases round-trip to their named keys,
+                e.g. hybrid_mode -> mode_policy)
   serve      closed-loop traffic through the sharded serving fabric
                --shards <n>        accelerator shards (default 2)
                --policy round-robin|least-loaded|modality-affinity

@@ -101,7 +101,7 @@ impl RoutePolicy {
 /// batches on, the per-modality admission-queue bound, the batcher's
 /// maximum batch size, the arrival-trace seed, and the routing policy.
 /// All deterministic — the fabric has no wall-clock and no ambient RNG.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
     /// Accelerator instances behind the router (each its own simulation).
     pub shards: u64,
@@ -128,7 +128,7 @@ impl Default for ServingConfig {
 }
 
 /// Feature toggles for ablation studies (paper features individually).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Features {
     /// TBR-CIM macro mode policy (Challenge 1): `Auto` reconfigures per
     /// op class (the paper's hybrid mode for dynamic matmuls);
@@ -149,7 +149,7 @@ impl Default for Features {
 }
 
 /// StreamDCIM accelerator geometry + timing (paper Sec. II, Fig. 3).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AccelConfig {
     /// CIM cores on the TBSN (paper: Q-CIM, K-CIM, TBR-CIM).
     pub cores: u64,
@@ -243,7 +243,7 @@ impl AccelConfig {
 /// Energy constants (pJ) for the 28nm digital-CIM process, calibrated to
 /// published silicon (TranCIM ISSCC'22, MulTCIM ISSCC'23, paper totals).
 /// See DESIGN.md Sec. 6 for the derivation of each constant.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EnergyConfig {
     /// One INT16 MAC inside a CIM array (bit-serial digital adder tree).
     pub mac_pj: f64,
@@ -264,7 +264,7 @@ pub struct EnergyConfig {
 }
 
 /// Workload: a ViLBERT-style two-stream multimodal encoder stack.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
     pub name: String,
     /// Single-modal encoder layers per stream.
@@ -284,7 +284,7 @@ pub struct ModelConfig {
 }
 
 /// Dynamic token-pruning schedule (Evo-ViT / SpAtten style).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PruningSchedule {
     /// Prune after every `every`-th cross-modal layer (0 = never).
     pub every: u64,

@@ -163,8 +163,20 @@ macro_rules! set_f64 {
     };
 }
 
-/// Apply `[accel]`, `[energy]` and `[features]` sections onto a config.
+/// Apply `[accel]`, `[energy]`, `[features]`, `[serving]` and `[macro]`
+/// sections onto a config, printing any deprecation warnings (one line
+/// each) on stderr.
 pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
+    for w in apply_accel_overrides_warnings(cfg, doc) {
+        eprintln!("warning: {w}");
+    }
+}
+
+/// Like [`apply_accel_overrides`], but returns the deprecation warnings
+/// instead of printing them (used by tests and callers that render
+/// diagnostics themselves).
+pub fn apply_accel_overrides_warnings(cfg: &mut AccelConfig, doc: &Doc) -> Vec<String> {
+    let mut warnings = Vec::new();
     if let Some(t) = doc.get("accel") {
         set_u64!(t, "cores", cfg.cores);
         set_u64!(t, "macros_per_core", cfg.macros_per_core);
@@ -207,12 +219,13 @@ pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
     // deprecated alias: [features].hybrid_mode = true/false maps onto
     // the mode policy (true = auto reconfiguration, false = forced
     // normal).  Applied FIRST so a named mode_policy key — in [macro]
-    // or [features] — always wins over the legacy alias.
-    if let Some(v) = doc
+    // or [features] — always wins over the legacy alias.  The warning
+    // is composed at the end, once the effective policy is known.
+    let alias = doc
         .get("features")
         .and_then(|t| t.get("hybrid_mode"))
-        .and_then(|v| v.as_bool())
-    {
+        .and_then(|v| v.as_bool());
+    if let Some(v) = alias {
         cfg.features.mode_policy = if v { ModePolicy::Auto } else { ModePolicy::ForcedNormal };
     }
     // [macro]: the CIM-macro microarchitecture by its own name (the
@@ -243,6 +256,110 @@ pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
             cfg.features.token_pruning = v;
         }
     }
+    if let Some(v) = alias {
+        let suggested = if v { ModePolicy::Auto } else { ModePolicy::ForcedNormal };
+        if cfg.features.mode_policy == suggested {
+            warnings.push(format!(
+                "[features].hybrid_mode is deprecated; use mode_policy = \"{}\" \
+                 (serialization always emits mode_policy)",
+                suggested.slug()
+            ));
+        } else {
+            // a named mode_policy key won over the alias: recommending
+            // the alias-derived value here would silently change the
+            // config's behavior
+            warnings.push(format!(
+                "[features].hybrid_mode is deprecated and overridden by \
+                 mode_policy = \"{}\"; remove the alias",
+                cfg.features.mode_policy.slug()
+            ));
+        }
+    }
+    warnings
+}
+
+fn push_f64(out: &mut String, key: &str, v: f64) {
+    // `{}` on f64 is the shortest round-trip form, so parse(render(x))
+    // recovers x exactly
+    out.push_str(&format!("{key} = {v}\n"));
+}
+
+/// Serialize the accelerator side of `cfg` as a canonical TOML document
+/// (`[accel]`, `[energy]`, `[features]`, `[serving]`).  The output
+/// round-trips: parsing it and applying it onto any base reproduces
+/// `cfg` exactly, and deprecated aliases never appear — a config loaded
+/// through the legacy `hybrid_mode` bool serializes as `mode_policy`.
+pub fn render_accel(cfg: &AccelConfig) -> String {
+    let mut s = String::new();
+    s.push_str("[accel]\n");
+    for (k, v) in [
+        ("cores", cfg.cores),
+        ("macros_per_core", cfg.macros_per_core),
+        ("arrays_per_macro", cfg.arrays_per_macro),
+        ("array_rows", cfg.array_rows),
+        ("array_cols", cfg.array_cols),
+        ("cell_bits", cfg.cell_bits),
+        ("freq_mhz", cfg.freq_mhz),
+        ("offchip_bus_bits", cfg.offchip_bus_bits),
+        ("offchip_burst_cycles", cfg.offchip_burst_cycles),
+        ("offchip_burst_bits", cfg.offchip_burst_bits),
+        ("macro_write_port_bits", cfg.macro_write_port_bits),
+        ("cim_row_setup_cycles", cfg.cim_row_setup_cycles),
+        ("input_buf_kb", cfg.input_buf_kb),
+        ("weight_buf_kb", cfg.weight_buf_kb),
+        ("output_buf_kb", cfg.output_buf_kb),
+        ("tbsn_bus_bits", cfg.tbsn_bus_bits),
+        ("sfu_lanes", cfg.sfu_lanes),
+        ("dtpu_tokens_per_cycle", cfg.dtpu_tokens_per_cycle),
+    ] {
+        s.push_str(&format!("{k} = {v}\n"));
+    }
+    s.push_str("\n[energy]\n");
+    push_f64(&mut s, "mac_pj", cfg.energy.mac_pj);
+    push_f64(&mut s, "cim_write_pj_per_bit", cfg.energy.cim_write_pj_per_bit);
+    push_f64(&mut s, "buffer_pj_per_bit", cfg.energy.buffer_pj_per_bit);
+    push_f64(&mut s, "offchip_pj_per_bit", cfg.energy.offchip_pj_per_bit);
+    push_f64(&mut s, "tbsn_pj_per_bit", cfg.energy.tbsn_pj_per_bit);
+    push_f64(&mut s, "sfu_pj_per_op", cfg.energy.sfu_pj_per_op);
+    push_f64(&mut s, "dtpu_pj_per_op", cfg.energy.dtpu_pj_per_op);
+    push_f64(&mut s, "leakage_mw", cfg.energy.leakage_mw);
+    s.push_str("\n[features]\n");
+    s.push_str(&format!("mode_policy = \"{}\"\n", cfg.features.mode_policy.slug()));
+    s.push_str(&format!("pingpong = {}\n", cfg.features.pingpong));
+    s.push_str(&format!("token_pruning = {}\n", cfg.features.token_pruning));
+    s.push_str("\n[serving]\n");
+    s.push_str(&format!("shards = {}\n", cfg.serving.shards));
+    s.push_str(&format!("queue_depth = {}\n", cfg.serving.queue_depth));
+    s.push_str(&format!("batch_size = {}\n", cfg.serving.batch_size));
+    s.push_str(&format!("arrival_seed = {}\n", cfg.serving.arrival_seed));
+    s.push_str(&format!("policy = \"{}\"\n", cfg.serving.policy.slug()));
+    s
+}
+
+/// Serialize a model config as a canonical `[model]` + `[pruning]`
+/// TOML document; round-trips like [`render_accel`].
+pub fn render_model(cfg: &ModelConfig) -> String {
+    let mut s = String::new();
+    s.push_str("[model]\n");
+    s.push_str(&format!("name = \"{}\"\n", cfg.name));
+    for (k, v) in [
+        ("single_layers_x", cfg.single_layers_x),
+        ("single_layers_y", cfg.single_layers_y),
+        ("cross_layers", cfg.cross_layers),
+        ("d_model", cfg.d_model),
+        ("heads", cfg.heads),
+        ("d_ff", cfg.d_ff),
+        ("tokens_x", cfg.tokens_x),
+        ("tokens_y", cfg.tokens_y),
+        ("bits", cfg.bits),
+    ] {
+        s.push_str(&format!("{k} = {v}\n"));
+    }
+    s.push_str("\n[pruning]\n");
+    s.push_str(&format!("every = {}\n", cfg.pruning.every));
+    push_f64(&mut s, "keep_ratio", cfg.pruning.keep_ratio);
+    s.push_str(&format!("min_tokens = {}\n", cfg.pruning.min_tokens));
+    s
 }
 
 /// Apply a `[model]` section onto a model config.
@@ -358,6 +475,57 @@ keep_ratio = 0.5
         assert_eq!(accel.macro_write_port_bits, 64);
         assert_eq!(accel.features.mode_policy, ModePolicy::ForcedNormal);
         assert_eq!(accel.geometry().rows(), 16 * accel.array_rows);
+    }
+
+    #[test]
+    fn render_accel_round_trips_and_emits_mode_policy() {
+        let mut cfg = presets::streamdcim_default();
+        cfg.features.mode_policy = ModePolicy::ForcedHybrid;
+        cfg.serving.shards = 8;
+        cfg.energy.mac_pj = 0.0123;
+        let text = render_accel(&cfg);
+        assert!(text.contains("mode_policy = \"hybrid\""));
+        assert!(!text.contains("hybrid_mode"), "aliases never serialize");
+        let doc = parse(&text).unwrap();
+        let mut back = presets::streamdcim_default();
+        let warnings = apply_accel_overrides_warnings(&mut back, &doc);
+        assert!(warnings.is_empty(), "canonical output must not warn: {warnings:?}");
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn deprecated_alias_warns_once_and_round_trips_as_mode_policy() {
+        let doc = parse("[features]\nhybrid_mode = false\n").unwrap();
+        let mut cfg = presets::streamdcim_default();
+        let warnings = apply_accel_overrides_warnings(&mut cfg, &doc);
+        assert_eq!(warnings.len(), 1, "exactly one warning line: {warnings:?}");
+        assert!(warnings[0].contains("hybrid_mode"));
+        assert!(warnings[0].contains("mode_policy = \"normal\""));
+        assert_eq!(cfg.features.mode_policy, ModePolicy::ForcedNormal);
+        // the alias round-trips to the named key in serialization
+        let text = render_accel(&cfg);
+        assert!(text.contains("mode_policy = \"normal\""));
+        assert!(!text.contains("hybrid_mode"));
+        // named keys never warn
+        let doc = parse("[features]\nmode_policy = \"hybrid\"\n").unwrap();
+        assert!(apply_accel_overrides_warnings(&mut cfg, &doc).is_empty());
+        // when a named key overrides the alias, the warning reports the
+        // effective policy instead of recommending the stale alias value
+        let doc = parse("[features]\nhybrid_mode = false\nmode_policy = \"hybrid\"\n").unwrap();
+        let mut cfg2 = presets::streamdcim_default();
+        let w = apply_accel_overrides_warnings(&mut cfg2, &doc);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("overridden by mode_policy = \"hybrid\""), "{}", w[0]);
+        assert_eq!(cfg2.features.mode_policy, ModePolicy::ForcedHybrid);
+    }
+
+    #[test]
+    fn render_model_round_trips() {
+        let model = presets::vilbert_base();
+        let doc = parse(&render_model(&model)).unwrap();
+        let mut back = presets::tiny_smoke();
+        apply_model_overrides(&mut back, &doc);
+        assert_eq!(back, model);
     }
 
     #[test]

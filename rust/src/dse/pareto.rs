@@ -1,0 +1,226 @@
+//! Multi-objective dominance and the exact Pareto frontier.
+//!
+//! Objectives are normalized to *costs* (lower is better): minimized
+//! metrics pass through, maximized metrics are negated.  The frontier is
+//! computed by the exact O(n^2 k) dominance check — the explorer prices
+//! at most a few hundred design points, so an asymptotically cleverer
+//! skyline would buy nothing and cost determinism review.
+//!
+//! Properties (enforced by `tests/dse_frontier.rs` and the property
+//! suite in `tests/proptests.rs`):
+//!
+//! * `frontier(points) ⊆ points` — indices into the input, nothing
+//!   synthesized.
+//! * No emitted point is dominated by any input point.
+//! * Permutation invariance: shuffling the input permutes the frontier
+//!   *indices* but never changes the frontier *set* (ties — points equal
+//!   in every objective — are all kept: neither strictly dominates).
+
+use super::PointMetrics;
+
+/// One optimization objective over a priced design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// End-to-end cycles of one inference (minimize).
+    Cycles,
+    /// Energy of one inference, mJ (minimize).
+    Energy,
+    /// Chip area, mm^2 (minimize).
+    Area,
+    /// Intra-macro CIM utilization in [0, 1] (maximize).
+    Utilization,
+    /// Serving throughput, served requests per megacycle (maximize).
+    Throughput,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 5] = [
+        Objective::Cycles,
+        Objective::Energy,
+        Objective::Area,
+        Objective::Utilization,
+        Objective::Throughput,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cycles => "Cycles",
+            Objective::Energy => "Energy",
+            Objective::Area => "Area",
+            Objective::Utilization => "Utilization",
+            Objective::Throughput => "Throughput",
+        }
+    }
+
+    /// Short machine-readable name (CLI `--objectives`, artifacts).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Objective::Cycles => "cycles",
+            Objective::Energy => "energy",
+            Objective::Area => "area",
+            Objective::Utilization => "utilization",
+            Objective::Throughput => "throughput",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cycles" | "latency" => Some(Objective::Cycles),
+            "energy" | "energy-mj" => Some(Objective::Energy),
+            "area" | "area-mm2" => Some(Objective::Area),
+            "utilization" | "util" | "cim-util" => Some(Objective::Utilization),
+            "throughput" | "served" | "served-per-mcycle" => Some(Objective::Throughput),
+            _ => None,
+        }
+    }
+
+    /// Parse a comma-separated objective list, deduplicating while
+    /// preserving first-seen order.  Errors name the offending token.
+    pub fn parse_list(csv: &str) -> Result<Vec<Objective>, String> {
+        let mut out: Vec<Objective> = Vec::new();
+        for tok in csv.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let o = Objective::parse(tok).ok_or_else(|| {
+                format!(
+                    "unknown objective '{tok}' (cycles|energy|area|utilization|throughput)"
+                )
+            })?;
+            if !out.contains(&o) {
+                out.push(o);
+            }
+        }
+        if out.is_empty() {
+            return Err("empty objective list".to_string());
+        }
+        Ok(out)
+    }
+
+    /// True for objectives where larger is better.
+    pub fn maximize(&self) -> bool {
+        matches!(self, Objective::Utilization | Objective::Throughput)
+    }
+
+    /// The raw metric value of this objective.
+    pub fn raw(&self, m: &PointMetrics) -> f64 {
+        match self {
+            Objective::Cycles => m.cycles as f64,
+            Objective::Energy => m.energy_mj,
+            Objective::Area => m.area_mm2,
+            Objective::Utilization => m.intra_macro_utilization,
+            Objective::Throughput => m.served_per_mcycle,
+        }
+    }
+
+    /// The normalized cost (lower is better): maximized metrics negate.
+    pub fn cost(&self, m: &PointMetrics) -> f64 {
+        if self.maximize() {
+            -self.raw(m)
+        } else {
+            self.raw(m)
+        }
+    }
+}
+
+/// Strict Pareto dominance over cost vectors (lower is better):
+/// `a` dominates `b` iff `a <= b` in every coordinate and `a < b` in at
+/// least one.  A point never dominates itself or an exact tie.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "cost vectors must share objectives");
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points of `costs`, in ascending input
+/// order.  Exact: every input point is checked against every other.
+pub fn frontier_indices(costs: &[Vec<f64>]) -> Vec<usize> {
+    (0..costs.len())
+        .filter(|&i| !costs.iter().any(|c| dominates(c, &costs[i])))
+        .collect()
+}
+
+/// How many input points strictly dominate point `i` — 0 exactly on the
+/// frontier; the artifact's rank key ("near-frontier" = small count).
+pub fn dominated_by(costs: &[Vec<f64>], i: usize) -> usize {
+    costs.iter().filter(|c| dominates(c, &costs[i])).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse_roundtrip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.slug()), Some(o));
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("util"), Some(Objective::Utilization));
+        assert_eq!(Objective::parse("bogus"), None);
+    }
+
+    #[test]
+    fn parse_list_dedupes_and_errors() {
+        let l = Objective::parse_list("cycles, energy,cycles,area").unwrap();
+        assert_eq!(l, vec![Objective::Cycles, Objective::Energy, Objective::Area]);
+        assert!(Objective::parse_list("cycles,bogus").is_err());
+        assert!(Objective::parse_list("").is_err());
+        assert!(Objective::parse_list(" , ").is_err());
+    }
+
+    #[test]
+    fn cost_negates_maximized_objectives() {
+        let m = PointMetrics {
+            cycles: 100,
+            energy_mj: 2.0,
+            area_mm2: 12.0,
+            intra_macro_utilization: 0.5,
+            served_per_mcycle: 3.0,
+        };
+        assert_eq!(Objective::Cycles.cost(&m), 100.0);
+        assert_eq!(Objective::Utilization.cost(&m), -0.5);
+        assert_eq!(Objective::Throughput.cost(&m), -3.0);
+        assert_eq!(Objective::Throughput.raw(&m), 3.0);
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 1.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "ties never dominate");
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "trade-offs never dominate");
+        assert!(!dominates(&[2.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_keeps_trade_offs_and_ties() {
+        // (1,4) and (4,1) trade off; (2,2) joins them; (5,5) is dominated;
+        // the (1,4) duplicate ties and stays.
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![4.0, 1.0],
+            vec![2.0, 2.0],
+            vec![5.0, 5.0],
+            vec![1.0, 4.0],
+        ];
+        assert_eq!(frontier_indices(&pts), vec![0, 1, 2, 4]);
+        assert_eq!(dominated_by(&pts, 3), 4);
+        assert_eq!(dominated_by(&pts, 0), 0);
+    }
+
+    #[test]
+    fn single_point_is_its_own_frontier() {
+        assert_eq!(frontier_indices(&[vec![7.0]]), vec![0]);
+        assert!(frontier_indices(&[]).is_empty());
+    }
+}

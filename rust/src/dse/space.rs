@@ -1,0 +1,367 @@
+//! The design space: which `(geometry, mode policy, dataflow, serving,
+//! backend)` combinations the explorer prices.
+//!
+//! Enumeration order is deterministic and canonical — it is the order
+//! the artifact's `points` array would appear in with an unlimited
+//! budget, and **index 0 is always the paper's default design point**
+//! (8x4x128 macros with a 128-bit write port, `auto` mode policy,
+//! tile streaming, the default serving fabric).  Budget selection
+//! ([`select`]) always retains that default point and fills the rest of
+//! the budget with a seeded-RNG sample, so `dse` runs are comparable
+//! against the paper's configuration at any budget.
+
+use crate::cim::ModePolicy;
+use crate::config::{AccelConfig, DataflowKind, RoutePolicy};
+use crate::engine::Backend;
+use crate::util::prng::Rng;
+
+/// A named CIM-macro geometry candidate (`cim::MacroGeometry` knobs the
+/// explorer varies; `array_rows` stays at the paper's 4 — total rows
+/// move through `sub_arrays`, which is what the silicon actually tiles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GeometryVariant {
+    /// Stable slug used in point ids (`gSxRxC[-pW]`).
+    pub slug: &'static str,
+    pub sub_arrays: u64,
+    pub array_rows: u64,
+    pub array_cols: u64,
+    pub write_port_bits: u64,
+}
+
+/// A named serving-fabric operating point (shards x route policy x
+/// batch bound).  Only explored when a serving objective is selected —
+/// serving knobs cannot move cycles/energy/area/utilization, so
+/// enumerating them there would only duplicate frontier points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServingVariant {
+    /// Stable slug used in point ids (`sN-policy-bB`).
+    pub slug: &'static str,
+    pub shards: u64,
+    pub policy: RoutePolicy,
+    pub batch: u64,
+}
+
+/// One fully-specified design point of the explored space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DsePoint {
+    pub geometry: GeometryVariant,
+    pub policy: ModePolicy,
+    pub dataflow: DataflowKind,
+    pub serving: ServingVariant,
+    pub backend: Backend,
+}
+
+impl DsePoint {
+    /// Stable identity: `geometry/mode/dataflow/serving/backend`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.geometry.slug,
+            self.policy.slug(),
+            self.dataflow.slug(),
+            self.serving.slug,
+            self.backend.slug()
+        )
+    }
+
+    /// Materialize this design point onto `base` (geometry, mode policy
+    /// and serving knobs overwritten; timing/energy constants kept).
+    pub fn apply(&self, base: &AccelConfig) -> AccelConfig {
+        let mut cfg = base.clone();
+        cfg.arrays_per_macro = self.geometry.sub_arrays;
+        cfg.array_rows = self.geometry.array_rows;
+        cfg.array_cols = self.geometry.array_cols;
+        cfg.macro_write_port_bits = self.geometry.write_port_bits;
+        cfg.features.mode_policy = self.policy;
+        cfg.serving.shards = self.serving.shards;
+        cfg.serving.policy = self.serving.policy;
+        cfg.serving.batch_size = self.serving.batch;
+        cfg
+    }
+}
+
+/// The geometry axis.  The paper's macro comes first; the rest move one
+/// knob at a time (sub-array count, column count, write-port width) so
+/// frontier trade-offs attribute cleanly.
+pub fn geometry_variants() -> Vec<GeometryVariant> {
+    vec![
+        // the paper's macro: 8 sub-arrays x 4 rows x 128 cols, 128b port
+        GeometryVariant {
+            slug: "g8x4x128",
+            sub_arrays: 8,
+            array_rows: 4,
+            array_cols: 128,
+            write_port_bits: 128,
+        },
+        GeometryVariant {
+            slug: "g4x4x128",
+            sub_arrays: 4,
+            array_rows: 4,
+            array_cols: 128,
+            write_port_bits: 128,
+        },
+        GeometryVariant {
+            slug: "g16x4x128",
+            sub_arrays: 16,
+            array_rows: 4,
+            array_cols: 128,
+            write_port_bits: 128,
+        },
+        GeometryVariant {
+            slug: "g8x4x64",
+            sub_arrays: 8,
+            array_rows: 4,
+            array_cols: 64,
+            write_port_bits: 128,
+        },
+        GeometryVariant {
+            slug: "g8x4x256",
+            sub_arrays: 8,
+            array_rows: 4,
+            array_cols: 256,
+            write_port_bits: 128,
+        },
+        GeometryVariant {
+            slug: "g8x4x128-p64",
+            sub_arrays: 8,
+            array_rows: 4,
+            array_cols: 128,
+            write_port_bits: 64,
+        },
+        GeometryVariant {
+            slug: "g8x4x128-p256",
+            sub_arrays: 8,
+            array_rows: 4,
+            array_cols: 128,
+            write_port_bits: 256,
+        },
+    ]
+}
+
+/// The serving axis (shards x route policy x batch bound), default
+/// fabric first.
+pub fn serving_variants() -> Vec<ServingVariant> {
+    vec![
+        ServingVariant {
+            slug: "s2-least-loaded-b8",
+            shards: 2,
+            policy: RoutePolicy::LeastLoaded,
+            batch: 8,
+        },
+        ServingVariant {
+            slug: "s1-round-robin-b8",
+            shards: 1,
+            policy: RoutePolicy::RoundRobin,
+            batch: 8,
+        },
+        ServingVariant {
+            slug: "s4-least-loaded-b8",
+            shards: 4,
+            policy: RoutePolicy::LeastLoaded,
+            batch: 8,
+        },
+        ServingVariant {
+            slug: "s4-modality-affinity-b16",
+            shards: 4,
+            policy: RoutePolicy::ModalityAffinity,
+            batch: 16,
+        },
+        ServingVariant {
+            slug: "s2-round-robin-b1",
+            shards: 2,
+            policy: RoutePolicy::RoundRobin,
+            batch: 1,
+        },
+        ServingVariant {
+            slug: "s8-least-loaded-b8",
+            shards: 8,
+            policy: RoutePolicy::LeastLoaded,
+            batch: 8,
+        },
+    ]
+}
+
+/// Dataflows in exploration order: the paper's design first, then the
+/// two baselines (so the default design point is index 0 overall).
+const DATAFLOWS: [DataflowKind; 3] =
+    [DataflowKind::TileStream, DataflowKind::LayerStream, DataflowKind::NonStream];
+
+/// The paper's default design point on `backend`.
+pub fn default_point(backend: Backend) -> DsePoint {
+    DsePoint {
+        geometry: geometry_variants()[0],
+        policy: ModePolicy::Auto,
+        dataflow: DataflowKind::TileStream,
+        serving: serving_variants()[0],
+        backend,
+    }
+}
+
+/// Enumerate the full space in canonical order.  `explore_serving`
+/// expands the serving axis; otherwise every point uses the default
+/// fabric (see [`ServingVariant`]).  Index 0 is
+/// [`default_point`]`(backends[0])`.
+///
+/// The mode-policy axis applies to tile streaming only: the baselines'
+/// rigid microarchitecture ignores the policy (`ModeSchedule::derive`
+/// forces normal mode), so a baseline point is enumerated once, as
+/// no-hybrid silicon (`ForcedNormal`) — crossing the ignored policies
+/// in would only add area-dominated duplicates of the same design.
+pub fn enumerate(backends: &[Backend], explore_serving: bool) -> Vec<DsePoint> {
+    let geoms = geometry_variants();
+    let serves = if explore_serving {
+        serving_variants()
+    } else {
+        vec![serving_variants()[0]]
+    };
+    let mut out = Vec::new();
+    for &backend in backends {
+        for &geometry in &geoms {
+            for dataflow in DATAFLOWS {
+                let policies: &[ModePolicy] = if dataflow == DataflowKind::TileStream {
+                    &ModePolicy::ALL
+                } else {
+                    &[ModePolicy::ForcedNormal]
+                };
+                for &policy in policies {
+                    for &serving in &serves {
+                        out.push(DsePoint { geometry, policy, dataflow, serving, backend });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Trim `points` to at most `budget` entries: the default design point
+/// (index 0) is always kept, the remainder is a seeded-RNG sample
+/// without replacement, and the survivors keep canonical order — so the
+/// selection (and therefore the whole artifact) is a pure function of
+/// `(space, budget, seed)`, independent of thread count.
+pub fn select(mut points: Vec<DsePoint>, budget: usize, seed: u64) -> Vec<DsePoint> {
+    if budget == 0 || points.len() <= budget {
+        return points;
+    }
+    let mut rest: Vec<usize> = (1..points.len()).collect();
+    Rng::new(seed).shuffle(&mut rest);
+    let mut keep = vec![false; points.len()];
+    keep[0] = true;
+    for &i in rest.iter().take(budget - 1) {
+        keep[i] = true;
+    }
+    let mut i = 0;
+    points.retain(|_| {
+        let k = keep[i];
+        i += 1;
+        k
+    });
+    points
+}
+
+/// The two design points the perf-gate smoke matrix prices through the
+/// DSE path (`dse::evaluate`), so frontier pricing — geometry
+/// application, scenario pricing, serving throughput — sits under the
+/// ±5% geomean cycle gate: a wide-column tile-stream point on the
+/// analytic backend and a fast-port layer-stream point on the event
+/// backend.
+pub fn perfgate_points() -> Vec<DsePoint> {
+    let geoms = geometry_variants();
+    let wide = *geoms.iter().find(|g| g.slug == "g8x4x256").expect("wide-cols variant");
+    let fast = *geoms.iter().find(|g| g.slug == "g8x4x128-p256").expect("fast-port variant");
+    vec![
+        DsePoint {
+            geometry: wide,
+            policy: ModePolicy::Auto,
+            dataflow: DataflowKind::TileStream,
+            serving: serving_variants()[0],
+            backend: Backend::Analytic,
+        },
+        DsePoint {
+            geometry: fast,
+            // layer streaming ignores the policy; enumerate() spells
+            // baselines as no-hybrid silicon, so the gate id matches
+            policy: ModePolicy::ForcedNormal,
+            dataflow: DataflowKind::LayerStream,
+            serving: serving_variants()[0],
+            backend: Backend::Event,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn default_point_leads_the_enumeration() {
+        let pts = enumerate(&[Backend::Analytic], false);
+        assert_eq!(pts[0], default_point(Backend::Analytic));
+        assert_eq!(pts[0].id(), "g8x4x128/auto/tile/s2-least-loaded-b8/analytic");
+    }
+
+    #[test]
+    fn enumeration_sizes_and_unique_ids() {
+        // per geometry: tile x 3 policies + the two baselines once each
+        // (their rigid silicon ignores the policy)
+        let base = enumerate(&[Backend::Analytic], false);
+        assert_eq!(base.len(), geometry_variants().len() * (3 + 2));
+        let full = enumerate(&[Backend::Analytic, Backend::Event], true);
+        assert_eq!(full.len(), base.len() * 2 * serving_variants().len());
+        let ids: BTreeSet<String> = full.iter().map(|p| p.id()).collect();
+        assert_eq!(ids.len(), full.len(), "point ids must be unique");
+        // baselines appear exactly once per geometry x serving, as
+        // no-hybrid silicon
+        assert!(full
+            .iter()
+            .filter(|p| p.dataflow != DataflowKind::TileStream)
+            .all(|p| p.policy == ModePolicy::ForcedNormal));
+    }
+
+    #[test]
+    fn apply_materializes_every_knob() {
+        let base = presets::streamdcim_default();
+        let mut p = default_point(Backend::Analytic);
+        p.geometry = geometry_variants().iter().find(|g| g.slug == "g8x4x256").copied().unwrap();
+        p.policy = ModePolicy::ForcedNormal;
+        p.serving = serving_variants()[2];
+        let cfg = p.apply(&base);
+        assert_eq!(cfg.array_cols, 256);
+        assert_eq!(cfg.geometry().cols, 256);
+        assert_eq!(cfg.features.mode_policy, ModePolicy::ForcedNormal);
+        assert_eq!(cfg.serving.shards, 4);
+        // untouched knobs survive
+        assert_eq!(cfg.freq_mhz, base.freq_mhz);
+        assert_eq!(cfg.cores, base.cores);
+    }
+
+    #[test]
+    fn select_keeps_default_order_and_budget() {
+        let pts = enumerate(&[Backend::Analytic], true);
+        assert!(pts.len() > 64);
+        let sel = select(pts.clone(), 64, 42);
+        assert_eq!(sel.len(), 64);
+        assert_eq!(sel[0], default_point(Backend::Analytic), "default point always kept");
+        // canonical order preserved: selection is a subsequence
+        let mut it = pts.iter();
+        for s in &sel {
+            assert!(it.any(|p| p == s), "selection must preserve enumeration order");
+        }
+        // deterministic in the seed, different across seeds (usually)
+        assert_eq!(select(pts.clone(), 64, 42), sel);
+        assert_ne!(select(pts.clone(), 64, 7), sel);
+        // no-op when the budget covers the space
+        assert_eq!(select(pts.clone(), pts.len(), 1), pts);
+        assert_eq!(select(pts.clone(), 0, 1), pts, "budget 0 = unlimited");
+    }
+
+    #[test]
+    fn perfgate_points_are_stable() {
+        let pts = perfgate_points();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].id(), "g8x4x256/auto/tile/s2-least-loaded-b8/analytic");
+        assert_eq!(pts[1].id(), "g8x4x128-p256/normal/layer/s2-least-loaded-b8/event");
+    }
+}

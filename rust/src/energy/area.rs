@@ -7,14 +7,18 @@
 //! published 28nm digital-CIM floorplans (TranCIM, MulTCIM).  The *shape*
 //! of the breakdown is the reproducible claim, not the third decimal.
 
-use crate::cim::ModeSchedule;
+use crate::cim::{MacroGeometry, ModeSchedule};
 use crate::config::{AccelConfig, DataflowKind};
 
 /// 28nm area constants (mm^2).
 #[derive(Debug, Clone)]
 pub struct AreaModel {
-    /// One TBR-CIM-class macro (8 arrays x 4 x 16b x 128 + adder trees +
-    /// accumulator + dual-mode reconfiguration muxing).
+    /// One TBR-CIM-class macro **at the paper geometry** (8 arrays x 4 x
+    /// 16b x 128 cells, 128b write port).  Other geometries scale
+    /// through [`AreaModel::macro_area_mm2`]: the cell array with the
+    /// cell count, the write drivers with the port width, the rest
+    /// (accumulators, control) fixed — so the design-space explorer
+    /// cannot get bigger macros or wider ports for free.
     pub macro_mm2: f64,
     /// Extra per-macro overhead for the hybrid reconfigurable mode
     /// (dual-mode sub-array adder trees).  Which macros pay it comes
@@ -46,7 +50,30 @@ impl Default for AreaModel {
     }
 }
 
+/// The paper macro's cells (32 x 128) and write-port width, the
+/// reference point `macro_mm2` is calibrated at.
+const REF_MACRO_CELLS: f64 = 4096.0;
+const REF_WRITE_PORT_BITS: f64 = 128.0;
+/// Fractions of `macro_mm2` that scale with the cell array, the write
+/// drivers, and the fixed periphery (adder trees sized per column are
+/// folded into the cell fraction; accumulator + control are fixed).
+/// They sum to 1.0, so the paper geometry prices exactly `macro_mm2`.
+const MACRO_CELL_FRACTION: f64 = 0.70;
+const MACRO_PORT_FRACTION: f64 = 0.10;
+const MACRO_FIXED_FRACTION: f64 = 0.20;
+
 impl AreaModel {
+    /// Area of one macro of geometry `geom`, mm^2: the cell fraction of
+    /// `macro_mm2` scales with `cells()/4096`, the write-driver
+    /// fraction with `write_port_bits/128`, the periphery is fixed.
+    /// Exactly `macro_mm2` at the paper geometry.
+    pub fn macro_area_mm2(&self, geom: &MacroGeometry) -> f64 {
+        let cells = geom.cells() as f64 / REF_MACRO_CELLS;
+        let port = geom.write_port_bits as f64 / REF_WRITE_PORT_BITS;
+        self.macro_mm2
+            * (MACRO_CELL_FRACTION * cells + MACRO_PORT_FRACTION * port + MACRO_FIXED_FRACTION)
+    }
+
     /// (module name, area mm^2) breakdown for a config.  The hybrid
     /// overhead is priced per hybrid-capable macro as derived from the
     /// tile-stream mode schedule of this config.
@@ -56,7 +83,7 @@ impl AreaModel {
             ModeSchedule::derive(DataflowKind::TileStream, cfg).hybrid_capable_macros() as f64;
         let buf_kb = (cfg.input_buf_kb + cfg.weight_buf_kb + cfg.output_buf_kb) as f64;
         vec![
-            ("CIM macros".to_string(), macros * self.macro_mm2),
+            ("CIM macros".to_string(), macros * self.macro_area_mm2(&cfg.geometry())),
             ("Hybrid reconfig (TBR)".to_string(), hybrid_macros * self.hybrid_overhead_mm2),
             ("Buffers (192 KB)".to_string(), buf_kb * self.sram_mm2_per_kb),
             ("TBSN + scheduler".to_string(), self.tbsn_mm2),
@@ -99,6 +126,28 @@ mod tests {
         let base = AreaModel::default().total_mm2(&cfg);
         cfg.macros_per_core = 16;
         assert!(AreaModel::default().total_mm2(&cfg) > base);
+    }
+
+    #[test]
+    fn macro_area_prices_geometry() {
+        let m = AreaModel::default();
+        let cfg = presets::streamdcim_default();
+        let base = cfg.geometry();
+        // exactly the calibrated constant at the paper geometry
+        assert!((m.macro_area_mm2(&base) - m.macro_mm2).abs() < 1e-12);
+        // wider columns (2x cells) and wider write ports cost area; the
+        // fixed periphery keeps the scaling sub-linear in cells
+        let mut wide = base;
+        wide.cols *= 2;
+        assert!(m.macro_area_mm2(&wide) > m.macro_area_mm2(&base));
+        assert!(m.macro_area_mm2(&wide) < 2.0 * m.macro_area_mm2(&base));
+        let mut fast = base;
+        fast.write_port_bits *= 2;
+        assert!(m.macro_area_mm2(&fast) > m.macro_area_mm2(&base));
+        // smaller macros get cheaper, and the config-level total follows
+        let mut small_cfg = presets::streamdcim_default();
+        small_cfg.arrays_per_macro /= 2;
+        assert!(m.total_mm2(&small_cfg) < m.total_mm2(&cfg));
     }
 
     #[test]

@@ -19,7 +19,24 @@
 //! pass geometry and `account_matmul` bookkeeping), so they agree exactly
 //! on total work, and the engine's makespan must dominate the analytic
 //! per-resource work lower bounds (property-tested in
-//! `tests/proptests.rs`).
+//! `tests/proptests.rs`).  The written tour is `docs/engine.md`.
+//!
+//! # Example
+//!
+//! Event runs attach a [`CycleTrace`]; both backends agree exactly on
+//! total work:
+//!
+//! ```
+//! use streamdcim::config::{presets, DataflowKind};
+//!
+//! let cfg = presets::streamdcim_default();
+//! let model = presets::tiny_smoke();
+//! let event = streamdcim::engine::run(DataflowKind::TileStream, &cfg, &model);
+//! let trace = event.trace.as_ref().expect("event runs carry a CycleTrace");
+//! assert_eq!(trace.makespan, event.cycles);
+//! let analytic = streamdcim::dataflow::run(DataflowKind::TileStream, &cfg, &model);
+//! assert_eq!(event.activity, analytic.activity, "backends agree on work");
+//! ```
 
 pub mod event;
 pub mod schedule;

@@ -21,6 +21,26 @@
 //! equivalent substrates: [`exec`] (thread executor), [`cli`] (arg
 //! parser), [`config`] (TOML-subset), [`util::json`], [`util::error`],
 //! [`benchkit`] and [`propcheck`].
+//!
+//! A guided tour of how these modules fit together — config to CIM mode
+//! schedule to dataflow/engine to sweep/serve/dse artifacts — lives in
+//! `docs/architecture.md`.
+//!
+//! # Example
+//!
+//! Price one workload under the paper's tile-streaming dataflow and its
+//! non-streaming baseline (both are pure functions — no clock, no RNG):
+//!
+//! ```
+//! use streamdcim::config::{presets, DataflowKind};
+//!
+//! let accel = presets::streamdcim_default();
+//! let model = presets::functional_small();
+//! let tile = streamdcim::dataflow::run(DataflowKind::TileStream, &accel, &model);
+//! let non = streamdcim::dataflow::run(DataflowKind::NonStream, &accel, &model);
+//! assert!(tile.cycles < non.cycles, "tile streaming must win");
+//! assert!(tile.energy.total_mj() < non.energy.total_mj());
+//! ```
 
 // Authored offline without clippy in the loop: style/complexity-class
 // lints are advisory here; correctness/suspicious/perf classes stay
@@ -34,6 +54,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
+pub mod dse;
 pub mod energy;
 pub mod engine;
 pub mod exec;

@@ -20,7 +20,7 @@ use streamdcim::sweep::{self, Scenario};
 use streamdcim::trace::{render_gantt, render_gantt_lanes};
 use streamdcim::util::json::Json;
 use streamdcim::util::error::Result;
-use streamdcim::{anyhow, bail, dataflow, perfgate, runtime, serve};
+use streamdcim::{anyhow, bail, dataflow, dse, perfgate, runtime, serve};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +38,8 @@ fn main() -> ExitCode {
         "perf-gate" => cmd_perf_gate(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
+        "dse" => cmd_dse(&args),
+        "config" => cmd_config(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
             println!("{}", cli::USAGE);
@@ -71,6 +73,15 @@ fn load_configs(args: &Args) -> Result<(AccelConfig, ModelConfig)> {
         model.pruning = streamdcim::config::PruningSchedule::disabled();
     }
     Ok((accel, model))
+}
+
+/// `--threads` with the shared default: available cores capped at 8.
+/// Never changes any result — every parallel consumer (`sweep`,
+/// `serve --matrix`, `dse`) is bit-identical across thread counts.
+fn thread_count(args: &Args) -> usize {
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    (args.flag_u64("threads", default_threads as u64) as usize).max(1)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -166,9 +177,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             );
         }
     }
-    let default_threads =
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-    let threads = (args.flag_u64("threads", default_threads as u64) as usize).max(1);
+    let threads = thread_count(args);
     let seed = args.flag_u64("seed", 42);
 
     let models: Vec<ModelConfig> = match args.flag("models") {
@@ -357,7 +366,11 @@ fn cmd_report(args: &Args) -> Result<()> {
         "e5" => e5_report(&accel),
         "serving" => report::serving(&accel),
         "utilization" | "util" => report::utilization(&both()),
-        other => bail!("unknown figure '{other}' (fig5|fig6|fig7|headline|e5|serving|utilization)"),
+        "frontier" | "pareto" => report::frontier(&accel),
+        other => bail!(
+            "unknown figure '{other}' \
+             (fig5|fig6|fig7|headline|e5|serving|utilization|frontier)"
+        ),
     };
     println!("{}\n{}", fig.title, fig.body);
     Ok(())
@@ -428,9 +441,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 );
             }
         }
-        let default_threads =
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-        let threads = (args.flag_u64("threads", default_threads as u64) as usize).max(1);
+        let threads = thread_count(args);
         let scenarios = serve::serve_matrix(&accel, backend, requests);
         eprintln!(
             "serve matrix: {} scenarios (shards x policy x dataflow) on {} thread(s), {} backend",
@@ -488,6 +499,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         print!("{}", rep.render_text());
     }
+    Ok(())
+}
+
+/// `streamdcim dse`: deterministic design-space exploration — price a
+/// (budget-trimmed) geometry x mode x dataflow x serving x backend
+/// space on one workload and emit the ranked multi-objective artifact
+/// plus the exact Pareto frontier.  Artifacts are bit-identical for any
+/// `--threads` value (the `dse-smoke` CI job `cmp`s re-runs).
+fn cmd_dse(args: &Args) -> Result<()> {
+    let (accel, model) = load_configs(args)?;
+    let objectives = dse::Objective::parse_list(args.flag_or("objectives", "cycles,energy,area"))
+        .map_err(|e| anyhow!("--objectives: {e}"))?;
+    let backends = match args.flag_or("engine", "analytic") {
+        "both" => vec![Backend::Analytic, Backend::Event],
+        other => vec![Backend::parse(other)
+            .ok_or_else(|| anyhow!("unknown engine (analytic|event|both)"))?],
+    };
+    let threads = thread_count(args);
+    let cfg = dse::DseConfig {
+        accel,
+        model,
+        objectives,
+        backends,
+        budget: args.flag_u64("budget", 64) as usize,
+        serve_requests: args.flag_u64("requests", 48),
+        seed: args.flag_u64("seed", 42),
+    };
+    eprintln!(
+        "dse: exploring up to {} design points of {} on {} thread(s)",
+        if cfg.budget == 0 { "all".to_string() } else { cfg.budget.to_string() },
+        cfg.model.name,
+        threads
+    );
+    let started = std::time::Instant::now();
+    let rep = dse::explore(&cfg, threads);
+    eprintln!(
+        "dse: priced {} points ({} on the frontier) in {:.2} s",
+        rep.rows.len(),
+        rep.frontier.len(),
+        started.elapsed().as_secs_f64()
+    );
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, rep.to_json().to_string_pretty())?;
+        eprintln!("dse artifact written to {path}");
+    }
+    if let Some(path) = args.flag("frontier-out") {
+        std::fs::write(path, rep.frontier_json().to_string_pretty())?;
+        eprintln!("frontier artifact written to {path}");
+    }
+    if args.has("json") {
+        println!("{}", rep.to_json().to_string_pretty());
+    } else {
+        print!("{}", rep.render_text());
+    }
+    Ok(())
+}
+
+/// `streamdcim config`: print the merged configuration (preset +
+/// `--config` overrides) as canonical TOML.  Deprecated aliases
+/// round-trip to their named keys — a file using the legacy
+/// `hybrid_mode` bool prints with `mode_policy` instead.
+fn cmd_config(args: &Args) -> Result<()> {
+    let (accel, model) = load_configs(args)?;
+    print!("{}", toml::render_accel(&accel));
+    println!();
+    print!("{}", toml::render_model(&model));
     Ok(())
 }
 

@@ -14,6 +14,7 @@
 //! and uploads the real baseline as an artifact so it can be committed.
 
 use crate::config::{presets, DataflowKind};
+use crate::dse;
 use crate::engine::Backend;
 use crate::serve;
 use crate::sweep;
@@ -38,7 +39,10 @@ pub struct GateEntry {
 /// rewrite clamp and the occupancy path), plus a serving-throughput
 /// scenario per backend x dataflow: the fabric's makespan over a fixed
 /// small arrival trace, so regressions anywhere on the request path
-/// (admission, batching, routing, pricing) trip the gate too.
+/// (admission, batching, routing, pricing) trip the gate too.  Two
+/// design points priced via `dse::evaluate` cover the design-space
+/// explorer's frontier-pricing path — scenario cycles (`dse::`) and
+/// serving cycles-per-request (`dse-serve::`) per point.
 pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
     let accel = presets::streamdcim_default();
     let models = vec![presets::tiny_smoke()];
@@ -83,6 +87,27 @@ pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
                 cycles: rep.stats.makespan,
             });
         }
+    }
+    // Two design points priced through the DSE path (geometry
+    // application + scenario pricing + serving throughput), so the
+    // frontier's pricing is covered by the same ±5% geomean gate.
+    // Each point contributes both halves of its price: the scenario
+    // cycles (`dse::`) and the serving half as mean cycles per served
+    // request on the point's fabric (`dse-serve::`), so a regression in
+    // either path trips the gate.
+    for point in dse::space::perfgate_points() {
+        let m = dse::evaluate(&point, &accel, &presets::tiny_smoke(), 32);
+        out.push(GateEntry { id: format!("dse::{}", point.id()), cycles: m.cycles });
+        let per_request = if m.served_per_mcycle > 0.0 {
+            ((1e6 / m.served_per_mcycle).round() as u64).max(1)
+        } else {
+            // a fabric that serves nothing is a catastrophic serving
+            // regression — record a sentinel that fails the gate
+            // loudly rather than a tiny value that would read as an
+            // improvement and drag the geomean down
+            u64::MAX
+        };
+        out.push(GateEntry { id: format!("dse-serve::{}", point.id()), cycles: per_request });
     }
     out
 }
@@ -366,6 +391,20 @@ mod tests {
             a.iter().map(|e| e.id.as_str()).filter(|id| id.starts_with("serve::")).collect();
         assert_eq!(serve_ids.len(), 6, "2 backends x 3 dataflows: {serve_ids:?}");
         assert!(serve_ids.iter().any(|id| id.contains("event") && id.contains("tile")));
+        // the design-space explorer's pricing path is gated too — both
+        // the scenario half and the serving half of each point's price
+        let dse_ids: Vec<&str> =
+            a.iter().map(|e| e.id.as_str()).filter(|id| id.starts_with("dse::")).collect();
+        assert_eq!(dse_ids.len(), 2, "two dse-priced design points: {dse_ids:?}");
+        assert!(dse_ids.iter().any(|id| id.contains("analytic")));
+        assert!(dse_ids.iter().any(|id| id.contains("event")));
+        let dse_serve_ids: Vec<&str> =
+            a.iter().map(|e| e.id.as_str()).filter(|id| id.starts_with("dse-serve::")).collect();
+        assert_eq!(dse_serve_ids.len(), 2, "serving half gated per point: {dse_serve_ids:?}");
+        assert!(a
+            .iter()
+            .filter(|e| e.id.starts_with("dse-serve::"))
+            .all(|e| e.cycles >= 1));
         // diff artifact JSON parses
         let out = compare(&a, &b, DEFAULT_TOLERANCE);
         assert!(out.pass);

@@ -3,6 +3,7 @@
 
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::dataflow;
+use crate::dse;
 use crate::energy::area::AreaModel;
 use crate::engine::Backend;
 use crate::metrics::RunReport;
@@ -264,6 +265,40 @@ pub fn serving(accel: &AccelConfig) -> FigureText {
     FigureText { title: "Serving — same traffic through the sharded fabric".into(), body }
 }
 
+/// Pareto frontier over cycles/energy/area — a compact design-space
+/// exploration (`dse::explore`) of the ViLBERT-base workload on the
+/// analytic backend.  Shows where the paper's hand-picked design point
+/// lands relative to the frontier the explorer finds; the full artifact
+/// comes from the `dse` subcommand.
+pub fn frontier(accel: &AccelConfig) -> FigureText {
+    let cfg = dse::DseConfig {
+        accel: accel.clone(),
+        model: crate::config::presets::vilbert_base(),
+        objectives: vec![dse::Objective::Cycles, dse::Objective::Energy, dse::Objective::Area],
+        backends: vec![Backend::Analytic],
+        budget: 24,
+        serve_requests: 24,
+        seed: 42,
+    };
+    let rep = dse::explore(&cfg, 1);
+    let mut body = rep.render_text();
+    let default_id = dse::default_point(Backend::Analytic).id();
+    if let Some(row) = rep.rows.iter().find(|r| r.point.id() == default_id) {
+        body.push_str(&format!(
+            "  paper default point: {}\n",
+            if row.on_frontier {
+                "on the frontier".to_string()
+            } else {
+                format!("dominated by {} point(s)", row.dominated_by)
+            }
+        ));
+    }
+    FigureText {
+        title: "Frontier — Pareto-optimal design points (cycles/energy/area)".into(),
+        body,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +324,13 @@ mod tests {
         let fig = serving(&presets::streamdcim_default());
         assert!(fig.body.contains("Tile-stream"));
         assert!(fig.body.contains("served/Mcycle"));
+    }
+
+    #[test]
+    fn frontier_figure_places_the_default_point() {
+        let fig = frontier(&presets::streamdcim_default());
+        assert!(fig.body.contains("Pareto frontier"));
+        assert!(fig.body.contains("paper default point"));
     }
 
     #[test]

@@ -18,7 +18,34 @@
 //!
 //! Determinism contract (shared with `sweep` and `engine`): a fabric
 //! run is a pure function of its [`ServeConfig`]; artifacts carry no
-//! wall-clock, thread-count, or environment fields.
+//! wall-clock, thread-count, or environment fields.  The written tour
+//! is `docs/serving.md`.
+//!
+//! # Example
+//!
+//! Replay a small near-saturation Poisson trace through two shards and
+//! account every request:
+//!
+//! ```
+//! use streamdcim::config::{presets, DataflowKind};
+//! use streamdcim::engine::Backend;
+//! use streamdcim::serve::{self, ArrivalKind, ServeConfig};
+//!
+//! let accel = presets::streamdcim_default();
+//! let models = vec![presets::tiny_smoke()];
+//! let mean_gap = serve::auto_gap(&accel, Backend::Analytic, &models);
+//! let rep = serve::simulate(&ServeConfig {
+//!     accel,
+//!     models,
+//!     dataflow: DataflowKind::TileStream,
+//!     backend: Backend::Analytic,
+//!     arrival: ArrivalKind::Poisson,
+//!     requests: 16,
+//!     mean_gap,
+//! });
+//! assert_eq!(rep.stats.served + rep.stats.rejected, 16);
+//! assert!(rep.stats.served_per_megacycle() > 0.0);
+//! ```
 
 pub mod arrival;
 pub mod cost;

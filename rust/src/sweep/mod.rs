@@ -13,6 +13,21 @@
 //! aggregate JSON carries no run-environment fields — so the output is
 //! **bit-identical** for any `threads` value and any shard-shuffle seed
 //! (`tests/sweep_determinism.rs` enforces this).
+//!
+//! # Example
+//!
+//! The determinism contract, in one doctest — thread count and seed
+//! change nothing:
+//!
+//! ```
+//! use streamdcim::config::presets;
+//! use streamdcim::sweep::{matrix_for, run_sweep};
+//!
+//! let scenarios = matrix_for(&presets::streamdcim_default(), &[presets::tiny_smoke()]);
+//! let serial = run_sweep(&scenarios, 1, 42).to_json().to_string_pretty();
+//! let parallel = run_sweep(&scenarios, 4, 7).to_json().to_string_pretty();
+//! assert_eq!(serial, parallel);
+//! ```
 
 pub mod matrix;
 pub mod scenario;

@@ -91,13 +91,53 @@ fn macro_section_configures_geometry_and_mode_policy() {
 
 #[test]
 fn usage_mentions_every_command() {
-    for cmd in ["run", "sweep", "trace", "perf-gate", "report", "serve", "artifacts"] {
+    for cmd in ["run", "sweep", "trace", "perf-gate", "report", "serve", "dse", "config",
+        "artifacts"]
+    {
         assert!(cli::USAGE.contains(cmd), "USAGE missing {cmd}");
     }
     // the serving fabric's knobs are documented
     for flag in ["--shards", "--policy", "--arrival", "--matrix", "--gap"] {
         assert!(cli::USAGE.contains(flag), "USAGE missing {flag}");
     }
+    // ... and the design-space explorer's
+    for flag in ["--objectives", "--budget", "--frontier-out"] {
+        assert!(cli::USAGE.contains(flag), "USAGE missing {flag}");
+    }
+    assert!(cli::USAGE.contains("frontier"), "USAGE missing the frontier figure");
+}
+
+#[test]
+fn deprecated_hybrid_mode_alias_warns_and_round_trips_to_mode_policy() {
+    // regression (PR 5): the legacy bool must (a) keep steering the mode
+    // policy, (b) produce exactly one stderr warning line per load (the
+    // default apply_accel_overrides prints what this returns), and
+    // (c) round-trip to the named mode_policy key when the merged config
+    // is re-serialized — the alias must never survive a round trip.
+    let doc = toml::parse("[features]\nhybrid_mode = false\n").unwrap();
+    let mut accel = presets::streamdcim_default();
+    let warnings = toml::apply_accel_overrides_warnings(&mut accel, &doc);
+    assert_eq!(warnings.len(), 1, "one warning line, got {warnings:?}");
+    assert!(warnings[0].contains("hybrid_mode") && warnings[0].contains("deprecated"));
+    assert_eq!(accel.features.mode_policy, streamdcim::cim::ModePolicy::ForcedNormal);
+
+    let rendered = toml::render_accel(&accel);
+    assert!(rendered.contains("mode_policy = \"normal\""));
+    assert!(!rendered.contains("hybrid_mode"), "alias leaked into serialization");
+
+    // the canonical form loads back warning-free and bit-equal
+    let doc2 = toml::parse(&rendered).unwrap();
+    let mut accel2 = presets::streamdcim_default();
+    assert!(toml::apply_accel_overrides_warnings(&mut accel2, &doc2).is_empty());
+    assert_eq!(accel2, accel);
+
+    // hybrid_mode = true maps to auto and also warns
+    let doc3 = toml::parse("[features]\nhybrid_mode = true\n").unwrap();
+    let mut accel3 = presets::streamdcim_default();
+    let w3 = toml::apply_accel_overrides_warnings(&mut accel3, &doc3);
+    assert_eq!(w3.len(), 1);
+    assert_eq!(accel3.features.mode_policy, streamdcim::cim::ModePolicy::Auto);
+    assert!(toml::render_accel(&accel3).contains("mode_policy = \"auto\""));
 }
 
 #[test]

@@ -324,3 +324,61 @@ fn prop_tile_stream_never_slower_than_layer_stream() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_pareto_frontier_subset_order_invariant_matches_bruteforce() {
+    use streamdcim::dse::pareto;
+    Prop::new("pareto frontier properties").cases(120).check(|rng| {
+        let n = rng.range_usize(1, 24);
+        let k = rng.range_usize(1, 4);
+        // a coarse integer grid so duplicates and exact ties occur often
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..k).map(|_| rng.range_u64(0, 4) as f64).collect()).collect();
+        let frontier = pareto::frontier_indices(&pts);
+
+        // frontier(points) ⊆ points: valid, unique, ascending indices
+        prop_assert!(!frontier.is_empty(), "a finite non-empty set has a frontier");
+        prop_assert!(frontier.iter().all(|&i| i < n), "index out of range: {frontier:?}");
+        prop_assert!(
+            frontier.windows(2).all(|w| w[0] < w[1]),
+            "indices not strictly ascending: {frontier:?}"
+        );
+
+        // matches an independently-written brute-force O(n^2) dominance
+        // check (strict dominance spelled out, not via pareto::dominates)
+        for i in 0..n {
+            let brute_dominated = pts.iter().any(|q| {
+                q.iter().zip(&pts[i]).all(|(a, b)| a <= b)
+                    && q.iter().zip(&pts[i]).any(|(a, b)| a < b)
+            });
+            prop_assert!(
+                frontier.contains(&i) == !brute_dominated,
+                "point {i} ({:?}): frontier membership {} vs brute-force dominated {}",
+                pts[i],
+                frontier.contains(&i),
+                brute_dominated
+            );
+            prop_assert!(
+                (pareto::dominated_by(&pts, i) > 0) == brute_dominated,
+                "dominated_by disagrees with brute force on point {i}"
+            );
+        }
+
+        // mutation-order invariance: shuffling the input never changes
+        // the frontier *set* (compared as sorted cost vectors)
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let shuffled: Vec<Vec<f64>> = perm.iter().map(|&i| pts[i].clone()).collect();
+        let f2 = pareto::frontier_indices(&shuffled);
+        let sorted = |ixs: &[usize], set: &[Vec<f64>]| {
+            let mut v: Vec<Vec<f64>> = ixs.iter().map(|&i| set[i].clone()).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            v
+        };
+        prop_assert!(
+            sorted(&frontier, &pts) == sorted(&f2, &shuffled),
+            "frontier set changed under permutation"
+        );
+        Ok(())
+    });
+}
