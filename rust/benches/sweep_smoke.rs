@@ -91,6 +91,11 @@ fn main() {
         ("sweep", Json::parse(&a).expect("aggregate json reparses")),
         ("sweep_event", Json::parse(&ea).expect("event aggregate json reparses")),
     ]);
-    std::fs::write(&out_path, artifact.to_string_pretty()).expect("write bench artifact");
+    let file = std::fs::File::create(&out_path).expect("create bench artifact");
+    let mut out = std::io::BufWriter::new(file);
+    streamdcim::artifact::JsonWriter::pretty(&mut out)
+        .value(&artifact)
+        .and_then(|_| std::io::Write::flush(&mut out))
+        .expect("write bench artifact");
     row("artifact", out_path.display());
 }

@@ -1,0 +1,148 @@
+//! Streaming artifact layer: push-writer, pull-reader, and the
+//! [`ArtifactSink`] row contract shared by every emitting subsystem.
+//!
+//! The tree API in [`crate::util::json`] stays the right tool for
+//! *small* payloads (configs, summaries, one row); this module is the
+//! scale path.  Artifacts that grow with rows / requests / design
+//! points stream through [`JsonWriter`] (pretty documents,
+//! byte-identical to `to_string_pretty`) or [`JsonlWriter`] (one
+//! compact object per line), so artifact-side memory stays O(1)
+//! however large the run.  Reading back goes through the zero-copy
+//! [`JsonReader`], whose [`reader::Num`] slices keep u64/u128 counters
+//! faithful — they never pass through f64.
+//!
+//! Subsystem row schemas and the replay format are documented in
+//! `docs/artifacts.md`.
+//!
+//! ```
+//! use streamdcim::artifact::{parse_line, JsonlWriter};
+//! use streamdcim::util::json::Json;
+//!
+//! let mut buf = Vec::new();
+//! let mut w = JsonlWriter::new(&mut buf);
+//! w.value(&Json::obj(vec![("cycles", Json::int(u64::MAX))])).unwrap();
+//! let line = String::from_utf8(buf).unwrap();
+//! let row = parse_line(line.trim_end()).unwrap();
+//! assert_eq!(row.get("cycles").and_then(|c| c.as_u64()), Some(u64::MAX));
+//! ```
+
+pub mod reader;
+pub mod writer;
+
+use std::io::{self, Write};
+
+use crate::util::json::Json;
+
+pub use reader::{parse_line, Event, JsonReader, Num};
+pub use writer::{JsonWriter, JsonlWriter};
+
+/// Row-at-a-time emission contract: a type that can stream itself as
+/// one JSON value through a [`JsonWriter`] without building an
+/// artifact-lifetime tree.  Adopted by sweep rows, serve
+/// request/shard stats, engine trace resources, dse points, and
+/// perfgate entries.
+pub trait ArtifactSink {
+    /// Stream exactly one complete JSON value.
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()>;
+}
+
+/// A `Json` tree is trivially a sink (for small payloads).
+impl ArtifactSink for Json {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(self)
+    }
+}
+
+/// Output layout shared by every emitting subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// One pretty document (the historical `to_string_pretty` bytes).
+    Json,
+    /// One compact object per line, streamed row-at-a-time.
+    Jsonl,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "json" | "pretty" => Some(Format::Json),
+            "jsonl" | "ndjson" | "jsonlines" => Some(Format::Jsonl),
+            _ => None,
+        }
+    }
+
+    /// Resolve an explicit `--format` flag against an output path: the
+    /// flag wins; otherwise a `.jsonl` extension infers JSONL; the
+    /// default is the pretty document.  `None` means the flag value was
+    /// unrecognized.
+    pub fn from_flags(flag: Option<&str>, out: Option<&str>) -> Option<Format> {
+        match flag {
+            Some(f) => Format::parse(f),
+            None => match out {
+                Some(p) if p.ends_with(".jsonl") => Some(Format::Jsonl),
+                _ => Some(Format::Json),
+            },
+        }
+    }
+
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Format::Json => "json",
+            Format::Jsonl => "jsonl",
+        }
+    }
+}
+
+/// Tag a row object with its `"row"` discriminator — the convention
+/// every multi-schema JSONL artifact uses so readers can dispatch per
+/// line.
+pub fn tagged(tag: &str, row: Json) -> Json {
+    match row {
+        Json::Obj(mut m) => {
+            m.insert("row".to_string(), Json::str(tag));
+            Json::Obj(m)
+        }
+        other => Json::obj(vec![("row", Json::str(tag)), ("value", other)]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_resolution() {
+        assert_eq!(Format::parse("json"), Some(Format::Json));
+        assert_eq!(Format::parse("jsonl"), Some(Format::Jsonl));
+        assert_eq!(Format::parse("xml"), None);
+        assert_eq!(Format::from_flags(Some("jsonl"), Some("x.json")), Some(Format::Jsonl));
+        assert_eq!(Format::from_flags(None, Some("x.jsonl")), Some(Format::Jsonl));
+        assert_eq!(Format::from_flags(None, Some("x.json")), Some(Format::Json));
+        assert_eq!(Format::from_flags(None, None), Some(Format::Json));
+        assert_eq!(Format::from_flags(Some("bogus"), None), None);
+    }
+
+    #[test]
+    fn tagged_inserts_discriminator() {
+        let row = tagged("scenario", Json::obj(vec![("id", Json::str("a"))]));
+        assert_eq!(row.get("row").and_then(|v| v.as_str()), Some("scenario"));
+        assert_eq!(row.get("id").and_then(|v| v.as_str()), Some("a"));
+    }
+
+    #[test]
+    fn sink_roundtrip_through_jsonl() {
+        let rows = vec![
+            Json::obj(vec![("cycles", Json::int(u64::MAX)), ("id", Json::str("s0"))]),
+            Json::obj(vec![("cycles", Json::int(7u64)), ("id", Json::str("s1"))]),
+        ];
+        let mut buf = Vec::new();
+        let mut w = JsonlWriter::new(&mut buf);
+        for r in &rows {
+            w.emit(r).unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let back: Vec<Json> =
+            text.lines().map(|l| parse_line(l).expect("row parses")).collect();
+        assert_eq!(back, rows);
+    }
+}

@@ -1,0 +1,573 @@
+//! Zero-copy pull-parser over borrowed JSON text.
+//!
+//! [`JsonReader`] walks a document as a stream of [`Event`]s without
+//! building a tree: strings come back as `Cow<&str>` slices of the
+//! input (borrowed whenever they carry no escapes), and numbers stay
+//! raw text ([`Num`]) so callers pick a lossless decoding — u64/u128
+//! cycle counters never round-trip through f64.  The design follows
+//! hifijson's slice/iterator lexing: the only allocations are escaped
+//! strings and the (depth-bounded) container stack.
+//!
+//! Malformed input — truncated rows, bad numbers, nesting past
+//! [`MAX_DEPTH`] — returns a positioned `JsonError`; nothing panics
+//! (`tests/artifact_stream.rs`).
+
+use std::borrow::Cow;
+
+use crate::util::json::{Json, JsonError};
+
+/// Nesting bound: hostile deeply-nested input errors instead of
+/// exhausting memory or (in tree rebuilds) the call stack.
+pub const MAX_DEPTH: usize = 256;
+
+/// A number kept as its raw text slice; decode losslessly on demand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Num<'a>(pub &'a str);
+
+impl<'a> Num<'a> {
+    /// True when the literal has no fraction or exponent.
+    pub fn is_integer(&self) -> bool {
+        !self.0.contains(|c| matches!(c, '.' | 'e' | 'E'))
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.0.parse().ok()
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.0.parse().ok()
+    }
+
+    pub fn as_u128(&self) -> Option<u128> {
+        self.0.parse().ok()
+    }
+
+    pub fn as_i128(&self) -> Option<i128> {
+        self.0.parse().ok()
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        self.0.parse().ok()
+    }
+
+    /// Faithful tree value: integer literals become `Json::Int`.
+    pub fn to_json(&self) -> Json {
+        if self.is_integer() {
+            if let Ok(i) = self.0.parse::<i128>() {
+                return Json::Int(i);
+            }
+        }
+        Json::Num(self.0.parse::<f64>().unwrap_or(f64::NAN))
+    }
+}
+
+/// One parse event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    BeginObj,
+    EndObj,
+    BeginArr,
+    EndArr,
+    /// An object key (always followed by that key's value events).
+    Key(Cow<'a, str>),
+    Null,
+    Bool(bool),
+    Num(Num<'a>),
+    Str(Cow<'a, str>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    /// A value: top level, after a key, or after ',' in an array.
+    Value,
+    /// Just opened an object: a key or an immediate '}'.
+    FirstKey,
+    /// After ',' in an object: a key.
+    Key,
+    /// Just opened an array: a value or an immediate ']'.
+    FirstValue,
+    /// After a complete value inside a container.
+    CommaOrEnd,
+    /// The top-level value is complete.
+    Done,
+}
+
+/// Streaming pull parser: call [`JsonReader::next_event`] until it
+/// yields `Ok(None)` (clean end of document).
+pub struct JsonReader<'a> {
+    src: &'a str,
+    b: &'a [u8],
+    i: usize,
+    /// One bool per open container: `true` = object, `false` = array.
+    stack: Vec<bool>,
+    expect: Expect,
+}
+
+impl<'a> JsonReader<'a> {
+    pub fn new(src: &'a str) -> Self {
+        JsonReader { src, b: src.as_bytes(), i: 0, stack: Vec::new(), expect: Expect::Value }
+    }
+
+    /// Current byte offset (error positions refer to this).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.i, msg: msg.to_string() }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// The next event, or `Ok(None)` at the clean end of the document.
+    pub fn next_event(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        self.ws();
+        match self.expect {
+            Expect::Done => {
+                if self.i == self.b.len() {
+                    Ok(None)
+                } else {
+                    Err(self.err("trailing data"))
+                }
+            }
+            Expect::Value => self.value_event(),
+            Expect::FirstKey => {
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.pop_frame(Event::EndObj)
+                } else {
+                    self.key_event()
+                }
+            }
+            Expect::Key => self.key_event(),
+            Expect::FirstValue => {
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.pop_frame(Event::EndArr)
+                } else {
+                    self.value_event()
+                }
+            }
+            Expect::CommaOrEnd => {
+                let is_obj = *self.stack.last().expect("CommaOrEnd implies an open container");
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.ws();
+                        if is_obj {
+                            self.key_event()
+                        } else {
+                            self.value_event()
+                        }
+                    }
+                    Some(b'}') if is_obj => {
+                        self.i += 1;
+                        self.pop_frame(Event::EndObj)
+                    }
+                    Some(b']') if !is_obj => {
+                        self.i += 1;
+                        self.pop_frame(Event::EndArr)
+                    }
+                    _ => Err(self.err(if is_obj {
+                        "expected ',' or '}'"
+                    } else {
+                        "expected ',' or ']'"
+                    })),
+                }
+            }
+        }
+    }
+
+    fn after_value(&mut self) {
+        self.expect = if self.stack.is_empty() { Expect::Done } else { Expect::CommaOrEnd };
+    }
+
+    fn pop_frame(&mut self, ev: Event<'a>) -> Result<Option<Event<'a>>, JsonError> {
+        self.stack.pop();
+        self.after_value();
+        Ok(Some(ev))
+    }
+
+    fn value_event(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.push_frame(true)?;
+                self.expect = Expect::FirstKey;
+                Ok(Some(Event::BeginObj))
+            }
+            Some(b'[') => {
+                self.push_frame(false)?;
+                self.expect = Expect::FirstValue;
+                Ok(Some(Event::BeginArr))
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(Some(Event::Str(s)))
+            }
+            Some(b't') => {
+                self.lit("true")?;
+                self.after_value();
+                Ok(Some(Event::Bool(true)))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                self.after_value();
+                Ok(Some(Event::Bool(false)))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                self.after_value();
+                Ok(Some(Event::Null))
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Some(Event::Num(n)))
+            }
+            None => Err(self.err("unexpected end of input")),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected object key"));
+        }
+        let k = self.string()?;
+        self.ws();
+        if self.peek() != Some(b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.i += 1;
+        self.expect = Expect::Value;
+        Ok(Some(Event::Key(k)))
+    }
+
+    fn push_frame(&mut self, is_obj: bool) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.i += 1;
+        self.stack.push(is_obj);
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Num<'a>, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let s = &self.src[start..self.i];
+        // validate now so malformed literals fail at the right offset
+        // (f64 parsing accepts every well-formed JSON number)
+        if s.parse::<f64>().is_err() {
+            return Err(JsonError { pos: start, msg: "bad number".to_string() });
+        }
+        Ok(Num(s))
+    }
+
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.i += 1;
+        let start = self.i;
+        // fast path: no escapes => borrow straight from the input
+        while let Some(c) = self.peek() {
+            match c {
+                b'"' => {
+                    let s = &self.src[start..self.i];
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                b'\\' => break,
+                _ => self.i += 1,
+            }
+        }
+        if self.peek().is_none() {
+            return Err(self.err("unterminated string"));
+        }
+        // slow path: unescape into an owned buffer (same escapes as the
+        // tree parser)
+        let mut s = String::from(&self.src[start..self.i]);
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(Cow::Owned(s));
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    let run = self.i;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.i += 1;
+                    }
+                    s.push_str(&self.src[run..self.i]);
+                }
+            }
+        }
+    }
+
+    /// Consume one complete value (scalar or whole container) without
+    /// building anything.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next_event()?.ok_or_else(|| self.err("unexpected end of input"))? {
+                Event::BeginObj | Event::BeginArr => depth += 1,
+                Event::EndObj | Event::EndArr => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Event::Key(_) => {}
+                _ => {
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Parse one complete value into a tree with faithful integers.
+    /// Small values only (JSONL rows, per-scenario entries) — the
+    /// streaming [`Self::next_event`] loop is the O(1)-memory path.
+    pub fn read_value(&mut self) -> Result<Json, JsonError> {
+        let ev = self.next_event()?.ok_or_else(|| self.err("unexpected end of input"))?;
+        self.build_value(ev)
+    }
+
+    fn build_value(&mut self, ev: Event<'a>) -> Result<Json, JsonError> {
+        Ok(match ev {
+            Event::Null => Json::Null,
+            Event::Bool(b) => Json::Bool(b),
+            Event::Num(n) => n.to_json(),
+            Event::Str(s) => Json::Str(s.into_owned()),
+            Event::BeginArr => {
+                let mut items = Vec::new();
+                loop {
+                    match self
+                        .next_event()?
+                        .ok_or_else(|| self.err("unexpected end of input"))?
+                    {
+                        Event::EndArr => break,
+                        item => items.push(self.build_value(item)?),
+                    }
+                }
+                Json::Arr(items)
+            }
+            Event::BeginObj => {
+                let mut m = std::collections::BTreeMap::new();
+                loop {
+                    match self
+                        .next_event()?
+                        .ok_or_else(|| self.err("unexpected end of input"))?
+                    {
+                        Event::EndObj => break,
+                        Event::Key(k) => {
+                            let vev = self
+                                .next_event()?
+                                .ok_or_else(|| self.err("unexpected end of input"))?;
+                            let v = self.build_value(vev)?;
+                            m.insert(k.into_owned(), v);
+                        }
+                        _ => return Err(self.err("expected object key")),
+                    }
+                }
+                Json::Obj(m)
+            }
+            Event::Key(_) | Event::EndObj | Event::EndArr => {
+                return Err(self.err("unexpected event"))
+            }
+        })
+    }
+}
+
+/// Parse one standalone document (e.g. a JSONL line) into a tree with
+/// faithful integers, rejecting trailing data.
+pub fn parse_line(line: &str) -> Result<Json, JsonError> {
+    let mut r = JsonReader::new(line);
+    let v = r.read_value()?;
+    r.next_event()?; // Done state: errors on trailing data
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(src: &str) -> Result<Vec<Event<'_>>, JsonError> {
+        let mut r = JsonReader::new(src);
+        let mut out = Vec::new();
+        while let Some(ev) = r.next_event()? {
+            out.push(ev);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn pulls_a_flat_object() {
+        let evs = events(r#"{"a": 1, "b": [true, null], "c": "x"}"#).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                Event::BeginObj,
+                Event::Key(Cow::Borrowed("a")),
+                Event::Num(Num("1")),
+                Event::Key(Cow::Borrowed("b")),
+                Event::BeginArr,
+                Event::Bool(true),
+                Event::Null,
+                Event::EndArr,
+                Event::Key(Cow::Borrowed("c")),
+                Event::Str(Cow::Borrowed("x")),
+                Event::EndObj,
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_borrow_unless_escaped() {
+        let evs = events(r#"["plain", "esc\nq"]"#).unwrap();
+        match (&evs[1], &evs[2]) {
+            (Event::Str(a), Event::Str(b)) => {
+                assert!(matches!(a, Cow::Borrowed(_)), "no escapes => zero-copy");
+                assert!(matches!(b, Cow::Owned(_)));
+                assert_eq!(b.as_ref(), "esc\nq");
+            }
+            other => panic!("unexpected events {other:?}"),
+        }
+    }
+
+    #[test]
+    fn numbers_stay_faithful() {
+        let big = u64::MAX;
+        let evs = events(&format!("[{big}, 1.5, {}]", u128::MAX)).unwrap();
+        match &evs[1] {
+            Event::Num(n) => {
+                assert!(n.is_integer());
+                assert_eq!(n.as_u64(), Some(big));
+            }
+            other => panic!("{other:?}"),
+        }
+        match &evs[2] {
+            Event::Num(n) => {
+                assert!(!n.is_integer());
+                assert_eq!(n.as_f64(), Some(1.5));
+                assert_eq!(n.as_u64(), None);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &evs[3] {
+            Event::Num(n) => assert_eq!(n.as_u128(), Some(u128::MAX)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\"",
+            "{\"a\": 1,",
+            "[1, 2",
+            "[1 2]",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "1-2e++5",
+            "{} trailing",
+            "[1,]",
+            "{,}",
+        ] {
+            assert!(events(bad).is_err(), "{bad:?} must error");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_bounded() {
+        let deep = "[".repeat(MAX_DEPTH + 10);
+        assert!(events(&deep).is_err());
+        let ok = "[".repeat(64) + &"]".repeat(64);
+        assert!(events(&ok).is_ok());
+    }
+
+    #[test]
+    fn read_value_rebuilds_faithfully() {
+        let src = r#"{"big": 18446744073709551615, "f": 2.5, "l": [1, {"k": "v"}]}"#;
+        let v = parse_line(src).unwrap();
+        assert_eq!(v.get("big").and_then(|x| x.as_u64()), Some(u64::MAX));
+        assert_eq!(v.get("f").and_then(|x| x.as_f64()), Some(2.5));
+        assert_eq!(parse_line("{} junk").err().map(|e| e.msg), Some("trailing data".into()));
+    }
+
+    #[test]
+    fn skip_value_consumes_whole_subtrees() {
+        let src = r#"{"skip": {"deep": [1, 2, {"x": 3}]}, "keep": 7}"#;
+        let mut r = JsonReader::new(src);
+        assert_eq!(r.next_event().unwrap(), Some(Event::BeginObj));
+        assert_eq!(r.next_event().unwrap(), Some(Event::Key(Cow::Borrowed("skip"))));
+        r.skip_value().unwrap();
+        assert_eq!(r.next_event().unwrap(), Some(Event::Key(Cow::Borrowed("keep"))));
+        assert_eq!(r.next_event().unwrap(), Some(Event::Num(Num("7"))));
+        assert_eq!(r.next_event().unwrap(), Some(Event::EndObj));
+        assert_eq!(r.next_event().unwrap(), None);
+    }
+}

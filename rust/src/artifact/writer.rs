@@ -1,0 +1,300 @@
+//! Streaming JSON emission: a push-API [`JsonWriter`] plus the
+//! row-at-a-time JSONL wrapper [`JsonlWriter`].
+//!
+//! The pretty mode is **byte-identical** to `Json::to_string_pretty`
+//! for the same logical tree (same padding, separators, float and
+//! string rendering — the shared `emit_num`/`emit_str` in `util::json`
+//! guarantee the scalar halves; `tests/artifact_stream.rs` byte-compares
+//! whole subsystem artifacts).  One caveat follows from the tree type:
+//! `Json::Obj` is a `BTreeMap`, so a hand-streamed object must push its
+//! keys in **sorted order** to match the tree output.
+//!
+//! Unlike the tree path, nothing here materializes the document: every
+//! scalar goes straight to the underlying `io::Write`, and the writer's
+//! only state is one `(is_obj, has_items)` frame per open container —
+//! constant memory however many rows flow through.
+
+use std::io::{self, Write};
+
+use crate::util::json::{emit_num, emit_str, Json};
+
+/// Push-API streaming JSON writer over any `io::Write`.
+///
+/// `begin_obj`/`key`/scalar/`end` calls must balance; misuse (a value
+/// where a key is due, `end` at the top level) is a debug assertion,
+/// not a runtime branch — artifact schemas are static call sequences.
+pub struct JsonWriter<W: Write> {
+    out: W,
+    pretty: bool,
+    /// One frame per open container: `(is_obj, has_items)`.
+    stack: Vec<(bool, bool)>,
+    /// A key has been written and its value is pending.
+    after_key: bool,
+}
+
+impl<W: Write> JsonWriter<W> {
+    /// Pretty mode: byte-identical to `Json::to_string_pretty`.
+    pub fn pretty(out: W) -> Self {
+        JsonWriter { out, pretty: true, stack: Vec::new(), after_key: false }
+    }
+
+    /// Compact mode: the single-line JSONL row format (no padding,
+    /// `":"` separators).
+    pub fn compact(out: W) -> Self {
+        JsonWriter { out, pretty: false, stack: Vec::new(), after_key: false }
+    }
+
+    /// True once every opened container has been closed.
+    pub fn is_balanced(&self) -> bool {
+        self.stack.is_empty() && !self.after_key
+    }
+
+    /// Newline + two spaces per open container (pretty mode only).
+    fn pad(&mut self) -> io::Result<()> {
+        if self.pretty {
+            self.out.write_all(b"\n")?;
+            for _ in 0..self.stack.len() {
+                self.out.write_all(b"  ")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Separator bookkeeping before any value (scalar or container).
+    fn before_value(&mut self) -> io::Result<()> {
+        if self.after_key {
+            self.after_key = false;
+            return Ok(());
+        }
+        if let Some((is_obj, has_items)) = self.stack.last_mut() {
+            debug_assert!(!*is_obj, "object values need a key() first");
+            if *has_items {
+                self.out.write_all(b",")?;
+            }
+            *has_items = true;
+            self.pad()?;
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"{")?;
+        self.stack.push((true, false));
+        Ok(())
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"[")?;
+        self.stack.push((false, false));
+        Ok(())
+    }
+
+    /// Close the innermost container.
+    pub fn end(&mut self) -> io::Result<()> {
+        let (is_obj, has_items) = self.stack.pop().expect("end() without an open container");
+        debug_assert!(!self.after_key, "end() with a dangling key");
+        if has_items {
+            self.pad()?;
+        }
+        self.out.write_all(if is_obj { b"}" } else { b"]" })
+    }
+
+    /// Emit the next object key.  Keys must arrive in sorted order for
+    /// byte-identity with the (BTreeMap-backed) tree writer.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        let (is_obj, has_items) =
+            self.stack.last_mut().expect("key() outside an object");
+        debug_assert!(*is_obj, "key() inside an array");
+        debug_assert!(!self.after_key, "two keys in a row");
+        if *has_items {
+            self.out.write_all(b",")?;
+        }
+        *has_items = true;
+        self.pad()?;
+        let mut buf = String::new();
+        emit_str(&mut buf, k);
+        self.out.write_all(buf.as_bytes())?;
+        self.out.write_all(if self.pretty { b": " } else { b":" })?;
+        self.after_key = true;
+        Ok(())
+    }
+
+    pub fn null_val(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"null")
+    }
+
+    pub fn bool_val(&mut self, v: bool) -> io::Result<()> {
+        self.before_value()?;
+        self.out.write_all(if v { b"true" as &[u8] } else { b"false" })
+    }
+
+    /// Float rendering identical to `Json::Num` emission.
+    pub fn f64_val(&mut self, v: f64) -> io::Result<()> {
+        self.before_value()?;
+        let mut buf = String::new();
+        emit_num(&mut buf, v);
+        self.out.write_all(buf.as_bytes())
+    }
+
+    /// Lossless u64 (digits verbatim — no f64 round-trip).
+    pub fn u64_val(&mut self, v: u64) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.out, "{v}")
+    }
+
+    /// Lossless u128 (covers counters past `i128::MAX` that the tree
+    /// type cannot hold).
+    pub fn u128_val(&mut self, v: u128) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.out, "{v}")
+    }
+
+    pub fn i128_val(&mut self, v: i128) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.out, "{v}")
+    }
+
+    pub fn str_val(&mut self, v: &str) -> io::Result<()> {
+        self.before_value()?;
+        let mut buf = String::new();
+        emit_str(&mut buf, v);
+        self.out.write_all(buf.as_bytes())
+    }
+
+    /// Emit a (small) tree in place: the bridge that lets document-level
+    /// streaming reuse the per-row `to_json` schemas.  The tree is
+    /// borrowed and dropped by the caller right after — O(row), never
+    /// O(artifact).
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        match v {
+            Json::Null => self.null_val(),
+            Json::Bool(b) => self.bool_val(*b),
+            Json::Num(n) => self.f64_val(*n),
+            Json::Int(i) => self.i128_val(*i),
+            Json::Str(s) => self.str_val(s),
+            Json::Arr(items) => {
+                self.begin_arr()?;
+                for item in items {
+                    self.value(item)?;
+                }
+                self.end()
+            }
+            Json::Obj(m) => {
+                self.begin_obj()?;
+                for (k, v) in m {
+                    self.key(k)?;
+                    self.value(v)?;
+                }
+                self.end()
+            }
+        }
+    }
+
+    /// `key` + tree value in one call.
+    pub fn field(&mut self, k: &str, v: &Json) -> io::Result<()> {
+        self.key(k)?;
+        self.value(v)
+    }
+}
+
+/// Row-at-a-time JSONL emission: each `row` callback streams one
+/// compact object, terminated by `\n`.  Constant memory per row.
+pub struct JsonlWriter<W: Write> {
+    out: W,
+}
+
+impl<W: Write> JsonlWriter<W> {
+    pub fn new(out: W) -> Self {
+        JsonlWriter { out }
+    }
+
+    /// Stream one row through a compact [`JsonWriter`].
+    pub fn row<F>(&mut self, f: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut JsonWriter<&mut W>) -> io::Result<()>,
+    {
+        let mut w = JsonWriter::compact(&mut self.out);
+        f(&mut w)?;
+        debug_assert!(w.is_balanced(), "unbalanced JSONL row");
+        self.out.write_all(b"\n")
+    }
+
+    /// Emit one (small, immediately dropped) tree as a row.
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        self.row(|w| w.value(v))
+    }
+
+    /// Emit one [`super::ArtifactSink`] row.
+    pub fn emit<S: super::ArtifactSink>(&mut self, s: &S) -> io::Result<()> {
+        self.row(|w| s.emit(w))
+    }
+
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pretty_stream_matches_tree_bytes() {
+        let tree = Json::obj(vec![
+            ("arr", Json::arr(vec![Json::int(1u64), Json::str("x"), Json::Null])),
+            ("empty_arr", Json::arr(vec![])),
+            ("empty_obj", Json::obj(vec![])),
+            ("nested", Json::obj(vec![("k", Json::num(1.5))])),
+            ("s", Json::str("a\"b\nc")),
+        ]);
+        let mut buf = Vec::new();
+        JsonWriter::pretty(&mut buf).value(&tree).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), tree.to_string_pretty());
+    }
+
+    #[test]
+    fn push_api_matches_tree_bytes() {
+        let tree = Json::obj(vec![
+            ("cycles", Json::int(u64::MAX)),
+            ("name", Json::str("tiny")),
+            ("ratio", Json::num(0.75)),
+            ("rows", Json::arr(vec![Json::int(1u64), Json::int(2u64)])),
+        ]);
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::pretty(&mut buf);
+        w.begin_obj().unwrap();
+        w.key("cycles").unwrap();
+        w.u64_val(u64::MAX).unwrap();
+        w.key("name").unwrap();
+        w.str_val("tiny").unwrap();
+        w.key("ratio").unwrap();
+        w.f64_val(0.75).unwrap();
+        w.key("rows").unwrap();
+        w.begin_arr().unwrap();
+        w.u64_val(1).unwrap();
+        w.u64_val(2).unwrap();
+        w.end().unwrap();
+        w.end().unwrap();
+        assert!(w.is_balanced());
+        assert_eq!(String::from_utf8(buf).unwrap(), tree.to_string_pretty());
+    }
+
+    #[test]
+    fn jsonl_rows_are_compact_lines() {
+        let mut buf = Vec::new();
+        let mut w = JsonlWriter::new(&mut buf);
+        w.value(&Json::obj(vec![("a", Json::int(1u64))])).unwrap();
+        w.row(|jw| {
+            jw.begin_obj()?;
+            jw.key("b")?;
+            jw.u128_val(u128::MAX)?;
+            jw.end()
+        })
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, format!("{{\"a\":1}}\n{{\"b\":{}}}\n", u128::MAX));
+    }
+}

@@ -77,16 +77,22 @@ StreamDCIM — tile-based streaming digital CIM accelerator (paper reproduction)
 USAGE: streamdcim <command> [options]
 
 COMMANDS
+  Every artifact-emitting command takes --out <path> and
+  --format json|jsonl (default json; a .jsonl extension infers jsonl).
+  json is the pretty document; jsonl streams one tagged row per line
+  (see docs/artifacts.md).
+
   run        simulate a model under one dataflow
                --model <preset>                      (default base; see below)
                --dataflow tile|layer|non             (default tile)
                --engine analytic|event               (default analytic)
+               --out <path>  --format json|jsonl     write the run report
                --config <file.toml>  --json  --trace
   sweep      run the full scenario matrix (dataflow x model x ablation)
                --threads <n>       (default: available cores, max 8)
                --models a,b,c      (default: the whole sweep registry)
                --engine analytic|event  simulation backend (default analytic)
-               --out <file.json>   write the aggregate JSON to a file
+               --out <path>  --format json|jsonl   write the aggregate
                --seed <n>          shard-shuffle seed (default 42; does
                                    not affect results — aggregates are
                                    bit-identical for any seed/threads)
@@ -95,14 +101,17 @@ COMMANDS
   trace      event-engine pipeline trace (CycleTrace) for one run
                --model <preset>    --dataflow tile|layer|non (default tile)
                --config <file.toml>
-               --out <file.json>   deterministic trace artifact
+               --out <path>  --format json|jsonl   deterministic artifact
                --segments          include per-resource busy segments
                --gantt             textual Gantt chart  --width <n> (100)
   perf-gate  compare deterministic smoke-matrix cycles vs a baseline
                --baseline <file>   committed baseline (BENCH_baseline.json)
                --write-baseline <file>   regenerate the baseline
+               --stream-diff <fileB>     diff --baseline vs <fileB> through
+                                   the pull parser (no simulation, neither
+                                   document materialized)
                --tolerance <f>     geomean ratio tolerance (default 0.05)
-               --out <file.json>   write the diff artifact
+               --out <path>  --format json|jsonl   write the diff artifact
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
                --figure fig5|fig6|fig7|headline|e5|serving|utilization|
@@ -125,8 +134,9 @@ COMMANDS
                --threads <n>       worker threads (artifact identical
                                    for any value)
                --seed <n>          sampling seed (default 42)
-               --out <file.json>   ranked multi-objective artifact
+               --out <path>  --format json|jsonl  ranked artifact
                --frontier-out <file.json>   frontier-only artifact
+                                   (always a pretty document)
                --config <file.toml>  --json
   config     print the merged configuration as canonical TOML
                --model <preset>    --config <file.toml>
@@ -135,7 +145,10 @@ COMMANDS
   serve      closed-loop traffic through the sharded serving fabric
                --shards <n>        accelerator shards (default 2)
                --policy round-robin|least-loaded|modality-affinity
-               --arrival uniform|poisson|burst       (default poisson)
+               --arrival uniform|poisson|burst|replay:<trace.jsonl>
+                                   (default poisson; replay feeds a
+                                   recorded --trace-out file back in and
+                                   reproduces its ServeStats exactly)
                --requests <n>      arrival-trace length (default 256)
                --gap <cycles>      mean inter-arrival gap (default: auto,
                                    tile-priced near-saturation)
@@ -144,7 +157,9 @@ COMMANDS
                --engine analytic|event               (default event)
                --queue-depth <n>   per-modality admission bound
                --batch <n>         max batch size  --seed <n> arrival seed
-               --out <file.json>   deterministic serve artifact
+               --out <path>  --format json|jsonl   deterministic artifact
+               --trace-out <trace.jsonl>   record the replayable arrival
+                                   trace (streamed row-at-a-time)
                --config <file.toml> ([serving] + [accel] sections)
                --matrix            run the shards x policy x dataflow
                                    serving sweep (--threads <n>)  --json

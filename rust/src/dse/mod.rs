@@ -52,6 +52,9 @@ pub mod space;
 pub use pareto::{dominates, frontier_indices, Objective};
 pub use space::{default_point, DsePoint, GeometryVariant, ServingVariant};
 
+use std::io::{self, Write};
+
+use crate::artifact::{tagged, ArtifactSink, JsonWriter, JsonlWriter};
 use crate::config::{AccelConfig, ModelConfig};
 use crate::energy::area::AreaModel;
 use crate::engine::Backend;
@@ -267,14 +270,14 @@ fn row_json(r: &DseRow, objectives: &[Objective], rank: usize) -> Json {
     let m = &r.metrics;
     Json::obj(vec![
         ("id", Json::str(r.point.id())),
-        ("rank", Json::num(rank as f64)),
+        ("rank", Json::int(rank as u64)),
         (
             "geometry",
             Json::obj(vec![
-                ("sub_arrays", Json::num(r.point.geometry.sub_arrays as f64)),
-                ("array_rows", Json::num(r.point.geometry.array_rows as f64)),
-                ("array_cols", Json::num(r.point.geometry.array_cols as f64)),
-                ("write_port_bits", Json::num(r.point.geometry.write_port_bits as f64)),
+                ("sub_arrays", Json::int(r.point.geometry.sub_arrays)),
+                ("array_rows", Json::int(r.point.geometry.array_rows)),
+                ("array_cols", Json::int(r.point.geometry.array_cols)),
+                ("write_port_bits", Json::int(r.point.geometry.write_port_bits)),
             ]),
         ),
         ("mode_policy", Json::str(r.point.policy.slug())),
@@ -282,13 +285,13 @@ fn row_json(r: &DseRow, objectives: &[Objective], rank: usize) -> Json {
         (
             "serving",
             Json::obj(vec![
-                ("shards", Json::num(r.point.serving.shards as f64)),
+                ("shards", Json::int(r.point.serving.shards)),
                 ("policy", Json::str(r.point.serving.policy.slug())),
-                ("batch", Json::num(r.point.serving.batch as f64)),
+                ("batch", Json::int(r.point.serving.batch)),
             ]),
         ),
         ("engine", Json::str(r.point.backend.slug())),
-        ("cycles", Json::num(m.cycles as f64)),
+        ("cycles", Json::int(m.cycles)),
         ("energy_mj", Json::num(m.energy_mj)),
         ("area_mm2", Json::num(m.area_mm2)),
         ("intra_macro_utilization", Json::num(m.intra_macro_utilization)),
@@ -302,9 +305,24 @@ fn row_json(r: &DseRow, objectives: &[Objective], rank: usize) -> Json {
                     .collect(),
             ),
         ),
-        ("dominated_by", Json::num(r.dominated_by as f64)),
+        ("dominated_by", Json::int(r.dominated_by as u64)),
         ("on_frontier", Json::Bool(r.on_frontier)),
     ])
+}
+
+/// A ranked DSE row pre-bound to its objectives and rank — the
+/// row-at-a-time emission unit of the `dse` artifacts.
+pub struct RankedRow<'a> {
+    pub row: &'a DseRow,
+    pub objectives: &'a [Objective],
+    /// 1-based rank in the report ordering.
+    pub rank: usize,
+}
+
+impl ArtifactSink for RankedRow<'_> {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&row_json(self.row, self.objectives, self.rank))
+    }
 }
 
 impl DseReport {
@@ -317,14 +335,11 @@ impl DseReport {
         Json::obj(vec![
             ("kind", Json::str("dse-report")),
             ("model", Json::str(self.model.clone())),
-            (
-                "objectives",
-                Json::arr(self.objectives.iter().map(|o| Json::str(o.slug())).collect()),
-            ),
-            ("space_size", Json::num(self.space_size as f64)),
-            ("evaluated", Json::num(self.rows.len() as f64)),
-            ("serve_requests", Json::num(self.serve_requests as f64)),
-            ("frontier_size", Json::num(self.frontier.len() as f64)),
+            ("objectives", self.objectives_json()),
+            ("space_size", Json::int(self.space_size as u64)),
+            ("evaluated", Json::int(self.rows.len() as u64)),
+            ("serve_requests", Json::int(self.serve_requests)),
+            ("frontier_size", Json::int(self.frontier.len() as u64)),
             (
                 "frontier",
                 Json::arr(self.frontier.iter().map(|id| Json::str(id.clone())).collect()),
@@ -342,17 +357,18 @@ impl DseReport {
         ])
     }
 
+    fn objectives_json(&self) -> Json {
+        Json::arr(self.objectives.iter().map(|o| Json::str(o.slug())).collect())
+    }
+
     /// The frontier-only artifact (`dse --frontier-out`): the same row
     /// schema, restricted to non-dominated points.
     pub fn frontier_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("dse-frontier")),
             ("model", Json::str(self.model.clone())),
-            (
-                "objectives",
-                Json::arr(self.objectives.iter().map(|o| Json::str(o.slug())).collect()),
-            ),
-            ("frontier_size", Json::num(self.frontier.len() as f64)),
+            ("objectives", self.objectives_json()),
+            ("frontier_size", Json::int(self.frontier.len() as u64)),
             (
                 "points",
                 Json::arr(
@@ -365,6 +381,84 @@ impl DseReport {
                 ),
             ),
         ])
+    }
+
+    /// Stream the ranked artifact — byte-identical to
+    /// `to_json().to_string_pretty()`, one point tree at a time.
+    /// Sorted keys: evaluated, frontier, frontier_size, kind, model,
+    /// objectives, points, serve_requests, space_size.
+    pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        w.key("evaluated")?;
+        w.u64_val(self.rows.len() as u64)?;
+        w.key("frontier")?;
+        w.begin_arr()?;
+        for id in &self.frontier {
+            w.str_val(id)?;
+        }
+        w.end()?;
+        w.key("frontier_size")?;
+        w.u64_val(self.frontier.len() as u64)?;
+        w.key("kind")?;
+        w.str_val("dse-report")?;
+        w.key("model")?;
+        w.str_val(&self.model)?;
+        w.field("objectives", &self.objectives_json())?;
+        w.key("points")?;
+        w.begin_arr()?;
+        for (i, r) in self.rows.iter().enumerate() {
+            RankedRow { row: r, objectives: &self.objectives, rank: i + 1 }.emit(&mut w)?;
+        }
+        w.end()?;
+        w.key("serve_requests")?;
+        w.u64_val(self.serve_requests)?;
+        w.key("space_size")?;
+        w.u64_val(self.space_size as u64)?;
+        w.end()
+    }
+
+    /// Stream the frontier-only artifact — byte-identical to
+    /// `frontier_json().to_string_pretty()`.
+    pub fn write_frontier_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        w.key("frontier_size")?;
+        w.u64_val(self.frontier.len() as u64)?;
+        w.key("kind")?;
+        w.str_val("dse-frontier")?;
+        w.key("model")?;
+        w.str_val(&self.model)?;
+        w.field("objectives", &self.objectives_json())?;
+        w.key("points")?;
+        w.begin_arr()?;
+        for (i, r) in self.rows.iter().enumerate().filter(|(_, r)| r.on_frontier) {
+            RankedRow { row: r, objectives: &self.objectives, rank: i + 1 }.emit(&mut w)?;
+        }
+        w.end()?;
+        w.end()
+    }
+
+    /// JSONL layout: a `header` row, then one `point` row per priced
+    /// design point (frontier membership is on each row).
+    pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonlWriter::new(out);
+        w.value(&tagged(
+            "header",
+            Json::obj(vec![
+                ("kind", Json::str("dse-report")),
+                ("model", Json::str(self.model.clone())),
+                ("objectives", self.objectives_json()),
+                ("space_size", Json::int(self.space_size as u64)),
+                ("evaluated", Json::int(self.rows.len() as u64)),
+                ("serve_requests", Json::int(self.serve_requests)),
+                ("frontier_size", Json::int(self.frontier.len() as u64)),
+            ]),
+        ))?;
+        for (i, r) in self.rows.iter().enumerate() {
+            w.value(&tagged("point", row_json(r, &self.objectives, i + 1)))?;
+        }
+        Ok(())
     }
 
     /// Human-readable ranked summary for the CLI.
@@ -513,5 +607,23 @@ mod tests {
         );
         let txt = rep.render_text();
         assert!(txt.contains("Pareto frontier"));
+    }
+
+    #[test]
+    fn streamed_artifacts_match_tree_bytes() {
+        let rep = explore(&tiny_cfg(6, vec![Objective::Cycles, Objective::Area]), 2);
+        let mut buf = Vec::new();
+        rep.write_json(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), rep.to_json().to_string_pretty());
+        let mut fr = Vec::new();
+        rep.write_frontier_json(&mut fr).unwrap();
+        assert_eq!(String::from_utf8(fr).unwrap(), rep.frontier_json().to_string_pretty());
+        let mut lines = Vec::new();
+        rep.write_jsonl(&mut lines).unwrap();
+        let text = String::from_utf8(lines).unwrap();
+        assert_eq!(text.lines().count(), 1 + rep.rows.len());
+        for line in text.lines() {
+            assert!(crate::artifact::parse_line(line).is_ok());
+        }
     }
 }

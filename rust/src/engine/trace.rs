@@ -5,6 +5,9 @@
 //! Fig. 4b headline mechanism).  Flows into `RunReport`, the sweep
 //! aggregate JSON, and the `trace` CLI subcommand.
 
+use std::io::{self, Write};
+
+use crate::artifact::{ArtifactSink, JsonWriter};
 use crate::util::json::Json;
 
 /// Occupancy summary of one resource port over the run.
@@ -56,42 +59,52 @@ impl CycleTrace {
     /// Compact summary embedded in `RunReport::to_json` / sweep rows.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
-            ("fill_latency", Json::num(self.fill_latency as f64)),
+            ("fill_latency", Json::int(self.fill_latency)),
             ("rewrite_hidden_ratio", Json::num(self.rewrite_hidden_ratio())),
-            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite_cycles as f64)),
-            ("total_rewrite_cycles", Json::num(self.total_rewrite_cycles as f64)),
-            ("stall_cycles", Json::num(self.total_stall() as f64)),
+            ("exposed_rewrite_cycles", Json::int(self.exposed_rewrite_cycles)),
+            ("total_rewrite_cycles", Json::int(self.total_rewrite_cycles)),
+            ("stall_cycles", Json::int(self.total_stall())),
         ])
     }
 
     /// Full trace artifact (deterministic: no wall-clock, no environment).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("makespan", Json::num(self.makespan as f64)),
-            ("fill_latency", Json::num(self.fill_latency as f64)),
+            ("makespan", Json::int(self.makespan)),
+            ("fill_latency", Json::int(self.fill_latency)),
             ("rewrite_hidden_ratio", Json::num(self.rewrite_hidden_ratio())),
-            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite_cycles as f64)),
-            ("total_rewrite_cycles", Json::num(self.total_rewrite_cycles as f64)),
+            ("exposed_rewrite_cycles", Json::int(self.exposed_rewrite_cycles)),
+            ("total_rewrite_cycles", Json::int(self.total_rewrite_cycles)),
             (
                 "resources",
-                Json::arr(
-                    self.resources
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("name", Json::str(r.name.clone())),
-                                ("busy", Json::num(r.busy as f64)),
-                                ("stall", Json::num(r.stall as f64)),
-                                ("fill", Json::num(r.fill as f64)),
-                                ("drain", Json::num(r.drain as f64)),
-                                ("tasks", Json::num(r.tasks as f64)),
-                                ("utilization", Json::num(r.utilization)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::arr(self.resources.iter().map(resource_json).collect()),
             ),
         ])
+    }
+
+    /// Stream the full trace artifact — byte-identical to
+    /// `to_json().to_string_pretty()`, one resource tree at a time.
+    /// Sorted keys: exposed_rewrite_cycles, fill_latency, makespan,
+    /// resources, rewrite_hidden_ratio, total_rewrite_cycles.
+    pub fn write_stream<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("exposed_rewrite_cycles")?;
+        w.u64_val(self.exposed_rewrite_cycles)?;
+        w.key("fill_latency")?;
+        w.u64_val(self.fill_latency)?;
+        w.key("makespan")?;
+        w.u64_val(self.makespan)?;
+        w.key("resources")?;
+        w.begin_arr()?;
+        for r in &self.resources {
+            r.emit(w)?;
+        }
+        w.end()?;
+        w.key("rewrite_hidden_ratio")?;
+        w.f64_val(self.rewrite_hidden_ratio())?;
+        w.key("total_rewrite_cycles")?;
+        w.u64_val(self.total_rewrite_cycles)?;
+        w.end()
     }
 
     /// Human-readable per-resource table for the `trace` subcommand.
@@ -123,6 +136,31 @@ impl CycleTrace {
             ));
         }
         out
+    }
+}
+
+fn resource_json(r: &ResourceTrace) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("busy", Json::int(r.busy)),
+        ("stall", Json::int(r.stall)),
+        ("fill", Json::int(r.fill)),
+        ("drain", Json::int(r.drain)),
+        ("tasks", Json::int(r.tasks)),
+        ("utilization", Json::num(r.utilization)),
+    ])
+}
+
+/// One per-resource occupancy row.
+impl ArtifactSink for ResourceTrace {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&resource_json(self))
+    }
+}
+
+impl ArtifactSink for CycleTrace {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        self.write_stream(w)
     }
 }
 
@@ -179,6 +217,15 @@ mod tests {
         let s = t.summary_json();
         assert!(s.get("rewrite_hidden_ratio").is_some());
         assert_eq!(s.get("stall_cycles").and_then(|v| v.as_u64()), Some(100));
+    }
+
+    #[test]
+    fn streamed_trace_matches_tree_bytes() {
+        let t = trace();
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::pretty(&mut buf);
+        t.write_stream(&mut w).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), t.to_json().to_string_pretty());
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!
 //! A guided tour of how these modules fit together — config to CIM mode
 //! schedule to dataflow/engine to sweep/serve/dse artifacts — lives in
-//! `docs/architecture.md`.
+//! `docs/architecture.md`.  Every artifact flows through the streaming
+//! layer in [`artifact`] (push writer, zero-copy pull reader, and the
+//! [`artifact::ArtifactSink`] row protocol — `docs/artifacts.md`).
 //!
 //! # Example
 //!
@@ -48,6 +50,7 @@
 #![allow(unknown_lints)]
 #![allow(clippy::style, clippy::complexity)]
 
+pub mod artifact;
 pub mod benchkit;
 pub mod cim;
 pub mod cli;

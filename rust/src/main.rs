@@ -9,9 +9,11 @@
 #![allow(unknown_lints)]
 #![allow(clippy::style, clippy::complexity)]
 
+use std::io::Write;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use streamdcim::artifact::{tagged, Format, JsonWriter, JsonlWriter};
 use streamdcim::cli::{self, Args};
 use streamdcim::config::{presets, toml, AccelConfig, DataflowKind, ModelConfig};
 use streamdcim::engine::{self, Backend};
@@ -84,6 +86,46 @@ fn thread_count(args: &Args) -> usize {
     (args.flag_u64("threads", default_threads as u64) as usize).max(1)
 }
 
+/// Resolve `--format` (json|jsonl) against an output path: the flag
+/// wins; a `.jsonl` extension infers JSONL; the default is the pretty
+/// document.
+fn resolve_format(args: &Args, out: Option<&str>) -> Result<Format> {
+    Format::from_flags(args.flag("format"), out)
+        .ok_or_else(|| anyhow!("unknown --format '{}' (json|jsonl)", args.flag_or("format", "?")))
+}
+
+/// Open `path` buffered and stream one artifact into it — the writer
+/// side never materializes the document.
+fn write_artifact(
+    path: &str,
+    what: &str,
+    format: Format,
+    f: impl FnOnce(&mut dyn Write, Format) -> std::io::Result<()>,
+) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = std::io::BufWriter::new(file);
+    f(&mut out, format)?;
+    out.flush()?;
+    eprintln!("{what} written to {path} ({})", format.slug());
+    Ok(())
+}
+
+/// Stream an artifact to stdout (`--json`); pretty documents get the
+/// trailing newline the old `println!` emitted.
+fn print_artifact(
+    format: Format,
+    f: impl FnOnce(&mut dyn Write, Format) -> std::io::Result<()>,
+) -> Result<()> {
+    let stdout = std::io::stdout();
+    let mut lock = stdout.lock();
+    f(&mut lock, format)?;
+    if format == Format::Json {
+        lock.write_all(b"\n")?;
+    }
+    lock.flush()?;
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let (accel, model) = load_configs(args)?;
     let kind = DataflowKind::parse(args.flag_or("dataflow", "tile"))
@@ -104,8 +146,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             Scenario::new(accel.clone(), model.clone(), kind, "full").run_report()
         }
     };
+    if let Some(path) = args.flag("out") {
+        let format = resolve_format(args, Some(path))?;
+        write_artifact(path, "run report", format, |w, fmt| match fmt {
+            Format::Json => JsonWriter::pretty(w).value(&r.to_json()),
+            Format::Jsonl => JsonlWriter::new(w).value(&tagged("report", r.to_json())),
+        })?;
+    }
     if args.has("json") {
-        println!("{}", r.to_json().to_string_pretty());
+        print_artifact(resolve_format(args, None)?, |w, fmt| match fmt {
+            Format::Json => JsonWriter::pretty(w).value(&r.to_json()),
+            Format::Jsonl => JsonlWriter::new(w).value(&tagged("report", r.to_json())),
+        })?;
     } else {
         println!("model      : {}", r.model);
         println!("engine     : {}", backend.name());
@@ -211,13 +263,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let aggregate = sweep::run_sweep(&scenarios, threads, seed);
     eprintln!("sweep finished in {:.2} s", started.elapsed().as_secs_f64());
 
-    let json = aggregate.to_json();
     if let Some(path) = args.flag("out") {
-        std::fs::write(path, json.to_string_pretty())?;
-        eprintln!("aggregate JSON written to {path}");
+        let format = resolve_format(args, Some(path))?;
+        write_artifact(path, "aggregate artifact", format, |w, fmt| match fmt {
+            Format::Json => aggregate.write_json(w),
+            Format::Jsonl => aggregate.write_jsonl(w),
+        })?;
     }
     if args.has("json") {
-        println!("{}", json.to_string_pretty());
+        print_artifact(resolve_format(args, None)?, |w, fmt| match fmt {
+            Format::Json => aggregate.write_json(w),
+            Format::Jsonl => aggregate.write_jsonl(w),
+        })?;
     } else {
         println!("{}", aggregate.render_text());
     }
@@ -243,50 +300,106 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
 
     if let Some(path) = args.flag("out") {
-        let mut fields = vec![
-            ("kind", Json::str("cycle-trace")),
-            ("model", Json::str(run.report.model.clone())),
-            ("dataflow", Json::str(kind.slug())),
-            ("engine", Json::str(Backend::Event.slug())),
-            ("report", run.report.to_json()),
-            ("trace", run.trace.to_json()),
-        ];
-        if args.has("segments") {
-            let lanes = run
-                .lanes
-                .iter()
-                .map(|(name, segs)| {
+        let format = resolve_format(args, Some(path))?;
+        let segments = args.has("segments");
+        write_artifact(path, "trace artifact", format, |w, fmt| match fmt {
+            Format::Json => {
+                // sorted keys: dataflow, engine, kind, [lanes], model,
+                // report, trace — byte-identical to the old tree write
+                let mut jw = JsonWriter::pretty(w);
+                jw.begin_obj()?;
+                jw.key("dataflow")?;
+                jw.str_val(kind.slug())?;
+                jw.key("engine")?;
+                jw.str_val(Backend::Event.slug())?;
+                jw.key("kind")?;
+                jw.str_val("cycle-trace")?;
+                if segments {
+                    jw.key("lanes")?;
+                    jw.begin_arr()?;
+                    for lane in &run.lanes {
+                        jw.value(&lane_json(lane))?;
+                    }
+                    jw.end()?;
+                }
+                jw.key("model")?;
+                jw.str_val(&run.report.model)?;
+                jw.key("report")?;
+                jw.value(&run.report.to_json())?;
+                jw.key("trace")?;
+                run.trace.write_stream(&mut jw)?;
+                jw.end()
+            }
+            Format::Jsonl => {
+                let mut jw = JsonlWriter::new(w);
+                jw.value(&tagged(
+                    "header",
                     Json::obj(vec![
-                        ("name", Json::str(name.clone())),
-                        (
-                            "segments",
-                            Json::arr(
-                                segs.iter()
-                                    .map(|(s, e, tag)| {
-                                        Json::arr(vec![
-                                            Json::num(*s as f64),
-                                            Json::num(*e as f64),
-                                            Json::str(*tag),
-                                        ])
-                                    })
-                                    .collect(),
-                            ),
-                        ),
-                    ])
-                })
-                .collect();
-            fields.push(("lanes", Json::arr(lanes)));
-        }
-        std::fs::write(path, Json::obj(fields).to_string_pretty())?;
-        eprintln!("trace artifact written to {path}");
+                        ("kind", Json::str("cycle-trace")),
+                        ("model", Json::str(run.report.model.clone())),
+                        ("dataflow", Json::str(kind.slug())),
+                        ("engine", Json::str(Backend::Event.slug())),
+                    ]),
+                ))?;
+                jw.value(&tagged("report", run.report.to_json()))?;
+                jw.value(&tagged("trace", run.trace.to_json()))?;
+                if segments {
+                    for lane in &run.lanes {
+                        jw.value(&tagged("lane", lane_json(lane)))?;
+                    }
+                }
+                Ok(())
+            }
+        })?;
     }
     Ok(())
+}
+
+/// One Gantt lane as a row: start/end cycles stay lossless integers.
+fn lane_json((name, segs): &(String, Vec<(u64, u64, &'static str)>)) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name.clone())),
+        (
+            "segments",
+            Json::arr(
+                segs.iter()
+                    .map(|(s, e, tag)| {
+                        Json::arr(vec![Json::int(*s), Json::int(*e), Json::str(*tag)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// `streamdcim perf-gate`: deterministic cycle-count regression gate (see
 /// `perfgate`).  Exit code is nonzero on regression so CI can gate on it.
 fn cmd_perf_gate(args: &Args) -> Result<()> {
     let tolerance = args.flag_f64("tolerance", perfgate::DEFAULT_TOLERANCE);
+
+    // --stream-diff <fileB>: diff two committed baseline files through
+    // the pull parser — no simulation, neither document materialized
+    if let Some(b_path) = args.flag("stream-diff") {
+        let a_path = args.flag("baseline").ok_or_else(|| {
+            anyhow!("--stream-diff <fileB> needs --baseline <fileA> as the baseline side")
+        })?;
+        let a = std::fs::read_to_string(a_path)?;
+        let b = std::fs::read_to_string(b_path)?;
+        let outcome = perfgate::stream_diff(&a, &b, tolerance).map_err(|e| anyhow!(e))?;
+        print!("{}", outcome.render_text());
+        if let Some(out) = args.flag("out") {
+            let format = resolve_format(args, Some(out))?;
+            write_artifact(out, "diff artifact", format, |w, fmt| match fmt {
+                Format::Json => outcome.write_json(w),
+                Format::Jsonl => outcome.write_jsonl(w),
+            })?;
+        }
+        if !outcome.pass {
+            bail!("perf-gate failed: {}", outcome.verdict);
+        }
+        return Ok(());
+    }
+
     let inflate = args.flag_f64("inflate", 1.0);
     eprintln!("perf-gate: running the smoke matrix (analytic + event backends)...");
     let measured = perfgate::smoke_entries(2);
@@ -295,8 +408,12 @@ fn cmd_perf_gate(args: &Args) -> Result<()> {
     // only perturbs the gated side (otherwise the self-test could arm
     // the gate with a corrupted baseline).
     if let Some(path) = args.flag("write-baseline") {
-        std::fs::write(path, perfgate::baseline_json(&measured, false).to_string_pretty())?;
-        eprintln!("baseline written to {path} ({} scenarios)", measured.len());
+        let format = resolve_format(args, Some(path))?;
+        let what = format!("baseline ({} scenarios)", measured.len());
+        write_artifact(path, &what, format, |w, fmt| match fmt {
+            Format::Json => perfgate::write_baseline(w, &measured, false),
+            Format::Jsonl => perfgate::write_baseline_jsonl(w, &measured, false),
+        })?;
     }
 
     let mut current = measured;
@@ -325,7 +442,11 @@ fn cmd_perf_gate(args: &Args) -> Result<()> {
         );
         if let Some(out) = args.flag("out") {
             let diff = perfgate::compare(&current, &current, tolerance);
-            std::fs::write(out, diff.to_json().to_string_pretty())?;
+            let format = resolve_format(args, Some(out))?;
+            write_artifact(out, "diff artifact", format, |w, fmt| match fmt {
+                Format::Json => diff.write_json(w),
+                Format::Jsonl => diff.write_jsonl(w),
+            })?;
         }
         return Ok(());
     }
@@ -333,8 +454,11 @@ fn cmd_perf_gate(args: &Args) -> Result<()> {
     let outcome = perfgate::compare(&baseline, &current, tolerance);
     print!("{}", outcome.render_text());
     if let Some(out) = args.flag("out") {
-        std::fs::write(out, outcome.to_json().to_string_pretty())?;
-        eprintln!("diff artifact written to {out}");
+        let format = resolve_format(args, Some(out))?;
+        write_artifact(out, "diff artifact", format, |w, fmt| match fmt {
+            Format::Json => outcome.write_json(w),
+            Format::Jsonl => outcome.write_jsonl(w),
+        })?;
     }
     if !outcome.pass {
         bail!("perf-gate failed: {}", outcome.verdict);
@@ -433,7 +557,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("matrix") {
         // the matrix fixes shards/policy/dataflow/arrival/gap/mix itself;
         // reject flags it would silently ignore rather than mislead
-        for fixed in ["shards", "policy", "dataflow", "arrival", "gap", "models"] {
+        for fixed in ["shards", "policy", "dataflow", "arrival", "gap", "models", "trace-out"] {
             if args.flag(fixed).is_some() {
                 bail!(
                     "--matrix enumerates shards x policy x dataflow on the standard \
@@ -450,52 +574,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
             backend.name()
         );
         let rep = serve::run_serve_sweep(&scenarios, threads, 42);
-        let json = rep.to_json();
         if let Some(path) = args.flag("out") {
-            std::fs::write(path, json.to_string_pretty())?;
-            eprintln!("serve-sweep artifact written to {path}");
+            let format = resolve_format(args, Some(path))?;
+            write_artifact(path, "serve-sweep artifact", format, |w, fmt| match fmt {
+                Format::Json => rep.write_json(w),
+                Format::Jsonl => rep.write_jsonl(w),
+            })?;
         }
         if args.has("json") {
-            println!("{}", json.to_string_pretty());
+            print_artifact(resolve_format(args, None)?, |w, fmt| match fmt {
+                Format::Json => rep.write_json(w),
+                Format::Jsonl => rep.write_jsonl(w),
+            })?;
         } else {
             println!("{}", rep.render_text());
         }
         return Ok(());
     }
 
-    let dataflow = DataflowKind::parse(args.flag_or("dataflow", "tile"))
-        .ok_or_else(|| anyhow!("unknown dataflow"))?;
-    let arrival = serve::ArrivalKind::parse(args.flag_or("arrival", "poisson"))
-        .ok_or_else(|| anyhow!("unknown arrival process (uniform|poisson|burst)"))?;
-    let models: Vec<ModelConfig> = match args.flag("models") {
-        Some(list) => {
-            let mut models: Vec<ModelConfig> = Vec::new();
-            for name in list.split(',') {
-                let m = presets::model_by_name(name.trim())
-                    .ok_or_else(|| anyhow!("unknown model '{}' in --models", name.trim()))?;
-                if !models.iter().any(|existing| existing.name == m.name) {
-                    models.push(m);
-                }
+    // `--arrival replay:<path>`: every serving knob (mix, dataflow,
+    // engine, shards, queues, seed, gap) comes from the recorded
+    // header, and the recorded arrivals are fed back verbatim — the
+    // run reproduces the original ServeStats bit-for-bit.
+    let arrival_spec = args.flag_or("arrival", "poisson");
+    let (cfg, events) = if let Some(spec) = arrival_spec.strip_prefix("replay:") {
+        for fixed in
+            ["shards", "policy", "models", "dataflow", "gap", "queue-depth", "batch", "seed",
+             "engine", "requests"]
+        {
+            if args.flag(fixed).is_some() {
+                bail!(
+                    "--arrival replay:<path> takes the serving configuration from the \
+                     trace header; --{fixed} does not apply"
+                );
             }
-            models
         }
-        None => serve::sweep::mix_models(),
-    };
-    let mean_gap = match args.flag("gap") {
-        Some(g) => g.parse::<u64>().map_err(|_| anyhow!("--gap must be an integer"))?,
-        // near-saturation gap, always priced on tile-stream so every
-        // dataflow serves the same arrival trace
-        None => serve::auto_gap(&accel, backend, &models),
+        let text = std::fs::read_to_string(spec)?;
+        let trace = serve::read_trace(&text).map_err(|e| anyhow!("{spec}: {e}"))?;
+        eprintln!("serve: replaying {} recorded arrivals from {spec}", trace.events.len());
+        (trace.to_config(accel), trace.events)
+    } else {
+        let dataflow = DataflowKind::parse(args.flag_or("dataflow", "tile"))
+            .ok_or_else(|| anyhow!("unknown dataflow"))?;
+        let arrival = serve::ArrivalKind::parse(args.flag_or("arrival", "poisson"))
+            .ok_or_else(|| anyhow!("unknown arrival process (uniform|poisson|burst)"))?;
+        let models: Vec<ModelConfig> = match args.flag("models") {
+            Some(list) => {
+                let mut models: Vec<ModelConfig> = Vec::new();
+                for name in list.split(',') {
+                    let m = presets::model_by_name(name.trim())
+                        .ok_or_else(|| anyhow!("unknown model '{}' in --models", name.trim()))?;
+                    if !models.iter().any(|existing| existing.name == m.name) {
+                        models.push(m);
+                    }
+                }
+                models
+            }
+            None => serve::sweep::mix_models(),
+        };
+        let mean_gap = match args.flag("gap") {
+            Some(g) => g.parse::<u64>().map_err(|_| anyhow!("--gap must be an integer"))?,
+            // near-saturation gap, always priced on tile-stream so every
+            // dataflow serves the same arrival trace
+            None => serve::auto_gap(&accel, backend, &models),
+        };
+        let cfg =
+            serve::ServeConfig { accel, models, dataflow, backend, arrival, requests, mean_gap };
+        let events = serve::arrival_trace(&cfg);
+        (cfg, events)
     };
 
-    let cfg = serve::ServeConfig { accel, models, dataflow, backend, arrival, requests, mean_gap };
-    let rep = serve::simulate(&cfg);
+    // `--trace-out`: stream the replayable JSONL trace (header + one
+    // request row per arrival) while the fabric runs — O(1)
+    // artifact-side memory however many requests flow through.
+    let rep = if let Some(tp) = args.flag("trace-out") {
+        let file = std::fs::File::create(tp)?;
+        let mut bw = std::io::BufWriter::new(file);
+        let mut tw = serve::TraceWriter::begin(&mut bw, &cfg.config_json())?;
+        let rep = serve::simulate_trace(&cfg, &events, &mut tw)?;
+        drop(tw);
+        bw.flush()?;
+        eprintln!("replayable trace written to {tp} ({} arrivals)", events.len());
+        rep
+    } else {
+        serve::simulate_trace(&cfg, &events, &mut ())?
+    };
+
     if let Some(path) = args.flag("out") {
-        std::fs::write(path, rep.to_json().to_string_pretty())?;
-        eprintln!("serve artifact written to {path}");
+        let format = resolve_format(args, Some(path))?;
+        write_artifact(path, "serve artifact", format, |w, fmt| match fmt {
+            Format::Json => rep.write_json(w),
+            Format::Jsonl => rep.write_jsonl(w),
+        })?;
     }
     if args.has("json") {
-        println!("{}", rep.to_json().to_string_pretty());
+        print_artifact(resolve_format(args, None)?, |w, fmt| match fmt {
+            Format::Json => rep.write_json(w),
+            Format::Jsonl => rep.write_jsonl(w),
+        })?;
     } else {
         print!("{}", rep.render_text());
     }
@@ -541,15 +717,23 @@ fn cmd_dse(args: &Args) -> Result<()> {
         started.elapsed().as_secs_f64()
     );
     if let Some(path) = args.flag("out") {
-        std::fs::write(path, rep.to_json().to_string_pretty())?;
-        eprintln!("dse artifact written to {path}");
+        let format = resolve_format(args, Some(path))?;
+        write_artifact(path, "dse artifact", format, |w, fmt| match fmt {
+            Format::Json => rep.write_json(w),
+            Format::Jsonl => rep.write_jsonl(w),
+        })?;
     }
     if let Some(path) = args.flag("frontier-out") {
-        std::fs::write(path, rep.frontier_json().to_string_pretty())?;
-        eprintln!("frontier artifact written to {path}");
+        // the frontier extract is a summary, always a pretty document
+        write_artifact(path, "frontier artifact", Format::Json, |w, _| {
+            rep.write_frontier_json(w)
+        })?;
     }
     if args.has("json") {
-        println!("{}", rep.to_json().to_string_pretty());
+        print_artifact(resolve_format(args, None)?, |w, fmt| match fmt {
+            Format::Json => rep.write_json(w),
+            Format::Jsonl => rep.write_jsonl(w),
+        })?;
     } else {
         print!("{}", rep.render_text());
     }

@@ -83,12 +83,12 @@ impl LatencyStats {
         let (p50, p95, p99) = self.percentiles();
         Json::obj(vec![
             ("unit", Json::str(unit)),
-            ("count", Json::num(self.count() as f64)),
+            ("count", Json::int(self.count())),
             ("mean", Json::num(self.mean())),
-            ("p50", Json::num(p50 as f64)),
-            ("p95", Json::num(p95 as f64)),
-            ("p99", Json::num(p99 as f64)),
-            ("max", Json::num(self.max as f64)),
+            ("p50", Json::int(p50)),
+            ("p95", Json::int(p95)),
+            ("p99", Json::int(p99)),
+            ("max", Json::int(self.max)),
         ])
     }
 }
@@ -174,20 +174,20 @@ impl RunReport {
         let mut fields = vec![
             ("model", Json::str(self.model.clone())),
             ("dataflow", Json::str(self.dataflow.name())),
-            ("cycles", Json::num(self.cycles as f64)),
+            ("cycles", Json::int(self.cycles)),
             ("ms", Json::num(self.ms)),
             ("energy_mj", Json::num(self.energy.total_mj())),
             ("avg_power_mw", Json::num(self.energy.avg_power_mw)),
-            ("macs", Json::num(self.activity.macs as f64)),
-            ("offchip_bits", Json::num(self.activity.offchip_bits as f64)),
-            ("cim_write_bits", Json::num(self.activity.cim_write_bits as f64)),
-            ("exposed_rewrite_cycles", Json::num(self.exposed_rewrite() as f64)),
+            ("macs", Json::int(self.activity.macs)),
+            ("offchip_bits", Json::int(self.activity.offchip_bits)),
+            ("cim_write_bits", Json::int(self.activity.cim_write_bits)),
+            ("exposed_rewrite_cycles", Json::int(self.exposed_rewrite())),
             ("intra_macro_utilization", Json::num(self.intra_macro_utilization())),
             (
                 "partial_tile_waste_cells",
-                Json::num(self.activity.occupancy.partial_tile_waste_cells as f64),
+                Json::int(self.activity.occupancy.partial_tile_waste_cells),
             ),
-            ("replay_bits", Json::num(self.activity.occupancy.replay_bits as f64)),
+            ("replay_bits", Json::int(self.activity.occupancy.replay_bits)),
             (
                 "utilization",
                 Json::obj(
@@ -199,7 +199,7 @@ impl RunReport {
             ),
             (
                 "per_layer_cycles",
-                Json::arr(self.per_layer.iter().map(|l| Json::num(l.cycles() as f64)).collect()),
+                Json::arr(self.per_layer.iter().map(|l| Json::int(l.cycles())).collect()),
             ),
         ];
         if let Some(t) = &self.trace {

@@ -13,13 +13,16 @@
 //! that cannot run the simulator) passes with a warning; CI regenerates
 //! and uploads the real baseline as an artifact so it can be committed.
 
+use std::io::{self, Write};
+
+use crate::artifact::{tagged, ArtifactSink, Event, JsonReader, JsonWriter, JsonlWriter};
 use crate::config::{presets, DataflowKind};
 use crate::dse;
 use crate::engine::Backend;
 use crate::serve;
 use crate::sweep;
 use crate::util::geomean;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonError};
 
 pub const DEFAULT_TOLERANCE: f64 = 0.05;
 
@@ -112,27 +115,78 @@ pub fn smoke_entries(threads: usize) -> Vec<GateEntry> {
     out
 }
 
-/// Serialize entries as a baseline document.
+fn entry_json(e: &GateEntry) -> Json {
+    Json::obj(vec![("id", Json::str(e.id.clone())), ("cycles", Json::int(e.cycles))])
+}
+
+/// One baseline scenario row.
+impl ArtifactSink for GateEntry {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&entry_json(self))
+    }
+}
+
+/// Serialize entries as a baseline document.  Cycle counters are
+/// emitted losslessly (`dse-serve::` records a `u64::MAX` sentinel on
+/// a dead fabric, which f64 would round to 18446744073709552000).
 pub fn baseline_json(entries: &[GateEntry], bootstrap: bool) -> Json {
     Json::obj(vec![
         ("kind", Json::str("perf-baseline")),
         ("bootstrap", Json::Bool(bootstrap)),
         ("tolerance", Json::num(DEFAULT_TOLERANCE)),
-        (
-            "scenarios",
-            Json::arr(
-                entries
-                    .iter()
-                    .map(|e| {
-                        Json::obj(vec![
-                            ("id", Json::str(e.id.clone())),
-                            ("cycles", Json::num(e.cycles as f64)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
+        ("scenarios", Json::arr(entries.iter().map(entry_json).collect())),
     ])
+}
+
+/// Stream a baseline document — byte-identical to
+/// `baseline_json(..).to_string_pretty()`, one entry at a time.
+pub fn write_baseline<W: Write>(out: W, entries: &[GateEntry], bootstrap: bool) -> io::Result<()> {
+    let mut w = JsonWriter::pretty(out);
+    w.begin_obj()?;
+    w.key("bootstrap")?;
+    w.bool_val(bootstrap)?;
+    w.key("kind")?;
+    w.str_val("perf-baseline")?;
+    w.key("scenarios")?;
+    w.begin_arr()?;
+    for e in entries {
+        e.emit(&mut w)?;
+    }
+    w.end()?;
+    w.key("tolerance")?;
+    w.f64_val(DEFAULT_TOLERANCE)?;
+    w.end()
+}
+
+/// The baseline as JSONL: a tagged `header` row, then one `scenario`
+/// row per entry.
+pub fn write_baseline_jsonl<W: Write>(
+    out: W,
+    entries: &[GateEntry],
+    bootstrap: bool,
+) -> io::Result<()> {
+    let mut w = JsonlWriter::new(out);
+    w.value(&tagged(
+        "header",
+        Json::obj(vec![
+            ("kind", Json::str("perf-baseline")),
+            ("bootstrap", Json::Bool(bootstrap)),
+            ("tolerance", Json::num(DEFAULT_TOLERANCE)),
+            ("scenario_count", Json::int(entries.len() as u64)),
+        ]),
+    ))?;
+    for e in entries {
+        w.value(&tagged("scenario", entry_json(e)))?;
+    }
+    Ok(())
+}
+
+/// Decode a cycles counter from a baseline.  Legacy baselines wrote
+/// counters through f64, so the `u64::MAX` sentinel shows up as the
+/// lossy 18446744073709552000 — saturate out-of-range integers back
+/// to the u64 range instead of rejecting the file.
+fn cycles_value(v: &Json) -> Option<u64> {
+    v.as_u64().or_else(|| v.as_i128().map(|i| if i < 0 { 0 } else { u64::MAX }))
 }
 
 /// Parse a baseline document. Returns (bootstrap, entries).
@@ -150,12 +204,168 @@ pub fn parse_baseline(doc: &Json) -> Result<(bool, Vec<GateEntry>), String> {
                 .ok_or_else(|| "scenario entry missing id".to_string())?;
             let cycles = item
                 .get("cycles")
-                .and_then(|v| v.as_u64())
+                .and_then(cycles_value)
                 .ok_or_else(|| format!("scenario {id} missing cycles"))?;
             entries.push(GateEntry { id: id.to_string(), cycles });
         }
     }
     Ok((bootstrap, entries))
+}
+
+fn ctx(label: &str, e: JsonError) -> String {
+    format!("{label}: {} at byte {}", e.msg, e.pos)
+}
+
+/// Pull-parses the `scenarios` entries out of a baseline document one
+/// at a time — the document tree is never built, so two multi-megabyte
+/// baselines diff in constant memory.
+pub struct BaselineScenarios<'a> {
+    r: JsonReader<'a>,
+    label: &'a str,
+    pub bootstrap: bool,
+    finished: bool,
+}
+
+impl<'a> BaselineScenarios<'a> {
+    /// Validate the envelope (kind, bootstrap) and stop at the opening
+    /// `[` of `scenarios`.  Keys are sorted in every writer this repo
+    /// ever shipped (the tree serializer is BTreeMap-backed), so
+    /// `bootstrap` and `kind` always precede `scenarios`.
+    pub fn open(label: &'a str, src: &'a str) -> Result<Self, String> {
+        let mut r = JsonReader::new(src);
+        match r.next_event().map_err(|e| ctx(label, e))? {
+            Some(Event::BeginObj) => {}
+            _ => return Err(format!("{label}: not a JSON object")),
+        }
+        let mut bootstrap = false;
+        let mut kind_ok = false;
+        loop {
+            match r.next_event().map_err(|e| ctx(label, e))? {
+                Some(Event::Key(k)) => match k.as_ref() {
+                    "bootstrap" => match r.next_event().map_err(|e| ctx(label, e))? {
+                        Some(Event::Bool(b)) => bootstrap = b,
+                        _ => return Err(format!("{label}: bootstrap must be a bool")),
+                    },
+                    "kind" => match r.next_event().map_err(|e| ctx(label, e))? {
+                        Some(Event::Str(s)) if s == "perf-baseline" => kind_ok = true,
+                        _ => {
+                            return Err(format!(
+                                "{label}: not a perf-baseline document (bad kind)"
+                            ))
+                        }
+                    },
+                    "scenarios" => {
+                        if !kind_ok {
+                            return Err(format!(
+                                "{label}: not a perf-baseline document (missing kind)"
+                            ));
+                        }
+                        match r.next_event().map_err(|e| ctx(label, e))? {
+                            Some(Event::BeginArr) => {}
+                            _ => return Err(format!("{label}: scenarios must be an array")),
+                        }
+                        return Ok(BaselineScenarios { r, label, bootstrap, finished: false });
+                    }
+                    _ => r.skip_value().map_err(|e| ctx(label, e))?,
+                },
+                Some(Event::EndObj) => {
+                    return Err(format!("{label}: missing scenarios array"))
+                }
+                _ => return Err(format!("{label}: malformed document")),
+            }
+        }
+    }
+
+    /// The next scenario entry, or `Ok(None)` after the array closes
+    /// (at which point the document tail has been validated too).
+    pub fn next_entry(&mut self) -> Result<Option<GateEntry>, String> {
+        if self.finished {
+            return Ok(None);
+        }
+        let label = self.label;
+        match self.r.next_event().map_err(|e| ctx(label, e))? {
+            Some(Event::EndArr) => {
+                loop {
+                    match self.r.next_event().map_err(|e| ctx(label, e))? {
+                        Some(Event::Key(_)) => {
+                            self.r.skip_value().map_err(|e| ctx(label, e))?
+                        }
+                        Some(Event::EndObj) => break,
+                        _ => return Err(format!("{label}: malformed document tail")),
+                    }
+                }
+                if self.r.next_event().map_err(|e| ctx(label, e))?.is_some() {
+                    return Err(format!("{label}: trailing data"));
+                }
+                self.finished = true;
+                Ok(None)
+            }
+            Some(Event::BeginObj) => {
+                let mut id: Option<String> = None;
+                let mut cycles: Option<u64> = None;
+                loop {
+                    match self.r.next_event().map_err(|e| ctx(label, e))? {
+                        Some(Event::Key(k)) => match k.as_ref() {
+                            "id" => match self.r.next_event().map_err(|e| ctx(label, e))? {
+                                Some(Event::Str(s)) => id = Some(s.into_owned()),
+                                _ => {
+                                    return Err(format!(
+                                        "{label}: scenario id must be a string"
+                                    ))
+                                }
+                            },
+                            "cycles" => match self.r.next_event().map_err(|e| ctx(label, e))? {
+                                // lossless first; legacy f64-written
+                                // sentinels saturate back to u64
+                                Some(Event::Num(n)) => {
+                                    cycles = n
+                                        .as_u64()
+                                        .or_else(|| n.as_f64().map(|f| f as u64));
+                                    if cycles.is_none() {
+                                        return Err(format!(
+                                            "{label}: bad cycles value '{}'",
+                                            n.0
+                                        ));
+                                    }
+                                }
+                                _ => {
+                                    return Err(format!(
+                                        "{label}: scenario cycles must be a number"
+                                    ))
+                                }
+                            },
+                            _ => self.r.skip_value().map_err(|e| ctx(label, e))?,
+                        },
+                        Some(Event::EndObj) => break,
+                        _ => return Err(format!("{label}: malformed scenario entry")),
+                    }
+                }
+                let id = id.ok_or_else(|| format!("{label}: scenario entry missing id"))?;
+                let cycles =
+                    cycles.ok_or_else(|| format!("{label}: scenario {id} missing cycles"))?;
+                Ok(Some(GateEntry { id, cycles }))
+            }
+            _ => Err(format!("{label}: malformed scenarios array")),
+        }
+    }
+}
+
+/// Diff two baseline artifacts by streaming both sides through the
+/// pull parser — neither document tree is ever materialized; the only
+/// retained state is the (id, cycles) pairs the comparison itself
+/// needs.  `a` plays the baseline role, `b` the current run.
+pub fn stream_diff(a: &str, b: &str, tolerance: f64) -> Result<GateOutcome, String> {
+    let mut base_scan = BaselineScenarios::open("baseline", a)?;
+    let mut base = Vec::new();
+    while let Some(e) = base_scan.next_entry()? {
+        base.push(e);
+    }
+    let mut cur_scan = BaselineScenarios::open("current", b)?;
+    let mut cur = Vec::new();
+    while let Some(e) = cur_scan.next_entry()? {
+        cur.push(e);
+    }
+    Ok(compare(&base, &cur, tolerance))
 }
 
 /// One compared scenario.
@@ -236,6 +446,22 @@ pub fn compare(baseline: &[GateEntry], current: &[GateEntry], tolerance: f64) ->
     GateOutcome { rows, geomean_ratio, missing, added, tolerance, pass, verdict }
 }
 
+fn row_json(r: &GateRow) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(r.id.clone())),
+        ("baseline_cycles", Json::int(r.baseline)),
+        ("current_cycles", Json::int(r.current)),
+        ("ratio", Json::num(r.ratio)),
+    ])
+}
+
+/// One compared-scenario row of the diff artifact.
+impl ArtifactSink for GateRow {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&row_json(self))
+    }
+}
+
 impl GateOutcome {
     /// The diff artifact CI uploads.
     pub fn to_json(&self) -> Json {
@@ -247,23 +473,72 @@ impl GateOutcome {
             ("tolerance", Json::num(self.tolerance)),
             ("missing", Json::arr(self.missing.iter().map(|s| Json::str(s.clone())).collect())),
             ("added", Json::arr(self.added.iter().map(|s| Json::str(s.clone())).collect())),
-            (
-                "scenarios",
-                Json::arr(
-                    self.rows
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("id", Json::str(r.id.clone())),
-                                ("baseline_cycles", Json::num(r.baseline as f64)),
-                                ("current_cycles", Json::num(r.current as f64)),
-                                ("ratio", Json::num(r.ratio)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("scenarios", Json::arr(self.rows.iter().map(row_json).collect())),
         ])
+    }
+
+    /// Stream the diff artifact — byte-identical to
+    /// `to_json().to_string_pretty()`, one scenario row at a time.
+    /// Sorted keys: added, geomean_ratio, kind, missing, pass,
+    /// scenarios, tolerance, verdict.
+    pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        w.key("added")?;
+        w.begin_arr()?;
+        for a in &self.added {
+            w.str_val(a)?;
+        }
+        w.end()?;
+        w.key("geomean_ratio")?;
+        w.f64_val(self.geomean_ratio)?;
+        w.key("kind")?;
+        w.str_val("perf-gate-diff")?;
+        w.key("missing")?;
+        w.begin_arr()?;
+        for m in &self.missing {
+            w.str_val(m)?;
+        }
+        w.end()?;
+        w.key("pass")?;
+        w.bool_val(self.pass)?;
+        w.key("scenarios")?;
+        w.begin_arr()?;
+        for r in &self.rows {
+            r.emit(&mut w)?;
+        }
+        w.end()?;
+        w.key("tolerance")?;
+        w.f64_val(self.tolerance)?;
+        w.key("verdict")?;
+        w.str_val(&self.verdict)?;
+        w.end()
+    }
+
+    /// The diff as JSONL: a tagged `header` row (verdict, geomean,
+    /// missing/added), then one `scenario` row per compared entry.
+    pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonlWriter::new(out);
+        w.value(&tagged(
+            "header",
+            Json::obj(vec![
+                ("kind", Json::str("perf-gate-diff")),
+                ("pass", Json::Bool(self.pass)),
+                ("verdict", Json::str(self.verdict.clone())),
+                ("geomean_ratio", Json::num(self.geomean_ratio)),
+                ("tolerance", Json::num(self.tolerance)),
+                (
+                    "missing",
+                    Json::arr(self.missing.iter().map(|s| Json::str(s.clone())).collect()),
+                ),
+                ("added", Json::arr(self.added.iter().map(|s| Json::str(s.clone())).collect())),
+                ("scenario_count", Json::int(self.rows.len() as u64)),
+            ]),
+        ))?;
+        for r in &self.rows {
+            w.value(&tagged("scenario", row_json(r)))?;
+        }
+        Ok(())
     }
 
     pub fn render_text(&self) -> String {
@@ -365,6 +640,115 @@ mod tests {
         assert!(bootstrap);
         assert!(parsed.is_empty());
         assert!(parse_baseline(&Json::obj(vec![("kind", Json::str("nope"))])).is_err());
+    }
+
+    #[test]
+    fn sentinel_cycles_survive_the_baseline_roundtrip() {
+        // the dse-serve:: dead-fabric sentinel is u64::MAX; the old f64
+        // path rounded it to 18446744073709552000 and then failed to
+        // parse it back
+        let es = vec![GateEntry { id: "dse-serve::dead".into(), cycles: u64::MAX }];
+        let text = baseline_json(&es, false).to_string_pretty();
+        assert!(text.contains(&u64::MAX.to_string()), "{text}");
+        let (_, parsed) = parse_baseline(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, es);
+    }
+
+    #[test]
+    fn legacy_lossy_baselines_still_parse() {
+        // committed before counters went lossless: u64::MAX written
+        // through f64
+        let legacy = r#"{
+  "bootstrap": false,
+  "kind": "perf-baseline",
+  "scenarios": [
+    {
+      "cycles": 18446744073709552000,
+      "id": "dse-serve::dead"
+    },
+    {
+      "cycles": 1000,
+      "id": "analytic::m"
+    }
+  ],
+  "tolerance": 0.05
+}"#;
+        let (_, parsed) = parse_baseline(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(parsed[0].cycles, u64::MAX, "saturates, not rejects");
+        assert_eq!(parsed[1].cycles, 1000);
+        // the streaming reader agrees
+        let mut scan = BaselineScenarios::open("legacy", legacy).unwrap();
+        assert_eq!(scan.next_entry().unwrap().unwrap().cycles, u64::MAX);
+        assert_eq!(scan.next_entry().unwrap().unwrap().cycles, 1000);
+        assert!(scan.next_entry().unwrap().is_none());
+    }
+
+    #[test]
+    fn streamed_artifacts_match_tree_bytes() {
+        let es = entries();
+        let mut buf = Vec::new();
+        write_baseline(&mut buf, &es, true).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), baseline_json(&es, true).to_string_pretty());
+
+        let mut cur = inflate(&es, 1.02);
+        cur.push(GateEntry { id: "extra::new".into(), cycles: 5 });
+        let out = compare(&es, &cur, DEFAULT_TOLERANCE);
+        let mut buf = Vec::new();
+        out.write_json(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), out.to_json().to_string_pretty());
+
+        // JSONL renditions: 1 header + 1 row per entry, all parseable
+        let mut buf = Vec::new();
+        write_baseline_jsonl(&mut buf, &es, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text.lines().count(), 1 + es.len());
+        let mut buf = Vec::new();
+        out.write_jsonl(&mut buf).unwrap();
+        let text2 = String::from_utf8(buf).unwrap();
+        assert_eq!(text2.lines().count(), 1 + out.rows.len());
+        for line in text.lines().chain(text2.lines()) {
+            let row = crate::artifact::parse_line(line).unwrap();
+            assert!(row.get("row").is_some(), "{line}");
+        }
+    }
+
+    #[test]
+    fn stream_diff_matches_compare() {
+        let base = entries();
+        let slow = inflate(&base, 1.20);
+        let a = baseline_json(&base, false).to_string_pretty();
+        let b = baseline_json(&slow, false).to_string_pretty();
+        let streamed = stream_diff(&a, &b, DEFAULT_TOLERANCE).unwrap();
+        let tree = compare(&base, &slow, DEFAULT_TOLERANCE);
+        assert_eq!(streamed.pass, tree.pass);
+        assert_eq!(streamed.verdict, tree.verdict);
+        assert!((streamed.geomean_ratio - tree.geomean_ratio).abs() < 1e-12);
+        assert_eq!(
+            streamed.to_json().to_string_pretty(),
+            tree.to_json().to_string_pretty(),
+            "streamed diff must equal the tree diff byte-for-byte"
+        );
+        // identical inputs pass at unity
+        let same = stream_diff(&a, &a, DEFAULT_TOLERANCE).unwrap();
+        assert!(same.pass, "{}", same.verdict);
+        assert!((same.geomean_ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_diff_rejects_malformed_baselines() {
+        let good = baseline_json(&entries(), false).to_string_pretty();
+        for (bad, why) in [
+            ("", "empty"),
+            ("[]", "not an object"),
+            ("{\"kind\": \"nope\", \"scenarios\": []}", "wrong kind"),
+            ("{\"scenarios\": []}", "kind missing before scenarios"),
+            ("{\"kind\": \"perf-baseline\"}", "no scenarios"),
+            ("{\"kind\": \"perf-baseline\", \"scenarios\": [{\"id\": \"x\"}]}", "no cycles"),
+            ("{\"kind\": \"perf-baseline\", \"scenarios\": [", "truncated"),
+        ] {
+            assert!(stream_diff(bad, &good, DEFAULT_TOLERANCE).is_err(), "{why}");
+            assert!(stream_diff(&good, bad, DEFAULT_TOLERANCE).is_err(), "{why} (current)");
+        }
     }
 
     #[test]

@@ -37,6 +37,11 @@ impl Modality {
             Modality::AudioVisual => "audio-visual",
         }
     }
+
+    /// Inverse of [`Modality::name`] (used by trace replay).
+    pub fn parse(s: &str) -> Option<Self> {
+        Modality::ALL.into_iter().find(|m| m.name() == s)
+    }
 }
 
 /// Shape of the inter-arrival process.
@@ -138,6 +143,14 @@ mod tests {
         }
         assert_eq!(ArrivalKind::parse("exp"), Some(ArrivalKind::Poisson));
         assert_eq!(ArrivalKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn modality_parse_roundtrip() {
+        for m in Modality::ALL {
+            assert_eq!(Modality::parse(m.name()), Some(m));
+        }
+        assert_eq!(Modality::parse("smell"), None);
     }
 
     #[test]

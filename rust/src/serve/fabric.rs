@@ -30,7 +30,9 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::io::{self, Write};
 
+use crate::artifact::{ArtifactSink, JsonWriter, JsonlWriter};
 use crate::config::{AccelConfig, DataflowKind, ModelConfig, RoutePolicy};
 use crate::engine::Backend;
 use crate::util::json::Json;
@@ -76,6 +78,28 @@ impl ServeConfig {
             self.arrival,
         )
     }
+
+    /// The configuration object a run of this config will report —
+    /// byte-identical to [`ServeReport::config_json`] (same clamping),
+    /// available *before* simulation so `--trace-out` can write its
+    /// header up front.
+    pub fn config_json(&self) -> Json {
+        let s = &self.accel.serving;
+        Json::obj(vec![
+            ("kind", Json::str("serve-report")),
+            ("models", Json::arr(self.models.iter().map(|m| Json::str(m.name.clone())).collect())),
+            ("dataflow", Json::str(self.dataflow.slug())),
+            ("engine", Json::str(self.backend.slug())),
+            ("policy", Json::str(s.policy.slug())),
+            ("shards", Json::int(s.shards.max(1))),
+            ("queue_depth", Json::int(s.queue_depth.max(1))),
+            ("batch_size", Json::int(s.batch_size.max(1))),
+            ("arrival", Json::str(self.arrival.slug())),
+            ("arrival_seed", Json::int(s.arrival_seed)),
+            ("requests", Json::int(self.requests)),
+            ("mean_gap_cycles", Json::int(self.mean_gap)),
+        ])
+    }
 }
 
 /// A near-saturation mean inter-arrival gap for `models` on `accel`:
@@ -114,24 +138,62 @@ impl ServeReport {
         scenario_id(self.shards, self.policy, self.dataflow, self.arrival)
     }
 
-    /// The deterministic serve artifact: configuration + stats, no
-    /// wall-clock or environment fields.
-    pub fn to_json(&self) -> Json {
+    /// The configuration half of the artifact (everything but `stats`)
+    /// — also the JSONL `header` row and the replay-trace header.
+    pub fn config_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("serve-report")),
             ("models", Json::arr(self.models.iter().map(|m| Json::str(m.clone())).collect())),
             ("dataflow", Json::str(self.dataflow.slug())),
             ("engine", Json::str(self.backend.slug())),
             ("policy", Json::str(self.policy.slug())),
-            ("shards", Json::num(self.shards as f64)),
-            ("queue_depth", Json::num(self.queue_depth as f64)),
-            ("batch_size", Json::num(self.batch_size as f64)),
+            ("shards", Json::int(self.shards)),
+            ("queue_depth", Json::int(self.queue_depth)),
+            ("batch_size", Json::int(self.batch_size)),
             ("arrival", Json::str(self.arrival.slug())),
-            ("arrival_seed", Json::num(self.arrival_seed as f64)),
-            ("requests", Json::num(self.requests as f64)),
-            ("mean_gap_cycles", Json::num(self.mean_gap as f64)),
-            ("stats", self.stats.to_json()),
+            ("arrival_seed", Json::int(self.arrival_seed)),
+            ("requests", Json::int(self.requests)),
+            ("mean_gap_cycles", Json::int(self.mean_gap)),
         ])
+    }
+
+    /// The deterministic serve artifact: configuration + stats, no
+    /// wall-clock or environment fields.
+    pub fn to_json(&self) -> Json {
+        match self.config_json() {
+            Json::Obj(mut m) => {
+                m.insert("stats".to_string(), self.stats.to_json());
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
+
+    /// Stream the pretty document — byte-identical to
+    /// `to_json().to_string_pretty()`, shards emitted one at a time.
+    pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        if let Json::Obj(m) = self.config_json() {
+            // every config key sorts before "stats"
+            for (k, v) in &m {
+                w.field(k, v)?;
+            }
+        }
+        w.key("stats")?;
+        self.stats.emit(&mut w)?;
+        w.end()
+    }
+
+    /// JSONL layout: a `header` row (the config), one `shard` row per
+    /// shard, then the `stats` summary row.
+    pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonlWriter::new(out);
+        w.value(&crate::artifact::tagged("header", self.config_json()))?;
+        for s in &self.stats.per_shard {
+            w.value(&crate::artifact::tagged("shard", self.stats.shard_json(s)))?;
+        }
+        w.value(&crate::artifact::tagged("stats", self.stats.summary_json()))
     }
 
     pub fn render_text(&self) -> String {
@@ -165,10 +227,80 @@ struct Shard {
     cim_util_sum: f64,
 }
 
+/// One arrival as the fabric saw it — the replay-trace row.  `model`
+/// indexes the run's workload mix (the trace header carries the names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub cycle: u64,
+    pub modality: Modality,
+    pub model: usize,
+    /// False when the modality queue was full (the request was shed).
+    pub admitted: bool,
+}
+
+impl RequestRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::int(self.id)),
+            ("cycle", Json::int(self.cycle)),
+            ("modality", Json::str(self.modality.name())),
+            ("model", Json::int(self.model as u64)),
+            ("admitted", Json::Bool(self.admitted)),
+        ])
+    }
+}
+
+impl ArtifactSink for RequestRecord {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&self.to_json())
+    }
+}
+
+/// Sees every arrival the moment the admission decision is made —
+/// the hook that lets `serve --trace-out` stream a replayable trace
+/// row-at-a-time instead of accumulating requests.
+pub trait RequestObserver {
+    fn on_request(&mut self, r: &RequestRecord) -> io::Result<()>;
+}
+
+/// The no-op observer (plain `simulate`).
+impl RequestObserver for () {
+    fn on_request(&mut self, _r: &RequestRecord) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The arrival trace `simulate` would generate for `cfg` — a pure
+/// function of the config (see `arrival::generate`).
+pub fn arrival_trace(cfg: &ServeConfig) -> Vec<ArrivalEvent> {
+    arrival::generate(
+        cfg.arrival,
+        cfg.requests,
+        cfg.mean_gap,
+        cfg.models.len(),
+        cfg.accel.serving.arrival_seed,
+    )
+}
+
 /// Run the closed loop: arrivals -> bounded queues -> batcher -> router
 /// -> engine-priced shards.  Pure function of `cfg`.
 pub fn simulate(cfg: &ServeConfig) -> ServeReport {
+    let trace = arrival_trace(cfg);
+    simulate_trace(cfg, &trace, &mut ()).expect("no-op observer cannot fail")
+}
+
+/// [`simulate`] over an explicit arrival trace (the replay path), with
+/// an observer notified at every admission decision.  The stats are a
+/// pure function of `(cfg, trace)`: feeding back a recorded trace
+/// reproduces the original run's [`ServeStats`] exactly.
+pub fn simulate_trace<O: RequestObserver>(
+    cfg: &ServeConfig,
+    trace: &[ArrivalEvent],
+    obs: &mut O,
+) -> io::Result<ServeReport> {
     assert!(!cfg.models.is_empty(), "serve fabric needs a workload mix");
+    debug_assert_eq!(trace.len() as u64, cfg.requests, "cfg.requests must match the trace");
     let serving = cfg.accel.serving.clone();
     let n_shards = serving.shards.max(1) as usize;
     let queue_depth = serving.queue_depth.max(1) as usize;
@@ -177,14 +309,6 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
     // Price every workload once up front (memoized pure simulations).
     let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
     let costs: Vec<super::cost::BatchCost> = cfg.models.iter().map(|m| cm.cost(m)).collect();
-
-    let trace = arrival::generate(
-        cfg.arrival,
-        cfg.requests,
-        cfg.mean_gap,
-        cfg.models.len(),
-        serving.arrival_seed,
-    );
 
     let mut queues: Vec<VecDeque<ArrivalEvent>> =
         (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
@@ -212,11 +336,19 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
             // admission: bounded per-modality queues, reject on overflow
             let a = trace[seq as usize];
             let q = &mut queues[a.modality.index()];
-            if q.len() >= queue_depth {
-                stats.rejected += 1;
-            } else {
+            let admitted = q.len() < queue_depth;
+            if admitted {
                 q.push_back(a);
+            } else {
+                stats.rejected += 1;
             }
+            obs.on_request(&RequestRecord {
+                id: a.id,
+                cycle: a.cycle,
+                modality: a.modality,
+                model: a.model,
+                admitted,
+            })?;
             let max_one = queues.iter().map(|q| q.len()).max().unwrap_or(0) as u64;
             stats.max_queue_depth = stats.max_queue_depth.max(max_one);
         }
@@ -301,7 +433,7 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
         stats.per_shard.iter().map(|s| s.cim_util_sum).sum::<f64>() / stats.served as f64
     };
 
-    ServeReport {
+    Ok(ServeReport {
         models: cfg.models.iter().map(|m| m.name.clone()).collect(),
         dataflow: cfg.dataflow,
         backend: cfg.backend,
@@ -314,7 +446,7 @@ pub fn simulate(cfg: &ServeConfig) -> ServeReport {
         requests: cfg.requests,
         mean_gap: cfg.mean_gap,
         stats,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -402,6 +534,51 @@ mod tests {
         assert_eq!(cfg.id(), "shards2/least-loaded/tile/poisson");
         let h = rep.stats.rewrite_hidden.expect("event backend observes overlap");
         assert!((0.0..=1.0).contains(&h));
+    }
+
+    #[test]
+    fn streamed_report_matches_tree_bytes() {
+        let rep = simulate(&base_cfg());
+        let mut buf = Vec::new();
+        rep.write_json(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), rep.to_json().to_string_pretty());
+        let mut lines = Vec::new();
+        rep.write_jsonl(&mut lines).unwrap();
+        let text = String::from_utf8(lines).unwrap();
+        assert_eq!(text.lines().count(), 2 + rep.stats.per_shard.len());
+        for line in text.lines() {
+            let row = crate::artifact::parse_line(line).expect("row parses");
+            assert!(row.get("row").is_some());
+        }
+    }
+
+    #[test]
+    fn observed_trace_replays_to_identical_stats() {
+        struct Tape(Vec<RequestRecord>);
+        impl RequestObserver for Tape {
+            fn on_request(&mut self, r: &RequestRecord) -> io::Result<()> {
+                self.0.push(*r);
+                Ok(())
+            }
+        }
+        let cfg = base_cfg();
+        let trace = arrival_trace(&cfg);
+        let mut tape = Tape(Vec::new());
+        let first = simulate_trace(&cfg, &trace, &mut tape).unwrap();
+        assert_eq!(tape.0.len() as u64, cfg.requests, "observer sees every arrival");
+        // the observer sees arrivals in event order == trace order
+        let replayed: Vec<ArrivalEvent> = tape
+            .0
+            .iter()
+            .map(|r| ArrivalEvent {
+                id: r.id,
+                cycle: r.cycle,
+                modality: r.modality,
+                model: r.model,
+            })
+            .collect();
+        let second = simulate_trace(&cfg, &replayed, &mut ()).unwrap();
+        assert_eq!(first.stats, second.stats, "replay must be bit-identical");
     }
 
     #[test]

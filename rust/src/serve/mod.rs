@@ -15,6 +15,10 @@
 //!   shard utilization, rejects, rewrite-hidden ratio, energy.
 //! * [`sweep`]   — the shards x policy x dataflow serving matrix with a
 //!   thread-count-independent aggregate.
+//! * [`replay`]  — record the arrival stream as a JSONL artifact
+//!   (`--trace-out`) and feed it back (`--arrival replay:<path>`),
+//!   reproducing the original [`ServeStats`] exactly (see
+//!   `docs/artifacts.md`).
 //!
 //! Determinism contract (shared with `sweep` and `engine`): a fabric
 //! run is a pure function of its [`ServeConfig`]; artifacts carry no
@@ -50,13 +54,18 @@
 pub mod arrival;
 pub mod cost;
 pub mod fabric;
+pub mod replay;
 pub mod router;
 pub mod stats;
 pub mod sweep;
 
 pub use arrival::{ArrivalEvent, ArrivalKind, Modality};
 pub use cost::{BatchCost, CostModel};
-pub use fabric::{auto_gap, simulate, ServeConfig, ServeReport};
+pub use fabric::{
+    arrival_trace, auto_gap, simulate, simulate_trace, RequestObserver, RequestRecord,
+    ServeConfig, ServeReport,
+};
+pub use replay::{read_trace, ReplayTrace, TraceWriter};
 pub use router::Router;
 pub use stats::{ServeStats, ShardStats};
 pub use sweep::{run_serve_sweep, serve_matrix, ServeScenario, ServeSweepReport};

@@ -1,0 +1,284 @@
+//! Trace record + replay: the fabric's arrival stream as a JSONL
+//! artifact, and that artifact fed back in as the arrival source.
+//!
+//! `serve --trace-out <path>` attaches a [`TraceWriter`] observer that
+//! streams one `request` row per arrival (after a `header` row carrying
+//! the full serve configuration).  `serve --arrival replay:<path>`
+//! parses the file back with the zero-copy reader, reconstructs the
+//! [`ServeConfig`], and drives `simulate_trace` over the recorded
+//! events — reproducing the original run's `ServeStats` exactly
+//! (`tests/artifact_stream.rs`, CI's `artifact-smoke`).
+//!
+//! The row schemas are documented in `docs/artifacts.md`.
+
+use std::io::{self, Write};
+
+use crate::artifact::{tagged, JsonReader};
+use crate::config::{presets, DataflowKind, ModelConfig, RoutePolicy};
+use crate::engine::Backend;
+use crate::util::json::Json;
+
+use super::arrival::{ArrivalEvent, ArrivalKind, Modality};
+use super::fabric::{RequestObserver, RequestRecord, ServeConfig, ServeReport};
+
+/// Streams the replayable JSONL trace while the fabric runs: a
+/// `header` row up front, then one `request` row per arrival as the
+/// observer sees it.  O(1) artifact-side memory.
+pub struct TraceWriter<W: Write> {
+    w: crate::artifact::JsonlWriter<W>,
+}
+
+impl<W: Write> TraceWriter<W> {
+    /// Write the header row for the run described by `report_config`
+    /// (a [`ServeReport::config_json`] tree) and return the observer.
+    pub fn begin(out: W, report_config: &Json) -> io::Result<Self> {
+        let mut header = report_config.clone();
+        if let Json::Obj(m) = &mut header {
+            m.insert("kind".to_string(), Json::str("serve-trace"));
+        }
+        let mut w = crate::artifact::JsonlWriter::new(out);
+        w.value(&tagged("header", header))?;
+        Ok(TraceWriter { w })
+    }
+}
+
+impl<W: Write> RequestObserver for TraceWriter<W> {
+    fn on_request(&mut self, r: &RequestRecord) -> io::Result<()> {
+        self.w.value(&tagged("request", r.to_json()))
+    }
+}
+
+/// A parsed replay trace: the recorded configuration plus the arrival
+/// events in file order.
+#[derive(Debug, Clone)]
+pub struct ReplayTrace {
+    pub models: Vec<ModelConfig>,
+    pub dataflow: DataflowKind,
+    pub backend: Backend,
+    pub policy: RoutePolicy,
+    pub shards: u64,
+    pub queue_depth: u64,
+    pub batch_size: u64,
+    pub arrival: ArrivalKind,
+    pub arrival_seed: u64,
+    pub mean_gap: u64,
+    pub events: Vec<ArrivalEvent>,
+}
+
+impl ReplayTrace {
+    /// The [`ServeConfig`] that reproduces the recorded run: `accel`
+    /// supplies the hardware; every serving knob comes from the header.
+    pub fn to_config(&self, mut accel: crate::config::AccelConfig) -> ServeConfig {
+        accel.serving.shards = self.shards;
+        accel.serving.queue_depth = self.queue_depth;
+        accel.serving.batch_size = self.batch_size;
+        accel.serving.policy = self.policy;
+        accel.serving.arrival_seed = self.arrival_seed;
+        ServeConfig {
+            accel,
+            models: self.models.clone(),
+            dataflow: self.dataflow,
+            backend: self.backend,
+            arrival: self.arrival,
+            requests: self.events.len() as u64,
+            mean_gap: self.mean_gap,
+        }
+    }
+
+    /// Replay: re-serve the recorded arrivals on `accel`.
+    pub fn replay(&self, accel: crate::config::AccelConfig) -> io::Result<ServeReport> {
+        let cfg = self.to_config(accel);
+        super::fabric::simulate_trace(&cfg, &self.events, &mut ())
+    }
+}
+
+fn field_str<'a>(row: &'a Json, key: &str, line: usize) -> Result<&'a str, String> {
+    row.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("replay trace line {line}: missing string field '{key}'"))
+}
+
+fn field_u64(row: &Json, key: &str, line: usize) -> Result<u64, String> {
+    row.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("replay trace line {line}: missing integer field '{key}'"))
+}
+
+/// Parse a recorded trace (the `--trace-out` format; a serve-report
+/// JSONL artifact is also accepted for its header, though it carries
+/// no request rows).  Every row goes through the streaming reader —
+/// nothing holds more than one row's tree.
+pub fn read_trace(src: &str) -> Result<ReplayTrace, String> {
+    let mut trace: Option<ReplayTrace> = None;
+    for (idx, line) in src.lines().enumerate() {
+        let n = idx + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = crate::artifact::parse_line(line)
+            .map_err(|e| format!("replay trace line {n}: {} at byte {}", e.msg, e.pos))?;
+        let tag = field_str(&row, "row", n)?;
+        match tag {
+            "header" => {
+                if trace.is_some() {
+                    return Err(format!("replay trace line {n}: duplicate header"));
+                }
+                let kind = field_str(&row, "kind", n)?;
+                if kind != "serve-trace" && kind != "serve-report" {
+                    return Err(format!("replay trace line {n}: unsupported kind '{kind}'"));
+                }
+                let models = row
+                    .get("models")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| format!("replay trace line {n}: missing 'models'"))?
+                    .iter()
+                    .map(|m| {
+                        let name = m
+                            .as_str()
+                            .ok_or_else(|| format!("replay trace line {n}: bad model name"))?;
+                        presets::model_by_name(name)
+                            .ok_or_else(|| format!("replay trace line {n}: unknown model '{name}'"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                if models.is_empty() {
+                    return Err(format!("replay trace line {n}: empty workload mix"));
+                }
+                let df = field_str(&row, "dataflow", n)?;
+                let dataflow = DataflowKind::parse(df)
+                    .ok_or_else(|| format!("replay trace line {n}: bad dataflow '{df}'"))?;
+                let en = field_str(&row, "engine", n)?;
+                let backend = Backend::parse(en)
+                    .ok_or_else(|| format!("replay trace line {n}: bad engine '{en}'"))?;
+                let po = field_str(&row, "policy", n)?;
+                let policy = RoutePolicy::parse(po)
+                    .ok_or_else(|| format!("replay trace line {n}: bad policy '{po}'"))?;
+                let ar = field_str(&row, "arrival", n)?;
+                let arrival = ArrivalKind::parse(ar)
+                    .ok_or_else(|| format!("replay trace line {n}: bad arrival '{ar}'"))?;
+                trace = Some(ReplayTrace {
+                    models,
+                    dataflow,
+                    backend,
+                    policy,
+                    shards: field_u64(&row, "shards", n)?,
+                    queue_depth: field_u64(&row, "queue_depth", n)?,
+                    batch_size: field_u64(&row, "batch_size", n)?,
+                    arrival,
+                    arrival_seed: field_u64(&row, "arrival_seed", n)?,
+                    mean_gap: field_u64(&row, "mean_gap_cycles", n)?,
+                    events: Vec::new(),
+                });
+            }
+            "request" => {
+                let t = trace
+                    .as_mut()
+                    .ok_or_else(|| format!("replay trace line {n}: request before header"))?;
+                let modality_name = field_str(&row, "modality", n)?;
+                let modality = Modality::parse(modality_name).ok_or_else(|| {
+                    format!("replay trace line {n}: unknown modality '{modality_name}'")
+                })?;
+                let model = field_u64(&row, "model", n)? as usize;
+                if model >= t.models.len() {
+                    return Err(format!(
+                        "replay trace line {n}: model index {model} out of range ({} models)",
+                        t.models.len()
+                    ));
+                }
+                t.events.push(ArrivalEvent {
+                    id: field_u64(&row, "id", n)?,
+                    cycle: field_u64(&row, "cycle", n)?,
+                    modality,
+                    model,
+                });
+            }
+            // future row tags (shard/stats in serve-report files) are
+            // ignored: the header and requests are all replay needs
+            _ => {}
+        }
+    }
+    let t = trace.ok_or_else(|| "replay trace has no header row".to_string())?;
+    Ok(t)
+}
+
+/// `read_trace`, but verifies the request stream with the pull parser
+/// alone first (cheap structural check with positioned errors).
+pub fn validate_lines(src: &str) -> Result<u64, String> {
+    let mut rows = 0u64;
+    for (idx, line) in src.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut r = JsonReader::new(line);
+        r.skip_value()
+            .and_then(|_| r.next_event().map(|_| ()))
+            .map_err(|e| format!("line {}: {} at byte {}", idx + 1, e.msg, e.pos))?;
+        rows += 1;
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::fabric::{auto_gap, simulate_trace};
+
+    fn base_cfg() -> ServeConfig {
+        let mut accel = presets::streamdcim_default();
+        accel.serving.shards = 2;
+        accel.serving.queue_depth = 16;
+        accel.serving.batch_size = 4;
+        let models = vec![presets::tiny_smoke(), presets::functional_small()];
+        let mean_gap = auto_gap(&accel, Backend::Analytic, &models);
+        ServeConfig {
+            accel,
+            models,
+            dataflow: DataflowKind::TileStream,
+            backend: Backend::Analytic,
+            arrival: ArrivalKind::Burst,
+            requests: 96,
+            mean_gap,
+        }
+    }
+
+    #[test]
+    fn record_then_replay_reproduces_stats_exactly() {
+        let cfg = base_cfg();
+        let trace = super::super::fabric::arrival_trace(&cfg);
+
+        // record: header + request rows streamed through the observer
+        let mut buf = Vec::new();
+        let mut tw = TraceWriter::begin(&mut buf, &cfg.config_json()).unwrap();
+        let original = simulate_trace(&cfg, &trace, &mut tw).unwrap();
+        assert_eq!(
+            cfg.config_json().to_string_pretty(),
+            original.config_json().to_string_pretty(),
+            "config-side and report-side headers must agree"
+        );
+
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(validate_lines(&text).unwrap(), 1 + cfg.requests);
+
+        // replay from the recorded artifact
+        let parsed = read_trace(&text).expect("trace parses");
+        assert_eq!(parsed.events.len() as u64, cfg.requests);
+        let replayed = parsed.replay(presets::streamdcim_default()).unwrap();
+        assert_eq!(original.stats, replayed.stats, "replay must reproduce ServeStats");
+        assert_eq!(original.id(), replayed.id());
+    }
+
+    #[test]
+    fn malformed_traces_error_cleanly() {
+        assert!(read_trace("").is_err(), "no header");
+        assert!(read_trace("{\"row\":\"request\"}\n").is_err(), "request before header");
+        let truncated = "{\"row\":\"header\",\"kind\":\"serve-trace\"";
+        assert!(read_trace(truncated).is_err(), "truncated row");
+        let bad_model = concat!(
+            "{\"row\":\"header\",\"kind\":\"serve-trace\",\"models\":[\"no-such-model\"],",
+            "\"dataflow\":\"tile\",\"engine\":\"event\",\"policy\":\"ll\",\"arrival\":\"poisson\",",
+            "\"shards\":1,\"queue_depth\":4,\"batch_size\":2,\"arrival_seed\":7,",
+            "\"mean_gap_cycles\":100,\"requests\":1}\n"
+        );
+        let err = read_trace(bad_model).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+    }
+}

@@ -3,6 +3,9 @@
 //! whole struct — and the JSON artifact derived from it — is a pure
 //! function of the serve configuration.
 
+use std::io::{self, Write};
+
+use crate::artifact::{ArtifactSink, JsonWriter};
 use crate::metrics::LatencyStats;
 use crate::util::json::Json;
 
@@ -95,17 +98,19 @@ impl ServeStats {
         self.per_shard.iter().map(|s| s.busy).sum()
     }
 
-    pub fn to_json(&self) -> Json {
+    /// Run-level scalars only (everything except the `shards` array) —
+    /// the JSONL `stats` row schema.
+    pub fn summary_json(&self) -> Json {
         Json::obj(vec![
-            ("submitted", Json::num(self.submitted as f64)),
-            ("served", Json::num(self.served as f64)),
-            ("rejected", Json::num(self.rejected as f64)),
-            ("batches", Json::num(self.batches as f64)),
+            ("submitted", Json::int(self.submitted)),
+            ("served", Json::int(self.served)),
+            ("rejected", Json::int(self.rejected)),
+            ("batches", Json::int(self.batches)),
             ("mean_batch", Json::num(self.mean_batch())),
-            ("makespan_cycles", Json::num(self.makespan as f64)),
+            ("makespan_cycles", Json::int(self.makespan)),
             ("served_per_megacycle", Json::num(self.served_per_megacycle())),
             ("latency", self.latency.to_json("cycles")),
-            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
+            ("max_queue_depth", Json::int(self.max_queue_depth)),
             ("mean_queue_depth", Json::num(self.mean_queue_depth)),
             (
                 "rewrite_hidden_ratio",
@@ -116,27 +121,54 @@ impl ServeStats {
             ),
             ("intra_macro_utilization", Json::num(self.intra_macro_utilization)),
             ("energy_mj", Json::num(self.energy_mj)),
-            (
-                "shards",
-                Json::arr(
-                    self.per_shard
-                        .iter()
-                        .map(|s| {
-                            Json::obj(vec![
-                                ("busy_cycles", Json::num(s.busy as f64)),
-                                ("batches", Json::num(s.batches as f64)),
-                                ("served", Json::num(s.served as f64)),
-                                ("utilization", Json::num(s.utilization(self.makespan))),
-                                (
-                                    "intra_macro_utilization",
-                                    Json::num(s.intra_macro_utilization()),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
         ])
+    }
+
+    /// One shard's row (needs the run makespan for utilization).
+    pub fn shard_json(&self, s: &ShardStats) -> Json {
+        Json::obj(vec![
+            ("busy_cycles", Json::int(s.busy)),
+            ("batches", Json::int(s.batches)),
+            ("served", Json::int(s.served)),
+            ("utilization", Json::num(s.utilization(self.makespan))),
+            ("intra_macro_utilization", Json::num(s.intra_macro_utilization())),
+        ])
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self.summary_json() {
+            Json::Obj(mut m) => {
+                m.insert(
+                    "shards".to_string(),
+                    Json::Arr(self.per_shard.iter().map(|s| self.shard_json(s)).collect()),
+                );
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
+
+    /// Stream the full stats object (summary scalars + one `shards`
+    /// entry per shard).  The per-shard trees are built one at a time.
+    pub fn write_stream<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        // summary scalars, already sorted by the BTreeMap; "shards"
+        // slots between "served_per_megacycle" and "submitted"
+        if let Json::Obj(m) = self.summary_json() {
+            for (k, v) in m.iter().take_while(|(k, _)| k.as_str() < "shards") {
+                w.field(k, v)?;
+            }
+            w.key("shards")?;
+            w.begin_arr()?;
+            for s in &self.per_shard {
+                w.value(&self.shard_json(s))?;
+            }
+            w.end()?;
+            for (k, v) in m.iter().skip_while(|(k, _)| k.as_str() < "shards") {
+                w.field(k, v)?;
+            }
+        }
+        w.end()
     }
 
     /// Human-readable block for the `serve` subcommand.
@@ -183,6 +215,12 @@ impl ServeStats {
             ));
         }
         out
+    }
+}
+
+impl ArtifactSink for ServeStats {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        self.write_stream(w)
     }
 }
 
@@ -236,5 +274,11 @@ mod tests {
         let txt = s.render_text();
         assert!(txt.contains("served/Mcycle"));
         assert!(txt.contains("shard 0"));
+
+        // the streamed emission is byte-identical to the tree path
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::pretty(&mut buf);
+        s.write_stream(&mut w).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), s.to_json().to_string_pretty());
     }
 }

@@ -8,6 +8,9 @@
 //! run-environment fields, and the artifact is bit-identical for any
 //! thread count and shard-shuffle seed.
 
+use std::io::{self, Write};
+
+use crate::artifact::{tagged, JsonWriter, JsonlWriter};
 use crate::config::{presets, AccelConfig, DataflowKind, RoutePolicy};
 use crate::engine::Backend;
 use crate::exec;
@@ -145,11 +148,24 @@ impl ServeSweepReport {
         }
     }
 
+    fn headline_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "tile_vs_non_served_per_megacycle",
+                Json::num(self.headline.tile_vs_non_throughput),
+            ),
+            (
+                "tile_vs_layer_served_per_megacycle",
+                Json::num(self.headline.tile_vs_layer_throughput),
+            ),
+        ])
+    }
+
     /// Deterministic aggregate artifact (no environment fields).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("serve-sweep")),
-            ("scenario_count", Json::num(self.rows.len() as f64)),
+            ("scenario_count", Json::int(self.rows.len() as u64)),
             ("engine", Json::str(self.backend_slug())),
             (
                 "scenarios",
@@ -165,20 +181,57 @@ impl ServeSweepReport {
                         .collect(),
                 ),
             ),
-            (
-                "headline",
-                Json::obj(vec![
-                    (
-                        "tile_vs_non_served_per_megacycle",
-                        Json::num(self.headline.tile_vs_non_throughput),
-                    ),
-                    (
-                        "tile_vs_layer_served_per_megacycle",
-                        Json::num(self.headline.tile_vs_layer_throughput),
-                    ),
-                ]),
-            ),
+            ("headline", self.headline_json()),
         ])
+    }
+
+    /// Stream the pretty aggregate — byte-identical to
+    /// `to_json().to_string_pretty()`, one scenario tree at a time.
+    /// Sorted key order: engine, headline, kind, scenario_count,
+    /// scenarios.
+    pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        w.key("engine")?;
+        w.str_val(self.backend_slug())?;
+        w.field("headline", &self.headline_json())?;
+        w.key("kind")?;
+        w.str_val("serve-sweep")?;
+        w.key("scenario_count")?;
+        w.u64_val(self.rows.len() as u64)?;
+        w.key("scenarios")?;
+        w.begin_arr()?;
+        for r in &self.rows {
+            w.begin_obj()?;
+            w.key("id")?;
+            w.str_val(&r.id())?;
+            w.field("report", &r.to_json())?;
+            w.end()?;
+        }
+        w.end()?;
+        w.end()
+    }
+
+    /// JSONL layout: a `header` row, one `scenario` row per fabric run
+    /// (its config + stats, flattened), then the `headline` row.
+    pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonlWriter::new(out);
+        w.value(&tagged(
+            "header",
+            Json::obj(vec![
+                ("kind", Json::str("serve-sweep")),
+                ("engine", Json::str(self.backend_slug())),
+                ("scenario_count", Json::int(self.rows.len() as u64)),
+            ]),
+        ))?;
+        for r in &self.rows {
+            let mut row = r.to_json();
+            if let Json::Obj(m) = &mut row {
+                m.insert("id".to_string(), Json::str(r.id()));
+            }
+            w.value(&tagged("scenario", row))?;
+        }
+        w.value(&tagged("headline", self.headline_json()))
     }
 
     /// Ranked human-readable summary.
@@ -241,6 +294,24 @@ mod tests {
         assert_eq!(serial, reseeded);
         let parsed = Json::parse(&serial).unwrap();
         assert_eq!(parsed.get("scenario_count").and_then(|v| v.as_u64()), Some(m.len() as u64));
+    }
+
+    #[test]
+    fn streamed_aggregate_matches_tree_bytes() {
+        let mut m = serve_matrix(&presets::streamdcim_default(), Backend::Analytic, 16);
+        m.truncate(6); // one shard group is plenty for a byte check
+        let rep = run_serve_sweep(&m, 2, 42);
+        let mut buf = Vec::new();
+        rep.write_json(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), rep.to_json().to_string_pretty());
+
+        let mut lines = Vec::new();
+        rep.write_jsonl(&mut lines).unwrap();
+        let text = String::from_utf8(lines).unwrap();
+        assert_eq!(text.lines().count(), 2 + rep.rows.len());
+        for line in text.lines() {
+            assert!(crate::artifact::parse_line(line).is_ok());
+        }
     }
 
     #[test]

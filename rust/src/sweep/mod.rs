@@ -35,6 +35,9 @@ pub mod scenario;
 pub use matrix::{full_matrix, full_matrix_backend, matrix_for, matrix_for_backend, tile_variants};
 pub use scenario::{Scenario, ScenarioResult};
 
+use std::io::{self, Write};
+
+use crate::artifact::{tagged, ArtifactSink, JsonWriter, JsonlWriter};
 use crate::config::DataflowKind;
 use crate::engine::Backend;
 use crate::exec;
@@ -245,6 +248,17 @@ impl SweepReport {
     /// wall-clock and any other run-environment detail: the JSON is a
     /// function of the scenario matrix alone (the determinism contract).
     pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario_count", Json::int(self.rows.len() as u64)),
+            ("engine", Json::str(self.backend_slug())),
+            ("models", self.models_json()),
+            ("scenarios", Json::arr(self.rows.iter().map(row_json).collect())),
+            ("groups", Json::arr(self.groups.iter().map(group_json).collect())),
+            ("headline", self.headline_json()),
+        ])
+    }
+
+    fn models_json(&self) -> Json {
         let mut models: Vec<&str> = Vec::new();
         for r in &self.rows {
             let name = r.result.report.model.as_str();
@@ -252,26 +266,70 @@ impl SweepReport {
                 models.push(name);
             }
         }
+        Json::arr(models.into_iter().map(Json::str).collect())
+    }
+
+    fn headline_json(&self) -> Json {
         Json::obj(vec![
-            ("scenario_count", Json::num(self.rows.len() as f64)),
-            ("engine", Json::str(self.backend_slug())),
-            ("models", Json::arr(models.into_iter().map(Json::str).collect())),
-            ("scenarios", Json::arr(self.rows.iter().map(row_json).collect())),
-            ("groups", Json::arr(self.groups.iter().map(group_json).collect())),
+            ("tile_vs_non_speedup", Json::num(self.headline.tile_vs_non_speedup)),
+            ("tile_vs_layer_speedup", Json::num(self.headline.tile_vs_layer_speedup)),
+            ("tile_vs_non_energy_saving", Json::num(self.headline.tile_vs_non_energy)),
+            ("tile_vs_layer_energy_saving", Json::num(self.headline.tile_vs_layer_energy)),
             (
-                "headline",
-                Json::obj(vec![
-                    ("tile_vs_non_speedup", Json::num(self.headline.tile_vs_non_speedup)),
-                    ("tile_vs_layer_speedup", Json::num(self.headline.tile_vs_layer_speedup)),
-                    ("tile_vs_non_energy_saving", Json::num(self.headline.tile_vs_non_energy)),
-                    ("tile_vs_layer_energy_saving", Json::num(self.headline.tile_vs_layer_energy)),
-                    (
-                        "tile_vs_non_speedup_attention",
-                        Json::num(self.headline.tile_vs_non_speedup_attention),
-                    ),
-                ]),
+                "tile_vs_non_speedup_attention",
+                Json::num(self.headline.tile_vs_non_speedup_attention),
             ),
         ])
+    }
+
+    /// Stream the pretty aggregate document row-at-a-time —
+    /// byte-identical to `to_json().to_string_pretty()` but never
+    /// holding more than one row's tree.  Keys are pushed in sorted
+    /// order to match the `BTreeMap`-backed tree output.
+    pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonWriter::pretty(out);
+        w.begin_obj()?;
+        w.key("engine")?;
+        w.str_val(self.backend_slug())?;
+        w.key("groups")?;
+        w.begin_arr()?;
+        for g in &self.groups {
+            g.emit(&mut w)?;
+        }
+        w.end()?;
+        w.field("headline", &self.headline_json())?;
+        w.field("models", &self.models_json())?;
+        w.key("scenario_count")?;
+        w.u64_val(self.rows.len() as u64)?;
+        w.key("scenarios")?;
+        w.begin_arr()?;
+        for r in &self.rows {
+            r.emit(&mut w)?;
+        }
+        w.end()?;
+        w.end()
+    }
+
+    /// JSONL layout: a `header` row, one `scenario` row per scenario,
+    /// one `group` row per group, then the `headline` row.
+    pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
+        let mut w = JsonlWriter::new(out);
+        w.value(&tagged(
+            "header",
+            Json::obj(vec![
+                ("kind", Json::str("sweep-report")),
+                ("engine", Json::str(self.backend_slug())),
+                ("models", self.models_json()),
+                ("scenario_count", Json::int(self.rows.len() as u64)),
+            ]),
+        ))?;
+        for r in &self.rows {
+            w.value(&tagged("scenario", row_json(r)))?;
+        }
+        for g in &self.groups {
+            w.value(&tagged("group", group_json(g)))?;
+        }
+        w.value(&tagged("headline", self.headline_json()))
     }
 
     /// The backend that produced the rows ("mixed" for hand-built lists).
@@ -345,15 +403,15 @@ fn row_json(r: &SweepRow) -> Json {
         ("model", Json::str(rep.model.clone())),
         ("dataflow", Json::str(rep.dataflow.slug())),
         ("ablation", Json::str(r.result.ablation)),
-        ("cycles", Json::num(rep.cycles as f64)),
+        ("cycles", Json::int(rep.cycles)),
         ("ms", Json::num(rep.ms)),
         ("energy_mj", Json::num(rep.energy.total_mj())),
         ("avg_power_mw", Json::num(rep.energy.avg_power_mw)),
-        ("macs", Json::num(rep.activity.macs as f64)),
-        ("offchip_bits", Json::num(rep.activity.offchip_bits as f64)),
-        ("exposed_rewrite_cycles", Json::num(rep.exposed_rewrite() as f64)),
+        ("macs", Json::int(rep.activity.macs)),
+        ("offchip_bits", Json::int(rep.activity.offchip_bits)),
+        ("exposed_rewrite_cycles", Json::int(rep.exposed_rewrite())),
         ("intra_macro_utilization", Json::num(rep.intra_macro_utilization())),
-        ("replay_bits", Json::num(rep.activity.occupancy.replay_bits as f64)),
+        ("replay_bits", Json::int(rep.activity.occupancy.replay_bits)),
         ("speedup_vs_non", Json::num(r.speedup_vs_non)),
         ("energy_saving_vs_non", Json::num(r.energy_saving_vs_non)),
     ];
@@ -367,11 +425,25 @@ fn group_json(g: &GroupSummary) -> Json {
     Json::obj(vec![
         ("dataflow", Json::str(g.dataflow.slug())),
         ("ablation", Json::str(g.ablation)),
-        ("models", Json::num(g.models as f64)),
+        ("models", Json::int(g.models as u64)),
         ("geomean_speedup_vs_non", Json::num(g.geomean_speedup_vs_non)),
         ("geomean_energy_saving_vs_non", Json::num(g.geomean_energy_saving_vs_non)),
-        ("rank", Json::num(g.rank as f64)),
+        ("rank", Json::int(g.rank as u64)),
     ])
+}
+
+/// One scenario row, streamed (O(row) memory — the per-row tree is
+/// built and dropped inside the call).
+impl ArtifactSink for SweepRow {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&row_json(self))
+    }
+}
+
+impl ArtifactSink for GroupSummary {
+    fn emit<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
+        w.value(&group_json(self))
+    }
 }
 
 #[cfg(test)]

@@ -7,11 +7,21 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// A JSON value. Object keys are sorted (BTreeMap) so emission is stable.
+///
+/// Integer literals parse to [`Json::Int`] and emit their digits
+/// verbatim, so u64/u128 counters (cycles, MAC counts, rewrite bits)
+/// round-trip exactly instead of rounding through f64 above 2^53.
+/// `Int` and `Num` print identically for every integral value below
+/// 2^53, so switching a field between them never changes artifact
+/// bytes in that range.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// An exact integer (covers all of u64 and i64; u128 counters fit
+    /// up to `i128::MAX`).
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -33,7 +43,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -46,11 +56,22 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
             _ => None,
         }
     }
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().map(|f| f as u64)
+        match self {
+            Json::Int(i) => u64::try_from(*i).ok(),
+            _ => self.as_f64().map(|f| f as u64),
+        }
+    }
+    /// Exact integer value; `None` for floats and non-numbers.
+    pub fn as_i128(&self) -> Option<i128> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -87,6 +108,11 @@ impl Json {
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// Exact integer (use for u64/u128 counters; [`Json::num`] loses
+    /// precision above 2^53).
+    pub fn int(n: impl Into<i128>) -> Json {
+        Json::Int(n.into())
+    }
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -109,12 +135,9 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{}", n);
-                }
+            Json::Num(n) => emit_num(out, *n),
+            Json::Int(i) => {
+                let _ = write!(out, "{}", i);
             }
             Json::Str(s) => emit_str(out, s),
             Json::Arr(a) => {
@@ -151,7 +174,19 @@ impl Json {
     }
 }
 
-fn emit_str(out: &mut String, s: &str) {
+/// The canonical float rendering shared by [`Json::to_string_pretty`]
+/// and the streaming `artifact::JsonWriter` (byte-identity contract):
+/// integral values below 2^53 print as integers, the rest via Display.
+pub(crate) fn emit_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{}", n);
+    }
+}
+
+/// Canonical string escaping, shared with the streaming writer.
+pub(crate) fn emit_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -169,9 +204,15 @@ fn emit_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Recursion bound for the tree parser (matches
+/// `artifact::reader::MAX_DEPTH`): hostile deeply-nested input errors
+/// instead of overflowing the stack.
+const MAX_DEPTH: usize = 256;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -200,8 +241,15 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(c @ (b'{' | b'[')) => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -232,11 +280,16 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
-            .ok()
-            .and_then(|s| s.parse::<f64>().ok())
-            .map(Json::Num)
-            .ok_or_else(|| self.err("bad number"))
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
+        // Integer literals stay exact instead of rounding through f64,
+        // so u64/u128 cycle counters survive artifact round-trips.
+        if !s.contains(|c| matches!(c, '.' | 'e' | 'E')) {
+            if let Ok(i) = s.parse::<i128>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        s.parse::<f64>().ok().map(Json::Num).ok_or_else(|| self.err("bad number"))
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -359,6 +412,41 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
         assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+        assert_eq!(Json::parse("42").unwrap(), Json::Int(42));
+        assert_eq!(Json::parse("-7").unwrap(), Json::Int(-7));
+    }
+
+    #[test]
+    fn integers_above_2_53_stay_exact() {
+        // regression: u64 counters used to round through f64 and lose
+        // precision above 2^53 (9007199254740993 would read back ...992)
+        let over = (1u64 << 53) + 1;
+        for v in [over, u64::MAX] {
+            let j = Json::int(v);
+            let emitted = j.to_string_pretty();
+            assert_eq!(emitted, v.to_string());
+            let back = Json::parse(&emitted).unwrap();
+            assert_eq!(back.as_u64(), Some(v), "{v} must round-trip exactly");
+        }
+        // u128-scale counters fit the Int tree up to i128::MAX
+        let big: i128 = 170_141_183_460_469_231_731_687_303_715_884_105_727;
+        let j = Json::parse(&big.to_string()).unwrap();
+        assert_eq!(j.as_i128(), Some(big));
+        // Int and Num print identically for integral values below 2^53,
+        // so artifact bytes never change in that range
+        assert_eq!(Json::int(128u64).to_string_pretty(), Json::num(128.0).to_string_pretty());
+    }
+
+    #[test]
+    fn deep_nesting_errors_cleanly() {
+        let mut src = String::new();
+        for _ in 0..(MAX_DEPTH + 10) {
+            src.push('[');
+        }
+        assert!(Json::parse(&src).is_err(), "hostile nesting must not overflow the stack");
+        // a tree at a sane depth still parses
+        let ok = "[".repeat(40) + &"]".repeat(40);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

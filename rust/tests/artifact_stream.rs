@@ -1,0 +1,297 @@
+//! Integration tests for the streaming artifact layer: the push writer
+//! must be byte-identical to the tree serializer, the pull parser must
+//! rebuild the exact tree (faithful integers included), malformed input
+//! must error instead of panicking, and the two reader-powered features
+//! (serve-trace replay, streaming perf-gate diff) must reproduce their
+//! tree-built counterparts exactly.
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use streamdcim::artifact::reader::MAX_DEPTH;
+use streamdcim::artifact::{parse_line, JsonReader, JsonWriter, JsonlWriter};
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::engine::Backend;
+use streamdcim::perfgate;
+use streamdcim::prop_assert;
+use streamdcim::propcheck::Prop;
+use streamdcim::serve::{self, ArrivalKind, ServeConfig};
+use streamdcim::sweep;
+use streamdcim::util::json::Json;
+use streamdcim::util::prng::Rng;
+
+/// Arbitrary JSON tree. The float arm is never integral (k/8 + 1/16) so
+/// `Num` and `Int` stay distinguishable through a round-trip; the int
+/// arm spans the full u64 range (well past 2^53) plus negatives.
+fn gen(rng: &mut Rng, depth: usize) -> Json {
+    // range_usize is inclusive; past depth 3 only scalar arms remain
+    let top = if depth >= 3 { 4 } else { 6 };
+    match rng.range_usize(0, top) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_u64() % 2 == 0),
+        2 => Json::num((rng.range_u64(0, 1 << 20) as f64) / 8.0 + 0.0625),
+        3 => {
+            let v = rng.next_u64() >> rng.range_u64(0, 60);
+            if rng.next_u64() % 4 == 0 {
+                Json::int(-(v as i128))
+            } else {
+                Json::int(v)
+            }
+        }
+        4 => {
+            const POOL: &[&str] = &[
+                "",
+                "plain",
+                "quote\"backslash\\",
+                "tab\tnewline\ncr\r",
+                "unicode-\u{3b1}\u{1f980}",
+                "ctrl-\u{1}\u{1f}",
+            ];
+            Json::str(POOL[rng.range_usize(0, POOL.len() - 1)])
+        }
+        5 => {
+            let n = rng.range_usize(0, 4);
+            Json::arr((0..n).map(|_| gen(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range_usize(0, 4);
+            let mut m = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                m.insert(format!("k{}", rng.range_usize(0, 8)), gen(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_streamed_bytes_match_the_tree_serializer_and_reparse() {
+    Prop::new("stream writer == to_string_pretty; pull parser rebuilds the tree")
+        .cases(200)
+        .check(|rng| {
+            let tree = gen(rng, 0);
+
+            // push-streamed pretty document == the tree serializer, byte for byte
+            let mut pretty = Vec::new();
+            JsonWriter::pretty(&mut pretty)
+                .value(&tree)
+                .map_err(|e| format!("pretty write: {e}"))?;
+            let pretty = String::from_utf8(pretty).map_err(|e| format!("utf8: {e}"))?;
+            prop_assert!(
+                pretty == tree.to_string_pretty(),
+                "streamed pretty bytes diverge from the tree serializer"
+            );
+
+            // the pull parser rebuilds the identical tree from those bytes
+            let mut r = JsonReader::new(&pretty);
+            let back = r
+                .read_value()
+                .map_err(|e| format!("pull parse: {} at byte {}", e.msg, e.pos))?;
+            let trailing = r
+                .next_event()
+                .map_err(|e| format!("trailing check: {} at byte {}", e.msg, e.pos))?;
+            prop_assert!(trailing.is_none(), "events after the document end");
+            prop_assert!(back == tree, "pull-parsed tree mismatch");
+
+            // compact row: exactly one line, same tree back via parse_line
+            let mut row = Vec::new();
+            JsonlWriter::new(&mut row)
+                .value(&tree)
+                .map_err(|e| format!("row write: {e}"))?;
+            let row = String::from_utf8(row).map_err(|e| format!("utf8: {e}"))?;
+            prop_assert!(row.ends_with('\n'), "row must be newline-terminated");
+            prop_assert!(
+                !row.trim_end_matches('\n').contains('\n'),
+                "row must be a single physical line"
+            );
+            let back = parse_line(row.trim_end_matches('\n'))
+                .map_err(|e| format!("parse_line: {} at byte {}", e.msg, e.pos))?;
+            prop_assert!(back == tree, "jsonl row roundtrip mismatch");
+            Ok(())
+        });
+}
+
+#[test]
+fn counters_above_2_53_roundtrip_losslessly() {
+    let sentinel = (1u64 << 53) + 1; // first u64 the f64 path cannot represent
+    assert_ne!((sentinel as f64) as u64, sentinel, "regression premise: f64 rounds it");
+    let row = Json::obj(vec![
+        ("macs", Json::int(sentinel)),
+        ("total_cycles", Json::int(u64::MAX)),
+    ]);
+
+    let mut buf = Vec::new();
+    JsonlWriter::new(&mut buf).value(&row).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    assert!(text.contains("9007199254740993"), "{text}");
+    assert!(text.contains("18446744073709551615"), "{text}");
+
+    let back = parse_line(text.trim_end()).unwrap();
+    assert_eq!(back.get("macs").and_then(|v| v.as_u64()), Some(sentinel));
+    assert_eq!(back.get("total_cycles").and_then(|v| v.as_u64()), Some(u64::MAX));
+    assert_eq!(back, row);
+
+    // the pretty document is just as faithful, and the tree parser agrees
+    let mut pretty = Vec::new();
+    JsonWriter::pretty(&mut pretty).value(&row).unwrap();
+    let pretty = String::from_utf8(pretty).unwrap();
+    assert_eq!(pretty, row.to_string_pretty());
+    assert_eq!(Json::parse(&pretty).unwrap(), row);
+}
+
+/// Drive the pull parser to completion; true iff it errored.
+fn pull_errors(src: &str) -> bool {
+    let mut r = JsonReader::new(src);
+    loop {
+        match r.next_event() {
+            Err(_) => return true,
+            Ok(None) => return false,
+            Ok(Some(_)) => {}
+        }
+    }
+}
+
+#[test]
+fn malformed_input_errors_instead_of_panicking() {
+    let bad = [
+        "{",
+        "[",
+        "{\"a\":",
+        "{\"a\":1,}",
+        "[1,]",
+        "[1 2]",
+        "{\"a\" 1}",
+        "tru",
+        "nul",
+        "-",
+        "1e",
+        "\"unterminated",
+        "\"bad escape \\q\"",
+        "{\"a\":1}}",
+        "[]extra",
+    ];
+    for src in bad {
+        assert!(pull_errors(src), "pull reader accepted {src:?}");
+        assert!(parse_line(src).is_err(), "parse_line accepted {src:?}");
+        assert!(Json::parse(src).is_err(), "tree parser accepted {src:?}");
+    }
+
+    // hostile nesting: a positioned error, not a stack overflow
+    let deep = "[".repeat(MAX_DEPTH * 4);
+    assert!(pull_errors(&deep));
+    assert!(parse_line(&deep).is_err());
+    assert!(Json::parse(&deep).is_err());
+
+    // legal nesting well under the bound still parses
+    let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+    assert!(!pull_errors(&ok));
+    assert!(parse_line(&ok).is_ok());
+
+    // the replay reader reports structured, line-positioned errors
+    assert!(serve::read_trace("").is_err(), "no header");
+    assert!(serve::read_trace("{\"row\":\"request\",\"id\":0}\n").is_err(), "request first");
+    assert!(serve::read_trace("{\"row\":\"header\",\"kind\":\"serve-trace\"").is_err());
+}
+
+fn serve_cfg(requests: u64) -> ServeConfig {
+    let mut accel = presets::streamdcim_default();
+    accel.serving.shards = 3;
+    let models = vec![presets::tiny_smoke(), presets::functional_small()];
+    let mean_gap = serve::auto_gap(&accel, Backend::Analytic, &models);
+    ServeConfig {
+        accel,
+        models,
+        dataflow: DataflowKind::TileStream,
+        backend: Backend::Analytic,
+        arrival: ArrivalKind::Poisson,
+        requests,
+        mean_gap,
+    }
+}
+
+#[test]
+fn recorded_serve_trace_replays_bit_identically() {
+    let cfg = serve_cfg(512);
+    let events = serve::arrival_trace(&cfg);
+
+    // record: the observer streams header + one request row per arrival
+    let mut buf = Vec::new();
+    let mut tw = serve::TraceWriter::begin(&mut buf, &cfg.config_json()).unwrap();
+    let original = serve::simulate_trace(&cfg, &events, &mut tw).unwrap();
+    drop(tw);
+    let text = String::from_utf8(buf).unwrap();
+    assert_eq!(
+        text.lines().count() as u64,
+        1 + cfg.requests,
+        "one header row plus one request row per arrival"
+    );
+
+    // replay from the artifact alone (config comes from the header row)
+    let trace = serve::read_trace(&text).unwrap();
+    let replayed = trace.replay(presets::streamdcim_default()).unwrap();
+    assert_eq!(original.stats, replayed.stats, "replay must reproduce ServeStats exactly");
+
+    // the streamed report equals the tree serializer byte for byte
+    let mut streamed = Vec::new();
+    original.write_json(&mut streamed).unwrap();
+    assert_eq!(String::from_utf8(streamed).unwrap(), original.to_json().to_string_pretty());
+
+    // and every report row is a parseable tagged line
+    let mut rows = Vec::new();
+    original.write_jsonl(&mut rows).unwrap();
+    let rows = String::from_utf8(rows).unwrap();
+    assert!(!rows.is_empty());
+    for line in rows.lines() {
+        let row = parse_line(line).unwrap();
+        assert!(row.get("row").and_then(|v| v.as_str()).is_some(), "untagged row: {line}");
+    }
+}
+
+#[test]
+fn stream_diff_agrees_with_the_tree_comparison() {
+    let base: Vec<perfgate::GateEntry> = (0u64..12)
+        .map(|i| perfgate::GateEntry { id: format!("scenario-{i:02}"), cycles: 1_000 + 37 * i })
+        .collect();
+    let mut cur = base.clone();
+    cur[3].cycles = (1u64 << 53) + 7; // past f64 territory on purpose
+    cur.push(perfgate::GateEntry { id: "added".into(), cycles: 5 });
+
+    let mut a = Vec::new();
+    perfgate::write_baseline(&mut a, &base, false).unwrap();
+    let mut b = Vec::new();
+    perfgate::write_baseline(&mut b, &cur, false).unwrap();
+    let (a, b) = (String::from_utf8(a).unwrap(), String::from_utf8(b).unwrap());
+
+    // pull-parsed diff == tree-built diff, down to the artifact bytes
+    let streamed = perfgate::stream_diff(&a, &b, perfgate::DEFAULT_TOLERANCE).unwrap();
+    let tree = perfgate::compare(&base, &cur, perfgate::DEFAULT_TOLERANCE);
+    assert_eq!(streamed.to_json().to_string_pretty(), tree.to_json().to_string_pretty());
+
+    // a baseline diffed against itself passes at exactly unity
+    let unity = perfgate::stream_diff(&a, &a, perfgate::DEFAULT_TOLERANCE).unwrap();
+    assert!(unity.pass, "self-diff must pass: {}", unity.verdict);
+    assert!((unity.geomean_ratio - 1.0).abs() < 1e-12);
+    assert!(unity.missing.is_empty() && unity.added.is_empty());
+}
+
+#[test]
+fn sweep_aggregate_streams_byte_identically() {
+    let accel = presets::streamdcim_default();
+    let models = vec![presets::tiny_smoke()];
+    let mut scenarios = sweep::matrix_for(&accel, &models);
+    scenarios.truncate(4);
+    let rep = sweep::run_sweep(&scenarios, 2, 42);
+
+    let mut streamed = Vec::new();
+    rep.write_json(&mut streamed).unwrap();
+    assert_eq!(String::from_utf8(streamed).unwrap(), rep.to_json().to_string_pretty());
+
+    let mut rows = Vec::new();
+    rep.write_jsonl(&mut rows).unwrap();
+    let rows = String::from_utf8(rows).unwrap();
+    assert!(rows.lines().count() > scenarios.len(), "header plus one row per scenario");
+    for line in rows.lines() {
+        parse_line(line).unwrap();
+    }
+}

@@ -125,12 +125,16 @@ fn prop_pruning_policy_monotonic_and_bounded() {
 fn prop_json_roundtrip() {
     Prop::new("json emit/parse roundtrip").cases(100).check(|rng| {
         fn gen(rng: &mut Rng, depth: usize) -> Json {
-            match if depth > 2 { rng.range_usize(0, 3) } else { rng.range_usize(0, 5) } {
+            match if depth > 2 { rng.range_usize(0, 4) } else { rng.range_usize(0, 6) } {
                 0 => Json::Null,
                 1 => Json::Bool(rng.f64() < 0.5),
-                2 => Json::Num((rng.range_u64(0, 1_000_000) as f64) / 8.0),
-                3 => Json::Str(format!("s{}-\"quote\"\n", rng.range_u64(0, 99))),
-                4 => Json::arr((0..rng.range_usize(0, 4)).map(|_| gen(rng, depth + 1)).collect()),
+                // odd/16 is never integral (and exact in binary), so the
+                // value reparses as Num rather than Int
+                2 => Json::Num((rng.range_u64(0, 1_000_000) as f64) / 8.0 + 0.0625),
+                // integer counters round-trip exactly, including >2^53
+                3 => Json::int(rng.next_u64() >> rng.range_u64(0, 60)),
+                4 => Json::Str(format!("s{}-\"quote\"\n", rng.range_u64(0, 99))),
+                5 => Json::arr((0..rng.range_usize(0, 4)).map(|_| gen(rng, depth + 1)).collect()),
                 _ => Json::obj(
                     vec![("a", gen(rng, depth + 1)), ("b", gen(rng, depth + 1))],
                 ),
