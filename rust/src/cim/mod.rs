@@ -366,6 +366,11 @@ impl ModeSchedule {
 ///   never filled because k/n do not divide the macro geometry.
 /// * `replay_bits` — moving-operand bits re-streamed beyond the first
 ///   sweep (normal-mode blocked execution; zero under cross-forwarding).
+/// * `reused_write_bits` — macro write-port bits a later consumer
+///   *avoided* streaming by reusing resident rewrites across requests
+///   (session affinity in the serving fabric).  Always 0 in the ledger
+///   of a single engine/analytic run — only cross-request aggregation
+///   (`ServeStats.occupancy`) can observe reuse.
 ///
 /// Intra-macro utilization = used / alloc.  A pure function of the
 /// tile schedule — never of event timing — so both simulation backends
@@ -376,6 +381,7 @@ pub struct OccupancyLedger {
     pub alloc_cell_cycles: u64,
     pub partial_tile_waste_cells: u64,
     pub replay_bits: u64,
+    pub reused_write_bits: u64,
 }
 
 impl OccupancyLedger {
@@ -384,6 +390,20 @@ impl OccupancyLedger {
         self.alloc_cell_cycles += other.alloc_cell_cycles;
         self.partial_tile_waste_cells += other.partial_tile_waste_cells;
         self.replay_bits += other.replay_bits;
+        self.reused_write_bits += other.reused_write_bits;
+    }
+
+    /// Artifact object (serve stats embed the aggregated ledger).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("used_cell_cycles", Json::int(self.used_cell_cycles)),
+            ("alloc_cell_cycles", Json::int(self.alloc_cell_cycles)),
+            ("partial_tile_waste_cells", Json::int(self.partial_tile_waste_cells)),
+            ("replay_bits", Json::int(self.replay_bits)),
+            ("reused_write_bits", Json::int(self.reused_write_bits)),
+            ("utilization", Json::num(self.utilization())),
+        ])
     }
 
     /// Intra-macro CIM utilization in [0, 1].
@@ -431,6 +451,7 @@ impl OccupancyLedger {
             alloc_cell_cycles: plan.reserved.max(1) * geom.cells() * window,
             partial_tile_waste_cells: footprint_cells.saturating_sub(occupied_cells),
             replay_bits: t.moving_bits() * (replay.max(1) - 1),
+            reused_write_bits: 0,
         }
     }
 }
@@ -694,17 +715,21 @@ mod tests {
             alloc_cell_cycles: 10,
             partial_tile_waste_cells: 2,
             replay_bits: 7,
+            reused_write_bits: 3,
         });
         a.add(&OccupancyLedger {
             used_cell_cycles: 5,
             alloc_cell_cycles: 10,
             partial_tile_waste_cells: 1,
             replay_bits: 0,
+            reused_write_bits: 0,
         });
         assert_eq!(a.used_cell_cycles, 10);
         assert_eq!(a.alloc_cell_cycles, 20);
         assert_eq!(a.partial_tile_waste_cells, 3);
         assert_eq!(a.replay_bits, 7);
+        assert_eq!(a.reused_write_bits, 3);
+        assert!(crate::util::json::Json::parse(&a.to_json().to_string_pretty()).is_ok());
         assert!((a.utilization() - 0.5).abs() < 1e-12);
         assert_eq!(OccupancyLedger::default().utilization(), 0.0);
     }

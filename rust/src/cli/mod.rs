@@ -30,7 +30,8 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["trace", "json", "no-pruning", "gantt", "segments", "matrix"];
+const SWITCHES: &[&str] =
+    &["trace", "json", "no-pruning", "gantt", "segments", "matrix", "forbid-bootstrap"];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
     let mut it = argv.into_iter().peekable();
@@ -111,6 +112,9 @@ COMMANDS
                                    the pull parser (no simulation, neither
                                    document materialized)
                --tolerance <f>     geomean ratio tolerance (default 0.05)
+               --forbid-bootstrap  fail instead of passing when the
+                                   baseline is a bootstrap placeholder
+                                   (CI arms this on the main branch)
                --out <path>  --format json|jsonl   write the diff artifact
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
@@ -144,8 +148,12 @@ COMMANDS
                 e.g. hybrid_mode -> mode_policy)
   serve      closed-loop traffic through the sharded serving fabric
                --shards <n>        accelerator shards (default 2)
-               --policy round-robin|least-loaded|modality-affinity
-               --arrival uniform|poisson|burst|replay:<trace.jsonl>
+               --policy round-robin|least-loaded|modality-affinity|
+                        session-affinity (sticky: warm-prices batches on
+                        shards whose macros still hold the model's
+                        rewrites — the CIM analog of prefix caching)
+               --arrival uniform|poisson|burst|diurnal|flash|
+                         replay:<trace.jsonl>
                                    (default poisson; replay feeds a
                                    recorded --trace-out file back in and
                                    reproduces its ServeStats exactly)
@@ -155,6 +163,13 @@ COMMANDS
                --models a,b,c      workload mix (default: small registry mix)
                --dataflow tile|layer|non             (default tile)
                --engine analytic|event               (default event)
+               --scheduler wheel|heap   event queue (default wheel; an
+                                   execution detail like --threads —
+                                   artifacts are bit-identical either way)
+               --tenants name[:weight[:slo_cycles]],...
+                                   multi-tenant traffic split with
+                                   weighted admission quotas and
+                                   per-tenant latency SLOs
                --queue-depth <n>   per-modality admission bound
                --batch <n>         max batch size  --seed <n> arrival seed
                --out <path>  --format json|jsonl   deterministic artifact

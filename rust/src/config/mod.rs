@@ -64,17 +64,28 @@ pub enum RoutePolicy {
     /// falling back to least-loaded (keeps modality-specific CIM macro
     /// contents warm across batches).
     ModalityAffinity,
+    /// Prefer a free shard whose macros already hold the batch's model
+    /// (its last served workload), falling back to least-loaded.  The
+    /// fabric prices such warm batches without the first request's full
+    /// macro-rewrite stream — the CIM analog of prefix caching
+    /// (`ServeStats` rewrite-reuse counters).
+    SessionAffinity,
 }
 
 impl RoutePolicy {
-    pub const ALL: [RoutePolicy; 3] =
-        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::ModalityAffinity];
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastLoaded,
+        RoutePolicy::ModalityAffinity,
+        RoutePolicy::SessionAffinity,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             RoutePolicy::RoundRobin => "Round-robin",
             RoutePolicy::LeastLoaded => "Least-loaded",
             RoutePolicy::ModalityAffinity => "Modality-affinity",
+            RoutePolicy::SessionAffinity => "Session-affinity",
         }
     }
 
@@ -84,6 +95,7 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastLoaded => "least-loaded",
             RoutePolicy::ModalityAffinity => "modality-affinity",
+            RoutePolicy::SessionAffinity => "session-affinity",
         }
     }
 
@@ -92,9 +104,62 @@ impl RoutePolicy {
             "round-robin" | "roundrobin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least-loaded" | "leastloaded" | "ll" => Some(RoutePolicy::LeastLoaded),
             "modality-affinity" | "affinity" | "ma" => Some(RoutePolicy::ModalityAffinity),
+            "session-affinity" | "sessionaffinity" | "sticky" | "sa" => {
+                Some(RoutePolicy::SessionAffinity)
+            }
             _ => None,
         }
     }
+}
+
+/// Event scheduler backing the serving fabric's discrete-event loop
+/// (`serve::queue`).  An execution detail like `--threads`: results are
+/// bit-identical whichever scheduler runs (differentially tested), so
+/// it appears in no artifact or scenario id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// Hierarchical timing wheel — O(1) push, the default at scale.
+    Wheel,
+    /// Reference binary heap — O(log n), kept for differential testing.
+    Heap,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 2] = [SchedulerKind::Wheel, SchedulerKind::Heap];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Wheel => "Time-wheel",
+            SchedulerKind::Heap => "Binary-heap",
+        }
+    }
+
+    pub fn slug(&self) -> &'static str {
+        match self {
+            SchedulerKind::Wheel => "wheel",
+            SchedulerKind::Heap => "heap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wheel" | "time-wheel" | "timewheel" => Some(SchedulerKind::Wheel),
+            "heap" | "binary-heap" | "binaryheap" => Some(SchedulerKind::Heap),
+            _ => None,
+        }
+    }
+}
+
+/// One serving tenant: a named traffic share with an optional latency
+/// SLO.  Tenants partition admission capacity by `weight` and surface
+/// per-tenant stats (`serve::TenantStats`) in serve artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Relative traffic + admission-capacity share (min 1 at use sites).
+    pub weight: u64,
+    /// Latency SLO in cycles; 0 disables SLO accounting for the tenant.
+    pub slo_cycles: u64,
 }
 
 /// Serving-fabric knobs: how many accelerator shards the fabric places
@@ -113,6 +178,13 @@ pub struct ServingConfig {
     /// Seed of the deterministic request-arrival generator.
     pub arrival_seed: u64,
     pub policy: RoutePolicy,
+    /// Event scheduler of the fabric's simulation loop (bit-identical
+    /// results either way; see [`SchedulerKind`]).
+    pub scheduler: SchedulerKind,
+    /// Serving tenants; empty means single-tenant mode (no tenant RNG
+    /// draws, no quotas, no per-tenant rows — byte-identical artifacts
+    /// to configs that predate multi-tenancy).
+    pub tenants: Vec<TenantConfig>,
 }
 
 impl Default for ServingConfig {
@@ -123,6 +195,8 @@ impl Default for ServingConfig {
             batch_size: 8,
             arrival_seed: 42,
             policy: RoutePolicy::LeastLoaded,
+            scheduler: SchedulerKind::Wheel,
+            tenants: Vec::new(),
         }
     }
 }

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{AccelConfig, ModelConfig, RoutePolicy};
+use super::{AccelConfig, ModelConfig, RoutePolicy, SchedulerKind, TenantConfig};
 use crate::cim::ModePolicy;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -215,6 +215,35 @@ pub fn apply_accel_overrides_warnings(cfg: &mut AccelConfig, doc: &Doc) -> Vec<S
         if let Some(p) = t.get("policy").and_then(|v| v.as_str()).and_then(RoutePolicy::parse) {
             cfg.serving.policy = p;
         }
+        if let Some(sch) =
+            t.get("scheduler").and_then(|v| v.as_str()).and_then(SchedulerKind::parse)
+        {
+            cfg.serving.scheduler = sch;
+        }
+        // tenants as parallel flat arrays (the TOML subset has no array
+        // of tables): names drive the tenant count; weights/SLOs fall
+        // back per entry when their arrays are shorter
+        if let Some(TomlVal::Arr(names)) = t.get("tenant_names") {
+            let arr_u64 = |key: &str, i: usize, default: u64| -> u64 {
+                match t.get(key) {
+                    Some(TomlVal::Arr(a)) => {
+                        a.get(i).and_then(|v| v.as_u64()).unwrap_or(default)
+                    }
+                    _ => default,
+                }
+            };
+            cfg.serving.tenants = names
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| {
+                    n.as_str().map(|name| TenantConfig {
+                        name: name.to_string(),
+                        weight: arr_u64("tenant_weights", i, 1),
+                        slo_cycles: arr_u64("tenant_slo_cycles", i, 0),
+                    })
+                })
+                .collect();
+        }
     }
     // deprecated alias: [features].hybrid_mode = true/false maps onto
     // the mode policy (true = auto reconfiguration, false = forced
@@ -333,6 +362,18 @@ pub fn render_accel(cfg: &AccelConfig) -> String {
     s.push_str(&format!("batch_size = {}\n", cfg.serving.batch_size));
     s.push_str(&format!("arrival_seed = {}\n", cfg.serving.arrival_seed));
     s.push_str(&format!("policy = \"{}\"\n", cfg.serving.policy.slug()));
+    s.push_str(&format!("scheduler = \"{}\"\n", cfg.serving.scheduler.slug()));
+    if !cfg.serving.tenants.is_empty() {
+        let join = |f: &dyn Fn(&TenantConfig) -> String| -> String {
+            cfg.serving.tenants.iter().map(|t| f(t)).collect::<Vec<_>>().join(", ")
+        };
+        s.push_str(&format!("tenant_names = [{}]\n", join(&|t| format!("\"{}\"", t.name))));
+        s.push_str(&format!("tenant_weights = [{}]\n", join(&|t| t.weight.to_string())));
+        s.push_str(&format!(
+            "tenant_slo_cycles = [{}]\n",
+            join(&|t| t.slo_cycles.to_string())
+        ));
+    }
     s
 }
 
@@ -482,10 +523,20 @@ keep_ratio = 0.5
         let mut cfg = presets::streamdcim_default();
         cfg.features.mode_policy = ModePolicy::ForcedHybrid;
         cfg.serving.shards = 8;
+        cfg.serving.policy = RoutePolicy::SessionAffinity;
+        cfg.serving.scheduler = SchedulerKind::Heap;
+        cfg.serving.tenants = vec![
+            TenantConfig { name: "interactive".into(), weight: 3, slo_cycles: 500_000 },
+            TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+        ];
         cfg.energy.mac_pj = 0.0123;
         let text = render_accel(&cfg);
         assert!(text.contains("mode_policy = \"hybrid\""));
         assert!(!text.contains("hybrid_mode"), "aliases never serialize");
+        assert!(text.contains("scheduler = \"heap\""));
+        assert!(text.contains("tenant_names = [\"interactive\", \"batch\"]"));
+        assert!(text.contains("tenant_weights = [3, 1]"));
+        assert!(text.contains("tenant_slo_cycles = [500000, 0]"));
         let doc = parse(&text).unwrap();
         let mut back = presets::streamdcim_default();
         let warnings = apply_accel_overrides_warnings(&mut back, &doc);

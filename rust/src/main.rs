@@ -436,6 +436,13 @@ fn cmd_perf_gate(args: &Args) -> Result<()> {
         perfgate::parse_baseline(&doc).map_err(|e| anyhow!("{baseline_path}: {e}"))?;
 
     if bootstrap {
+        if args.has("forbid-bootstrap") {
+            bail!(
+                "perf-gate: {baseline_path} is a bootstrap baseline and --forbid-bootstrap \
+                 is set; regenerate and commit it (--write-baseline {baseline_path}) so the \
+                 gate is armed"
+            );
+        }
         eprintln!(
             "perf-gate: {baseline_path} is a bootstrap baseline (no committed cycles); \
              passing — commit a regenerated baseline (--write-baseline) to arm the gate"
@@ -547,8 +554,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     accel.serving.batch_size = args.flag_u64("batch", accel.serving.batch_size).max(1);
     accel.serving.arrival_seed = args.flag_u64("seed", accel.serving.arrival_seed);
     if let Some(p) = args.flag("policy") {
-        accel.serving.policy = streamdcim::config::RoutePolicy::parse(p)
-            .ok_or_else(|| anyhow!("unknown policy (round-robin|least-loaded|modality-affinity)"))?;
+        accel.serving.policy = streamdcim::config::RoutePolicy::parse(p).ok_or_else(|| {
+            anyhow!("unknown policy (round-robin|least-loaded|modality-affinity|session-affinity)")
+        })?;
+    }
+    // the event scheduler is an execution detail (like --threads): it
+    // never changes an artifact byte, so it composes with --matrix and
+    // replay alike
+    if let Some(s) = args.flag("scheduler") {
+        accel.serving.scheduler = streamdcim::config::SchedulerKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown scheduler (wheel|heap)"))?;
+    }
+    if let Some(spec) = args.flag("tenants") {
+        let mut tenants = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut it = part.split(':');
+            let name = it.next().unwrap_or("").to_string();
+            if name.is_empty() {
+                bail!("--tenants: empty tenant name in '{spec}'");
+            }
+            let weight = match it.next() {
+                Some(w) => {
+                    w.parse::<u64>().map_err(|_| anyhow!("--tenants: bad weight in '{part}'"))?
+                }
+                None => 1,
+            };
+            let slo_cycles = match it.next() {
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("--tenants: bad slo_cycles in '{part}'"))?,
+                None => 0,
+            };
+            if it.next().is_some() {
+                bail!("--tenants: too many fields in '{part}' (name[:weight[:slo_cycles]])");
+            }
+            tenants.push(streamdcim::config::TenantConfig { name, weight, slo_cycles });
+        }
+        accel.serving.tenants = tenants;
     }
     let backend = Backend::parse(args.flag_or("engine", "event"))
         .ok_or_else(|| anyhow!("unknown engine (analytic|event)"))?;
@@ -557,7 +603,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("matrix") {
         // the matrix fixes shards/policy/dataflow/arrival/gap/mix itself;
         // reject flags it would silently ignore rather than mislead
-        for fixed in ["shards", "policy", "dataflow", "arrival", "gap", "models", "trace-out"] {
+        for fixed in
+            ["shards", "policy", "dataflow", "arrival", "gap", "models", "trace-out", "tenants"]
+        {
             if args.flag(fixed).is_some() {
                 bail!(
                     "--matrix enumerates shards x policy x dataflow on the standard \
@@ -600,7 +648,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (cfg, events) = if let Some(spec) = arrival_spec.strip_prefix("replay:") {
         for fixed in
             ["shards", "policy", "models", "dataflow", "gap", "queue-depth", "batch", "seed",
-             "engine", "requests"]
+             "engine", "requests", "tenants"]
         {
             if args.flag(fixed).is_some() {
                 bail!(
@@ -612,12 +660,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let text = std::fs::read_to_string(spec)?;
         let trace = serve::read_trace(&text).map_err(|e| anyhow!("{spec}: {e}"))?;
         eprintln!("serve: replaying {} recorded arrivals from {spec}", trace.events.len());
-        (trace.to_config(accel), trace.events)
+        (trace.to_config(accel), Some(trace.events))
     } else {
         let dataflow = DataflowKind::parse(args.flag_or("dataflow", "tile"))
             .ok_or_else(|| anyhow!("unknown dataflow"))?;
         let arrival = serve::ArrivalKind::parse(args.flag_or("arrival", "poisson"))
-            .ok_or_else(|| anyhow!("unknown arrival process (uniform|poisson|burst)"))?;
+            .ok_or_else(|| {
+                anyhow!("unknown arrival process (uniform|poisson|burst|diurnal|flash)")
+            })?;
         let models: Vec<ModelConfig> = match args.flag("models") {
             Some(list) => {
                 let mut models: Vec<ModelConfig> = Vec::new();
@@ -640,8 +690,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         let cfg =
             serve::ServeConfig { accel, models, dataflow, backend, arrival, requests, mean_gap };
-        let events = serve::arrival_trace(&cfg);
-        (cfg, events)
+        // the generated path streams arrivals straight into the fabric —
+        // the trace is never materialized, so --requests can be millions
+        (cfg, None)
     };
 
     // `--trace-out`: stream the replayable JSONL trace (header + one
@@ -651,13 +702,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let file = std::fs::File::create(tp)?;
         let mut bw = std::io::BufWriter::new(file);
         let mut tw = serve::TraceWriter::begin(&mut bw, &cfg.config_json())?;
-        let rep = serve::simulate_trace(&cfg, &events, &mut tw)?;
+        let rep = match &events {
+            Some(ev) => serve::simulate_trace(&cfg, ev, &mut tw)?,
+            None => serve::simulate_observed(&cfg, &mut tw)?,
+        };
         drop(tw);
         bw.flush()?;
-        eprintln!("replayable trace written to {tp} ({} arrivals)", events.len());
+        eprintln!("replayable trace written to {tp} ({} arrivals)", cfg.requests);
         rep
     } else {
-        serve::simulate_trace(&cfg, &events, &mut ())?
+        match &events {
+            Some(ev) => serve::simulate_trace(&cfg, ev, &mut ())?,
+            None => serve::simulate_observed(&cfg, &mut ())?,
+        }
     };
 
     if let Some(path) = args.flag("out") {

@@ -6,25 +6,105 @@ use crate::sim::{Accelerator, Activity};
 use crate::util::json::Json;
 
 /// Latency accumulator shared by the serving layers (coordinator
-/// wall-clock microseconds, fabric simulated cycles).  Sums are `u128`
-/// so no realistic sample stream can overflow, means are `f64`, and
-/// every accessor guards the zero-sample case.
+/// wall-clock microseconds, fabric simulated cycles).
+///
+/// Implemented as a deterministic streaming quantile sketch: a
+/// log-bucketed histogram with [`LatencyStats::SUB_BUCKETS`] sub-buckets
+/// per octave (an HDR-histogram-style layout).  Memory is O(1) — one
+/// fixed `[u64; N_BUCKETS]` table (~30 KB, lazily allocated on the first
+/// sample) regardless of how many samples are recorded — so a
+/// million-request serving run costs the same as a hundred-request one.
+///
+/// Guarantees (all deterministic, no randomization):
+/// * values below [`LatencyStats::LINEAR_CUTOFF`] are stored exactly;
+/// * for larger values every percentile estimate `e` of a true
+///   nearest-rank quantile `q` satisfies
+///   `q <= e <= q * (1 + RELATIVE_ERROR)` — the reported value is the
+///   inclusive upper edge of the sample's bucket, capped at the exact
+///   maximum;
+/// * sketches are mergeable ([`LatencyStats::merge`]) with no loss:
+///   merging per-worker sketches equals sketching the concatenated
+///   stream.
+///
+/// Sums are `u128` so no realistic sample stream can overflow, means
+/// are `f64`, and every accessor guards the zero-sample case.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencyStats {
     total: u128,
     max: u64,
-    samples: Vec<u64>,
+    count: u64,
+    /// Empty until the first sample, then exactly `N_BUCKETS` counters.
+    buckets: Vec<u64>,
 }
 
 impl LatencyStats {
+    /// Sub-bucket resolution: each octave above the linear range is
+    /// split into `2^6 = 64` equal-width buckets.
+    const SUB_BITS: u32 = 6;
+    /// Sub-buckets per octave.
+    pub const SUB_BUCKETS: u64 = 1 << Self::SUB_BITS;
+    /// Values below this are bucketed exactly (one bucket per value).
+    pub const LINEAR_CUTOFF: u64 = 2 * Self::SUB_BUCKETS;
+    /// Guaranteed relative error bound of any percentile estimate for
+    /// values at or above [`Self::LINEAR_CUTOFF`] (estimates never
+    /// undershoot): `1/64` ≈ 1.6%.
+    pub const RELATIVE_ERROR: f64 = 1.0 / Self::SUB_BUCKETS as f64;
+    /// Octaves 7..=63 each get `SUB_BUCKETS` buckets after the linear
+    /// range, covering the full `u64` domain: 128 + 57 * 64 = 3776.
+    const N_BUCKETS: usize = Self::LINEAR_CUTOFF as usize + 57 * Self::SUB_BUCKETS as usize;
+
+    /// Bucket index of a sample value (monotone in `v`).
+    fn bucket_index(v: u64) -> usize {
+        if v < Self::LINEAR_CUTOFF {
+            return v as usize;
+        }
+        let octave = 63 - v.leading_zeros(); // >= 7 here
+        let sub = (v >> (octave - Self::SUB_BITS)) as usize - Self::SUB_BUCKETS as usize;
+        Self::LINEAR_CUTOFF as usize + (octave as usize - 7) * Self::SUB_BUCKETS as usize + sub
+    }
+
+    /// Inclusive upper edge of bucket `i` — the largest value that maps
+    /// to it (computed in `u128`: the top bucket's edge is `u64::MAX`).
+    fn bucket_upper(i: usize) -> u64 {
+        if i < Self::LINEAR_CUTOFF as usize {
+            return i as u64;
+        }
+        let rel = i - Self::LINEAR_CUTOFF as usize;
+        let octave = 7 + (rel / Self::SUB_BUCKETS as usize) as u32;
+        let sub = (Self::SUB_BUCKETS as usize + rel % Self::SUB_BUCKETS as usize) as u128;
+        (((sub + 1) << (octave - Self::SUB_BITS)) - 1) as u64
+    }
+
     pub fn record(&mut self, v: u64) {
         self.total += v as u128;
         self.max = self.max.max(v);
-        self.samples.push(v);
+        self.count += 1;
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; Self::N_BUCKETS];
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+    }
+
+    /// Fold another sketch into this one.  Lossless: the merged sketch
+    /// is identical to one that recorded both streams directly.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        if other.buckets.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = other.buckets.clone();
+        } else {
+            for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+                *a += b;
+            }
+        }
     }
 
     pub fn count(&self) -> u64 {
-        self.samples.len() as u64
+        self.count
     }
 
     pub fn max(&self) -> u64 {
@@ -32,40 +112,42 @@ impl LatencyStats {
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             0.0
         } else {
-            self.total as f64 / self.samples.len() as f64
+            self.total as f64 / self.count as f64
         }
     }
 
-    fn sorted(&self) -> Vec<u64> {
-        let mut v = self.samples.clone();
-        v.sort_unstable();
-        v
+    /// Upper edge of the bucket holding the k-th smallest sample
+    /// (0-indexed), capped at the exact maximum so the estimate of the
+    /// top rank is exact.
+    fn value_at_rank(&self, k: u64) -> u64 {
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > k {
+                return Self::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
     }
 
-    /// Nearest rank of `p` in an already-sorted sample vector.
-    fn rank(sorted: &[u64], p: f64) -> u64 {
-        if sorted.is_empty() {
+    /// Nearest-rank percentile estimate; `p` is clamped to [0, 1] and
+    /// the empty sketch reports 0.  See the type docs for the error
+    /// bound.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
         let p = p.clamp(0.0, 1.0);
-        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-        sorted[idx.min(sorted.len() - 1)]
+        let k = ((self.count - 1) as f64 * p).round() as u64;
+        self.value_at_rank(k)
     }
 
-    /// Nearest-rank percentile; `p` is clamped to [0, 1] and the empty
-    /// histogram reports 0.
-    pub fn percentile(&self, p: f64) -> u64 {
-        Self::rank(&self.sorted(), p)
-    }
-
-    /// (p50, p95, p99) from a single sort — use this when reporting all
-    /// three instead of three `percentile` calls.
+    /// (p50, p95, p99) — three O(buckets) walks, no sorting.
     pub fn percentiles(&self) -> (u64, u64, u64) {
-        let v = self.sorted();
-        (Self::rank(&v, 0.50), Self::rank(&v, 0.95), Self::rank(&v, 0.99))
+        (self.percentile(0.50), self.percentile(0.95), self.percentile(0.99))
     }
 
     pub fn p50(&self) -> u64 {
@@ -239,6 +321,36 @@ mod tests {
         let j = s.to_json("cycles").to_string_pretty();
         assert!(j.contains("\"p99\""));
         assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn sketch_stays_within_error_bound_and_merges_losslessly() {
+        // mixed magnitudes, including values far above the linear range
+        let vals: Vec<u64> =
+            (0..5000u64).map(|i| (i * i * 2654435761) % 1_000_000_007).collect();
+        let mut sketch = LatencyStats::default();
+        let mut left = LatencyStats::default();
+        let mut right = LatencyStats::default();
+        for (i, &v) in vals.iter().enumerate() {
+            sketch.record(v);
+            if i % 2 == 0 { left.record(v) } else { right.record(v) }
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for p in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let k = ((sorted.len() - 1) as f64 * p).round() as usize;
+            let exact = sorted[k];
+            let est = sketch.percentile(p);
+            assert!(est >= exact, "p{p}: est {est} < exact {exact}");
+            let bound = (exact as f64 * (1.0 + LatencyStats::RELATIVE_ERROR)).ceil() as u64;
+            assert!(est <= bound, "p{p}: est {est} > bound {bound} (exact {exact})");
+        }
+        left.merge(&right);
+        assert_eq!(left, sketch, "merge must equal sketching the whole stream");
+        // the top bucket's edge must not overflow
+        let mut top = LatencyStats::default();
+        top.record(u64::MAX);
+        assert_eq!(top.percentile(1.0), u64::MAX);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Deterministic request-arrival generation.
 //!
 //! A trace is a pure function of `(kind, requests, mean_gap, n_models,
-//! seed)` — no wall-clock, no ambient RNG — so two fabric runs over the
-//! same parameters see the *same* request stream even when they serve it
-//! with different dataflows, shard counts, or routing policies.  That is
-//! what makes serving-level comparisons (tile vs non on one trace)
-//! meaningful, and what the resume/perfgate determinism rules require.
+//! tenant weights, seed)` — no wall-clock, no ambient RNG — so two
+//! fabric runs over the same parameters see the *same* request stream
+//! even when they serve it with different dataflows, shard counts, or
+//! routing policies.  That is what makes serving-level comparisons
+//! (tile vs non on one trace) meaningful, and what the resume/perfgate
+//! determinism rules require.
+//!
+//! [`ArrivalGen`] is a streaming iterator: the fabric pulls one arrival
+//! at a time, so a million-request run never materializes its trace
+//! (O(1) memory).  [`generate`] collects the same stream into a `Vec`
+//! for callers that need random access (trace recording tests, replay).
 
 use crate::util::prng::Rng;
 
@@ -55,20 +61,46 @@ pub enum ArrivalKind {
     /// Bursts of [`BURST_SIZE`] back-to-back requests, bursts spaced so
     /// the long-run rate matches `mean_gap`.
     Burst,
+    /// A Poisson process whose rate swings sinusoidally over a
+    /// [`DIURNAL_PERIOD`]-request "day": peak traffic is
+    /// `1 + DIURNAL_AMPLITUDE` times the mean rate, the trough
+    /// `1 - DIURNAL_AMPLITUDE` (production day/night load shape).
+    Diurnal,
+    /// Poisson background with a flash crowd in the last [`FLASH_LEN`]
+    /// of every [`FLASH_PERIOD`] requests, during which arrivals come
+    /// [`FLASH_FACTOR`]x faster (thundering-herd load shape).
+    Flash,
 }
 
 /// Requests per burst in [`ArrivalKind::Burst`] traces.
 pub const BURST_SIZE: u64 = 8;
+/// Requests per simulated "day" in [`ArrivalKind::Diurnal`] traces.
+pub const DIURNAL_PERIOD: u64 = 1024;
+/// Peak-to-mean rate swing of the diurnal cycle.
+pub const DIURNAL_AMPLITUDE: f64 = 0.75;
+/// Requests per flash-crowd cycle in [`ArrivalKind::Flash`] traces.
+pub const FLASH_PERIOD: u64 = 512;
+/// Requests of each flash-crowd cycle that arrive at the flash rate.
+pub const FLASH_LEN: u64 = 64;
+/// Rate multiplier inside a flash crowd.
+pub const FLASH_FACTOR: u64 = 8;
 
 impl ArrivalKind {
-    pub const ALL: [ArrivalKind; 3] =
-        [ArrivalKind::Uniform, ArrivalKind::Poisson, ArrivalKind::Burst];
+    pub const ALL: [ArrivalKind; 5] = [
+        ArrivalKind::Uniform,
+        ArrivalKind::Poisson,
+        ArrivalKind::Burst,
+        ArrivalKind::Diurnal,
+        ArrivalKind::Flash,
+    ];
 
     pub fn slug(&self) -> &'static str {
         match self {
             ArrivalKind::Uniform => "uniform",
             ArrivalKind::Poisson => "poisson",
             ArrivalKind::Burst => "burst",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::Flash => "flash",
         }
     }
 
@@ -77,6 +109,8 @@ impl ArrivalKind {
             "uniform" | "fixed" => Some(ArrivalKind::Uniform),
             "poisson" | "exp" | "exponential" => Some(ArrivalKind::Poisson),
             "burst" | "bursty" => Some(ArrivalKind::Burst),
+            "diurnal" | "day-night" => Some(ArrivalKind::Diurnal),
+            "flash" | "flash-crowd" => Some(ArrivalKind::Flash),
             _ => None,
         }
     }
@@ -91,45 +125,143 @@ pub struct ArrivalEvent {
     pub modality: Modality,
     /// Index into the fabric's workload mix.
     pub model: usize,
+    /// Index into the serving tenants; 0 in single-tenant traces.
+    pub tenant: usize,
+}
+
+/// Streaming arrival generator: yields `requests` events one at a time
+/// without materializing the trace.  Per event the PRNG draw order is
+/// fixed — gap (if the kind draws one), modality, model, then tenant
+/// (only when two or more tenants are configured) — so single-tenant
+/// traces are bit-identical to those of builds that predate tenancy.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    kind: ArrivalKind,
+    requests: u64,
+    mean_gap: u64,
+    n_models: usize,
+    /// Per-tenant traffic weights (each clamped to >= 1); empty or
+    /// singleton means every event gets tenant 0 without an RNG draw.
+    weights: Vec<u64>,
+    total_weight: u64,
+    rng: Rng,
+    id: u64,
+    cycle: u64,
+}
+
+impl ArrivalGen {
+    pub fn new(
+        kind: ArrivalKind,
+        requests: u64,
+        mean_gap: u64,
+        n_models: usize,
+        tenant_weights: &[u64],
+        seed: u64,
+    ) -> Self {
+        assert!(n_models > 0, "arrival trace needs a non-empty workload mix");
+        let weights: Vec<u64> = tenant_weights.iter().map(|w| (*w).max(1)).collect();
+        let total_weight = weights.iter().sum();
+        ArrivalGen {
+            kind,
+            requests,
+            mean_gap,
+            n_models,
+            weights,
+            total_weight,
+            rng: Rng::new(seed),
+            id: 0,
+            cycle: 0,
+        }
+    }
+
+    /// One exponential inter-arrival draw with mean `mean_gap`
+    /// (inverse-CDF; `f64() < 1.0` keeps `ln` finite).
+    fn exp_gap(&mut self) -> f64 {
+        let u = self.rng.f64();
+        -(1.0 - u).ln() * self.mean_gap as f64
+    }
+
+    fn gap(&mut self, id: u64) -> u64 {
+        match self.kind {
+            ArrivalKind::Uniform => self.mean_gap,
+            ArrivalKind::Poisson => self.exp_gap().round() as u64,
+            ArrivalKind::Burst => {
+                if id % BURST_SIZE == 0 {
+                    self.mean_gap * BURST_SIZE
+                } else {
+                    0
+                }
+            }
+            ArrivalKind::Diurnal => {
+                let g = self.exp_gap();
+                let phase = (id % DIURNAL_PERIOD) as f64 / DIURNAL_PERIOD as f64;
+                let rate = 1.0 + DIURNAL_AMPLITUDE * (std::f64::consts::TAU * phase).sin();
+                (g / rate).round() as u64
+            }
+            ArrivalKind::Flash => {
+                let g = self.exp_gap().round() as u64;
+                if id % FLASH_PERIOD >= FLASH_PERIOD - FLASH_LEN {
+                    g / FLASH_FACTOR
+                } else {
+                    g
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for ArrivalGen {
+    type Item = ArrivalEvent;
+
+    fn next(&mut self) -> Option<ArrivalEvent> {
+        if self.id >= self.requests {
+            return None;
+        }
+        let id = self.id;
+        self.id += 1;
+        if id > 0 {
+            let gap = self.gap(id);
+            self.cycle += gap;
+        }
+        let modality = Modality::ALL[self.rng.range_usize(0, Modality::ALL.len() - 1)];
+        let model = self.rng.range_usize(0, self.n_models - 1);
+        let tenant = if self.weights.len() >= 2 {
+            let mut pick = self.rng.range_u64(1, self.total_weight);
+            let mut t = self.weights.len() - 1;
+            for (i, w) in self.weights.iter().enumerate() {
+                if pick <= *w {
+                    t = i;
+                    break;
+                }
+                pick -= w;
+            }
+            t
+        } else {
+            0
+        };
+        Some(ArrivalEvent { id, cycle: self.cycle, modality, model, tenant })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.requests - self.id) as usize;
+        (left, Some(left))
+    }
 }
 
 /// Generate a trace of `requests` arrivals over `n_models` workloads.
 /// `mean_gap` is the mean inter-arrival time in cycles (0 collapses the
-/// whole trace onto cycle 0).
+/// whole trace onto cycle 0); `tenant_weights` picks each request's
+/// tenant by weighted draw (empty = single-tenant).  Collects
+/// [`ArrivalGen`] — the fabric itself streams instead.
 pub fn generate(
     kind: ArrivalKind,
     requests: u64,
     mean_gap: u64,
     n_models: usize,
+    tenant_weights: &[u64],
     seed: u64,
 ) -> Vec<ArrivalEvent> {
-    assert!(n_models > 0, "arrival trace needs a non-empty workload mix");
-    let mut rng = Rng::new(seed);
-    let mut trace = Vec::with_capacity(requests as usize);
-    let mut cycle: u64 = 0;
-    for id in 0..requests {
-        if id > 0 {
-            cycle += match kind {
-                ArrivalKind::Uniform => mean_gap,
-                ArrivalKind::Poisson => {
-                    // inverse-CDF exponential; f64() < 1.0 keeps ln finite
-                    let u = rng.f64();
-                    (-(1.0 - u).ln() * mean_gap as f64).round() as u64
-                }
-                ArrivalKind::Burst => {
-                    if id % BURST_SIZE == 0 {
-                        mean_gap * BURST_SIZE
-                    } else {
-                        0
-                    }
-                }
-            };
-        }
-        let modality = Modality::ALL[rng.range_usize(0, Modality::ALL.len() - 1)];
-        let model = rng.range_usize(0, n_models - 1);
-        trace.push(ArrivalEvent { id, cycle, modality, model });
-    }
-    trace
+    ArrivalGen::new(kind, requests, mean_gap, n_models, tenant_weights, seed).collect()
 }
 
 #[cfg(test)]
@@ -142,6 +274,7 @@ mod tests {
             assert_eq!(ArrivalKind::parse(k.slug()), Some(k));
         }
         assert_eq!(ArrivalKind::parse("exp"), Some(ArrivalKind::Poisson));
+        assert_eq!(ArrivalKind::parse("flash-crowd"), Some(ArrivalKind::Flash));
         assert_eq!(ArrivalKind::parse("bogus"), None);
     }
 
@@ -156,30 +289,41 @@ mod tests {
     #[test]
     fn traces_are_deterministic_and_monotone() {
         for kind in ArrivalKind::ALL {
-            let a = generate(kind, 100, 500, 3, 42);
-            let b = generate(kind, 100, 500, 3, 42);
+            let a = generate(kind, 100, 500, 3, &[], 42);
+            let b = generate(kind, 100, 500, 3, &[], 42);
             assert_eq!(a, b, "{kind:?} trace must be a pure function of its inputs");
             assert_eq!(a.len(), 100);
             assert!(a.windows(2).all(|w| w[0].cycle <= w[1].cycle), "{kind:?} not monotone");
             assert!(a.iter().all(|e| e.model < 3));
+            assert!(a.iter().all(|e| e.tenant == 0), "{kind:?} single-tenant trace");
             // ids are the trace order
             assert!(a.iter().enumerate().all(|(i, e)| e.id == i as u64));
         }
     }
 
     #[test]
+    fn streaming_iterator_matches_collected_trace() {
+        for kind in ArrivalKind::ALL {
+            let collected = generate(kind, 64, 300, 2, &[2, 1], 9);
+            let streamed: Vec<ArrivalEvent> =
+                ArrivalGen::new(kind, 64, 300, 2, &[2, 1], 9).collect();
+            assert_eq!(collected, streamed);
+        }
+    }
+
+    #[test]
     fn seeds_change_the_trace() {
-        let a = generate(ArrivalKind::Poisson, 64, 500, 3, 1);
-        let b = generate(ArrivalKind::Poisson, 64, 500, 3, 2);
+        let a = generate(ArrivalKind::Poisson, 64, 500, 3, &[], 1);
+        let b = generate(ArrivalKind::Poisson, 64, 500, 3, &[], 2);
         assert_ne!(a, b);
     }
 
     #[test]
     fn uniform_gap_is_exact_and_burst_clusters() {
-        let u = generate(ArrivalKind::Uniform, 10, 100, 1, 7);
+        let u = generate(ArrivalKind::Uniform, 10, 100, 1, &[], 7);
         assert!(u.windows(2).all(|w| w[1].cycle - w[0].cycle == 100));
 
-        let b = generate(ArrivalKind::Burst, 24, 100, 1, 7);
+        let b = generate(ArrivalKind::Burst, 24, 100, 1, &[], 7);
         // within a burst, arrivals share a cycle
         assert_eq!(b[0].cycle, b[7].cycle);
         assert!(b[8].cycle > b[7].cycle);
@@ -188,15 +332,75 @@ mod tests {
 
     #[test]
     fn zero_gap_collapses_to_cycle_zero() {
-        let t = generate(ArrivalKind::Uniform, 16, 0, 2, 3);
+        let t = generate(ArrivalKind::Uniform, 16, 0, 2, &[], 3);
         assert!(t.iter().all(|e| e.cycle == 0));
     }
 
     #[test]
     fn poisson_mean_gap_is_plausible() {
-        let t = generate(ArrivalKind::Poisson, 2000, 100, 1, 11);
+        let t = generate(ArrivalKind::Poisson, 2000, 100, 1, &[], 11);
         let span = t.last().unwrap().cycle - t[0].cycle;
         let mean = span as f64 / (t.len() - 1) as f64;
         assert!((mean - 100.0).abs() < 10.0, "observed mean gap {mean}");
+    }
+
+    #[test]
+    fn diurnal_peaks_beat_troughs_and_flash_crowds_cluster() {
+        // diurnal: the mean gap during the peak half-day must be well
+        // below the trough half-day's
+        let t = generate(ArrivalKind::Diurnal, 4096, 100, 1, &[], 5);
+        let (mut peak, mut peak_n, mut trough, mut trough_n) = (0u64, 0u64, 0u64, 0u64);
+        for w in t.windows(2) {
+            let gap = w[1].cycle - w[0].cycle;
+            let phase = w[1].id % DIURNAL_PERIOD;
+            if phase < DIURNAL_PERIOD / 2 {
+                peak += gap;
+                peak_n += 1;
+            } else {
+                trough += gap;
+                trough_n += 1;
+            }
+        }
+        let peak_mean = peak as f64 / peak_n as f64;
+        let trough_mean = trough as f64 / trough_n as f64;
+        assert!(
+            peak_mean * 2.0 < trough_mean,
+            "diurnal peak gap {peak_mean:.1} vs trough {trough_mean:.1}"
+        );
+
+        // flash: in-flash gaps are much tighter than background
+        let f = generate(ArrivalKind::Flash, 2048, 100, 1, &[], 5);
+        let (mut flash, mut flash_n, mut base, mut base_n) = (0u64, 0u64, 0u64, 0u64);
+        for w in f.windows(2) {
+            let gap = w[1].cycle - w[0].cycle;
+            if w[1].id % FLASH_PERIOD >= FLASH_PERIOD - FLASH_LEN {
+                flash += gap;
+                flash_n += 1;
+            } else {
+                base += gap;
+                base_n += 1;
+            }
+        }
+        let flash_mean = flash as f64 / flash_n as f64;
+        let base_mean = base as f64 / base_n as f64;
+        assert!(
+            flash_mean * 3.0 < base_mean,
+            "flash gap {flash_mean:.1} vs background {base_mean:.1}"
+        );
+    }
+
+    #[test]
+    fn tenant_draws_follow_weights_and_leave_gaps_untouched() {
+        let t = generate(ArrivalKind::Poisson, 4000, 100, 2, &[3, 1], 13);
+        let a = t.iter().filter(|e| e.tenant == 0).count() as f64;
+        let b = t.iter().filter(|e| e.tenant == 1).count() as f64;
+        assert!(t.iter().all(|e| e.tenant < 2));
+        let share = a / (a + b);
+        assert!((share - 0.75).abs() < 0.05, "tenant-0 share {share:.3}");
+        // a single tenant must cost no PRNG draw: the trace is
+        // bit-identical to the tenant-less parameterization
+        let single = generate(ArrivalKind::Poisson, 400, 100, 2, &[7], 13);
+        let none = generate(ArrivalKind::Poisson, 400, 100, 2, &[], 13);
+        assert_eq!(single, none);
     }
 }

@@ -18,6 +18,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cim::OccupancyLedger;
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
 use crate::dataflow;
 use crate::engine::{self, Backend};
@@ -29,6 +30,17 @@ pub struct BatchCost {
     pub first: u64,
     /// Marginal cycles of each additional request in the same batch.
     pub per_extra: u64,
+    /// Cycles the *first* request costs on a warm shard — one whose
+    /// macros still hold this workload's rewrites (session affinity).
+    /// Event backend: the steady-state marginal cost (`per_extra`,
+    /// floored at 1), i.e. consecutive same-model batches amortize like
+    /// one long batch.  Analytic backend: `first` — it has no pipeline
+    /// notion, so residency saves nothing it can observe.
+    pub warm_first: u64,
+    /// Macro write-port bits a warm first request avoids restreaming:
+    /// the run's `cim_write_bits` prorated by the saved cycle share
+    /// (`(first - warm_first) / first`).  0 under the analytic backend.
+    pub reuse_write_bits: u64,
     /// Energy of one request, mJ (batching does not change the work).
     pub energy_mj: f64,
     /// Rewrite-hidden ratio of the underlying run; `None` for the
@@ -38,6 +50,9 @@ pub struct BatchCost {
     /// (`cim::OccupancyLedger`).  Schedule-derived, so both backends
     /// report it.
     pub intra_macro_utilization: f64,
+    /// The underlying run's occupancy ledger (one request's worth);
+    /// the fabric aggregates it across every served request.
+    pub occupancy: OccupancyLedger,
 }
 
 impl BatchCost {
@@ -47,6 +62,15 @@ impl BatchCost {
             return 0;
         }
         self.first + (n - 1) * self.per_extra
+    }
+
+    /// [`BatchCost::batch_cycles`] when the shard's macros are already
+    /// warm with this workload's rewrites (session-affinity reuse).
+    pub fn warm_batch_cycles(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.warm_first + (n - 1) * self.per_extra
     }
 }
 
@@ -82,12 +106,22 @@ impl CostModel {
                 let run = engine::run_full(self.dataflow, &self.accel, model);
                 let first = run.report.cycles;
                 let fill = run.trace.fill_latency.min(first);
+                let warm_first = (first - fill).max(1).min(first.max(1));
+                let saved = first.saturating_sub(warm_first);
                 BatchCost {
                     first,
                     per_extra: first - fill,
+                    warm_first,
+                    reuse_write_bits: if first == 0 {
+                        0
+                    } else {
+                        (run.report.activity.cim_write_bits as u128 * saved as u128
+                            / first as u128) as u64
+                    },
                     energy_mj: run.report.energy.total_mj(),
                     rewrite_hidden: Some(run.trace.rewrite_hidden_ratio()),
                     intra_macro_utilization: run.report.intra_macro_utilization(),
+                    occupancy: run.report.activity.occupancy,
                 }
             }
             Backend::Analytic => {
@@ -95,9 +129,12 @@ impl CostModel {
                 BatchCost {
                     first: report.cycles,
                     per_extra: report.cycles,
+                    warm_first: report.cycles,
+                    reuse_write_bits: 0,
                     energy_mj: report.energy.total_mj(),
                     rewrite_hidden: None,
                     intra_macro_utilization: report.intra_macro_utilization(),
+                    occupancy: report.activity.occupancy,
                 }
             }
         };
@@ -128,6 +165,13 @@ mod tests {
         assert_eq!(c.batch_cycles(1), c.first);
         assert_eq!(c.batch_cycles(4), c.first + 3 * c.per_extra);
         assert_eq!(c.batch_cycles(0), 0);
+        // warm pricing: a resident-model batch skips the fill, never
+        // more, and prices the avoided rewrite stream
+        assert!(c.warm_first <= c.first && c.warm_first >= 1);
+        assert!(c.warm_batch_cycles(4) <= c.batch_cycles(4));
+        assert_eq!(c.warm_batch_cycles(0), 0);
+        assert!(c.reuse_write_bits <= direct.activity.cim_write_bits);
+        assert!(c.occupancy.alloc_cell_cycles > 0);
         // memoized: second lookup returns the identical cost
         assert_eq!(cm.cost(&model), c);
     }
@@ -141,6 +185,8 @@ mod tests {
         );
         let c = cm.cost(&presets::tiny_smoke());
         assert_eq!(c.per_extra, c.first);
+        assert_eq!(c.warm_first, c.first, "analytic residency saves nothing");
+        assert_eq!(c.reuse_write_bits, 0);
         assert!(c.rewrite_hidden.is_none());
         assert!(c.energy_mj > 0.0);
         // the analytic backend still prices macro occupancy

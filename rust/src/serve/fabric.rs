@@ -2,48 +2,61 @@
 //! simulation of the whole request path.
 //!
 //! ```text
-//!   arrival trace ──admit──> [vision queue]───┐
-//!   (seeded, no    ──admit──> [language q. ]──┼─> continuous batcher
-//!    wall-clock)   ──admit──> [audio-vis q.]──┘        │ same-model
-//!        │ full queue => reject (backpressure)         │ batches <= B
-//!        v                                             v
-//!    rejected++                                  shard router
+//!   arrival stream ──admit──> [vision queue]───┐
+//!   (seeded, no     ──admit──> [language q. ]──┼─> continuous batcher
+//!    wall-clock)    ──admit──> [audio-vis q.]──┘        │ same-model
+//!        │ full queue or tenant over quota => reject    │ batches <= B
+//!        v                                              v
+//!    rejected++                                   shard router
 //!                                      (round-robin | least-loaded |
-//!                                       modality-affinity)
+//!                                       modality-affinity |
+//!                                       session-affinity)
 //!                                                      │
 //!                              ┌───────────┬───────────┤
 //!                              v           v           v
 //!                          shard 0     shard 1  ...  shard N-1
 //!                        (each an engine-priced accelerator
-//!                         instance; batch cost = fill + B*steady)
+//!                         instance; batch cost = fill + B*steady,
+//!                         or warm pricing on a resident model)
 //! ```
 //!
 //! The event loop is keyed by `(cycle, event kind, sequence)` — a total
 //! order — and every component (arrival generator, batcher, router, cost
-//! model) is deterministic, so a fabric run is a pure function of its
-//! [`ServeConfig`] and the emitted artifact is bit-identical across
-//! processes, thread counts, and repetitions.
+//! model, event queue) is deterministic, so a fabric run is a pure
+//! function of its [`ServeConfig`] and the emitted artifact is
+//! bit-identical across processes, thread counts, and repetitions.
+//! The event queue itself is swappable ([`SchedulerKind`]): the
+//! hierarchical time-wheel and the binary heap pop the same total order,
+//! so the choice is an execution detail (like `--threads`), never an
+//! artifact field.
+//!
+//! Arrivals are consumed **streamingly**: at most one future arrival is
+//! ever buffered, so a million-request run holds O(shards + queue_depth)
+//! state — the trace is never materialized.
 //!
 //! Batching is work-conserving (vLLM-style continuous batching): a batch
 //! is formed the moment a shard is free and any queue is non-empty, so
 //! multi-request batches emerge exactly when arrivals outpace service.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 use std::io::{self, Write};
 
 use crate::artifact::{ArtifactSink, JsonWriter, JsonlWriter};
-use crate::config::{AccelConfig, DataflowKind, ModelConfig, RoutePolicy};
+use crate::config::{
+    AccelConfig, DataflowKind, ModelConfig, RoutePolicy, SchedulerKind, TenantConfig,
+};
 use crate::engine::Backend;
 use crate::util::json::Json;
 
 use super::arrival::{self, ArrivalEvent, ArrivalKind, Modality};
 use super::cost::CostModel;
+use super::queue::{EventQueue, HeapQueue, TimeWheel};
 use super::router::{Router, ShardLoad};
-use super::stats::{ServeStats, ShardStats};
+use super::stats::{ServeStats, ShardStats, TenantStats};
 
 /// Everything a fabric run depends on.  Serving knobs (shards, queue
-/// depth, batch size, arrival seed, policy) live in `accel.serving`.
+/// depth, batch size, arrival seed, policy, scheduler, tenants) live in
+/// `accel.serving`.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub accel: AccelConfig,
@@ -66,6 +79,21 @@ pub fn scenario_id(
     arrival: ArrivalKind,
 ) -> String {
     format!("shards{shards}/{}/{}/{}", policy.slug(), dataflow.slug(), arrival.slug())
+}
+
+fn tenants_json(tenants: &[TenantConfig]) -> Json {
+    Json::arr(
+        tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::str(t.name.clone())),
+                    ("weight", Json::int(t.weight)),
+                    ("slo_cycles", Json::int(t.slo_cycles)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 impl ServeConfig {
@@ -98,6 +126,7 @@ impl ServeConfig {
             ("arrival_seed", Json::int(s.arrival_seed)),
             ("requests", Json::int(self.requests)),
             ("mean_gap_cycles", Json::int(self.mean_gap)),
+            ("tenants", tenants_json(&s.tenants)),
         ])
     }
 }
@@ -129,6 +158,8 @@ pub struct ServeReport {
     pub arrival_seed: u64,
     pub requests: u64,
     pub mean_gap: u64,
+    /// The serving tenants of the run (empty = single-tenant).
+    pub tenants: Vec<TenantConfig>,
     pub stats: ServeStats,
 }
 
@@ -154,6 +185,7 @@ impl ServeReport {
             ("arrival_seed", Json::int(self.arrival_seed)),
             ("requests", Json::int(self.requests)),
             ("mean_gap_cycles", Json::int(self.mean_gap)),
+            ("tenants", tenants_json(&self.tenants)),
         ])
     }
 
@@ -170,28 +202,35 @@ impl ServeReport {
     }
 
     /// Stream the pretty document — byte-identical to
-    /// `to_json().to_string_pretty()`, shards emitted one at a time.
+    /// `to_json().to_string_pretty()`, shards/tenants emitted one at a
+    /// time.
     pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
         let mut w = JsonWriter::pretty(out);
         w.begin_obj()?;
         if let Json::Obj(m) = self.config_json() {
-            // every config key sorts before "stats"
-            for (k, v) in &m {
+            // "stats" slots between "shards" and "tenants" in sorted order
+            for (k, v) in m.iter().filter(|(k, _)| k.as_str() < "stats") {
+                w.field(k, v)?;
+            }
+            w.key("stats")?;
+            self.stats.emit(&mut w)?;
+            for (k, v) in m.iter().filter(|(k, _)| k.as_str() > "stats") {
                 w.field(k, v)?;
             }
         }
-        w.key("stats")?;
-        self.stats.emit(&mut w)?;
         w.end()
     }
 
     /// JSONL layout: a `header` row (the config), one `shard` row per
-    /// shard, then the `stats` summary row.
+    /// shard, one `tenant` row per tenant, then the `stats` summary row.
     pub fn write_jsonl<W: Write>(&self, out: W) -> io::Result<()> {
         let mut w = JsonlWriter::new(out);
         w.value(&crate::artifact::tagged("header", self.config_json()))?;
         for s in &self.stats.per_shard {
             w.value(&crate::artifact::tagged("shard", self.stats.shard_json(s)))?;
+        }
+        for t in &self.stats.per_tenant {
+            w.value(&crate::artifact::tagged("tenant", self.stats.tenant_json(t)))?;
         }
         w.value(&crate::artifact::tagged("stats", self.stats.summary_json()))
     }
@@ -213,6 +252,14 @@ impl ServeReport {
             self.arrival_seed
         ));
         out.push_str(&format!("workloads  : {}\n", self.models.join(", ")));
+        if !self.tenants.is_empty() {
+            let list: Vec<String> = self
+                .tenants
+                .iter()
+                .map(|t| format!("{} (w{}, slo {})", t.name, t.weight, t.slo_cycles))
+                .collect();
+            out.push_str(&format!("tenants    : {}\n", list.join(", ")));
+        }
         out.push_str(&self.stats.render_text());
         out
     }
@@ -225,6 +272,8 @@ struct Shard {
     served: u64,
     /// Per-request intra-macro utilization sum (ShardStats::cim_util_sum).
     cim_util_sum: f64,
+    /// Workload whose macro rewrites the shard last streamed in.
+    resident: Option<usize>,
 }
 
 /// One arrival as the fabric saw it — the replay-trace row.  `model`
@@ -235,7 +284,10 @@ pub struct RequestRecord {
     pub cycle: u64,
     pub modality: Modality,
     pub model: usize,
-    /// False when the modality queue was full (the request was shed).
+    /// Tenant index into the run's tenant list (0 when single-tenant).
+    pub tenant: usize,
+    /// False when the modality queue was full or the tenant was over
+    /// its quota (the request was shed).
     pub admitted: bool,
 }
 
@@ -246,6 +298,7 @@ impl RequestRecord {
             ("cycle", Json::int(self.cycle)),
             ("modality", Json::str(self.modality.name())),
             ("model", Json::int(self.model as u64)),
+            ("tenant", Json::int(self.tenant as u64)),
             ("admitted", Json::Bool(self.admitted)),
         ])
     }
@@ -272,39 +325,74 @@ impl RequestObserver for () {
 }
 
 /// The arrival trace `simulate` would generate for `cfg` — a pure
-/// function of the config (see `arrival::generate`).
+/// function of the config (see `arrival::generate`).  Only needed when
+/// the whole trace must be materialized (e.g. tests); the fabric itself
+/// streams arrivals.
 pub fn arrival_trace(cfg: &ServeConfig) -> Vec<ArrivalEvent> {
+    let s = &cfg.accel.serving;
+    let weights: Vec<u64> = s.tenants.iter().map(|t| t.weight).collect();
     arrival::generate(
         cfg.arrival,
         cfg.requests,
         cfg.mean_gap,
         cfg.models.len(),
-        cfg.accel.serving.arrival_seed,
+        &weights,
+        s.arrival_seed,
     )
 }
 
 /// Run the closed loop: arrivals -> bounded queues -> batcher -> router
 /// -> engine-priced shards.  Pure function of `cfg`.
 pub fn simulate(cfg: &ServeConfig) -> ServeReport {
-    let trace = arrival_trace(cfg);
-    simulate_trace(cfg, &trace, &mut ()).expect("no-op observer cannot fail")
+    simulate_observed(cfg, &mut ()).expect("no-op observer cannot fail")
 }
 
-/// [`simulate`] over an explicit arrival trace (the replay path), with
-/// an observer notified at every admission decision.  The stats are a
-/// pure function of `(cfg, trace)`: feeding back a recorded trace
-/// reproduces the original run's [`ServeStats`] exactly.
+/// [`simulate`] with an observer notified at every admission decision.
+/// Streams arrivals straight from the generator — O(1) memory in the
+/// request count.
+pub fn simulate_observed<O: RequestObserver>(
+    cfg: &ServeConfig,
+    obs: &mut O,
+) -> io::Result<ServeReport> {
+    let s = &cfg.accel.serving;
+    let weights: Vec<u64> = s.tenants.iter().map(|t| t.weight).collect();
+    let gen = arrival::ArrivalGen::new(
+        cfg.arrival,
+        cfg.requests,
+        cfg.mean_gap,
+        cfg.models.len(),
+        &weights,
+        s.arrival_seed,
+    );
+    simulate_stream(cfg, gen, obs)
+}
+
+/// [`simulate`] over an explicit arrival trace (the replay path).  The
+/// stats are a pure function of `(cfg, trace)`: feeding back a recorded
+/// trace reproduces the original run's [`ServeStats`] exactly.
 pub fn simulate_trace<O: RequestObserver>(
     cfg: &ServeConfig,
     trace: &[ArrivalEvent],
     obs: &mut O,
 ) -> io::Result<ServeReport> {
-    assert!(!cfg.models.is_empty(), "serve fabric needs a workload mix");
     debug_assert_eq!(trace.len() as u64, cfg.requests, "cfg.requests must match the trace");
+    simulate_stream(cfg, trace.iter().copied(), obs)
+}
+
+/// The fabric core, generic over any (cycle-monotone) arrival source.
+/// At most one future arrival is buffered, so memory is
+/// O(shards + queues + tenants) regardless of request count.
+pub fn simulate_stream<I, O>(cfg: &ServeConfig, arrivals: I, obs: &mut O) -> io::Result<ServeReport>
+where
+    I: IntoIterator<Item = ArrivalEvent>,
+    O: RequestObserver,
+{
+    assert!(!cfg.models.is_empty(), "serve fabric needs a workload mix");
     let serving = cfg.accel.serving.clone();
     let n_shards = serving.shards.max(1) as usize;
     let queue_depth = serving.queue_depth.max(1) as usize;
     let batch_size = serving.batch_size.max(1) as usize;
+    let sticky = serving.policy == RoutePolicy::SessionAffinity;
 
     // Price every workload once up front (memoized pure simulations).
     let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
@@ -313,40 +401,99 @@ pub fn simulate_trace<O: RequestObserver>(
     let mut queues: Vec<VecDeque<ArrivalEvent>> =
         (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
     let mut shards: Vec<Shard> = (0..n_shards)
-        .map(|_| Shard { busy_until: 0, busy: 0, batches: 0, served: 0, cim_util_sum: 0.0 })
+        .map(|_| Shard {
+            busy_until: 0,
+            busy: 0,
+            batches: 0,
+            served: 0,
+            cim_util_sum: 0.0,
+            resident: None,
+        })
         .collect();
     let mut router = Router::new(serving.policy);
-    let mut stats = ServeStats { submitted: cfg.requests, ..Default::default() };
+    let mut stats = ServeStats {
+        per_tenant: serving
+            .tenants
+            .iter()
+            .map(|t| TenantStats {
+                name: t.name.clone(),
+                weight: t.weight,
+                slo_cycles: t.slo_cycles,
+                ..Default::default()
+            })
+            .collect(),
+        ..Default::default()
+    };
+    // Per-tenant admission quotas: each tenant may hold at most a
+    // weight-proportional share of the total queue capacity (at least
+    // 1), so a flooding tenant cannot starve the others' admission.
+    let total_cap = (queue_depth * Modality::ALL.len()) as u64;
+    let total_weight: u64 = serving.tenants.iter().map(|t| t.weight.max(1)).sum();
+    let quotas: Vec<u64> = serving
+        .tenants
+        .iter()
+        .map(|t| ((total_cap * t.weight.max(1)) / total_weight.max(1)).max(1))
+        .collect();
+    let mut tenant_queued: Vec<u64> = vec![0; serving.tenants.len()];
     let mut depth_sum: u128 = 0;
     let mut depth_samples: u64 = 0;
     let mut hidden_sum = 0.0f64;
     let mut hidden_n: u64 = 0;
     let mut last_completion: u64 = 0;
+    let mut last_arrival_cycle: u64 = 0;
 
-    // Event heap keyed (cycle, kind, seq): kind 0 = arrival (seq = trace
-    // index), kind 1 = shard-free (seq = shard index).  Total order =>
-    // deterministic pop sequence.
-    let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
-    for (i, a) in trace.iter().enumerate() {
-        heap.push(Reverse((a.cycle, 0, i as u64)));
+    // Event queue keyed (cycle, kind, seq): kind 0 = arrival (seq =
+    // arrival counter), kind 1 = shard-free (seq = shard index).  Total
+    // order => deterministic pop sequence under either scheduler.
+    let mut queue: Box<dyn EventQueue> = match serving.scheduler {
+        SchedulerKind::Wheel => Box::new(TimeWheel::new()),
+        SchedulerKind::Heap => Box::new(HeapQueue::new()),
+    };
+    let mut src = arrivals.into_iter();
+    let mut pending = src.next();
+    let mut arrivals_seen: u64 = 0;
+    if let Some(a) = &pending {
+        queue.push((a.cycle, 0, arrivals_seen));
     }
 
-    while let Some(Reverse((now, kind, seq))) = heap.pop() {
+    while let Some((now, kind, _seq)) = queue.pop() {
         if kind == 0 {
-            // admission: bounded per-modality queues, reject on overflow
-            let a = trace[seq as usize];
+            // admission: bounded per-modality queues plus per-tenant
+            // quotas; reject on overflow of either
+            let a = pending.take().expect("a pending arrival backs every kind-0 event");
+            arrivals_seen += 1;
+            last_arrival_cycle = a.cycle;
+            pending = src.next();
+            if let Some(nx) = &pending {
+                debug_assert!(nx.cycle >= a.cycle, "arrival cycles must be non-decreasing");
+                queue.push((nx.cycle.max(a.cycle), 0, arrivals_seen));
+            }
+            stats.submitted += 1;
+            if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
+                ts.submitted += 1;
+            }
+            let over_quota = quotas
+                .get(a.tenant)
+                .is_some_and(|&cap| tenant_queued.get(a.tenant).is_some_and(|&q| q >= cap));
             let q = &mut queues[a.modality.index()];
-            let admitted = q.len() < queue_depth;
+            let admitted = !over_quota && q.len() < queue_depth;
             if admitted {
                 q.push_back(a);
+                if let Some(c) = tenant_queued.get_mut(a.tenant) {
+                    *c += 1;
+                }
             } else {
                 stats.rejected += 1;
+                if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
+                    ts.rejected += 1;
+                }
             }
             obs.on_request(&RequestRecord {
                 id: a.id,
                 cycle: a.cycle,
                 modality: a.modality,
                 model: a.model,
+                tenant: a.tenant,
                 admitted,
             })?;
             let max_one = queues.iter().map(|q| q.len()).max().unwrap_or(0) as u64;
@@ -378,13 +525,28 @@ pub fn simulate_trace<O: RequestObserver>(
 
             let loads: Vec<ShardLoad> = shards
                 .iter()
-                .map(|s| ShardLoad { busy_until: s.busy_until, busy: s.busy })
+                .map(|s| ShardLoad { busy_until: s.busy_until, busy: s.busy, resident: s.resident })
                 .collect();
             let si = router
-                .route(&loads, head.modality, now)
+                .route(&loads, head.modality, head.model, now)
                 .expect("a free shard was checked above");
             let cost = costs[head.model];
-            let cycles = cost.batch_cycles(batch.len() as u64);
+            let cold = cost.batch_cycles(batch.len() as u64);
+            // session affinity prices a resident-model batch warm: the
+            // macro rewrites are already in place (the CIM analog of
+            // prefix caching)
+            let warm_hit = sticky && shards[si].resident == Some(head.model);
+            let cycles = if warm_hit {
+                cost.warm_batch_cycles(batch.len() as u64).max(1)
+            } else {
+                cold
+            };
+            if warm_hit {
+                stats.rewrite_reuse_batches += 1;
+                stats.rewrite_reuse_cycles_saved += cold.saturating_sub(cycles);
+                stats.rewrite_reuse_write_bits += cost.reuse_write_bits;
+                stats.occupancy.reused_write_bits += cost.reuse_write_bits;
+            }
             let end = now + cycles;
             let shard = &mut shards[si];
             shard.busy_until = end;
@@ -392,18 +554,32 @@ pub fn simulate_trace<O: RequestObserver>(
             shard.batches += 1;
             shard.served += batch.len() as u64;
             shard.cim_util_sum += cost.intra_macro_utilization * batch.len() as f64;
+            shard.resident = Some(head.model);
             stats.batches += 1;
             stats.served += batch.len() as u64;
             last_completion = last_completion.max(end);
             for r in &batch {
-                stats.latency.record(end - r.cycle);
+                let lat = end - r.cycle;
+                stats.latency.record(lat);
                 stats.energy_mj += cost.energy_mj;
+                stats.occupancy.add(&cost.occupancy);
                 if let Some(h) = cost.rewrite_hidden {
                     hidden_sum += h;
                     hidden_n += 1;
                 }
+                if let Some(c) = tenant_queued.get_mut(r.tenant) {
+                    *c = c.saturating_sub(1);
+                }
+                if let Some(ts) = stats.per_tenant.get_mut(r.tenant) {
+                    ts.served += 1;
+                    ts.latency.record(lat);
+                    if ts.slo_cycles > 0 && lat > ts.slo_cycles {
+                        ts.slo_violations += 1;
+                        stats.slo_violations += 1;
+                    }
+                }
             }
-            heap.push(Reverse((end, 1, si as u64)));
+            queue.push((end, 1, si as u64));
         }
 
         if kind == 0 {
@@ -414,7 +590,7 @@ pub fn simulate_trace<O: RequestObserver>(
         }
     }
 
-    stats.makespan = last_completion.max(trace.last().map(|a| a.cycle).unwrap_or(0));
+    stats.makespan = last_completion.max(last_arrival_cycle);
     stats.mean_queue_depth =
         if depth_samples == 0 { 0.0 } else { depth_sum as f64 / depth_samples as f64 };
     stats.rewrite_hidden = if hidden_n == 0 { None } else { Some(hidden_sum / hidden_n as f64) };
@@ -445,6 +621,7 @@ pub fn simulate_trace<O: RequestObserver>(
         arrival_seed: serving.arrival_seed,
         requests: cfg.requests,
         mean_gap: cfg.mean_gap,
+        tenants: serving.tenants,
         stats,
     })
 }
@@ -486,6 +663,20 @@ mod tests {
         assert!(s.makespan > 0);
         assert_eq!(s.per_shard.iter().map(|p| p.served).sum::<u64>(), s.served);
         assert_eq!(s.per_shard.iter().map(|p| p.batches).sum::<u64>(), s.batches);
+    }
+
+    #[test]
+    fn schedulers_agree_bit_for_bit() {
+        let mut cfg = base_cfg();
+        cfg.requests = 200;
+        let wheel = simulate(&cfg);
+        cfg.accel.serving.scheduler = SchedulerKind::Heap;
+        let heap = simulate(&cfg);
+        assert_eq!(
+            wheel.to_json().to_string_pretty(),
+            heap.to_json().to_string_pretty(),
+            "the event scheduler is an execution detail, never an artifact field"
+        );
     }
 
     #[test]
@@ -562,9 +753,8 @@ mod tests {
             }
         }
         let cfg = base_cfg();
-        let trace = arrival_trace(&cfg);
         let mut tape = Tape(Vec::new());
-        let first = simulate_trace(&cfg, &trace, &mut tape).unwrap();
+        let first = simulate_observed(&cfg, &mut tape).unwrap();
         assert_eq!(tape.0.len() as u64, cfg.requests, "observer sees every arrival");
         // the observer sees arrivals in event order == trace order
         let replayed: Vec<ArrivalEvent> = tape
@@ -575,8 +765,10 @@ mod tests {
                 cycle: r.cycle,
                 modality: r.modality,
                 model: r.model,
+                tenant: r.tenant,
             })
             .collect();
+        assert_eq!(replayed, arrival_trace(&cfg), "streamed arrivals match the generated trace");
         let second = simulate_trace(&cfg, &replayed, &mut ()).unwrap();
         assert_eq!(first.stats, second.stats, "replay must be bit-identical");
     }
@@ -595,5 +787,42 @@ mod tests {
         }
         let j = rep.to_json().to_string_pretty();
         assert!(j.contains("intra_macro_utilization"));
+    }
+
+    #[test]
+    fn tenants_account_and_quota_bounds_admission() {
+        let mut cfg = base_cfg();
+        cfg.accel.serving.shards = 1;
+        cfg.accel.serving.queue_depth = 8;
+        cfg.accel.serving.tenants = vec![
+            TenantConfig { name: "interactive".into(), weight: 3, slo_cycles: 1 },
+            TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+        ];
+        cfg.arrival = ArrivalKind::Uniform;
+        cfg.mean_gap = 1;
+        cfg.requests = 300;
+        let rep = simulate(&cfg);
+        let s = &rep.stats;
+        assert_eq!(rep.tenants.len(), 2);
+        assert_eq!(s.per_tenant.len(), 2);
+        let sub: u64 = s.per_tenant.iter().map(|t| t.submitted).sum();
+        let served: u64 = s.per_tenant.iter().map(|t| t.served).sum();
+        let rej: u64 = s.per_tenant.iter().map(|t| t.rejected).sum();
+        assert_eq!(sub, s.submitted, "tenant submissions partition the trace");
+        assert_eq!(served, s.served);
+        assert_eq!(rej, s.rejected);
+        // a 1-cycle SLO under overload must be violated
+        assert!(s.per_tenant[0].slo_violations > 0);
+        assert_eq!(
+            s.slo_violations,
+            s.per_tenant.iter().map(|t| t.slo_violations).sum::<u64>()
+        );
+        // tenant rows surface in the artifact and the JSONL stream
+        let j = rep.to_json().to_string_pretty();
+        assert!(j.contains("\"interactive\""));
+        let mut lines = Vec::new();
+        rep.write_jsonl(&mut lines).unwrap();
+        let text = String::from_utf8(lines).unwrap();
+        assert_eq!(text.lines().count(), 2 + s.per_shard.len() + s.per_tenant.len());
     }
 }

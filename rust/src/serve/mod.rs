@@ -3,16 +3,23 @@
 //! driven by closed-loop traffic.
 //!
 //! * [`arrival`] — deterministic seeded request-arrival generation
-//!   (uniform / poisson / burst), no wall-clock anywhere.
+//!   (uniform / poisson / burst / diurnal / flash), streamed one event
+//!   at a time, no wall-clock anywhere.
 //! * [`cost`]    — engine-backed batch pricing: every served batch is
-//!   costed by the same analytic/event backends as `run`/`sweep`.
+//!   costed by the same analytic/event backends as `run`/`sweep`,
+//!   including warm (resident-model) pricing for session affinity.
+//! * [`queue`]   — the event scheduler behind the fabric's loop: a
+//!   hierarchical time-wheel and a binary-heap reference, swappable
+//!   behind [`EventQueue`] and bit-identical in pop order.
 //! * [`router`]  — shard placement policies (round-robin, least-loaded,
-//!   modality-affinity).
+//!   modality-affinity, session-affinity).
 //! * [`fabric`]  — the closed loop: bounded per-modality admission
-//!   queues -> continuous batcher -> router -> N engine-priced shards,
-//!   emitting a deterministic [`ServeReport`] artifact.
-//! * [`stats`]   — [`ServeStats`]: p50/p95/p99 latency, queue depth,
-//!   shard utilization, rejects, rewrite-hidden ratio, energy.
+//!   queues with per-tenant quotas -> continuous batcher -> router ->
+//!   N engine-priced shards, emitting a deterministic [`ServeReport`]
+//!   artifact.  O(1) memory in the request count.
+//! * [`stats`]   — [`ServeStats`]: p50/p95/p99 latency (streaming
+//!   sketch), queue depth, shard utilization, rejects, per-tenant SLO
+//!   accounting, rewrite-reuse counters, energy.
 //! * [`sweep`]   — the shards x policy x dataflow serving matrix with a
 //!   thread-count-independent aggregate.
 //! * [`replay`]  — record the arrival stream as a JSONL artifact
@@ -22,8 +29,9 @@
 //!
 //! Determinism contract (shared with `sweep` and `engine`): a fabric
 //! run is a pure function of its [`ServeConfig`]; artifacts carry no
-//! wall-clock, thread-count, or environment fields.  The written tour
-//! is `docs/serving.md`.
+//! wall-clock, thread-count, or environment fields, and the event
+//! scheduler (like `--threads`) never changes a single byte of them.
+//! The written tour is `docs/serving.md`.
 //!
 //! # Example
 //!
@@ -54,18 +62,20 @@
 pub mod arrival;
 pub mod cost;
 pub mod fabric;
+pub mod queue;
 pub mod replay;
 pub mod router;
 pub mod stats;
 pub mod sweep;
 
-pub use arrival::{ArrivalEvent, ArrivalKind, Modality};
+pub use arrival::{ArrivalEvent, ArrivalGen, ArrivalKind, Modality};
 pub use cost::{BatchCost, CostModel};
 pub use fabric::{
-    arrival_trace, auto_gap, simulate, simulate_trace, RequestObserver, RequestRecord,
-    ServeConfig, ServeReport,
+    arrival_trace, auto_gap, simulate, simulate_observed, simulate_stream, simulate_trace,
+    RequestObserver, RequestRecord, ServeConfig, ServeReport,
 };
+pub use queue::{Event, EventQueue, HeapQueue, TimeWheel};
 pub use replay::{read_trace, ReplayTrace, TraceWriter};
 pub use router::Router;
-pub use stats::{ServeStats, ShardStats};
+pub use stats::{ServeStats, ShardStats, TenantStats};
 pub use sweep::{run_serve_sweep, serve_matrix, ServeScenario, ServeSweepReport};

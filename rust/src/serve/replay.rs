@@ -9,12 +9,18 @@
 //! events — reproducing the original run's `ServeStats` exactly
 //! (`tests/artifact_stream.rs`, CI's `artifact-smoke`).
 //!
+//! The header's `requests` field is load-bearing: it must match the
+//! number of `request` rows the file carries, or the parse fails.  A
+//! truncated copy (or a serve-*report* artifact, which pins N requests
+//! in its header but carries no request rows) is rejected instead of
+//! silently replaying a shorter run.
+//!
 //! The row schemas are documented in `docs/artifacts.md`.
 
 use std::io::{self, Write};
 
 use crate::artifact::{tagged, JsonReader};
-use crate::config::{presets, DataflowKind, ModelConfig, RoutePolicy};
+use crate::config::{presets, DataflowKind, ModelConfig, RoutePolicy, TenantConfig};
 use crate::engine::Backend;
 use crate::util::json::Json;
 
@@ -62,6 +68,11 @@ pub struct ReplayTrace {
     pub arrival: ArrivalKind,
     pub arrival_seed: u64,
     pub mean_gap: u64,
+    /// The request count the header pins; [`read_trace`] guarantees it
+    /// equals `events.len()`.
+    pub declared_requests: u64,
+    /// The recorded serving tenants (empty = single-tenant run).
+    pub tenants: Vec<TenantConfig>,
     pub events: Vec<ArrivalEvent>,
 }
 
@@ -74,13 +85,14 @@ impl ReplayTrace {
         accel.serving.batch_size = self.batch_size;
         accel.serving.policy = self.policy;
         accel.serving.arrival_seed = self.arrival_seed;
+        accel.serving.tenants = self.tenants.clone();
         ServeConfig {
             accel,
             models: self.models.clone(),
             dataflow: self.dataflow,
             backend: self.backend,
             arrival: self.arrival,
-            requests: self.events.len() as u64,
+            requests: self.declared_requests,
             mean_gap: self.mean_gap,
         }
     }
@@ -104,10 +116,11 @@ fn field_u64(row: &Json, key: &str, line: usize) -> Result<u64, String> {
         .ok_or_else(|| format!("replay trace line {line}: missing integer field '{key}'"))
 }
 
-/// Parse a recorded trace (the `--trace-out` format; a serve-report
-/// JSONL artifact is also accepted for its header, though it carries
-/// no request rows).  Every row goes through the streaming reader —
-/// nothing holds more than one row's tree.
+/// Parse a recorded trace (the `--trace-out` format).  Every row goes
+/// through the streaming reader — nothing holds more than one row's
+/// tree — and the parse fails unless the header's `requests` count
+/// matches the carried `request` rows and their cycles are
+/// non-decreasing.
 pub fn read_trace(src: &str) -> Result<ReplayTrace, String> {
     let mut trace: Option<ReplayTrace> = None;
     for (idx, line) in src.lines().enumerate() {
@@ -155,6 +168,29 @@ pub fn read_trace(src: &str) -> Result<ReplayTrace, String> {
                 let ar = field_str(&row, "arrival", n)?;
                 let arrival = ArrivalKind::parse(ar)
                     .ok_or_else(|| format!("replay trace line {n}: bad arrival '{ar}'"))?;
+                let tenants = match row.get("tenants") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| {
+                            format!("replay trace line {n}: 'tenants' must be an array")
+                        })?
+                        .iter()
+                        .map(|t| {
+                            let name = t.get("name").and_then(|v| v.as_str()).ok_or_else(|| {
+                                format!("replay trace line {n}: tenant entry missing 'name'")
+                            })?;
+                            Ok(TenantConfig {
+                                name: name.to_string(),
+                                weight: t.get("weight").and_then(|v| v.as_u64()).unwrap_or(1),
+                                slo_cycles: t
+                                    .get("slo_cycles")
+                                    .and_then(|v| v.as_u64())
+                                    .unwrap_or(0),
+                            })
+                        })
+                        .collect::<Result<Vec<_>, String>>()?,
+                };
                 trace = Some(ReplayTrace {
                     models,
                     dataflow,
@@ -166,6 +202,8 @@ pub fn read_trace(src: &str) -> Result<ReplayTrace, String> {
                     arrival,
                     arrival_seed: field_u64(&row, "arrival_seed", n)?,
                     mean_gap: field_u64(&row, "mean_gap_cycles", n)?,
+                    declared_requests: field_u64(&row, "requests", n)?,
+                    tenants,
                     events: Vec::new(),
                 });
             }
@@ -184,19 +222,44 @@ pub fn read_trace(src: &str) -> Result<ReplayTrace, String> {
                         t.models.len()
                     ));
                 }
+                // rows predating tenancy carry no 'tenant' field
+                let tenant = row.get("tenant").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+                if !t.tenants.is_empty() && tenant >= t.tenants.len() {
+                    return Err(format!(
+                        "replay trace line {n}: tenant index {tenant} out of range ({} tenants)",
+                        t.tenants.len()
+                    ));
+                }
                 t.events.push(ArrivalEvent {
                     id: field_u64(&row, "id", n)?,
                     cycle: field_u64(&row, "cycle", n)?,
                     modality,
                     model,
+                    tenant,
                 });
             }
-            // future row tags (shard/stats in serve-report files) are
-            // ignored: the header and requests are all replay needs
+            // future row tags are ignored: the header and requests are
+            // all replay needs
             _ => {}
         }
     }
     let t = trace.ok_or_else(|| "replay trace has no header row".to_string())?;
+    if t.declared_requests != t.events.len() as u64 {
+        return Err(format!(
+            "replay trace header pins {} requests but the file carries {} request row(s); \
+             refusing to silently truncate the replay (is this a truncated copy, or a \
+             serve-report artifact instead of a --trace-out trace?)",
+            t.declared_requests,
+            t.events.len()
+        ));
+    }
+    if let Some(w) = t.events.windows(2).find(|w| w[1].cycle < w[0].cycle) {
+        return Err(format!(
+            "replay trace is not cycle-monotone: request id {} at cycle {} follows id {} at \
+             cycle {}",
+            w[1].id, w[1].cycle, w[0].id, w[0].cycle
+        ));
+    }
     Ok(t)
 }
 
@@ -242,7 +305,11 @@ mod tests {
 
     #[test]
     fn record_then_replay_reproduces_stats_exactly() {
-        let cfg = base_cfg();
+        let mut cfg = base_cfg();
+        cfg.accel.serving.tenants = vec![
+            TenantConfig { name: "interactive".into(), weight: 3, slo_cycles: 500_000 },
+            TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+        ];
         let trace = super::super::fabric::arrival_trace(&cfg);
 
         // record: header + request rows streamed through the observer
@@ -261,6 +328,8 @@ mod tests {
         // replay from the recorded artifact
         let parsed = read_trace(&text).expect("trace parses");
         assert_eq!(parsed.events.len() as u64, cfg.requests);
+        assert_eq!(parsed.declared_requests, cfg.requests);
+        assert_eq!(parsed.tenants, cfg.accel.serving.tenants, "tenants round-trip");
         let replayed = parsed.replay(presets::streamdcim_default()).unwrap();
         assert_eq!(original.stats, replayed.stats, "replay must reproduce ServeStats");
         assert_eq!(original.id(), replayed.id());
@@ -280,5 +349,50 @@ mod tests {
         );
         let err = read_trace(bad_model).unwrap_err();
         assert!(err.contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn request_count_mismatch_is_rejected_not_truncated() {
+        // a trace whose header pins more requests than the file carries
+        // (a truncated copy) must fail loudly
+        let cfg = base_cfg();
+        let trace = super::super::fabric::arrival_trace(&cfg);
+        let mut buf = Vec::new();
+        let mut tw = TraceWriter::begin(&mut buf, &cfg.config_json()).unwrap();
+        simulate_trace(&cfg, &trace, &mut tw).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let keep = 1 + cfg.requests as usize / 2;
+        let cut: String =
+            text.lines().take(keep).map(|l| format!("{l}\n")).collect();
+        let err = read_trace(&cut).unwrap_err();
+        assert!(err.contains("request row"), "{err}");
+        assert!(err.contains(&cfg.requests.to_string()), "{err}");
+
+        // a serve-*report* artifact pins N requests but carries zero
+        // request rows — the exact shape the old parser silently
+        // replayed as an empty run
+        let rep = super::super::fabric::simulate(&cfg);
+        let mut jsonl = Vec::new();
+        rep.write_jsonl(&mut jsonl).unwrap();
+        let err = read_trace(&String::from_utf8(jsonl).unwrap()).unwrap_err();
+        assert!(err.contains("0 request row"), "{err}");
+    }
+
+    #[test]
+    fn non_monotone_traces_are_rejected() {
+        let header = concat!(
+            "{\"row\":\"header\",\"kind\":\"serve-trace\",\"models\":[\"tiny-smoke\"],",
+            "\"dataflow\":\"tile\",\"engine\":\"analytic\",\"policy\":\"ll\",",
+            "\"arrival\":\"poisson\",\"shards\":1,\"queue_depth\":4,\"batch_size\":2,",
+            "\"arrival_seed\":7,\"mean_gap_cycles\":100,\"requests\":2}\n"
+        );
+        let rows = concat!(
+            "{\"row\":\"request\",\"id\":0,\"cycle\":50,\"modality\":\"vision\",",
+            "\"model\":0,\"admitted\":true}\n",
+            "{\"row\":\"request\",\"id\":1,\"cycle\":20,\"modality\":\"vision\",",
+            "\"model\":0,\"admitted\":true}\n"
+        );
+        let err = read_trace(&format!("{header}{rows}")).unwrap_err();
+        assert!(err.contains("cycle-monotone"), "{err}");
     }
 }

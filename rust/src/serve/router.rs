@@ -2,8 +2,9 @@
 //! shards under a [`RoutePolicy`].
 //!
 //! Every policy is a deterministic function of `(policy state, shard
-//! loads, batch modality)` — ties always break toward the lowest shard
-//! index — so the fabric's placement sequence is reproducible.
+//! loads, batch modality, batch model)` — ties always break toward the
+//! lowest shard index — so the fabric's placement sequence is
+//! reproducible.
 
 use crate::config::RoutePolicy;
 
@@ -16,6 +17,10 @@ pub struct ShardLoad {
     pub busy_until: u64,
     /// Accumulated busy cycles over the run.
     pub busy: u64,
+    /// Workload-mix index whose macro rewrites the shard last streamed
+    /// in (`None` before its first batch).  Session affinity prefers a
+    /// free shard already holding the batch's model.
+    pub resident: Option<usize>,
 }
 
 /// Deterministic shard selector; holds the round-robin cursor.
@@ -34,10 +39,16 @@ impl Router {
         self.policy
     }
 
-    /// Pick a shard for a batch of `modality` among the shards that are
-    /// free at `now` (`busy_until <= now`).  Returns `None` when every
-    /// shard is busy.
-    pub fn route(&mut self, shards: &[ShardLoad], modality: Modality, now: u64) -> Option<usize> {
+    /// Pick a shard for a batch of `modality` running workload `model`
+    /// among the shards that are free at `now` (`busy_until <= now`).
+    /// Returns `None` when every shard is busy.
+    pub fn route(
+        &mut self,
+        shards: &[ShardLoad],
+        modality: Modality,
+        model: usize,
+        now: u64,
+    ) -> Option<usize> {
         let n = shards.len();
         let free = |i: usize| shards[i].busy_until <= now;
         if n == 0 || !(0..n).any(free) {
@@ -69,6 +80,10 @@ impl Router {
                     least_loaded_free()
                 }
             }
+            RoutePolicy::SessionAffinity => (0..n)
+                .filter(|&i| free(i) && shards[i].resident == Some(model))
+                .min_by_key(|&i| (shards[i].busy, i))
+                .unwrap_or_else(least_loaded_free),
         };
         Some(pick)
     }
@@ -79,29 +94,29 @@ mod tests {
     use super::*;
 
     fn loads(v: &[(u64, u64)]) -> Vec<ShardLoad> {
-        v.iter().map(|&(busy_until, busy)| ShardLoad { busy_until, busy }).collect()
+        v.iter().map(|&(busy_until, busy)| ShardLoad { busy_until, busy, resident: None }).collect()
     }
 
     #[test]
     fn round_robin_rotates_over_free_shards() {
         let mut r = Router::new(RoutePolicy::RoundRobin);
         let free3 = loads(&[(0, 0), (0, 0), (0, 0)]);
-        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(0));
-        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(1));
-        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(2));
-        assert_eq!(r.route(&free3, Modality::Vision, 0), Some(0));
+        assert_eq!(r.route(&free3, Modality::Vision, 0, 0), Some(0));
+        assert_eq!(r.route(&free3, Modality::Vision, 0, 0), Some(1));
+        assert_eq!(r.route(&free3, Modality::Vision, 0, 0), Some(2));
+        assert_eq!(r.route(&free3, Modality::Vision, 0, 0), Some(0));
         // busy shards are skipped
         let one_busy = loads(&[(0, 0), (100, 0), (0, 0)]);
-        assert_eq!(r.route(&one_busy, Modality::Vision, 0), Some(2));
+        assert_eq!(r.route(&one_busy, Modality::Vision, 0, 0), Some(2));
     }
 
     #[test]
     fn least_loaded_picks_min_busy_with_index_ties() {
         let mut r = Router::new(RoutePolicy::LeastLoaded);
         let l = loads(&[(0, 500), (0, 100), (0, 100)]);
-        assert_eq!(r.route(&l, Modality::Language, 0), Some(1), "tie breaks low index");
+        assert_eq!(r.route(&l, Modality::Language, 0, 0), Some(1), "tie breaks low index");
         let busy_min = loads(&[(0, 500), (99, 0), (0, 100)]);
-        assert_eq!(r.route(&busy_min, Modality::Language, 0), Some(2), "busy shard excluded");
+        assert_eq!(r.route(&busy_min, Modality::Language, 0, 0), Some(2), "busy shard excluded");
     }
 
     #[test]
@@ -109,20 +124,40 @@ mod tests {
         let mut r = Router::new(RoutePolicy::ModalityAffinity);
         let free = loads(&[(0, 900), (0, 0)]);
         // language -> 1 % 2 = 1
-        assert_eq!(r.route(&free, Modality::Language, 0), Some(1));
+        assert_eq!(r.route(&free, Modality::Language, 0, 0), Some(1));
         // audio-visual -> 2 % 2 = 0 even though shard 0 carries more load
-        assert_eq!(r.route(&free, Modality::AudioVisual, 0), Some(0));
+        assert_eq!(r.route(&free, Modality::AudioVisual, 0, 0), Some(0));
         // home busy -> least-loaded free
         let home_busy = loads(&[(0, 900), (50, 0)]);
-        assert_eq!(r.route(&home_busy, Modality::Language, 0), Some(0));
+        assert_eq!(r.route(&home_busy, Modality::Language, 0, 0), Some(0));
+    }
+
+    #[test]
+    fn session_affinity_prefers_resident_model_then_falls_back() {
+        let mut r = Router::new(RoutePolicy::SessionAffinity);
+        let mut l = loads(&[(0, 10), (0, 900), (0, 0)]);
+        l[1].resident = Some(7);
+        // the warm shard wins even though it carries the most load
+        assert_eq!(r.route(&l, Modality::Vision, 7, 0), Some(1));
+        // a different model falls back to least-loaded free
+        assert_eq!(r.route(&l, Modality::Vision, 3, 0), Some(2));
+        // warm but busy -> fall back
+        let mut busy_warm = loads(&[(0, 10), (50, 900), (0, 0)]);
+        busy_warm[1].resident = Some(7);
+        assert_eq!(r.route(&busy_warm, Modality::Vision, 7, 0), Some(2));
+        // two warm shards tie-break on (busy, index)
+        let mut two_warm = loads(&[(0, 20), (0, 10), (0, 0)]);
+        two_warm[0].resident = Some(7);
+        two_warm[1].resident = Some(7);
+        assert_eq!(r.route(&two_warm, Modality::Vision, 7, 0), Some(1));
     }
 
     #[test]
     fn all_busy_routes_nowhere() {
         let mut r = Router::new(RoutePolicy::LeastLoaded);
         let busy = loads(&[(10, 0), (20, 0)]);
-        assert_eq!(r.route(&busy, Modality::Vision, 5), None);
+        assert_eq!(r.route(&busy, Modality::Vision, 0, 5), None);
         // and frees up once the clock passes busy_until
-        assert_eq!(r.route(&busy, Modality::Vision, 10), Some(0));
+        assert_eq!(r.route(&busy, Modality::Vision, 0, 10), Some(0));
     }
 }

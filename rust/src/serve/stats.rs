@@ -6,6 +6,7 @@
 use std::io::{self, Write};
 
 use crate::artifact::{ArtifactSink, JsonWriter};
+use crate::cim::OccupancyLedger;
 use crate::metrics::LatencyStats;
 use crate::util::json::Json;
 
@@ -41,6 +42,26 @@ impl ShardStats {
     }
 }
 
+/// One serving tenant's accounting over the run (present only when the
+/// config names tenants).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStats {
+    pub name: String,
+    /// The tenant's configured traffic/capacity weight.
+    pub weight: u64,
+    /// The tenant's latency SLO in cycles (0 = no SLO).
+    pub slo_cycles: u64,
+    pub submitted: u64,
+    pub served: u64,
+    pub rejected: u64,
+    /// Served requests whose latency exceeded `slo_cycles` (0 when the
+    /// tenant has no SLO).
+    pub slo_violations: u64,
+    /// Per-tenant latency sketch (same O(1)-memory estimator as the
+    /// run-level one).
+    pub latency: LatencyStats,
+}
+
 /// The fabric's per-run statistics.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeStats {
@@ -48,14 +69,16 @@ pub struct ServeStats {
     pub submitted: u64,
     /// Requests that completed service.
     pub served: u64,
-    /// Requests refused at admission (their modality queue was full).
+    /// Requests refused at admission (their modality queue was full or
+    /// their tenant exceeded its quota).
     pub rejected: u64,
     /// Batches dispatched to shards.
     pub batches: u64,
     /// Last completion cycle (or last arrival when nothing was served).
     pub makespan: u64,
     /// Per-request latency in cycles: completion - arrival (queueing
-    /// plus batch service).
+    /// plus batch service).  A streaming quantile sketch — O(1) memory
+    /// at any request count (`metrics::LatencyStats`).
     pub latency: LatencyStats,
     /// Largest admission-queue depth observed (bounded by the config's
     /// `queue_depth`).
@@ -64,6 +87,21 @@ pub struct ServeStats {
     /// dispatch), sampled at every arrival — ~0 on an idle fabric.
     pub mean_queue_depth: f64,
     pub per_shard: Vec<ShardStats>,
+    /// Per-tenant accounting; empty in single-tenant runs.
+    pub per_tenant: Vec<TenantStats>,
+    /// Served requests across all tenants whose latency exceeded their
+    /// tenant's SLO.
+    pub slo_violations: u64,
+    /// Batches whose first request reused the shard's resident macro
+    /// rewrites (session affinity — the CIM analog of prefix caching).
+    pub rewrite_reuse_batches: u64,
+    /// Cycles those warm batches saved vs cold pricing.
+    pub rewrite_reuse_cycles_saved: u64,
+    /// Macro write-port bits those warm batches avoided restreaming.
+    pub rewrite_reuse_write_bits: u64,
+    /// Aggregated `cim::OccupancyLedger` over every served request,
+    /// including `reused_write_bits` from session-affinity reuse.
+    pub occupancy: OccupancyLedger,
     /// Served-request-weighted rewrite-hidden ratio (each served
     /// request contributes its workload's ratio once); `None` under the
     /// analytic backend (it cannot observe overlap).
@@ -98,8 +136,8 @@ impl ServeStats {
         self.per_shard.iter().map(|s| s.busy).sum()
     }
 
-    /// Run-level scalars only (everything except the `shards` array) —
-    /// the JSONL `stats` row schema.
+    /// Run-level scalars only (everything except the `shards` and
+    /// `tenants` arrays) — the JSONL `stats` row schema.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("submitted", Json::int(self.submitted)),
@@ -112,6 +150,11 @@ impl ServeStats {
             ("latency", self.latency.to_json("cycles")),
             ("max_queue_depth", Json::int(self.max_queue_depth)),
             ("mean_queue_depth", Json::num(self.mean_queue_depth)),
+            ("slo_violations", Json::int(self.slo_violations)),
+            ("rewrite_reuse_batches", Json::int(self.rewrite_reuse_batches)),
+            ("rewrite_reuse_cycles_saved", Json::int(self.rewrite_reuse_cycles_saved)),
+            ("rewrite_reuse_write_bits", Json::int(self.rewrite_reuse_write_bits)),
+            ("occupancy", self.occupancy.to_json()),
             (
                 "rewrite_hidden_ratio",
                 match self.rewrite_hidden {
@@ -135,12 +178,30 @@ impl ServeStats {
         ])
     }
 
+    /// One tenant's row — the JSONL `tenant` row schema.
+    pub fn tenant_json(&self, t: &TenantStats) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(t.name.clone())),
+            ("weight", Json::int(t.weight)),
+            ("slo_cycles", Json::int(t.slo_cycles)),
+            ("submitted", Json::int(t.submitted)),
+            ("served", Json::int(t.served)),
+            ("rejected", Json::int(t.rejected)),
+            ("slo_violations", Json::int(t.slo_violations)),
+            ("latency", t.latency.to_json("cycles")),
+        ])
+    }
+
     pub fn to_json(&self) -> Json {
         match self.summary_json() {
             Json::Obj(mut m) => {
                 m.insert(
                     "shards".to_string(),
                     Json::Arr(self.per_shard.iter().map(|s| self.shard_json(s)).collect()),
+                );
+                m.insert(
+                    "tenants".to_string(),
+                    Json::Arr(self.per_tenant.iter().map(|t| self.tenant_json(t)).collect()),
                 );
                 Json::Obj(m)
             }
@@ -149,11 +210,13 @@ impl ServeStats {
     }
 
     /// Stream the full stats object (summary scalars + one `shards`
-    /// entry per shard).  The per-shard trees are built one at a time.
+    /// entry per shard + one `tenants` entry per tenant).  The
+    /// per-shard/per-tenant trees are built one at a time.
     pub fn write_stream<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
         w.begin_obj()?;
         // summary scalars, already sorted by the BTreeMap; "shards"
-        // slots between "served_per_megacycle" and "submitted"
+        // slots between "served_per_megacycle" and "slo_violations",
+        // "tenants" after "submitted"
         if let Json::Obj(m) = self.summary_json() {
             for (k, v) in m.iter().take_while(|(k, _)| k.as_str() < "shards") {
                 w.field(k, v)?;
@@ -164,7 +227,18 @@ impl ServeStats {
                 w.value(&self.shard_json(s))?;
             }
             w.end()?;
-            for (k, v) in m.iter().skip_while(|(k, _)| k.as_str() < "shards") {
+            for (k, v) in
+                m.iter().filter(|(k, _)| k.as_str() > "shards" && k.as_str() < "tenants")
+            {
+                w.field(k, v)?;
+            }
+            w.key("tenants")?;
+            w.begin_arr()?;
+            for t in &self.per_tenant {
+                w.value(&self.tenant_json(t))?;
+            }
+            w.end()?;
+            for (k, v) in m.iter().filter(|(k, _)| k.as_str() > "tenants") {
                 w.field(k, v)?;
             }
         }
@@ -200,6 +274,14 @@ impl ServeStats {
         if let Some(r) = self.rewrite_hidden {
             out.push_str(&format!("rewrite    : {:.1} % hidden behind compute\n", r * 100.0));
         }
+        if self.rewrite_reuse_batches > 0 {
+            out.push_str(&format!(
+                "reuse      : {} warm batches, {} cycles and {} write bits saved\n",
+                self.rewrite_reuse_batches,
+                self.rewrite_reuse_cycles_saved,
+                self.rewrite_reuse_write_bits
+            ));
+        }
         out.push_str(&format!(
             "cim util   : {:.1} % intra-macro (request-weighted)\n",
             self.intra_macro_utilization * 100.0
@@ -212,6 +294,14 @@ impl ServeStats {
                 s.batches,
                 s.served,
                 s.intra_macro_utilization() * 100.0
+            ));
+        }
+        for t in &self.per_tenant {
+            let (tp50, tp95, tp99) = t.latency.percentiles();
+            out.push_str(&format!(
+                "  tenant {} : {} submitted  {} served  {} rejected  {} SLO misses  \
+                 p50 {tp50}  p95 {tp95}  p99 {tp99}\n",
+                t.name, t.submitted, t.served, t.rejected, t.slo_violations
             ));
         }
         out
@@ -280,5 +370,53 @@ mod tests {
         let mut w = JsonWriter::pretty(&mut buf);
         s.write_stream(&mut w).unwrap();
         assert_eq!(String::from_utf8(buf).unwrap(), s.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn tenant_rows_stream_identically_and_account() {
+        let mut s = ServeStats {
+            submitted: 6,
+            served: 5,
+            rejected: 1,
+            slo_violations: 2,
+            rewrite_reuse_batches: 3,
+            rewrite_reuse_cycles_saved: 1234,
+            rewrite_reuse_write_bits: 9876,
+            per_tenant: vec![
+                TenantStats {
+                    name: "interactive".into(),
+                    weight: 3,
+                    slo_cycles: 100,
+                    submitted: 4,
+                    served: 3,
+                    rejected: 1,
+                    slo_violations: 2,
+                    ..Default::default()
+                },
+                TenantStats { name: "batch".into(), weight: 1, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        s.occupancy.reused_write_bits = 9876;
+        let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();
+        let tenants = parsed.get("tenants").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("name").and_then(|v| v.as_str()), Some("interactive"));
+        assert_eq!(tenants[0].get("slo_violations").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(parsed.get("rewrite_reuse_batches").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(
+            parsed
+                .get("occupancy")
+                .and_then(|o| o.get("reused_write_bits"))
+                .and_then(|v| v.as_u64()),
+            Some(9876)
+        );
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::pretty(&mut buf);
+        s.write_stream(&mut w).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), s.to_json().to_string_pretty());
+        let txt = s.render_text();
+        assert!(txt.contains("tenant interactive"));
+        assert!(txt.contains("warm batches"));
     }
 }

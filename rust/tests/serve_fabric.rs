@@ -173,6 +173,39 @@ fn tile_streaming_wins_serving_throughput_on_same_trace() {
     assert_eq!(j.get("engine").and_then(|v| v.as_str()), Some("event"));
 }
 
+/// Regression (bug): the replay parser used to accept any JSONL file
+/// with a serve header and silently truncate the run to however many
+/// request rows it carried — a serve-*report* artifact (zero request
+/// rows) replayed as an empty run.  The header's `requests` count is
+/// now load-bearing.
+#[test]
+fn replay_rejects_header_row_count_mismatch() {
+    let cfg = fabric_cfg(DataflowKind::TileStream, Backend::Analytic);
+    let events = serve::arrival_trace(&cfg);
+
+    // record a real trace, then truncate it mid-file
+    let mut buf = Vec::new();
+    let mut tw = serve::TraceWriter::begin(&mut buf, &cfg.config_json()).unwrap();
+    serve::simulate_trace(&cfg, &events, &mut tw).unwrap();
+    drop(tw);
+    let text = String::from_utf8(buf).unwrap();
+    let full = serve::read_trace(&text).expect("the untruncated trace parses");
+    assert_eq!(full.declared_requests, cfg.requests);
+
+    let cut: String =
+        text.lines().take(1 + cfg.requests as usize / 3).map(|l| format!("{l}\n")).collect();
+    let err = serve::read_trace(&cut).unwrap_err();
+    assert!(err.contains("request row"), "unexpected error: {err}");
+
+    // a serve-report JSONL artifact is not a replay trace: its header
+    // pins N requests but it carries zero request rows
+    let rep = serve::simulate(&cfg);
+    let mut jsonl = Vec::new();
+    rep.write_jsonl(&mut jsonl).unwrap();
+    let err = serve::read_trace(&String::from_utf8(jsonl).unwrap()).unwrap_err();
+    assert!(err.contains("0 request row"), "unexpected error: {err}");
+}
+
 #[test]
 fn routing_policies_all_drain_the_same_trace() {
     let mut served = Vec::new();

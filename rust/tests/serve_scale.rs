@@ -1,0 +1,254 @@
+//! Million-request-scale serving invariants: the hierarchical time-wheel
+//! scheduler is differentially tested against the binary-heap reference
+//! (identical pop orders, bit-identical serve artifacts), and the
+//! O(1)-memory latency sketch is property-tested against exact
+//! order-statistics within its documented `RELATIVE_ERROR` bound —
+//! including a 100k-sample reference case and lossless merging.
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use streamdcim::config::{presets, DataflowKind, RoutePolicy, SchedulerKind, TenantConfig};
+use streamdcim::engine::Backend;
+use streamdcim::metrics::LatencyStats;
+use streamdcim::prop_assert;
+use streamdcim::propcheck::Prop;
+use streamdcim::serve::{
+    self, ArrivalKind, EventQueue, HeapQueue, ServeConfig, TimeWheel,
+};
+
+#[test]
+fn prop_wheel_matches_heap_on_interleaved_workloads() {
+    Prop::new("serve: time-wheel pops the heap's exact total order")
+        .cases(30)
+        .check(|rng| {
+            let mut wheel = TimeWheel::new();
+            let mut heap = HeapQueue::new();
+            let mut cur = 0u64; // both queues' clock floor (last pop)
+            for _round in 0..24 {
+                for _ in 0..rng.range_usize(0, 8) {
+                    // jump magnitudes from same-cycle to ~2^40 so events
+                    // land on every wheel level
+                    let magnitude = rng.range_u64(0, 40);
+                    let cycle = cur + (rng.next_u64() % (1u64 << magnitude));
+                    let ev = (cycle, (rng.next_u64() % 2) as u8, rng.next_u64() % 1000);
+                    wheel.push(ev);
+                    heap.push(ev);
+                }
+                prop_assert!(
+                    wheel.len() == heap.len(),
+                    "len diverged: wheel {} heap {}",
+                    wheel.len(),
+                    heap.len()
+                );
+                for _ in 0..rng.range_usize(0, 6) {
+                    let w = wheel.pop();
+                    let h = heap.pop();
+                    prop_assert!(w == h, "pop diverged: wheel {w:?} heap {h:?}");
+                    match w {
+                        Some(ev) => cur = ev.0,
+                        None => break,
+                    }
+                }
+            }
+            loop {
+                let w = wheel.pop();
+                let h = heap.pop();
+                prop_assert!(w == h, "drain diverged: wheel {w:?} heap {h:?}");
+                if w.is_none() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_fabric_bit_identical_under_either_scheduler() {
+    Prop::new("serve: wheel and heap schedulers emit byte-identical artifacts")
+        .cases(12)
+        .check(|rng| {
+            let mut accel = presets::streamdcim_default();
+            accel.serving.shards = rng.range_u64(1, 4);
+            accel.serving.queue_depth = rng.range_u64(2, 24);
+            accel.serving.batch_size = rng.range_u64(1, 6);
+            accel.serving.arrival_seed = rng.next_u64();
+            accel.serving.policy =
+                RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len() - 1)];
+            if rng.range_u64(0, 1) == 1 {
+                accel.serving.tenants = vec![
+                    TenantConfig { name: "a".into(), weight: 3, slo_cycles: 100_000 },
+                    TenantConfig { name: "b".into(), weight: 1, slo_cycles: 0 },
+                ];
+            }
+            let arrival = ArrivalKind::ALL[rng.range_usize(0, ArrivalKind::ALL.len() - 1)];
+            let models = vec![presets::tiny_smoke()];
+            let base_gap = serve::auto_gap(&accel, Backend::Analytic, &models);
+            let mut cfg = ServeConfig {
+                accel,
+                models,
+                dataflow: DataflowKind::ALL[rng.range_usize(0, DataflowKind::ALL.len() - 1)],
+                backend: Backend::Analytic,
+                arrival,
+                requests: rng.range_u64(4, 64),
+                mean_gap: (base_gap / 4).max(1) << rng.range_u64(0, 4),
+            };
+            cfg.accel.serving.scheduler = SchedulerKind::Wheel;
+            let wheel = serve::simulate(&cfg).to_json().to_string_pretty();
+            cfg.accel.serving.scheduler = SchedulerKind::Heap;
+            let heap = serve::simulate(&cfg).to_json().to_string_pretty();
+            prop_assert!(wheel == heap, "scheduler changed the artifact for {}", cfg.id());
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_latency_sketch_within_documented_error_bound() {
+    Prop::new("metrics: sketch quantiles within RELATIVE_ERROR of exact, one-sided")
+        .cases(20)
+        .check(|rng| {
+            let n = rng.range_usize(1, 5000);
+            let mut vals = Vec::with_capacity(n);
+            let mut sketch = LatencyStats::default();
+            for _ in 0..n {
+                let magnitude = rng.range_u64(0, 48);
+                let v = (rng.next_u64() % (1u64 << magnitude)) + 1;
+                vals.push(v);
+                sketch.record(v);
+            }
+            vals.sort_unstable();
+            for p in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let k = ((n - 1) as f64 * p).round() as usize;
+                let exact = vals[k];
+                let est = sketch.percentile(p);
+                prop_assert!(
+                    est >= exact,
+                    "p{p}: estimate {est} below exact {exact} (n={n})"
+                );
+                let bound = (exact as f64 * (1.0 + LatencyStats::RELATIVE_ERROR)).ceil() as u64;
+                prop_assert!(
+                    est <= bound,
+                    "p{p}: estimate {est} above bound {bound} (exact {exact}, n={n})"
+                );
+            }
+            Ok(())
+        });
+}
+
+/// The acceptance reference: 100k samples, p50/p95/p99 within the
+/// documented bound of the exact order statistics, and merging two
+/// half-streams reproduces the whole-stream sketch exactly.
+#[test]
+fn sketch_tracks_exact_quantiles_on_100k_reference() {
+    const N: u64 = 100_000;
+    let mut whole = LatencyStats::default();
+    let mut left = LatencyStats::default();
+    let mut right = LatencyStats::default();
+    let mut vals = Vec::with_capacity(N as usize);
+    for i in 0..N {
+        // deterministic scrambled stream spanning ~7 decades
+        let v = i.wrapping_mul(2654435761).wrapping_add(12345) % 10_000_000 + 1;
+        whole.record(v);
+        if i < N / 2 {
+            left.record(v);
+        } else {
+            right.record(v);
+        }
+        vals.push(v);
+    }
+    vals.sort_unstable();
+    let (p50, p95, p99) = whole.percentiles();
+    for (p, est) in [(0.5, p50), (0.95, p95), (0.99, p99)] {
+        let k = ((N - 1) as f64 * p).round() as usize;
+        let exact = vals[k];
+        assert!(est >= exact, "p{p}: {est} < exact {exact}");
+        let bound = (exact as f64 * (1.0 + LatencyStats::RELATIVE_ERROR)).ceil() as u64;
+        assert!(est <= bound, "p{p}: {est} > bound {bound} (exact {exact})");
+    }
+    left.merge(&right);
+    assert_eq!(left, whole, "merging half-streams must be lossless");
+    assert_eq!(left.count(), N);
+}
+
+#[test]
+fn session_affinity_counts_rewrite_reuse() {
+    let mut accel = presets::streamdcim_default();
+    accel.serving.shards = 2;
+    accel.serving.policy = RoutePolicy::SessionAffinity;
+    accel.serving.queue_depth = 32;
+    accel.serving.batch_size = 4;
+    let models = vec![presets::tiny_smoke()];
+    let mean_gap = serve::auto_gap(&accel, Backend::Event, &models);
+    let cfg = ServeConfig {
+        accel,
+        models,
+        dataflow: DataflowKind::TileStream,
+        backend: Backend::Event,
+        arrival: ArrivalKind::Poisson,
+        requests: 64,
+        mean_gap,
+    };
+    let s = serve::simulate(&cfg).stats;
+    // single-model mix: every shard is warm after its first batch
+    assert!(s.rewrite_reuse_batches > 0, "sticky routing must hit warm shards");
+    assert!(s.rewrite_reuse_batches < s.batches, "the first batch per shard is cold");
+    assert_eq!(
+        s.occupancy.reused_write_bits, s.rewrite_reuse_write_bits,
+        "the occupancy ledger and the reuse counter must agree"
+    );
+    let mut cm = serve::CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
+    let c = cm.cost(&cfg.models[0]);
+    if c.warm_first < c.first {
+        assert!(s.rewrite_reuse_cycles_saved > 0, "warm batches must save cycles");
+        assert!(s.rewrite_reuse_write_bits > 0, "warm batches must save write bits");
+    }
+
+    // the same trace under least-loaded records no reuse — warm pricing
+    // is gated on the session-affinity policy
+    let mut cold_cfg = cfg.clone();
+    cold_cfg.accel.serving.policy = RoutePolicy::LeastLoaded;
+    let cold = serve::simulate(&cold_cfg).stats;
+    assert_eq!(cold.rewrite_reuse_batches, 0);
+    assert_eq!(cold.rewrite_reuse_cycles_saved, 0);
+    assert_eq!(cold.occupancy.reused_write_bits, 0);
+}
+
+#[test]
+fn tenant_quotas_keep_a_flooded_fabric_fair() {
+    let mut accel = presets::streamdcim_default();
+    accel.serving.shards = 1;
+    accel.serving.queue_depth = 8;
+    accel.serving.batch_size = 4;
+    accel.serving.tenants = vec![
+        TenantConfig { name: "interactive".into(), weight: 1, slo_cycles: 1 },
+        TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+    ];
+    let models = vec![presets::tiny_smoke()];
+    let cfg = ServeConfig {
+        accel,
+        models,
+        dataflow: DataflowKind::TileStream,
+        backend: Backend::Analytic,
+        arrival: ArrivalKind::Uniform,
+        requests: 400,
+        mean_gap: 1, // deep overload
+    };
+    let s = serve::simulate(&cfg).stats;
+    assert_eq!(s.per_tenant.len(), 2);
+    for t in &s.per_tenant {
+        assert!(t.submitted > 0, "tenant {} saw no traffic", t.name);
+        assert!(t.served > 0, "tenant {} starved under equal weights", t.name);
+        // a completed run drains every queue: admitted => served
+        assert_eq!(t.submitted, t.served + t.rejected, "{}", t.name);
+    }
+    let served: u64 = s.per_tenant.iter().map(|t| t.served).sum();
+    let rejected: u64 = s.per_tenant.iter().map(|t| t.rejected).sum();
+    assert_eq!(served, s.served);
+    assert_eq!(rejected, s.rejected);
+    // a 1-cycle SLO under deep overload is violated on every served
+    // request of that tenant
+    assert_eq!(s.per_tenant[0].slo_violations, s.per_tenant[0].served);
+    assert_eq!(s.slo_violations, s.per_tenant[0].slo_violations);
+    assert_eq!(s.per_tenant[0].latency.count(), s.per_tenant[0].served);
+}
