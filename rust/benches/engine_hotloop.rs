@@ -1,0 +1,186 @@
+//! CI bench-smoke: time the flattened event-engine hot loop on the
+//! perf-gate smoke schedules and the DSE pricing path, and emit a
+//! machine-readable artifact (`bench_engine_hotloop.json`) so the
+//! engine's events/sec and the explorer's points/sec are tracked
+//! across commits next to the sweep numbers.
+//!
+//! Two rate families:
+//! * events/sec — [`engine::event::simulate`] (the untraced hot loop)
+//!   over every perf-gate smoke schedule; `simulate_traced` is timed
+//!   beside it so the artifact records what skipping Gantt-segment
+//!   collection buys.
+//! * points/sec — [`dse::evaluate`] over `dse::space::perfgate_points()`
+//!   (scenario pricing through the content-addressed schedule cache
+//!   plus the serving-throughput half, exactly the two-phase explorer's
+//!   inner loop).
+//!
+//! Measured rates are wall-clock and vary per host; the `schedules`
+//! rows (task counts, makespans) are deterministic and byte-stable, so
+//! artifact diffs separate "the machine was slow" from "the engine
+//! changed".
+//!
+//! Knobs (env):
+//! * `BENCH_ENGINE_ITERS` — timed iterations per sample batch (default 5).
+//! * `BENCH_ENGINE_OUT`   — artifact path (default
+//!   `bench_engine_hotloop.json`, resolved against the workspace root
+//!   when relative, matching `sweep_smoke`).
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use std::path::Path;
+use std::time::Duration;
+
+use streamdcim::benchkit::{row, section, Bench};
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::dse;
+use streamdcim::engine::{event, schedule};
+use streamdcim::util::json::Json;
+
+/// Resolve a relative artifact path against the workspace root (the
+/// parent of this package's manifest dir), never cargo's bench cwd.
+fn workspace_rooted(path: &str) -> std::path::PathBuf {
+    let p = Path::new(path);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(p)
+}
+
+fn main() {
+    let iters: u32 = std::env::var("BENCH_ENGINE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let out_path =
+        std::env::var("BENCH_ENGINE_OUT").unwrap_or_else(|_| "bench_engine_hotloop.json".into());
+    let out_path = workspace_rooted(&out_path);
+
+    section("event-engine hot loop (perf-gate smoke schedules)");
+    let accel = presets::streamdcim_default();
+    let shapes = [presets::tiny_smoke(), presets::ragged_edge()];
+    let mut ids = Vec::new();
+    let mut schedules = Vec::new();
+    for model in &shapes {
+        for kind in DataflowKind::ALL {
+            ids.push(format!("{}/{}", model.name, kind.slug()));
+            schedules.push(schedule::build(kind, &accel, model));
+        }
+    }
+    // one start + one completion per task is what the ready-queue loop
+    // actually processes — the events/sec denominator
+    let total_tasks: u64 = schedules.iter().map(|s| s.tasks.len() as u64).sum();
+    let total_events = 2 * total_tasks;
+    row("schedules", schedules.len());
+    row("tasks", total_tasks);
+
+    let untraced = Bench::new("engine/simulate/untraced")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| {
+            for s in &schedules {
+                event::simulate(s);
+            }
+        });
+    let traced = Bench::new("engine/simulate/traced")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| {
+            for s in &schedules {
+                event::simulate_traced(s);
+            }
+        });
+    let events_per_sec = total_events as f64 / (untraced.mean_ns * 1e-9);
+    row("events/sec (untraced)", format!("{events_per_sec:.0}"));
+    row(
+        "traced/untraced",
+        format!("{:.2}x", traced.mean_ns / untraced.mean_ns.max(1.0)),
+    );
+
+    section("dse pricing path (perfgate points, serving half included)");
+    let points = dse::space::perfgate_points();
+    let model = presets::tiny_smoke();
+    // the first pass warms the process-wide schedule cache; timed
+    // passes then measure exactly what phase 2 of the explorer pays
+    // when re-pricing a survivor (cache hit + serving simulation)
+    let priced = Bench::new("dse/evaluate/perfgate-points")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| {
+            for p in &points {
+                dse::evaluate(p, &accel, &model, 32);
+            }
+        });
+    let points_per_sec = points.len() as f64 / (priced.mean_ns * 1e-9);
+    row("points/sec", format!("{points_per_sec:.1}"));
+
+    // smoke-check the engine's determinism contract on every CI run:
+    // untraced, traced, and repeated runs agree on every makespan
+    let makespans: Vec<u64> = schedules.iter().map(|s| event::simulate(s).makespan).collect();
+    for (i, s) in schedules.iter().enumerate() {
+        assert_eq!(event::simulate(s).makespan, makespans[i], "{}: rerun diverged", ids[i]);
+        assert_eq!(
+            event::simulate_traced(s).makespan,
+            makespans[i],
+            "{}: traced diverged from untraced",
+            ids[i]
+        );
+    }
+    row("determinism", "untraced == traced == rerun (all makespans)");
+
+    let bench_json = |r: &streamdcim::benchkit::BenchResult| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+        ])
+    };
+    // deterministic rows first, measured rates after — diff the former,
+    // trend the latter
+    let artifact = Json::obj(vec![
+        ("kind", Json::str("engine-hotloop")),
+        (
+            "schedules",
+            Json::arr(
+                schedules
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        Json::obj(vec![
+                            ("id", Json::str(ids[i].clone())),
+                            ("tasks", Json::int(s.tasks.len() as u64)),
+                            ("makespan", Json::int(makespans[i])),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total_events", Json::int(total_events)),
+        (
+            "benches",
+            Json::arr(vec![bench_json(&untraced), bench_json(&traced), bench_json(&priced)]),
+        ),
+        (
+            "rates",
+            Json::obj(vec![
+                ("events_per_sec", Json::num(events_per_sec)),
+                ("points_per_sec", Json::num(points_per_sec)),
+                (
+                    "traced_over_untraced",
+                    Json::num(traced.mean_ns / untraced.mean_ns.max(1.0)),
+                ),
+            ]),
+        ),
+    ]);
+    let file = std::fs::File::create(&out_path).expect("create bench artifact");
+    let mut out = std::io::BufWriter::new(file);
+    streamdcim::artifact::JsonWriter::pretty(&mut out)
+        .value(&artifact)
+        .and_then(|_| std::io::Write::flush(&mut out))
+        .expect("write bench artifact");
+    row("artifact", out_path.display());
+}

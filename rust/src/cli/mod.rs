@@ -30,8 +30,17 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Flags that take no value.
-const SWITCHES: &[&str] =
-    &["trace", "json", "no-pruning", "gantt", "segments", "matrix", "forbid-bootstrap"];
+const SWITCHES: &[&str] = &[
+    "trace",
+    "json",
+    "no-pruning",
+    "gantt",
+    "segments",
+    "matrix",
+    "forbid-bootstrap",
+    "two-phase",
+    "exhaustive",
+];
 
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
     let mut it = argv.into_iter().peekable();
@@ -123,6 +132,10 @@ COMMANDS
                --config <file.toml>     (utilization: intra-macro CIM
                                          occupancy by dataflow, cim::;
                                          frontier: a small dse run)
+               --from <dse.jsonl>  (frontier only) rebuild the figure
+                                   from a recorded dse JSONL artifact
+                                   through the pull reader instead of
+                                   re-running the exploration
   dse        deterministic design-space exploration (Pareto frontier)
                --model <preset>    workload every point is priced on
                                    (default base)
@@ -135,6 +148,13 @@ COMMANDS
                --engine analytic|event|both          (default analytic)
                --requests <n>      serving-trace length per point
                                    (48; 0 = skip serving pricing)
+               --exhaustive        single-phase brute force (default is
+                                   surrogate-guided two-phase pruning;
+                                   the frontier is byte-identical either
+                                   way — see docs/dse.md)
+               --slack <f>         two-phase dominance slack (0.25):
+                                   surrogate margin below which a point
+                                   is never pruned
                --threads <n>       worker threads (artifact identical
                                    for any value)
                --seed <n>          sampling seed (default 42)

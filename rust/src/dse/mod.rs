@@ -7,7 +7,8 @@
 //! seeded-sample-trims, under `--budget`) the space of
 //! `cim::MacroGeometry` x `cim::ModePolicy` x dataflow x engine backend
 //! x serving knobs ([`space`]), prices every point through the exact
-//! same paths `sweep` and `serve` use — [`crate::sweep::Scenario`] for
+//! same paths `sweep` and `serve` use — [`crate::serve::CostModel`]
+//! (backed by the process-wide content-addressed schedule cache) for
 //! cycles/energy/utilization, [`crate::energy::area::AreaModel`] for
 //! area, [`crate::serve::simulate`] for serving throughput — and emits
 //! a ranked multi-objective artifact with the exact Pareto frontier
@@ -16,9 +17,26 @@
 //! lower bound on the event engine, so crossing backends would
 //! trivially exclude every event measurement from the frontier.
 //!
+//! # Two-phase (surrogate-guided) exploration
+//!
+//! By default the explorer runs in two phases.  **Phase 1** prices
+//! every selected point with the *analytic* backend as a surrogate and
+//! prunes points that a same-backend competitor beats by more than the
+//! configured dominance slack in every approximate objective
+//! ([`pareto::dominates_with_slack`]; area and utilization are
+//! backend-invariant and compared exactly).  **Phase 2** re-prices the
+//! survivors with their real backends and computes the frontier over
+//! them.  Because the analytic model under-prices event cycles by a
+//! bounded stall factor, a slack of [`DEFAULT_DOMINANCE_SLACK`] keeps
+//! every true frontier point alive — the two-phase frontier artifact is
+//! **byte-identical** to the brute-force one (`tests/dse_frontier.rs`,
+//! the `dse-smoke` CI job's `cmp`), while dominated regions skip the
+//! expensive event simulation entirely.  `--exhaustive` (or
+//! `two_phase: false`) restores single-phase brute force.
+//!
 //! Determinism contract (shared with `sweep` and `serve`): point
-//! selection happens before any parallelism, every evaluation is a pure
-//! function of its [`DsePoint`], and results are reassembled in
+//! selection and pruning happen in canonical order, every evaluation is
+//! a pure function of its [`DsePoint`], and results are reassembled in
 //! canonical order by [`crate::exec::run_ordered`] — so the artifact is
 //! **bit-identical for any `--threads` value** (`tests/dse_frontier.rs`,
 //! the `dse-smoke` CI job's byte-level `cmp`).
@@ -38,9 +56,11 @@
 //!     budget: 6,
 //!     serve_requests: 8,
 //!     seed: 42,
+//!     two_phase: true,
+//!     dominance_slack: dse::DEFAULT_DOMINANCE_SLACK,
 //! };
 //! let report = dse::explore(&cfg, 2);
-//! assert_eq!(report.rows.len(), 6);
+//! assert_eq!(report.rows.len() + report.pruned, 6);
 //! let frontier: Vec<_> = report.rows.iter().filter(|r| r.on_frontier).collect();
 //! assert!(!frontier.is_empty());
 //! assert!(frontier.iter().all(|r| r.dominated_by == 0));
@@ -49,8 +69,8 @@
 pub mod pareto;
 pub mod space;
 
-pub use pareto::{dominates, frontier_indices, Objective};
-pub use space::{default_point, DsePoint, GeometryVariant, ServingVariant};
+pub use pareto::{dominates, dominates_with_slack, frontier_indices, Objective};
+pub use space::{default_point, DsePoint, GeometryVariant, ServingVariant, TenancyVariant};
 
 use std::io::{self, Write};
 
@@ -60,8 +80,16 @@ use crate::energy::area::AreaModel;
 use crate::engine::Backend;
 use crate::exec;
 use crate::serve;
-use crate::sweep::Scenario;
 use crate::util::json::Json;
+
+/// Default dominance slack of the two-phase explorer: a surrogate-priced
+/// point is pruned only when a competitor beats it by >25% in every
+/// approximate objective.  Safe while event-engine stall inflation over
+/// the analytic lower bound stays under `slack / (1 - slack)` = 33% —
+/// comfortably above what the schedules in this repo exhibit, and
+/// re-verified empirically by the frontier byte-equality test and the
+/// `dse-smoke` CI `cmp`.
+pub const DEFAULT_DOMINANCE_SLACK: f64 = 0.25;
 
 /// The five metrics every design point is priced on, whatever subset of
 /// them the frontier ranks.
@@ -103,6 +131,15 @@ pub struct DseConfig {
     pub serve_requests: u64,
     /// Sampling + shard-shuffle seed (never affects a point's price).
     pub seed: u64,
+    /// Surrogate-guided two-phase exploration (the default): phase 1
+    /// prices with the analytic backend and slack-prunes dominated
+    /// regions, phase 2 re-prices the survivors with the real backends.
+    /// `false` = exhaustive single-phase brute force.
+    pub two_phase: bool,
+    /// Pruning safety margin for the approximate objectives
+    /// ([`DEFAULT_DOMINANCE_SLACK`]; exact objectives always compare at
+    /// margin 0).  Larger = more conservative (less pruning).
+    pub dominance_slack: f64,
 }
 
 /// One priced design point of the exploration.
@@ -125,6 +162,14 @@ pub struct DseReport {
     /// Size of the full (untrimmed) space.
     pub space_size: usize,
     pub serve_requests: u64,
+    /// Whether the surrogate phase ran ([`DseConfig::two_phase`]).
+    pub two_phase: bool,
+    /// The slack the surrogate phase pruned with (recorded even when
+    /// `two_phase` is false, for artifact self-description).
+    pub dominance_slack: f64,
+    /// Points the surrogate phase pruned before real pricing (0 in
+    /// exhaustive mode).  `rows.len() + pruned` = points selected.
+    pub pruned: usize,
     /// Priced points, ranked: ascending `dominated_by`, then ascending
     /// objective costs (lexicographic in objective order), then id.
     pub rows: Vec<DseRow>,
@@ -133,14 +178,20 @@ pub struct DseReport {
     pub frontier: Vec<String>,
 }
 
-/// Price one design point on `model`: one scenario run for
-/// cycles/energy/utilization, the area model for mm^2, and one serving
-/// simulation (near-saturation Poisson trace of `serve_requests`) for
-/// served/Mcycle.  `serve_requests == 0` skips the serving simulation
-/// (served/Mcycle reported as 0) for callers that only need the
-/// per-run metrics.  Pure — the same inputs always price identically,
-/// which is what lets the perf gate pin two of these
-/// (`space::perfgate_points`).
+/// Price one design point on `model`: one [`serve::CostModel`] pricing
+/// for cycles/energy/utilization, the area model for mm^2, and one
+/// serving simulation (near-saturation Poisson trace of
+/// `serve_requests`) for served/Mcycle.  Routing the per-run metrics
+/// through `CostModel` means every pricing goes through the
+/// process-wide content-addressed schedule cache
+/// (`serve::cost::schedule_cache_key`): design points that differ only
+/// in serving knobs share one simulation, and re-pricing a survivor in
+/// phase 2 on the same backend is a cache hit.  `serve_requests == 0`
+/// skips the serving simulation (served/Mcycle reported as 0) for
+/// callers that only need the per-run metrics.  Pure — the same inputs
+/// always price identically (cached or cold; property-tested in
+/// `tests/proptests.rs`), which is what lets the perf gate pin two of
+/// these (`space::perfgate_points`).
 pub fn evaluate(
     point: &DsePoint,
     base: &AccelConfig,
@@ -148,9 +199,7 @@ pub fn evaluate(
     serve_requests: u64,
 ) -> PointMetrics {
     let accel = point.apply(base);
-    let report = Scenario::new(accel.clone(), model.clone(), point.dataflow, "dse")
-        .with_backend(point.backend)
-        .run_report();
+    let cost = serve::CostModel::new(accel.clone(), point.dataflow, point.backend).cost(model);
     let area_mm2 = AreaModel::default().total_mm2(&accel);
     let served_per_mcycle = if serve_requests == 0 {
         0.0
@@ -169,23 +218,91 @@ pub fn evaluate(
         serve_rep.stats.served_per_megacycle()
     };
     PointMetrics {
-        cycles: report.cycles,
-        energy_mj: report.energy.total_mj(),
+        cycles: cost.first,
+        energy_mj: cost.energy_mj,
         area_mm2,
-        intra_macro_utilization: report.intra_macro_utilization(),
+        intra_macro_utilization: cost.intra_macro_utilization,
         served_per_mcycle,
     }
 }
 
+/// Phase 1 of the two-phase explorer: price every point with the
+/// analytic backend as a surrogate and drop the points a same-backend
+/// competitor slack-dominates.  The paper's default design point (per
+/// backend) is never pruned — the artifact's comparability promise
+/// ("the default point survives any budget") holds in both modes.
+/// Pruning is sound for the *frontier*: a pruned point is strictly
+/// dominated in real pricing too (the slack covers the surrogate's
+/// error), and by transitivity some survivor dominates everything a
+/// pruned point dominated.
+fn surrogate_survivors(
+    cfg: &DseConfig,
+    points: Vec<DsePoint>,
+    threads: usize,
+) -> Vec<DsePoint> {
+    if points.len() <= 1 {
+        return points;
+    }
+    // serving throughput only matters to pruning when it is ranked
+    let requests =
+        if cfg.objectives.contains(&Objective::Throughput) { cfg.serve_requests } else { 0 };
+    let jobs: Vec<Box<dyn FnOnce() -> PointMetrics + Send>> = points
+        .iter()
+        .map(|p| {
+            let mut sp = *p;
+            sp.backend = Backend::Analytic;
+            let base = cfg.accel.clone();
+            let model = cfg.model.clone();
+            Box::new(move || evaluate(&sp, &base, &model, requests))
+                as Box<dyn FnOnce() -> PointMetrics + Send>
+        })
+        .collect();
+    let metrics = exec::run_ordered(jobs, threads, cfg.seed);
+    let costs: Vec<Vec<f64>> = metrics
+        .iter()
+        .map(|m| cfg.objectives.iter().map(|o| o.cost(m)).collect())
+        .collect();
+    let slacks: Vec<f64> = cfg
+        .objectives
+        .iter()
+        .map(|o| if o.surrogate_exact() { 0.0 } else { cfg.dominance_slack })
+        .collect();
+    let keep: Vec<bool> = (0..points.len())
+        .map(|i| {
+            points[i] == space::default_point(points[i].backend)
+                || !costs.iter().enumerate().any(|(j, c)| {
+                    points[j].backend == points[i].backend
+                        && pareto::dominates_with_slack(c, &costs[i], &slacks)
+                })
+        })
+        .collect();
+    let mut i = 0;
+    let mut out = points;
+    out.retain(|_| {
+        let k = keep[i];
+        i += 1;
+        k
+    });
+    out
+}
+
 /// Run the exploration on `threads` workers.  Candidate selection is
-/// done up front (single-threaded, seeded), pricing fans out through
+/// done up front (single-threaded, seeded), the optional surrogate
+/// phase and the real pricing both fan out through
 /// [`exec::run_ordered`], and ranking is a pure function of the priced
 /// metrics — so the report is bit-identical for any `threads`.
 pub fn explore(cfg: &DseConfig, threads: usize) -> DseReport {
     let explore_serving = cfg.objectives.contains(&Objective::Throughput);
     let all = space::enumerate(&cfg.backends, explore_serving);
     let space_size = all.len();
-    let points = space::select(all, cfg.budget, cfg.seed);
+    let selected = space::select(all, cfg.budget, cfg.seed);
+    let n_selected = selected.len();
+    let points = if cfg.two_phase {
+        surrogate_survivors(cfg, selected, threads)
+    } else {
+        selected
+    };
+    let pruned = n_selected - points.len();
 
     let jobs: Vec<Box<dyn FnOnce() -> PointMetrics + Send>> = points
         .iter()
@@ -261,6 +378,9 @@ pub fn explore(cfg: &DseConfig, threads: usize) -> DseReport {
         objectives: cfg.objectives.clone(),
         space_size,
         serve_requests: cfg.serve_requests,
+        two_phase: cfg.two_phase,
+        dominance_slack: cfg.dominance_slack,
+        pruned,
         rows,
         frontier,
     }
@@ -288,6 +408,8 @@ fn row_json(r: &DseRow, objectives: &[Objective], rank: usize) -> Json {
                 ("shards", Json::int(r.point.serving.shards)),
                 ("policy", Json::str(r.point.serving.policy.slug())),
                 ("batch", Json::int(r.point.serving.batch)),
+                ("scheduler", Json::str(r.point.serving.scheduler.slug())),
+                ("tenancy", Json::str(r.point.serving.tenancy.slug())),
             ]),
         ),
         ("engine", Json::str(r.point.backend.slug())),
@@ -338,6 +460,9 @@ impl DseReport {
             ("objectives", self.objectives_json()),
             ("space_size", Json::int(self.space_size as u64)),
             ("evaluated", Json::int(self.rows.len() as u64)),
+            ("two_phase", Json::Bool(self.two_phase)),
+            ("dominance_slack", Json::num(self.dominance_slack)),
+            ("pruned", Json::int(self.pruned as u64)),
             ("serve_requests", Json::int(self.serve_requests)),
             ("frontier_size", Json::int(self.frontier.len() as u64)),
             (
@@ -385,11 +510,13 @@ impl DseReport {
 
     /// Stream the ranked artifact — byte-identical to
     /// `to_json().to_string_pretty()`, one point tree at a time.
-    /// Sorted keys: evaluated, frontier, frontier_size, kind, model,
-    /// objectives, points, serve_requests, space_size.
+    /// Sorted keys: dominance_slack, evaluated, frontier, frontier_size,
+    /// kind, model, objectives, points, pruned, serve_requests,
+    /// space_size, two_phase.
     pub fn write_json<W: Write>(&self, out: W) -> io::Result<()> {
         let mut w = JsonWriter::pretty(out);
         w.begin_obj()?;
+        w.field("dominance_slack", &Json::num(self.dominance_slack))?;
         w.key("evaluated")?;
         w.u64_val(self.rows.len() as u64)?;
         w.key("frontier")?;
@@ -411,15 +538,22 @@ impl DseReport {
             RankedRow { row: r, objectives: &self.objectives, rank: i + 1 }.emit(&mut w)?;
         }
         w.end()?;
+        w.key("pruned")?;
+        w.u64_val(self.pruned as u64)?;
         w.key("serve_requests")?;
         w.u64_val(self.serve_requests)?;
         w.key("space_size")?;
         w.u64_val(self.space_size as u64)?;
+        w.field("two_phase", &Json::Bool(self.two_phase))?;
         w.end()
     }
 
     /// Stream the frontier-only artifact — byte-identical to
-    /// `frontier_json().to_string_pretty()`.
+    /// `frontier_json().to_string_pretty()`.  Deliberately carries *no*
+    /// two-phase/pruning fields: the frontier is mode-invariant (the
+    /// surrogate phase never prunes a frontier point), and the CI
+    /// `dse-smoke` job `cmp`s the `--two-phase` and `--exhaustive`
+    /// frontier artifacts byte-for-byte to prove it.
     pub fn write_frontier_json<W: Write>(&self, out: W) -> io::Result<()> {
         let mut w = JsonWriter::pretty(out);
         w.begin_obj()?;
@@ -451,6 +585,9 @@ impl DseReport {
                 ("objectives", self.objectives_json()),
                 ("space_size", Json::int(self.space_size as u64)),
                 ("evaluated", Json::int(self.rows.len() as u64)),
+                ("two_phase", Json::Bool(self.two_phase)),
+                ("dominance_slack", Json::num(self.dominance_slack)),
+                ("pruned", Json::int(self.pruned as u64)),
                 ("serve_requests", Json::int(self.serve_requests)),
                 ("frontier_size", Json::int(self.frontier.len() as u64)),
             ]),
@@ -472,6 +609,12 @@ impl DseReport {
             self.model,
             objs.join(","),
         ));
+        if self.two_phase {
+            out.push_str(&format!(
+                "two-phase: {} point(s) pruned by the analytic surrogate (dominance slack {:.2})\n",
+                self.pruned, self.dominance_slack
+            ));
+        }
         out.push_str(&format!(
             "frontier: {} non-dominated point(s)\n\n",
             self.frontier.len()
@@ -506,6 +649,7 @@ impl DseReport {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::sweep::Scenario;
 
     fn tiny_cfg(budget: usize, objectives: Vec<Objective>) -> DseConfig {
         DseConfig {
@@ -516,6 +660,8 @@ mod tests {
             budget,
             serve_requests: 8,
             seed: 42,
+            two_phase: false,
+            dominance_slack: DEFAULT_DOMINANCE_SLACK,
         }
     }
 
@@ -591,6 +737,43 @@ mod tests {
         let thr = explore(&tiny_cfg(6, vec![Objective::Throughput]), 1);
         assert_eq!(thr.space_size, space::enumerate(&[Backend::Analytic], true).len());
         assert!(thr.space_size > plain.space_size);
+    }
+
+    #[test]
+    fn two_phase_prunes_and_preserves_the_frontier() {
+        // analytic backend: the surrogate *is* the real pricing, so
+        // slack-pruned points are strictly dominated and frontier
+        // equality is exact by construction — the event-backend version
+        // of this guarantee lives in tests/dse_frontier.rs
+        let mut fast_cfg = tiny_cfg(0, vec![Objective::Cycles, Objective::Area]);
+        fast_cfg.two_phase = true;
+        let fast = explore(&fast_cfg, 2);
+        let slow = explore(&tiny_cfg(0, vec![Objective::Cycles, Objective::Area]), 2);
+        assert_eq!(fast.frontier, slow.frontier);
+        assert_eq!(
+            fast.frontier_json().to_string_pretty(),
+            slow.frontier_json().to_string_pretty(),
+            "frontier artifact must be mode-invariant"
+        );
+        assert_eq!(fast.rows.len() + fast.pruned, slow.rows.len());
+        assert_eq!(slow.pruned, 0, "exhaustive mode never prunes");
+        assert!(fast.render_text().contains("two-phase:"));
+    }
+
+    #[test]
+    fn surrogate_phase_prunes_dominated_regions_but_keeps_the_default() {
+        let mut c = tiny_cfg(0, vec![Objective::Cycles]);
+        c.two_phase = true;
+        c.serve_requests = 0;
+        let rep = explore(&c, 2);
+        assert!(rep.two_phase);
+        assert!(
+            rep.pruned > 0,
+            "the cycle spread across geometries/dataflows must exceed the slack band"
+        );
+        // the paper's default point survives pruning even when dominated
+        let default_id = default_point(Backend::Analytic).id();
+        assert!(rep.rows.iter().any(|r| r.point.id() == default_id));
     }
 
     #[test]

@@ -103,6 +103,17 @@ impl Objective {
         matches!(self, Objective::Utilization | Objective::Throughput)
     }
 
+    /// True when the analytic surrogate prices this objective *exactly*:
+    /// area is a pure function of the accelerator config, and the
+    /// occupancy ledger behind utilization is schedule-derived, so both
+    /// are backend-invariant (`serve::cost` tests pin the latter).  The
+    /// two-phase explorer applies its dominance slack only to the
+    /// approximate objectives (cycles, energy, throughput), comparing
+    /// exact coordinates at margin zero.
+    pub fn surrogate_exact(&self) -> bool {
+        matches!(self, Objective::Area | Objective::Utilization)
+    }
+
     /// The raw metric value of this objective.
     pub fn raw(&self, m: &PointMetrics) -> f64 {
         match self {
@@ -139,6 +150,23 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
         }
     }
     strict
+}
+
+/// Dominance with a per-coordinate safety margin: `a` slack-dominates
+/// `b` iff `a` strictly dominates `b` *and* beats it by at least
+/// `slack[k] * |b[k]|` in every coordinate `k`.  A coordinate with
+/// slack 0 degenerates to the plain `a[k] <= b[k]` check, so exact
+/// objectives still participate without demanding an impossible margin
+/// on ties.  This is the two-phase explorer's pruning predicate: a
+/// surrogate-priced point may only be discarded when a same-backend
+/// competitor beats it by more than the surrogate's worst-case error.
+pub fn dominates_with_slack(a: &[f64], b: &[f64], slack: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), slack.len(), "one slack per objective");
+    dominates(a, b)
+        && a.iter()
+            .zip(b.iter())
+            .zip(slack.iter())
+            .all(|((x, y), s)| *x <= y - s * y.abs())
 }
 
 /// Indices of the non-dominated points of `costs`, in ascending input
@@ -200,6 +228,37 @@ mod tests {
         assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "ties never dominate");
         assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "trade-offs never dominate");
         assert!(!dominates(&[2.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn slack_dominance_demands_a_margin_only_where_asked() {
+        // 25% margin on the first coordinate, exact on the second
+        let s = [0.25, 0.0];
+        assert!(dominates_with_slack(&[70.0, 5.0], &[100.0, 5.0], &s));
+        assert!(
+            !dominates_with_slack(&[80.0, 5.0], &[100.0, 5.0], &s),
+            "20% gap is inside the slack band"
+        );
+        assert!(
+            !dominates_with_slack(&[70.0, 6.0], &[100.0, 5.0], &s),
+            "slack dominance still requires plain dominance"
+        );
+        // exact coordinates tolerate ties; negated (maximized) costs
+        // measure the margin against |b|
+        assert!(dominates_with_slack(&[-2.0, 5.0], &[-1.0, 5.0], &s));
+        assert!(!dominates_with_slack(&[-1.2, 5.0], &[-1.0, 5.0], &s));
+        // zero slack everywhere is plain strict dominance
+        assert!(dominates_with_slack(&[1.0, 1.0], &[1.0, 2.0], &[0.0, 0.0]));
+        assert!(!dominates_with_slack(&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]));
+    }
+
+    #[test]
+    fn surrogate_exact_objectives_are_backend_invariant_ones() {
+        assert!(Objective::Area.surrogate_exact());
+        assert!(Objective::Utilization.surrogate_exact());
+        assert!(!Objective::Cycles.surrogate_exact());
+        assert!(!Objective::Energy.surrogate_exact());
+        assert!(!Objective::Throughput.surrogate_exact());
     }
 
     #[test]

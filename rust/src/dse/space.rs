@@ -11,7 +11,9 @@
 //! against the paper's configuration at any budget.
 
 use crate::cim::ModePolicy;
-use crate::config::{AccelConfig, DataflowKind, RoutePolicy};
+use crate::config::{
+    AccelConfig, DataflowKind, RoutePolicy, SchedulerKind, TenantConfig,
+};
 use crate::engine::Backend;
 use crate::util::prng::Rng;
 
@@ -28,17 +30,55 @@ pub struct GeometryVariant {
     pub write_port_bits: u64,
 }
 
+/// A named tenant mix of the serving fabric (`ServingConfig::tenants`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenancyVariant {
+    /// One anonymous tenant: no admission quotas, no SLO accounting.
+    Single,
+    /// An interactive/batch mix: a weight-3 interactive tenant with a
+    /// latency SLO sharing the fabric with a weight-1 batch tenant
+    /// (no SLO) — quota-bounded admission shifts what gets served.
+    InteractiveBatch,
+}
+
+impl TenancyVariant {
+    /// Stable slug used in artifacts.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            TenancyVariant::Single => "single",
+            TenancyVariant::InteractiveBatch => "interactive-batch",
+        }
+    }
+
+    /// The `ServingConfig::tenants` entries this mix materializes.
+    pub fn tenants(&self) -> Vec<TenantConfig> {
+        match self {
+            TenancyVariant::Single => Vec::new(),
+            TenancyVariant::InteractiveBatch => vec![
+                TenantConfig { name: "interactive".into(), weight: 3, slo_cycles: 500_000 },
+                TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+            ],
+        }
+    }
+}
+
 /// A named serving-fabric operating point (shards x route policy x
-/// batch bound).  Only explored when a serving objective is selected —
-/// serving knobs cannot move cycles/energy/area/utilization, so
-/// enumerating them there would only duplicate frontier points.
+/// batch bound x event scheduler x tenant mix).  Only explored when a
+/// serving objective is selected — serving knobs cannot move
+/// cycles/energy/area/utilization, so enumerating them there would only
+/// duplicate frontier points.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServingVariant {
-    /// Stable slug used in point ids (`sN-policy-bB`).
+    /// Stable slug used in point ids (`sN-policy-bB[-mt]`).
     pub slug: &'static str,
     pub shards: u64,
     pub policy: RoutePolicy,
     pub batch: u64,
+    /// Fabric event scheduler.  Differentially proven bit-identical
+    /// (`SchedulerKind`), so the axis is exercised on an otherwise
+    /// distinct operating point rather than duplicating one.
+    pub scheduler: SchedulerKind,
+    pub tenancy: TenancyVariant,
 }
 
 /// One fully-specified design point of the explored space.
@@ -76,6 +116,8 @@ impl DsePoint {
         cfg.serving.shards = self.serving.shards;
         cfg.serving.policy = self.serving.policy;
         cfg.serving.batch_size = self.serving.batch;
+        cfg.serving.scheduler = self.serving.scheduler;
+        cfg.serving.tenants = self.serving.tenancy.tenants();
         cfg
     }
 }
@@ -138,45 +180,90 @@ pub fn geometry_variants() -> Vec<GeometryVariant> {
     ]
 }
 
-/// The serving axis (shards x route policy x batch bound), default
-/// fabric first.
+/// The serving axis (shards x route policy x batch bound x scheduler x
+/// tenant mix), default fabric first.  The first six operating points
+/// predate the session-affinity/tenancy knobs and keep their slugs (the
+/// perf gate pins point ids built from index 0).
 pub fn serving_variants() -> Vec<ServingVariant> {
+    let wheel = SchedulerKind::Wheel;
+    let single = TenancyVariant::Single;
     vec![
         ServingVariant {
             slug: "s2-least-loaded-b8",
             shards: 2,
             policy: RoutePolicy::LeastLoaded,
             batch: 8,
+            scheduler: wheel,
+            tenancy: single,
         },
         ServingVariant {
             slug: "s1-round-robin-b8",
             shards: 1,
             policy: RoutePolicy::RoundRobin,
             batch: 8,
+            scheduler: wheel,
+            tenancy: single,
         },
         ServingVariant {
             slug: "s4-least-loaded-b8",
             shards: 4,
             policy: RoutePolicy::LeastLoaded,
             batch: 8,
+            scheduler: wheel,
+            tenancy: single,
         },
         ServingVariant {
             slug: "s4-modality-affinity-b16",
             shards: 4,
             policy: RoutePolicy::ModalityAffinity,
             batch: 16,
+            scheduler: wheel,
+            tenancy: single,
         },
         ServingVariant {
             slug: "s2-round-robin-b1",
             shards: 2,
             policy: RoutePolicy::RoundRobin,
             batch: 1,
+            scheduler: wheel,
+            tenancy: single,
         },
         ServingVariant {
             slug: "s8-least-loaded-b8",
             shards: 8,
             policy: RoutePolicy::LeastLoaded,
             batch: 8,
+            scheduler: wheel,
+            tenancy: single,
+        },
+        // session-stickiness: warm-macro reuse vs load spreading
+        ServingVariant {
+            slug: "s4-session-affinity-b8",
+            shards: 4,
+            policy: RoutePolicy::SessionAffinity,
+            batch: 8,
+            scheduler: wheel,
+            tenancy: single,
+        },
+        // the default fabric under an interactive/batch tenant mix:
+        // quota-bounded admission changes what gets served
+        ServingVariant {
+            slug: "s2-least-loaded-b8-mt",
+            shards: 2,
+            policy: RoutePolicy::LeastLoaded,
+            batch: 8,
+            scheduler: wheel,
+            tenancy: TenancyVariant::InteractiveBatch,
+        },
+        // wide sticky fabric on the heap scheduler (bit-identical to the
+        // wheel by construction; folded in so the knob stays exercised)
+        ServingVariant {
+            slug: "s8-session-affinity-b16",
+            shards: 8,
+            policy: RoutePolicy::SessionAffinity,
+            batch: 16,
+            scheduler: SchedulerKind::Heap,
+            tenancy: single,
         },
     ]
 }
@@ -332,9 +419,34 @@ mod tests {
         assert_eq!(cfg.geometry().cols, 256);
         assert_eq!(cfg.features.mode_policy, ModePolicy::ForcedNormal);
         assert_eq!(cfg.serving.shards, 4);
+        assert_eq!(cfg.serving.scheduler, SchedulerKind::Wheel);
+        assert!(cfg.serving.tenants.is_empty(), "single tenancy = no tenant entries");
         // untouched knobs survive
         assert_eq!(cfg.freq_mhz, base.freq_mhz);
         assert_eq!(cfg.cores, base.cores);
+    }
+
+    #[test]
+    fn serving_axis_carries_the_pr7_knobs() {
+        let serves = serving_variants();
+        // legacy slugs (and the perf-gate-pinned default) are stable
+        assert_eq!(serves[0].slug, "s2-least-loaded-b8");
+        assert!(serves
+            .iter()
+            .any(|s| s.policy == RoutePolicy::SessionAffinity),
+            "session-affinity routing must be explorable");
+        assert!(serves
+            .iter()
+            .any(|s| s.tenancy == TenancyVariant::InteractiveBatch),
+            "a multi-tenant mix must be explorable");
+        assert!(serves.iter().any(|s| s.scheduler == SchedulerKind::Heap));
+        // the multi-tenant variant materializes real tenant entries
+        let mut p = default_point(Backend::Analytic);
+        p.serving = *serves.iter().find(|s| s.slug == "s2-least-loaded-b8-mt").unwrap();
+        let cfg = p.apply(&presets::streamdcim_default());
+        assert_eq!(cfg.serving.tenants.len(), 2);
+        assert_eq!(cfg.serving.tenants[0].name, "interactive");
+        assert!(cfg.serving.tenants[0].weight > cfg.serving.tenants[1].weight);
     }
 
     #[test]

@@ -18,11 +18,22 @@
 //! rewrite dependencies (class `Rewrite`, tag != "preload") as exposed
 //! rewrite cycles — the pipeline bubble the paper's ping-pong scheme is
 //! designed to hide.
+//!
+//! # Hot-loop layout
+//!
+//! The loop allocates nothing per task: adjacency and per-port queues
+//! come from the schedule's CSR arena (`TileSchedule::succs_of` /
+//! `resource_queue`), queues advance by cursor instead of `VecDeque`
+//! pops, and all mutable working state lives in a [`SimScratch`] that is
+//! reused across every run a thread prices (thread-local, capacity kept
+//! between runs).  [`simulate`] skips Gantt segments entirely; callers
+//! that render traces use [`simulate_traced`].  See `docs/engine.md`.
 
+use std::cell::RefCell;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 
-use super::schedule::{Task, TaskClass, TileSchedule};
+use super::schedule::{TaskClass, TileSchedule};
 use crate::util::prng::Rng;
 
 /// Raw simulation outcome (see `engine::trace` for the derived report).
@@ -41,27 +52,19 @@ pub struct SimResult {
     pub last_end: Vec<u64>,
     pub tasks_on: Vec<u64>,
     /// Per-resource busy segments (start, end, tag) for Gantt rendering.
+    /// Empty unless produced by [`simulate_traced`] / [`simulate_shuffled`].
     pub segments: Vec<Vec<(u64, u64, &'static str)>>,
     /// First compute-task start: the pipeline-fill latency.
     pub fill_latency: u64,
 }
 
-pub fn simulate(s: &TileSchedule) -> SimResult {
-    run_sim(s, None)
-}
-
-/// Same simulation with the initial resource poll order and same-cycle
-/// completion fan-out shuffled by `seed`.  The result must be
-/// bit-identical to [`simulate`] — the determinism contract the
-/// engine tests enforce.
-pub fn simulate_shuffled(s: &TileSchedule, seed: u64) -> SimResult {
-    run_sim(s, Some(Rng::new(seed)))
-}
-
-struct Sim<'a> {
-    tasks: &'a [Task],
-    queues: Vec<VecDeque<usize>>,
-    dep_left: Vec<usize>,
+/// Reusable working state: every vector is sized to the schedule on
+/// entry but keeps its capacity across runs, so a sweep/serve/dse
+/// invocation pays for allocation once per thread, not once per point.
+#[derive(Default)]
+struct SimScratch {
+    /// Unfinished-dependency counts per task.
+    dep_left: Vec<u32>,
     /// Max end over finished deps.
     ready: Vec<u64>,
     /// Max end over finished deps that are not dynamic rewrites.
@@ -69,7 +72,45 @@ struct Sim<'a> {
     res_free: Vec<u64>,
     /// End of the latest non-rewrite task on each resource.
     res_nonrw_end: Vec<u64>,
-    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Cursor into each resource's program-order queue.
+    head: Vec<u32>,
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Resources whose head may have become runnable this completion.
+    touched: Vec<usize>,
+}
+
+impl SimScratch {
+    fn reset(&mut self, s: &TileSchedule) {
+        let n = s.tasks.len();
+        let nres = s.n_resources();
+        self.dep_left.clear();
+        self.dep_left.extend((0..n).map(|i| s.deps_of(i).len() as u32));
+        self.ready.clear();
+        self.ready.resize(n, 0);
+        self.nonrw_ready.clear();
+        self.nonrw_ready.resize(n, 0);
+        self.res_free.clear();
+        self.res_free.resize(nres, 0);
+        self.res_nonrw_end.clear();
+        self.res_nonrw_end.resize(nres, 0);
+        self.head.clear();
+        self.head.resize(nres, 0);
+        self.heap.clear();
+        self.touched.clear();
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::default());
+}
+
+fn with_scratch<T>(f: impl FnOnce(&mut SimScratch) -> T) -> T {
+    SCRATCH.with(|sc| f(&mut sc.borrow_mut()))
+}
+
+/// Per-run result accumulators (these vectors ARE the returned
+/// [`SimResult`], so they are allocated per run, not scratch).
+struct SimOut {
     start: Vec<u64>,
     end: Vec<u64>,
     exposed: Vec<u64>,
@@ -78,65 +119,86 @@ struct Sim<'a> {
     first_start: Vec<u64>,
     last_end: Vec<u64>,
     tasks_on: Vec<u64>,
-    segments: Vec<Vec<(u64, u64, &'static str)>>,
 }
 
-impl<'a> Sim<'a> {
-    /// Start every runnable task at the head of resource `r`'s queue.
-    fn try_start(&mut self, r: usize) {
-        loop {
-            let head = match self.queues[r].front() {
-                Some(&h) => h,
-                None => break,
-            };
-            if self.dep_left[head] > 0 {
-                break;
-            }
-            let t = &self.tasks[head];
-            let start = self.ready[head].max(self.res_free[r]);
-            let end = start + t.dur;
-            if self.tasks_on[r] == 0 {
-                self.first_start[r] = start;
-            } else {
-                // gap between consecutive tasks: upstream-data bubble
-                self.stall[r] += start - self.res_free[r];
-            }
-            if t.class == TaskClass::Compute {
-                // delay beyond what non-rewrite inputs and the port's own
-                // pipeline would impose = exposed rewrite
-                let base = self.nonrw_ready[head].max(self.res_nonrw_end[r]);
-                self.exposed[head] = start.saturating_sub(base);
-            }
-            self.start[head] = start;
-            self.end[head] = end;
-            self.busy[r] += t.dur;
-            self.tasks_on[r] += 1;
-            self.res_free[r] = end;
-            self.last_end[r] = end;
-            if t.class != TaskClass::Rewrite {
-                self.res_nonrw_end[r] = end;
-            }
-            if t.dur > 0 {
-                self.segments[r].push((start, end, t.tag));
-            }
-            self.queues[r].pop_front();
-            self.heap.push(Reverse((end, head)));
+/// Simulate without collecting Gantt segments — the hot path behind
+/// `sweep`, `serve`, and `dse` pricing.
+pub fn simulate(s: &TileSchedule) -> SimResult {
+    with_scratch(|sc| run_sim(s, sc, None, false))
+}
+
+/// Simulate and collect per-resource busy segments for Gantt/lane
+/// rendering (`trace`, `run --trace`).
+pub fn simulate_traced(s: &TileSchedule) -> SimResult {
+    with_scratch(|sc| run_sim(s, sc, None, true))
+}
+
+/// Same simulation (traced) with the initial resource poll order and
+/// same-cycle completion fan-out shuffled by `seed`.  The result must be
+/// bit-identical to [`simulate_traced`] — the determinism contract the
+/// engine tests enforce.
+pub fn simulate_shuffled(s: &TileSchedule, seed: u64) -> SimResult {
+    with_scratch(|sc| run_sim(s, sc, Some(Rng::new(seed)), true))
+}
+
+/// Start every runnable task at the head of resource `r`'s program-order
+/// queue.  `segs` is empty when untraced (`segs.get_mut(r)` misses).
+fn try_start(
+    s: &TileSchedule,
+    sc: &mut SimScratch,
+    out: &mut SimOut,
+    r: usize,
+    segs: &mut [Vec<(u64, u64, &'static str)>],
+) {
+    let queue = s.resource_queue(r);
+    loop {
+        let hi = sc.head[r] as usize;
+        if hi >= queue.len() {
+            break;
         }
+        let head = queue[hi] as usize;
+        if sc.dep_left[head] > 0 {
+            break;
+        }
+        let t = &s.tasks[head];
+        let start = sc.ready[head].max(sc.res_free[r]);
+        let end = start + t.dur;
+        if out.tasks_on[r] == 0 {
+            out.first_start[r] = start;
+        } else {
+            // gap between consecutive tasks: upstream-data bubble
+            out.stall[r] += start - sc.res_free[r];
+        }
+        if t.class == TaskClass::Compute {
+            // delay beyond what non-rewrite inputs and the port's own
+            // pipeline would impose = exposed rewrite
+            let base = sc.nonrw_ready[head].max(sc.res_nonrw_end[r]);
+            out.exposed[head] = start.saturating_sub(base);
+        }
+        out.start[head] = start;
+        out.end[head] = end;
+        out.busy[r] += t.dur;
+        out.tasks_on[r] += 1;
+        sc.res_free[r] = end;
+        out.last_end[r] = end;
+        if t.class != TaskClass::Rewrite {
+            sc.res_nonrw_end[r] = end;
+        }
+        if t.dur > 0 {
+            if let Some(row) = segs.get_mut(r) {
+                row.push((start, end, t.tag));
+            }
+        }
+        sc.head[r] += 1;
+        sc.heap.push(Reverse((end, head as u32)));
     }
 }
 
-fn run_sim(s: &TileSchedule, mut rng: Option<Rng>) -> SimResult {
+fn run_sim(s: &TileSchedule, sc: &mut SimScratch, mut rng: Option<Rng>, traced: bool) -> SimResult {
     let n = s.tasks.len();
     let nres = s.n_resources();
-    let mut sim = Sim {
-        tasks: &s.tasks,
-        queues: vec![VecDeque::new(); nres],
-        dep_left: s.tasks.iter().map(|t| t.deps.len()).collect(),
-        ready: vec![0; n],
-        nonrw_ready: vec![0; n],
-        res_free: vec![0; nres],
-        res_nonrw_end: vec![0; nres],
-        heap: BinaryHeap::new(),
+    sc.reset(s);
+    let mut out = SimOut {
         start: vec![0; n],
         end: vec![0; n],
         exposed: vec![0; n],
@@ -145,71 +207,74 @@ fn run_sim(s: &TileSchedule, mut rng: Option<Rng>) -> SimResult {
         first_start: vec![u64::MAX; nres],
         last_end: vec![0; nres],
         tasks_on: vec![0; nres],
-        segments: vec![Vec::new(); nres],
     };
-    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for t in &s.tasks {
-        sim.queues[t.res].push_back(t.id);
-        for &d in &t.deps {
-            succs[d].push(t.id);
-        }
-    }
+    let mut segments: Vec<Vec<(u64, u64, &'static str)>> =
+        if traced { vec![Vec::new(); nres] } else { Vec::new() };
 
     // Seed: start dependency-free heads.  The poll order is irrelevant to
     // the outcome (and shuffled to prove it).
-    let mut order: Vec<usize> = (0..nres).collect();
-    if let Some(r) = rng.as_mut() {
-        r.shuffle(&mut order);
-    }
-    for &r in &order {
-        sim.try_start(r);
+    if let Some(rg) = rng.as_mut() {
+        let mut order: Vec<usize> = (0..nres).collect();
+        rg.shuffle(&mut order);
+        for &r in &order {
+            try_start(s, sc, &mut out, r, &mut segments);
+        }
+    } else {
+        for r in 0..nres {
+            try_start(s, sc, &mut out, r, &mut segments);
+        }
     }
 
     // Completion-event loop, strictly ordered by (cycle, task id).
-    while let Some(Reverse((t_end, id))) = sim.heap.pop() {
+    while let Some(Reverse((t_end, id32))) = sc.heap.pop() {
+        let id = id32 as usize;
         let finished = &s.tasks[id];
         let dyn_rw = finished.class == TaskClass::Rewrite && finished.tag != "preload";
-        let mut touched: Vec<usize> = Vec::new();
-        for &sx in &succs[id] {
-            sim.dep_left[sx] -= 1;
-            sim.ready[sx] = sim.ready[sx].max(t_end);
+        sc.touched.clear();
+        for &sx32 in s.succs_of(id) {
+            let sx = sx32 as usize;
+            sc.dep_left[sx] -= 1;
+            sc.ready[sx] = sc.ready[sx].max(t_end);
             if !dyn_rw {
-                sim.nonrw_ready[sx] = sim.nonrw_ready[sx].max(t_end);
+                sc.nonrw_ready[sx] = sc.nonrw_ready[sx].max(t_end);
             }
-            if sim.dep_left[sx] == 0 {
+            if sc.dep_left[sx] == 0 {
                 let r = s.tasks[sx].res;
-                if !touched.contains(&r) {
-                    touched.push(r);
+                if !sc.touched.contains(&r) {
+                    sc.touched.push(r);
                 }
             }
         }
         if let Some(rg) = rng.as_mut() {
-            rg.shuffle(&mut touched);
+            rg.shuffle(&mut sc.touched);
         }
-        for r in touched {
-            sim.try_start(r);
+        let mut i = 0;
+        while i < sc.touched.len() {
+            let r = sc.touched[i];
+            try_start(s, sc, &mut out, r, &mut segments);
+            i += 1;
         }
     }
 
-    let makespan = sim.end.iter().copied().max().unwrap_or(0);
+    let makespan = out.end.iter().copied().max().unwrap_or(0);
     let fill_latency = s
         .tasks
         .iter()
         .filter(|t| t.class == TaskClass::Compute)
-        .map(|t| sim.start[t.id])
+        .map(|t| out.start[t.id])
         .min()
         .unwrap_or(0);
     SimResult {
         makespan,
-        start: sim.start,
-        end: sim.end,
-        exposed: sim.exposed,
-        busy: sim.busy,
-        stall: sim.stall,
-        first_start: sim.first_start,
-        last_end: sim.last_end,
-        tasks_on: sim.tasks_on,
-        segments: sim.segments,
+        start: out.start,
+        end: out.end,
+        exposed: out.exposed,
+        busy: out.busy,
+        stall: out.stall,
+        first_start: out.first_start,
+        last_end: out.last_end,
+        tasks_on: out.tasks_on,
+        segments,
         fill_latency,
     }
 }
@@ -231,9 +296,9 @@ mod tests {
             let r = simulate(&s);
             for t in &s.tasks {
                 assert_eq!(r.end[t.id], r.start[t.id] + t.dur, "{kind:?} task {}", t.id);
-                for &d in &t.deps {
+                for &d in s.deps_of(t.id) {
                     assert!(
-                        r.start[t.id] >= r.end[d],
+                        r.start[t.id] >= r.end[d as usize],
                         "{kind:?}: task {} started before dep {d}",
                         t.id
                     );
@@ -247,7 +312,7 @@ mod tests {
     #[test]
     fn resources_execute_in_order_without_overlap() {
         let s = sched(DataflowKind::TileStream);
-        let r = simulate(&s);
+        let r = simulate_traced(&s);
         for segs in &r.segments {
             for w in segs.windows(2) {
                 assert!(w[0].1 <= w[1].0, "overlap: {w:?}");
@@ -262,10 +327,34 @@ mod tests {
     }
 
     #[test]
+    fn untraced_hot_path_matches_traced_counters() {
+        // the segment-free fast path must agree with the traced run on
+        // every number (scratch reuse included: run repeatedly)
+        for kind in DataflowKind::ALL {
+            let s = sched(kind);
+            let traced = simulate_traced(&s);
+            for _ in 0..3 {
+                let fast = simulate(&s);
+                assert_eq!(fast.makespan, traced.makespan, "{kind:?}");
+                assert_eq!(fast.start, traced.start, "{kind:?}");
+                assert_eq!(fast.end, traced.end, "{kind:?}");
+                assert_eq!(fast.exposed, traced.exposed, "{kind:?}");
+                assert_eq!(fast.busy, traced.busy, "{kind:?}");
+                assert_eq!(fast.stall, traced.stall, "{kind:?}");
+                assert_eq!(fast.first_start, traced.first_start, "{kind:?}");
+                assert_eq!(fast.last_end, traced.last_end, "{kind:?}");
+                assert_eq!(fast.tasks_on, traced.tasks_on, "{kind:?}");
+                assert_eq!(fast.fill_latency, traced.fill_latency, "{kind:?}");
+                assert!(fast.segments.is_empty(), "{kind:?}: hot path collected segments");
+            }
+        }
+    }
+
+    #[test]
     fn shuffled_insertion_order_is_bit_identical() {
         for kind in DataflowKind::ALL {
             let s = sched(kind);
-            let base = simulate(&s);
+            let base = simulate_traced(&s);
             for seed in [1u64, 0xBEEF, 0xDEAD_BEEF_CAFE] {
                 let alt = simulate_shuffled(&s, seed);
                 assert_eq!(base.makespan, alt.makespan, "{kind:?} seed {seed}");
@@ -273,6 +362,7 @@ mod tests {
                 assert_eq!(base.end, alt.end, "{kind:?} seed {seed}");
                 assert_eq!(base.exposed, alt.exposed, "{kind:?} seed {seed}");
                 assert_eq!(base.stall, alt.stall, "{kind:?} seed {seed}");
+                assert_eq!(base.segments, alt.segments, "{kind:?} seed {seed}");
             }
         }
     }

@@ -90,15 +90,20 @@ pub struct EngineRun {
     pub lanes: Vec<(String, Vec<(u64, u64, &'static str)>)>,
 }
 
-/// Run `model` under `kind` on `cfg` with the event engine.
+/// Run `model` under `kind` on `cfg` with the event engine.  This is
+/// the hot pricing path: it skips Gantt-segment collection entirely
+/// (`event::simulate`), so the returned report carries a full
+/// [`CycleTrace`] but no lanes.
 pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunReport {
-    run_full(kind, cfg, model).report
-}
-
-/// Like [`run`], keeping the trace and Gantt lanes.
-pub fn run_full(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> EngineRun {
     let sched = schedule::build(kind, cfg, model);
     let sim = event::simulate(&sched);
+    assemble(cfg, kind, &model.name, &sched, sim).report
+}
+
+/// Like [`run`], keeping the trace and Gantt lanes (traced simulation).
+pub fn run_full(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> EngineRun {
+    let sched = schedule::build(kind, cfg, model);
+    let sim = event::simulate_traced(&sched);
     assemble(cfg, kind, &model.name, &sched, sim)
 }
 
@@ -198,7 +203,11 @@ fn assemble(
         utilization,
         trace: Some(cycle_trace.clone()),
     };
-    let lanes = (0..nres).map(|r| (sched.resource_name(r), sim.segments[r].clone())).collect();
+    let lanes = if sim.segments.is_empty() {
+        Vec::new() // untraced hot path: no Gantt lanes collected
+    } else {
+        (0..nres).map(|r| (sched.resource_name(r), sim.segments[r].clone())).collect()
+    };
     EngineRun { report, trace: cycle_trace, lanes }
 }
 

@@ -30,6 +30,24 @@
 //! `dataflow::account_matmul` bookkeeping as the analytic backend, so
 //! both backends agree *exactly* on total work (MACs, rewrite bits,
 //! traffic) and differ only in timing.
+//!
+//! # Arena layout
+//!
+//! The DAG is stored flat, with no per-task heap allocations: tasks live
+//! in one `Vec<Task>` and all adjacency is CSR (compressed sparse row)
+//! over `u32` ids —
+//!
+//! * `dep_edges`/`dep_off`   — task -> its dependencies,
+//! * `succ_edges`/`succ_off` — task -> its successors (built once by a
+//!   counting sort; each row is sorted by successor id because tasks are
+//!   visited in id order),
+//! * `res_tasks`/`res_off`   — resource port -> its tasks in program
+//!   order (the per-port in-order queue, precomputed).
+//!
+//! The builder stages each task's dependencies directly into the shared
+//! `dep_edges` arena ([`Builder::dep`] / [`Builder::dep_all`]) and
+//! closes the row with [`Builder::seal`], so lowering itself performs no
+//! per-task allocations either.  See `docs/engine.md`.
 
 use crate::cim::ModeSchedule;
 use crate::config::{AccelConfig, DataflowKind, ModelConfig};
@@ -48,15 +66,14 @@ pub enum TaskClass {
     Rank,
 }
 
-/// One unit of scheduled hardware work.
+/// One unit of scheduled hardware work.  Dependencies live in the
+/// schedule's CSR arena ([`TileSchedule::deps_of`]), not on the task.
 #[derive(Debug, Clone)]
 pub struct Task {
     pub id: usize,
     /// Resource port index (see `TileSchedule::resource_name`).
     pub res: usize,
     pub dur: u64,
-    /// Tasks that must finish before this one starts (all ids < `id`).
-    pub deps: Vec<usize>,
     pub class: TaskClass,
     /// Trace tag ("compute", "pp-rewrite", "K-rewrite", "dma-in", ...).
     pub tag: &'static str,
@@ -71,8 +88,9 @@ pub struct LayerMeta {
     pub macs: u64,
 }
 
-/// The lowered schedule: a task DAG plus the exact activity counters the
-/// analytic backend would produce for the same run.
+/// The lowered schedule: a flat task DAG (CSR adjacency over `u32` ids)
+/// plus the exact activity counters the analytic backend would produce
+/// for the same run.
 #[derive(Debug, Clone)]
 pub struct TileSchedule {
     pub kind: DataflowKind,
@@ -80,6 +98,12 @@ pub struct TileSchedule {
     pub activity: Activity,
     pub n_cores: usize,
     pub layers: Vec<LayerMeta>,
+    dep_edges: Vec<u32>,
+    dep_off: Vec<u32>,
+    succ_edges: Vec<u32>,
+    succ_off: Vec<u32>,
+    res_tasks: Vec<u32>,
+    res_off: Vec<u32>,
 }
 
 /// Resource-index layout, the single source of truth shared by the
@@ -132,6 +156,28 @@ impl TileSchedule {
         layout::dtpu(self.n_cores)
     }
 
+    /// Dependencies of task `id` (all ids < `id`; topological by
+    /// construction).
+    pub fn deps_of(&self, id: usize) -> &[u32] {
+        &self.dep_edges[self.dep_off[id] as usize..self.dep_off[id + 1] as usize]
+    }
+
+    /// Successors of task `id`, sorted ascending by successor id.
+    pub fn succs_of(&self, id: usize) -> &[u32] {
+        &self.succ_edges[self.succ_off[id] as usize..self.succ_off[id + 1] as usize]
+    }
+
+    /// Tasks bound to resource port `r`, in program (creation) order —
+    /// the port's in-order execution queue.
+    pub fn resource_queue(&self, r: usize) -> &[u32] {
+        &self.res_tasks[self.res_off[r] as usize..self.res_off[r + 1] as usize]
+    }
+
+    /// Total dependency-edge count (events the simulator will retire).
+    pub fn n_dep_edges(&self) -> usize {
+        self.dep_edges.len()
+    }
+
     /// Names match the analytic `Accelerator`'s timelines (the shared
     /// `sim::accel::core_name` covers `cores > 3` configs too).
     pub fn resource_name(&self, r: usize) -> String {
@@ -160,6 +206,8 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
         sched: ModeSchedule::derive(kind, cfg),
         n_cores: cfg.cores as usize,
         tasks: Vec::new(),
+        dep_edges: Vec::new(),
+        dep_off: vec![0],
         activity: Activity::default(),
     };
 
@@ -167,8 +215,7 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
     let in_bits = (model.tokens_x + model.tokens_y) * model.d_model * model.bits;
     b.activity.offchip_bits += in_bits;
     let off = b.offchip();
-    let embed_in =
-        b.push(off, cfg.offchip_cycles(in_bits), Vec::new(), TaskClass::Dma, "embed-in", 0);
+    let embed_in = b.push(off, cfg.offchip_cycles(in_bits), &[], TaskClass::Dma, "embed-in", 0);
 
     let mut tail = vec![embed_in];
     for layer in &graph.layers {
@@ -184,14 +231,64 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
     let out_tokens = graph.layers.last().map(|l| l.tokens_x + l.tokens_y).unwrap_or(0);
     let out_bits = out_tokens * model.d_model * model.bits;
     b.activity.offchip_bits += out_bits;
-    b.push(off, cfg.offchip_cycles(out_bits), tail, TaskClass::Dma, "embed-out", last_idx);
+    b.push(off, cfg.offchip_cycles(out_bits), &tail, TaskClass::Dma, "embed-out", last_idx);
 
     let layers = graph
         .layers
         .iter()
         .map(|l| LayerMeta { label: l.kind.label().to_string(), macs: l.macs() })
         .collect();
-    TileSchedule { kind, tasks: b.tasks, activity: b.activity, n_cores: cfg.cores as usize, layers }
+
+    // Close the arena: successor and per-resource CSR tables by counting
+    // sort (both rows end up sorted because tasks are visited in order).
+    let n = b.tasks.len();
+    assert!(n < u32::MAX as usize, "task ids must fit in u32");
+    let mut succ_off = vec![0u32; n + 1];
+    for &d in &b.dep_edges {
+        succ_off[d as usize + 1] += 1;
+    }
+    for i in 0..n {
+        succ_off[i + 1] += succ_off[i];
+    }
+    let mut cursor = succ_off.clone();
+    let mut succ_edges = vec![0u32; b.dep_edges.len()];
+    for t in 0..n {
+        let lo = b.dep_off[t] as usize;
+        let hi = b.dep_off[t + 1] as usize;
+        for e in lo..hi {
+            let d = b.dep_edges[e] as usize;
+            succ_edges[cursor[d] as usize] = t as u32;
+            cursor[d] += 1;
+        }
+    }
+    let nres = layout::n_resources(b.n_cores);
+    let mut res_off = vec![0u32; nres + 1];
+    for t in &b.tasks {
+        res_off[t.res + 1] += 1;
+    }
+    for r in 0..nres {
+        res_off[r + 1] += res_off[r];
+    }
+    let mut cursor = res_off.clone();
+    let mut res_tasks = vec![0u32; n];
+    for t in &b.tasks {
+        res_tasks[cursor[t.res] as usize] = t.id as u32;
+        cursor[t.res] += 1;
+    }
+
+    TileSchedule {
+        kind,
+        tasks: b.tasks,
+        activity: b.activity,
+        n_cores: cfg.cores as usize,
+        layers,
+        dep_edges: b.dep_edges,
+        dep_off: b.dep_off,
+        succ_edges,
+        succ_off,
+        res_tasks,
+        res_off,
+    }
 }
 
 struct Builder {
@@ -201,6 +298,11 @@ struct Builder {
     sched: ModeSchedule,
     n_cores: usize,
     tasks: Vec<Task>,
+    /// CSR dependency arena: `dep_edges[dep_off[t]..dep_off[t+1]]` holds
+    /// task `t`'s dependency ids.  `dep_off` always has one more entry
+    /// than `tasks` (the open row being staged).
+    dep_edges: Vec<u32>,
+    dep_off: Vec<u32>,
     activity: Activity,
 }
 
@@ -227,28 +329,55 @@ impl Builder {
         layout::dtpu(self.n_cores)
     }
 
-    fn push(
+    /// Stage one dependency for the task the next [`Builder::seal`]
+    /// creates.  No task may be pushed between staging and sealing.
+    fn dep(&mut self, d: usize) {
+        self.dep_edges.push(d as u32);
+    }
+
+    fn dep_all(&mut self, ds: &[usize]) {
+        for &d in ds {
+            self.dep_edges.push(d as u32);
+        }
+    }
+
+    /// Close the staged dependency row and append the task.
+    fn seal(
         &mut self,
         res: usize,
         dur: u64,
-        deps: Vec<usize>,
         class: TaskClass,
         tag: &'static str,
         layer: usize,
     ) -> usize {
         let id = self.tasks.len();
-        self.tasks.push(Task { id, res, dur, deps, class, tag, layer });
+        self.dep_off.push(self.dep_edges.len() as u32);
+        self.tasks.push(Task { id, res, dur, class, tag, layer });
         id
     }
 
-    fn sfu_task(&mut self, op: &Op, deps: Vec<usize>, layer: usize) -> usize {
+    /// Stage `deps` and seal in one step (the common simple case).
+    fn push(
+        &mut self,
+        res: usize,
+        dur: u64,
+        deps: &[usize],
+        class: TaskClass,
+        tag: &'static str,
+        layer: usize,
+    ) -> usize {
+        self.dep_all(deps);
+        self.seal(res, dur, class, tag, layer)
+    }
+
+    fn sfu_task(&mut self, op: &Op, deps: &[usize], layer: usize) -> usize {
         let (cycles, ops) = crate::sim::sfu::sfu_cost(&self.cfg, op);
         self.activity.sfu_ops += ops;
         let r = self.sfu();
         self.push(r, cycles, deps, TaskClass::Sfu, "sfu", layer)
     }
 
-    fn rank_task(&mut self, tokens: u64, deps: Vec<usize>, layer: usize) -> usize {
+    fn rank_task(&mut self, tokens: u64, deps: &[usize], layer: usize) -> usize {
         let (cycles, ops) = crate::sim::dtpu::rank_cost(&self.cfg, tokens);
         self.activity.dtpu_ops += ops;
         let r = self.dtpu();
@@ -271,23 +400,19 @@ impl Builder {
         };
         let plan = sched.static_plan(granted);
         let rewrite = t.rewrite_cycles(&cfg) / cores.len() as u64;
-        let rw_ids: Vec<usize> = cores
-            .iter()
-            .map(|&c| {
-                let wp = self.wport(c);
-                self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer)
-            })
-            .collect();
+        let mut rw_ids: Vec<usize> = Vec::with_capacity(cores.len());
+        for &c in &cores {
+            let wp = self.wport(c);
+            rw_ids.push(self.push(wp, rewrite, &[], TaskClass::Rewrite, "preload", layer));
+        }
         let comp = t.compute_cycles(plan.active);
-        let comp_ids: Vec<usize> = cores
-            .iter()
-            .map(|&c| {
-                let mut deps = rw_ids.clone();
-                deps.extend_from_slice(data_deps);
-                let cr = self.core(c);
-                self.push(cr, comp, deps, TaskClass::Compute, "compute", layer)
-            })
-            .collect();
+        let mut comp_ids: Vec<usize> = Vec::with_capacity(cores.len());
+        for &c in &cores {
+            self.dep_all(&rw_ids);
+            self.dep_all(data_deps);
+            let cr = self.core(c);
+            comp_ids.push(self.seal(cr, comp, TaskClass::Compute, "compute", layer));
+        }
         dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, true, false);
         comp_ids
     }
@@ -313,7 +438,7 @@ impl Builder {
         let plan = sched.static_plan(cfg.macros_per_core);
         let wp = self.wport(c);
         let rewrite = t.rewrite_cycles(&cfg);
-        let rw = self.push(wp, rewrite, Vec::new(), TaskClass::Rewrite, "preload", layer);
+        let rw = self.push(wp, rewrite, &[], TaskClass::Rewrite, "preload", layer);
         let comp = t.compute_cycles(plan.active);
         let chunks = chunks.max(1);
         let cr = self.core(c);
@@ -322,12 +447,12 @@ impl Builder {
         for i in 0..chunks {
             // even split without drift: chunk i covers [i*comp/chunks, (i+1)*comp/chunks)
             let dur = comp * (i + 1) / chunks - comp * i / chunks;
-            let mut deps = vec![rw];
+            self.dep(rw);
             match prev {
-                Some(p) => deps.push(p),
-                None => deps.extend_from_slice(data_deps),
+                Some(p) => self.dep(p),
+                None => self.dep_all(data_deps),
             }
-            let id = self.push(cr, dur, deps, TaskClass::Compute, "compute", layer);
+            let id = self.seal(cr, dur, TaskClass::Compute, "compute", layer);
             ids.push(id);
             prev = Some(id);
         }
@@ -356,7 +481,7 @@ impl Builder {
         let rw = self.push(
             wp,
             t.rewrite_cycles(&cfg),
-            stationary_deps.to_vec(),
+            stationary_deps,
             TaskClass::Rewrite,
             rw_tag,
             layer,
@@ -364,13 +489,13 @@ impl Builder {
         let cr = self.core(TBR);
         let passes = t.passes(plan.active);
         let mut comps: Vec<usize> = Vec::with_capacity(passes as usize);
-        for p in 0..passes {
-            let mut deps = vec![rw];
+        for _p in 0..passes {
+            self.dep(rw);
             match comps.last() {
-                Some(&prev) => deps.push(prev),
-                None => deps.extend_from_slice(moving_deps),
+                Some(&prev) => self.dep(prev),
+                None => self.dep_all(moving_deps),
             }
-            comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
+            comps.push(self.seal(cr, t.m, TaskClass::Compute, tag, layer));
         }
         dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, false, false);
         comps
@@ -402,21 +527,21 @@ impl Builder {
         let mut comps: Vec<usize> = Vec::with_capacity(passes as usize);
         for p in 0..passes {
             let rw_dur = t.rewrite_cycles_for_pass(&cfg, p, macros);
-            let mut rw_deps = vec![pick(stationary_deps, p)];
+            self.dep(pick(stationary_deps, p));
             if pingpong && p >= 2 {
                 // only two buffers: pass p's rewrite reuses pass p-2's
-                rw_deps.push(comps[(p - 2) as usize]);
+                self.dep(comps[(p - 2) as usize]);
             }
             // ablation: without ping-pong the rewrite occupies the macro
             // array itself, serializing with compute on the TBR core
             let rw_res = if pingpong { wp } else { cr };
-            let rw = self.push(rw_res, rw_dur, rw_deps, TaskClass::Rewrite, "pp-rewrite", layer);
-            let mut deps = vec![rw];
+            let rw = self.seal(rw_res, rw_dur, TaskClass::Rewrite, "pp-rewrite", layer);
+            self.dep(rw);
             if !moving_per_pass.is_empty() {
-                deps.push(pick(moving_per_pass, p));
+                self.dep(pick(moving_per_pass, p));
             }
-            deps.extend_from_slice(moving_every_pass);
-            comps.push(self.push(cr, t.m, deps, TaskClass::Compute, tag, layer));
+            self.dep_all(moving_every_pass);
+            comps.push(self.seal(cr, t.m, TaskClass::Compute, tag, layer));
         }
         dataflow::account_matmul(&mut self.activity, &cfg, op, &t, &sched, &plan, false, false);
         comps
@@ -443,33 +568,37 @@ impl Builder {
                     let dma_in = self.push(
                         off,
                         cfg.offchip_cycles(in_bits),
-                        chain.clone(),
+                        &chain,
                         TaskClass::Dma,
                         "dma-in",
                         layer.index,
                     );
                     let rw = t.rewrite_cycles(&cfg) / n_cores as u64;
-                    let rw_ids: Vec<usize> = (0..n_cores)
-                        .map(|c| {
-                            let wp = self.wport(c);
-                            let deps = vec![dma_in];
-                            self.push(wp, rw, deps, TaskClass::Rewrite, "rewrite", layer.index)
-                        })
-                        .collect();
+                    let mut rw_ids: Vec<usize> = Vec::with_capacity(n_cores);
+                    for c in 0..n_cores {
+                        let wp = self.wport(c);
+                        rw_ids.push(self.push(
+                            wp,
+                            rw,
+                            &[dma_in],
+                            TaskClass::Rewrite,
+                            "rewrite",
+                            layer.index,
+                        ));
+                    }
                     let comp = t.compute_cycles(all_macros);
-                    let comp_ids: Vec<usize> = (0..n_cores)
-                        .map(|c| {
-                            let mut deps = rw_ids.clone();
-                            deps.push(dma_in);
-                            let cr = self.core(c);
-                            self.push(cr, comp, deps, TaskClass::Compute, "compute", layer.index)
-                        })
-                        .collect();
+                    let mut comp_ids: Vec<usize> = Vec::with_capacity(n_cores);
+                    for c in 0..n_cores {
+                        self.dep_all(&rw_ids);
+                        self.dep(dma_in);
+                        let cr = self.core(c);
+                        comp_ids.push(self.seal(cr, comp, TaskClass::Compute, "compute", layer.index));
+                    }
                     let out_bits = if fused_out { 0 } else { t.output_bits() };
                     let dma_out = self.push(
                         off,
                         cfg.offchip_cycles(out_bits),
-                        comp_ids,
+                        &comp_ids,
                         TaskClass::Dma,
                         "dma-out",
                         layer.index,
@@ -493,12 +622,12 @@ impl Builder {
                         in_bits.saturating_sub(t.stationary_bits()) + out_bits;
                 }
                 OpKind::Softmax | OpKind::LayerNorm | OpKind::Gelu => {
-                    let id = self.sfu_task(op, chain.clone(), layer.index);
-                    chain = vec![id];
+                    let deps = std::mem::take(&mut chain);
+                    chain = vec![self.sfu_task(op, &deps, layer.index)];
                 }
                 OpKind::PruneRank => {
-                    let id = self.rank_task(op.n, chain.clone(), layer.index);
-                    chain = vec![id];
+                    let deps = std::mem::take(&mut chain);
+                    chain = vec![self.rank_task(op.n, &deps, layer.index)];
                 }
             }
         }
@@ -547,7 +676,7 @@ impl Builder {
             let qkt_first = *qkt_out.first().expect("qkt pass");
             let qkt_last = *qkt_out.last().expect("qkt pass");
             let sm_op = dataflow::find(&grp, "softmax").expect("softmax");
-            let sm = self.sfu_task(sm_op, vec![qkt_first], li);
+            let sm = self.sfu_task(sm_op, &[qkt_first], li);
             let pv_gate = [sm, qkt_last];
             let pv_out = if tile {
                 self.dynamic_pingpong(pv, &[], &pv_gate, &vg, li, "pv")
@@ -560,20 +689,20 @@ impl Builder {
             let oproj = dataflow::find(&grp, "o_proj").expect("o_proj");
             let opj = self.static_preloaded(oproj, &pv_last, li);
             let ln1 = dataflow::find(&grp, "ln1").expect("ln1");
-            let ln1_t = self.sfu_task(ln1, opj, li);
+            let ln1_t = self.sfu_task(ln1, &opj, li);
             let ffn1 = dataflow::find(&grp, "ffn1").expect("ffn1");
             let f1 = self.static_preloaded(ffn1, &[ln1_t], li);
             let gelu = dataflow::find(&grp, "gelu").expect("gelu");
-            let g_t = self.sfu_task(gelu, f1, li);
+            let g_t = self.sfu_task(gelu, &f1, li);
             let ffn2 = dataflow::find(&grp, "ffn2").expect("ffn2");
             let f2 = self.static_preloaded(ffn2, &[g_t], li);
             let ln2 = dataflow::find(&grp, "ln2").expect("ln2");
-            let ln2_t = self.sfu_task(ln2, f2, li);
+            let ln2_t = self.sfu_task(ln2, &f2, li);
             outs.push(ln2_t);
 
             // DTPU ranking (pruning layers only)
             if let Some(rank) = dataflow::find(&grp, "rank") {
-                let r = self.rank_task(rank.n, pv_last.clone(), li);
+                let r = self.rank_task(rank.n, &pv_last, li);
                 outs.push(r);
             }
         }
@@ -595,11 +724,52 @@ mod tests {
             assert!(!s.tasks.is_empty());
             for t in &s.tasks {
                 assert_eq!(t.id, s.tasks.iter().position(|x| x.id == t.id).unwrap());
-                for &d in &t.deps {
-                    assert!(d < t.id, "{:?}: dep {d} >= id {}", kind, t.id);
+                for &d in s.deps_of(t.id) {
+                    assert!((d as usize) < t.id, "{:?}: dep {d} >= id {}", kind, t.id);
                 }
                 assert!(t.res < s.n_resources());
             }
+        }
+    }
+
+    #[test]
+    fn csr_adjacency_tables_are_consistent() {
+        let cfg = presets::streamdcim_default();
+        let model = presets::functional_small();
+        for kind in crate::config::DataflowKind::ALL {
+            let s = build(kind, &cfg, &model);
+            // every dep edge (t <- d) appears as a successor edge (d -> t)
+            let mut dep_edges = 0usize;
+            for t in &s.tasks {
+                for &d in s.deps_of(t.id) {
+                    dep_edges += 1;
+                    assert!(
+                        s.succs_of(d as usize).contains(&(t.id as u32)),
+                        "{kind:?}: edge {d}->{} missing from successor CSR",
+                        t.id
+                    );
+                }
+            }
+            let succ_edges: usize = (0..s.tasks.len()).map(|i| s.succs_of(i).len()).sum();
+            assert_eq!(dep_edges, succ_edges, "{kind:?}: CSR edge counts diverge");
+            assert_eq!(dep_edges, s.n_dep_edges(), "{kind:?}: dep arena size diverges");
+            // successor rows are sorted ascending (counting sort in id order)
+            for i in 0..s.tasks.len() {
+                let row = s.succs_of(i);
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "{kind:?}: unsorted succs of {i}");
+            }
+            // resource queues partition the task set in program order
+            let mut seen = vec![false; s.tasks.len()];
+            for r in 0..s.n_resources() {
+                let q = s.resource_queue(r);
+                assert!(q.windows(2).all(|w| w[0] < w[1]), "{kind:?}: queue {r} out of order");
+                for &t in q {
+                    assert_eq!(s.tasks[t as usize].res, r, "{kind:?}: task {t} on wrong queue");
+                    assert!(!seen[t as usize], "{kind:?}: task {t} queued twice");
+                    seen[t as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "{kind:?}: some task missing from every queue");
         }
     }
 

@@ -497,7 +497,15 @@ fn cmd_report(args: &Args) -> Result<()> {
         "e5" => e5_report(&accel),
         "serving" => report::serving(&accel),
         "utilization" | "util" => report::utilization(&both()),
-        "frontier" | "pareto" => report::frontier(&accel),
+        "frontier" | "pareto" => match args.flag("from") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading recorded dse artifact {path}: {e}"))?;
+                report::frontier_from_jsonl(&text)
+                    .map_err(|e| anyhow!("replaying {path}: {e}"))?
+            }
+            None => report::frontier(&accel),
+        },
         other => bail!(
             "unknown figure '{other}' \
              (fig5|fig6|fig7|headline|e5|serving|utilization|frontier)"
@@ -758,18 +766,25 @@ fn cmd_dse(args: &Args) -> Result<()> {
         budget: args.flag_u64("budget", 64) as usize,
         serve_requests: args.flag_u64("requests", 48),
         seed: args.flag_u64("seed", 42),
+        // surrogate-guided two-phase is the default; --exhaustive
+        // restores single-phase brute force (--two-phase is accepted as
+        // an explicit no-op opt-in)
+        two_phase: !args.has("exhaustive"),
+        dominance_slack: args.flag_f64("slack", dse::DEFAULT_DOMINANCE_SLACK),
     };
     eprintln!(
-        "dse: exploring up to {} design points of {} on {} thread(s)",
+        "dse: exploring up to {} design points of {} on {} thread(s){}",
         if cfg.budget == 0 { "all".to_string() } else { cfg.budget.to_string() },
         cfg.model.name,
-        threads
+        threads,
+        if cfg.two_phase { " (two-phase)" } else { " (exhaustive)" }
     );
     let started = std::time::Instant::now();
     let rep = dse::explore(&cfg, threads);
     eprintln!(
-        "dse: priced {} points ({} on the frontier) in {:.2} s",
+        "dse: priced {} points ({} pruned by the surrogate, {} on the frontier) in {:.2} s",
         rep.rows.len(),
+        rep.pruned,
         rep.frontier.len(),
         started.elapsed().as_secs_f64()
     );

@@ -9,6 +9,7 @@ use crate::engine::Backend;
 use crate::metrics::RunReport;
 use crate::serve;
 use crate::util::geomean;
+use crate::util::json::Json;
 
 /// All three dataflows on one model.
 pub fn run_all(cfg: &AccelConfig, model: &ModelConfig) -> Vec<RunReport> {
@@ -279,6 +280,11 @@ pub fn frontier(accel: &AccelConfig) -> FigureText {
         budget: 24,
         serve_requests: 24,
         seed: 42,
+        // exhaustive on purpose: the figure reports how many points
+        // dominate the paper default, which is only meaningful against
+        // the full evaluated set (surrogate pruning would drop them)
+        two_phase: false,
+        dominance_slack: dse::DEFAULT_DOMINANCE_SLACK,
     };
     let rep = dse::explore(&cfg, 1);
     let mut body = rep.render_text();
@@ -297,6 +303,120 @@ pub fn frontier(accel: &AccelConfig) -> FigureText {
         title: "Frontier — Pareto-optimal design points (cycles/energy/area)".into(),
         body,
     }
+}
+
+/// Rebuild the frontier figure from a recorded `dse --format jsonl`
+/// artifact instead of re-running the exploration (`report --figure
+/// frontier --from <dse.jsonl>`).  Rows stream through the `artifact`
+/// pull reader one line at a time — the full document is never
+/// materialized — so replaying a million-point sweep costs only the
+/// frontier rows it keeps.
+pub fn frontier_from_jsonl(text: &str) -> Result<FigureText, String> {
+    let mut model = String::from("?");
+    let mut objectives: Vec<String> = Vec::new();
+    let mut space_size = 0u64;
+    let mut evaluated = 0u64;
+    let mut pruned = 0u64;
+    let mut two_phase = false;
+    // (rank, id, cycles, energy_mj, area_mm2, utilization)
+    let mut frontier: Vec<(u64, String, u64, f64, f64, f64)> = Vec::new();
+    let mut default_line: Option<String> = None;
+    let default_ids: Vec<String> =
+        [Backend::Analytic, Backend::Event].iter().map(|b| dse::default_point(*b).id()).collect();
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row = crate::artifact::parse_line(line)
+            .map_err(|e| format!("line {}: {e}", no + 1))?;
+        let f64_of = |key: &str| row.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        match row.get("row").and_then(Json::as_str) {
+            Some("header") => {
+                if row.get("kind").and_then(Json::as_str) != Some("dse-report") {
+                    return Err(format!("line {}: not a dse-report artifact", no + 1));
+                }
+                if let Some(m) = row.get("model").and_then(Json::as_str) {
+                    model = m.to_string();
+                }
+                if let Some(objs) = row.get("objectives").and_then(Json::as_arr) {
+                    objectives =
+                        objs.iter().filter_map(Json::as_str).map(str::to_string).collect();
+                }
+                space_size = row.get("space_size").and_then(Json::as_u64).unwrap_or(0);
+                evaluated = row.get("evaluated").and_then(Json::as_u64).unwrap_or(0);
+                pruned = row.get("pruned").and_then(Json::as_u64).unwrap_or(0);
+                two_phase = row.get("two_phase").and_then(Json::as_bool).unwrap_or(false);
+            }
+            Some("point") => {
+                let id = row
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("line {}: point row without id", no + 1))?
+                    .to_string();
+                let on_frontier =
+                    row.get("on_frontier").and_then(Json::as_bool).unwrap_or(false);
+                if on_frontier {
+                    frontier.push((
+                        row.get("rank").and_then(Json::as_u64).unwrap_or(0),
+                        id.clone(),
+                        row.get("cycles").and_then(Json::as_u64).unwrap_or(0),
+                        f64_of("energy_mj"),
+                        f64_of("area_mm2"),
+                        f64_of("intra_macro_utilization"),
+                    ));
+                }
+                if default_ids.contains(&id) {
+                    default_line = Some(if on_frontier {
+                        "on the frontier".to_string()
+                    } else {
+                        format!(
+                            "dominated by {} point(s)",
+                            row.get("dominated_by").and_then(Json::as_u64).unwrap_or(0)
+                        )
+                    });
+                }
+            }
+            other => return Err(format!("line {}: unexpected row tag {other:?}", no + 1)),
+        }
+    }
+    if evaluated == 0 && frontier.is_empty() {
+        return Err("artifact carried no dse rows".into());
+    }
+    let mut body = format!(
+        "replayed from artifact: {evaluated} of {space_size} design points priced on \
+         {model} (objectives: {})\n",
+        objectives.join(","),
+    );
+    if two_phase {
+        body.push_str(&format!(
+            "two-phase: {pruned} point(s) pruned by the analytic surrogate\n"
+        ));
+    }
+    body.push_str(&format!("Pareto frontier: {} non-dominated point(s)\n\n", frontier.len()));
+    body.push_str(&format!(
+        "  {:<4} {:<52} {:>12} {:>10} {:>8} {:>6}\n",
+        "rank", "point", "cycles", "energy mJ", "mm^2", "util"
+    ));
+    for (rank, id, cycles, energy, area, util) in &frontier {
+        body.push_str(&format!(
+            "  {:<4} {:<52} {:>12} {:>10.3} {:>8.2} {:>5.1}%\n",
+            rank,
+            id,
+            cycles,
+            energy,
+            area,
+            util * 100.0,
+        ));
+    }
+    body.push_str(&format!(
+        "  paper default point: {}\n",
+        default_line.unwrap_or_else(|| "not in the recorded artifact".to_string())
+    ));
+    Ok(FigureText {
+        title: "Frontier — Pareto-optimal design points (replayed from artifact)".into(),
+        body,
+    })
 }
 
 #[cfg(test)]
@@ -331,6 +451,39 @@ mod tests {
         let fig = frontier(&presets::streamdcim_default());
         assert!(fig.body.contains("Pareto frontier"));
         assert!(fig.body.contains("paper default point"));
+    }
+
+    #[test]
+    fn frontier_replay_rebuilds_the_figure_from_a_recorded_jsonl() {
+        let cfg = dse::DseConfig {
+            accel: presets::streamdcim_default(),
+            model: presets::tiny_smoke(),
+            objectives: vec![dse::Objective::Cycles, dse::Objective::Area],
+            backends: vec![Backend::Analytic],
+            budget: 0,
+            serve_requests: 0,
+            seed: 42,
+            two_phase: true,
+            dominance_slack: dse::DEFAULT_DOMINANCE_SLACK,
+        };
+        let rep = dse::explore(&cfg, 1);
+        let mut buf = Vec::new();
+        rep.write_jsonl(&mut buf).unwrap();
+        let fig = frontier_from_jsonl(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert!(fig.body.contains("Pareto frontier"));
+        assert!(fig.body.contains("paper default point"));
+        assert!(fig.body.contains("two-phase:"), "recorded mode must survive the replay");
+        for id in &rep.frontier {
+            assert!(fig.body.contains(id.as_str()), "frontier id {id} missing from replay");
+        }
+    }
+
+    #[test]
+    fn frontier_replay_rejects_non_dse_input() {
+        assert!(frontier_from_jsonl("not json").is_err());
+        let wrong = "{\"row\":\"header\",\"kind\":\"serve-report\"}";
+        assert!(frontier_from_jsonl(wrong).is_err());
+        assert!(frontier_from_jsonl("").is_err(), "empty artifact carries no rows");
     }
 
     #[test]

@@ -9,6 +9,17 @@
 //! functions of their inputs, so each (model, dataflow, backend) point
 //! is simulated exactly once per fabric run.
 //!
+//! Behind the per-instance memo sits a process-wide **content-addressed
+//! schedule cache**: entries are keyed by the canonical rendering of the
+//! exact inputs the simulation is a pure function of — backend, dataflow
+//! and the TOML renderings of the accelerator (with serving knobs
+//! neutralized — see [`schedule_cache_key`]) and the model.  Serving
+//! configuration (shards, routing policy, batch bound, tenants) never
+//! reaches the DAG lowering or the simulators, so DSE points that differ
+//! only in serving knobs hit the cache instead of re-simulating — and a
+//! cached cost is the bit-identical `BatchCost` a cold run would
+//! produce (property-tested in `tests/proptests.rs`).
+//!
 //! Batch semantics: the first request of a batch pays the full run
 //! (`first` cycles); each additional same-model request streams through
 //! the warm pipeline and skips the pipeline-fill latency the event
@@ -16,10 +27,11 @@
 //! has no pipeline notion, so batching amortizes nothing there
 //! (`per_extra == first`) — an honest difference between the backends.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Mutex, OnceLock};
 
 use crate::cim::OccupancyLedger;
-use crate::config::{AccelConfig, DataflowKind, ModelConfig};
+use crate::config::{toml, AccelConfig, DataflowKind, ModelConfig, ServingConfig};
 use crate::dataflow;
 use crate::engine::{self, Backend};
 
@@ -74,6 +86,85 @@ impl BatchCost {
     }
 }
 
+/// The canonical content-address of one simulation: backend and dataflow
+/// slugs plus the TOML renderings of the accelerator and the model.  The
+/// accelerator is rendered with its serving section reset to defaults —
+/// nothing in DAG lowering (`engine::schedule`), the simulators, or the
+/// energy/area models reads `accel.serving`, so two configs differing
+/// only in serving knobs address the same schedule.
+pub fn schedule_cache_key(
+    accel: &AccelConfig,
+    dataflow: DataflowKind,
+    backend: Backend,
+    model: &ModelConfig,
+) -> String {
+    let mut canon = accel.clone();
+    canon.serving = ServingConfig::default();
+    format!(
+        "{}|{}|{}|{}",
+        backend.slug(),
+        dataflow.slug(),
+        toml::render_accel(&canon),
+        toml::render_model(model)
+    )
+}
+
+/// The process-wide schedule cache.  The lock is never held during a
+/// simulation, so a concurrent miss at worst duplicates identical pure
+/// work — it can never change a result.
+fn schedule_cache() -> &'static Mutex<HashMap<String, BatchCost>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, BatchCost>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Price one `(accel, dataflow, backend, model)` point by simulation,
+/// bypassing every cache layer — the pure function the caches memoize.
+pub fn price_uncached(
+    accel: &AccelConfig,
+    dataflow: DataflowKind,
+    backend: Backend,
+    model: &ModelConfig,
+) -> BatchCost {
+    match backend {
+        Backend::Event => {
+            let report = engine::run(dataflow, accel, model);
+            let trace = report.trace.as_ref().expect("event runs carry a CycleTrace");
+            let first = report.cycles;
+            let fill = trace.fill_latency.min(first);
+            let warm_first = (first - fill).max(1).min(first.max(1));
+            let saved = first.saturating_sub(warm_first);
+            BatchCost {
+                first,
+                per_extra: first - fill,
+                warm_first,
+                reuse_write_bits: if first == 0 {
+                    0
+                } else {
+                    (report.activity.cim_write_bits as u128 * saved as u128 / first as u128)
+                        as u64
+                },
+                energy_mj: report.energy.total_mj(),
+                rewrite_hidden: Some(trace.rewrite_hidden_ratio()),
+                intra_macro_utilization: report.intra_macro_utilization(),
+                occupancy: report.activity.occupancy,
+            }
+        }
+        Backend::Analytic => {
+            let report = dataflow::run(dataflow, accel, model);
+            BatchCost {
+                first: report.cycles,
+                per_extra: report.cycles,
+                warm_first: report.cycles,
+                reuse_write_bits: 0,
+                energy_mj: report.energy.total_mj(),
+                rewrite_hidden: None,
+                intra_macro_utilization: report.intra_macro_utilization(),
+                occupancy: report.activity.occupancy,
+            }
+        }
+    }
+}
+
 /// Memoized `(model -> BatchCost)` pricing for one shard configuration.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -96,46 +187,28 @@ impl CostModel {
         self.backend
     }
 
-    /// Price `model` on this shard configuration (memoized).
+    /// Price `model` on this shard configuration.  Lookup order: the
+    /// instance memo (by model name — cheap, no rendering), then the
+    /// process-wide content-addressed cache, then [`price_uncached`].
     pub fn cost(&mut self, model: &ModelConfig) -> BatchCost {
         if let Some(c) = self.cache.get(&model.name) {
             return *c;
         }
-        let cost = match self.backend {
-            Backend::Event => {
-                let run = engine::run_full(self.dataflow, &self.accel, model);
-                let first = run.report.cycles;
-                let fill = run.trace.fill_latency.min(first);
-                let warm_first = (first - fill).max(1).min(first.max(1));
-                let saved = first.saturating_sub(warm_first);
-                BatchCost {
-                    first,
-                    per_extra: first - fill,
-                    warm_first,
-                    reuse_write_bits: if first == 0 {
-                        0
-                    } else {
-                        (run.report.activity.cim_write_bits as u128 * saved as u128
-                            / first as u128) as u64
-                    },
-                    energy_mj: run.report.energy.total_mj(),
-                    rewrite_hidden: Some(run.trace.rewrite_hidden_ratio()),
-                    intra_macro_utilization: run.report.intra_macro_utilization(),
-                    occupancy: run.report.activity.occupancy,
-                }
-            }
-            Backend::Analytic => {
-                let report = dataflow::run(self.dataflow, &self.accel, model);
-                BatchCost {
-                    first: report.cycles,
-                    per_extra: report.cycles,
-                    warm_first: report.cycles,
-                    reuse_write_bits: 0,
-                    energy_mj: report.energy.total_mj(),
-                    rewrite_hidden: None,
-                    intra_macro_utilization: report.intra_macro_utilization(),
-                    occupancy: report.activity.occupancy,
-                }
+        let key = schedule_cache_key(&self.accel, self.dataflow, self.backend, model);
+        let shared = schedule_cache();
+        let hit = {
+            let guard = shared.lock().unwrap_or_else(|p| p.into_inner());
+            guard.get(&key).copied()
+        };
+        let cost = match hit {
+            Some(c) => c,
+            None => {
+                // simulate outside the lock: a racing miss duplicates
+                // pure work, never blocks the winner
+                let c = price_uncached(&self.accel, self.dataflow, self.backend, model);
+                let mut guard = shared.lock().unwrap_or_else(|p| p.into_inner());
+                guard.insert(key, c);
+                c
             }
         };
         self.cache.insert(model.name.clone(), cost);
@@ -216,5 +289,58 @@ mod tests {
         let tile = cost_of(DataflowKind::TileStream);
         let non = cost_of(DataflowKind::NonStream);
         assert!(tile.batch_cycles(8) < non.batch_cycles(8));
+    }
+
+    #[test]
+    fn cache_key_is_serving_invariant_but_geometry_sensitive() {
+        let base = presets::streamdcim_default();
+        let model = presets::tiny_smoke();
+        let key = |a: &AccelConfig| {
+            schedule_cache_key(a, DataflowKind::TileStream, Backend::Event, &model)
+        };
+        let mut served = base.clone();
+        served.serving.shards = 16;
+        served.serving.policy = crate::config::RoutePolicy::SessionAffinity;
+        served.serving.batch_size = 1;
+        served.serving.tenants = vec![crate::config::TenantConfig {
+            name: "interactive".into(),
+            weight: 3,
+            slo_cycles: 200_000,
+        }];
+        assert_eq!(key(&base), key(&served), "serving knobs must not change the address");
+        let mut geo = base.clone();
+        geo.arrays_per_macro = 16;
+        assert_ne!(key(&base), key(&geo), "geometry must change the address");
+        let other_model =
+            schedule_cache_key(&base, DataflowKind::TileStream, Backend::Event, &presets::functional_small());
+        assert_ne!(key(&base), other_model, "model shapes must change the address");
+        let other_df =
+            schedule_cache_key(&base, DataflowKind::LayerStream, Backend::Event, &model);
+        assert_ne!(key(&base), other_df, "dataflow must change the address");
+    }
+
+    #[test]
+    fn shared_cache_returns_bit_identical_costs() {
+        // two fresh CostModels over configs that differ only in serving
+        // knobs must agree exactly (the second one is a cache hit)
+        let model = presets::functional_small();
+        let a = CostModel::new(
+            presets::streamdcim_default(),
+            DataflowKind::TileStream,
+            Backend::Event,
+        )
+        .cost(&model);
+        let mut served = presets::streamdcim_default();
+        served.serving.shards = 8;
+        served.serving.batch_size = 2;
+        let b = CostModel::new(served, DataflowKind::TileStream, Backend::Event).cost(&model);
+        let cold = price_uncached(
+            &presets::streamdcim_default(),
+            DataflowKind::TileStream,
+            Backend::Event,
+            &model,
+        );
+        assert_eq!(a, b, "serving knobs changed a cached schedule cost");
+        assert_eq!(a, cold, "cache diverged from a cold pricing");
     }
 }

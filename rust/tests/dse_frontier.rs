@@ -26,7 +26,34 @@ fn cfg(
         budget,
         serve_requests: 16,
         seed: 42,
+        two_phase: false,
+        dominance_slack: dse::DEFAULT_DOMINANCE_SLACK,
     }
+}
+
+#[test]
+fn two_phase_event_frontier_is_byte_identical_to_brute_force() {
+    // the tentpole acceptance check: surrogate-guided two-phase
+    // exploration on the *event* backend must land on exactly the
+    // frontier exhaustive event pricing finds — same ids, same artifact
+    // bytes (the dse-smoke CI job repeats this with cmp on the CLI)
+    let mut fast_cfg = cfg(presets::tiny_smoke(), 0, vec![Objective::Cycles, Objective::Area]);
+    fast_cfg.backends = vec![Backend::Event];
+    fast_cfg.serve_requests = 0;
+    fast_cfg.two_phase = true;
+    let mut slow_cfg = fast_cfg.clone();
+    slow_cfg.two_phase = false;
+    let fast = dse::explore(&fast_cfg, 4);
+    let slow = dse::explore(&slow_cfg, 4);
+    assert_eq!(fast.frontier, slow.frontier, "two-phase changed the frontier set");
+    assert_eq!(
+        fast.frontier_json().to_string_pretty(),
+        slow.frontier_json().to_string_pretty(),
+        "two-phase frontier artifact must be byte-identical to brute force"
+    );
+    assert_eq!(fast.rows.len() + fast.pruned, slow.rows.len());
+    // the surrogate phase must actually skip event simulations
+    assert!(fast.pruned > 0, "surrogate phase pruned nothing on the full space");
 }
 
 #[test]

@@ -97,7 +97,7 @@ fn event_heap_insertion_order_is_irrelevant() {
     for model in [presets::tiny_smoke(), presets::functional_small()] {
         for kind in DataflowKind::ALL {
             let sched = engine::schedule::build(kind, &cfg, &model);
-            let base = engine::event::simulate(&sched);
+            let base = engine::event::simulate_traced(&sched);
             for seed in [7u64, 42, 0xDEAD_BEEF] {
                 let alt = engine::event::simulate_shuffled(&sched, seed);
                 assert_eq!(base.makespan, alt.makespan, "{}/{kind:?}/{seed}", model.name);

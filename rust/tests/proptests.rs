@@ -330,6 +330,82 @@ fn prop_tile_stream_never_slower_than_layer_stream() {
 }
 
 #[test]
+fn prop_schedule_cache_pricing_is_bit_identical_to_cold() {
+    // the content-addressed schedule cache behind serve::CostModel must
+    // be invisible: whatever (geometry x mode policy x dataflow x
+    // serving) point asks, the cached BatchCost is the bit-identical
+    // value a cold pricing produces — and serving knobs never change
+    // the price (they are neutralized out of the cache key)
+    use streamdcim::cim::ModePolicy;
+    use streamdcim::config::{RoutePolicy, SchedulerKind, TenantConfig};
+    use streamdcim::engine::Backend;
+    use streamdcim::serve::{cost, CostModel};
+    Prop::new("schedule cache = cold pricing, bitwise").cases(6).check(|rng| {
+        let mut cfg = presets::streamdcim_default();
+        cfg.features.mode_policy =
+            ModePolicy::ALL[rng.range_usize(0, ModePolicy::ALL.len() - 1)];
+        cfg.arrays_per_macro = [4u64, 8, 16][rng.range_usize(0, 2)];
+        cfg.array_cols = [64u64, 128, 256][rng.range_usize(0, 2)];
+        cfg.macro_write_port_bits = [64u64, 128][rng.range_usize(0, 1)];
+        // randomized serving knobs — none of them may move the price
+        cfg.serving.shards = rng.range_u64(1, 8);
+        cfg.serving.batch_size = rng.range_u64(1, 16);
+        cfg.serving.policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len() - 1)];
+        cfg.serving.scheduler = SchedulerKind::ALL[rng.range_usize(0, 1)];
+        if rng.f64() < 0.5 {
+            cfg.serving.tenants = vec![
+                TenantConfig {
+                    name: "interactive".into(),
+                    weight: rng.range_u64(1, 4),
+                    slo_cycles: 100_000,
+                },
+                TenantConfig { name: "batch".into(), weight: 1, slo_cycles: 0 },
+            ];
+        }
+        let model = presets::tiny_smoke();
+        let dataflow = DataflowKind::ALL[rng.range_usize(0, DataflowKind::ALL.len() - 1)];
+        for backend in [Backend::Analytic, Backend::Event] {
+            let cold = cost::price_uncached(&cfg, dataflow, backend, &model);
+            // first call may populate the shared cache, second must hit it;
+            // a serving-knob permutation must address the same entry
+            let warm = CostModel::new(cfg.clone(), dataflow, backend).cost(&model);
+            let mut permuted = cfg.clone();
+            permuted.serving.shards = cfg.serving.shards % 8 + 1;
+            permuted.serving.tenants.clear();
+            let hit = CostModel::new(permuted, dataflow, backend).cost(&model);
+            for c in [&warm, &hit] {
+                prop_assert!(
+                    c.first == cold.first
+                        && c.per_extra == cold.per_extra
+                        && c.warm_first == cold.warm_first
+                        && c.reuse_write_bits == cold.reuse_write_bits,
+                    "{dataflow:?}/{backend:?}: cycle fields diverged from cold pricing"
+                );
+                prop_assert!(
+                    c.energy_mj.to_bits() == cold.energy_mj.to_bits(),
+                    "{dataflow:?}/{backend:?}: energy bits diverged"
+                );
+                prop_assert!(
+                    c.intra_macro_utilization.to_bits()
+                        == cold.intra_macro_utilization.to_bits(),
+                    "{dataflow:?}/{backend:?}: utilization bits diverged"
+                );
+                prop_assert!(
+                    c.rewrite_hidden.map(f64::to_bits)
+                        == cold.rewrite_hidden.map(f64::to_bits),
+                    "{dataflow:?}/{backend:?}: rewrite_hidden bits diverged"
+                );
+                prop_assert!(
+                    c.occupancy == cold.occupancy,
+                    "{dataflow:?}/{backend:?}: occupancy ledger diverged"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pareto_frontier_subset_order_invariant_matches_bruteforce() {
     use streamdcim::dse::pareto;
     Prop::new("pareto frontier properties").cases(120).check(|rng| {
