@@ -1,0 +1,194 @@
+//! CI bench-smoke: time the flattened serving-fabric hot loop and emit
+//! a machine-readable artifact (`bench_serve_hotloop.json`) so the
+//! fabric's requests/sec is tracked across commits next to the engine
+//! and sweep numbers.
+//!
+//! Three rate families:
+//! * requests/sec (cold)  — a fresh thread's first `serve::simulate`
+//!   call: pays the thread-local `FabricScratch` build (arenas, event
+//!   schedulers) on top of the loop itself.  The schedule cache is
+//!   pre-warmed so this isolates scratch cost, not pricing cost.
+//! * requests/sec (warm)  — repeated runs on one thread: the
+//!   steady-state hot loop with arenas, quotas, and schedulers reused
+//!   (what a sweep worker actually pays per scenario after its first).
+//! * matrix requests/sec  — the full `serve --matrix` fan-out through
+//!   the persistent work-stealing executor at 1 and 8 threads, with the
+//!   aggregate artifacts asserted byte-identical before the speedup is
+//!   reported.
+//!
+//! Measured rates are wall-clock and vary per host; the `scenario` rows
+//! (served counts, makespans) are deterministic and byte-stable, so
+//! artifact diffs separate "the machine was slow" from "the fabric
+//! changed".
+//!
+//! Knobs (env):
+//! * `BENCH_SERVE_ITERS` — timed iterations per sample batch (default 5).
+//! * `BENCH_SERVE_OUT`   — artifact path (default
+//!   `bench_serve_hotloop.json`, resolved against the workspace root
+//!   when relative, matching `engine_hotloop`).
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use streamdcim::benchkit::{row, section, Bench};
+use streamdcim::config::{presets, DataflowKind};
+use streamdcim::engine::Backend;
+use streamdcim::serve::{self, ArrivalKind, ServeConfig};
+use streamdcim::util::json::Json;
+
+/// Resolve a relative artifact path against the workspace root (the
+/// parent of this package's manifest dir), never cargo's bench cwd.
+fn workspace_rooted(path: &str) -> std::path::PathBuf {
+    let p = Path::new(path);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(p)
+}
+
+fn main() {
+    let iters: u32 = std::env::var("BENCH_SERVE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let out_path =
+        std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "bench_serve_hotloop.json".into());
+    let out_path = workspace_rooted(&out_path);
+
+    section("serving-fabric hot loop (single shard pair, poisson)");
+    let accel = presets::streamdcim_default();
+    let models = serve::sweep::mix_models();
+    let mean_gap = serve::auto_gap(&accel, Backend::Analytic, &models);
+    let requests: u64 = 2_000;
+    let cfg = ServeConfig {
+        accel: accel.clone(),
+        models,
+        dataflow: DataflowKind::TileStream,
+        backend: Backend::Analytic,
+        arrival: ArrivalKind::Poisson,
+        requests,
+        mean_gap,
+    };
+    // Warm the process-wide schedule cache once so the cold samples
+    // below measure scratch construction, not first-time pricing.
+    let baseline = serve::simulate(&cfg);
+    row("scenario", cfg.id());
+    row("requests", requests);
+    row("served", baseline.stats.served);
+
+    // cold: each sample runs on a brand-new thread whose thread-local
+    // FabricScratch has never been built
+    let cold_samples = iters.clamp(1, 5);
+    let mut cold_ns = Vec::new();
+    for _ in 0..cold_samples {
+        let c = cfg.clone();
+        let ns = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let rep = serve::simulate(&c);
+            let ns = t0.elapsed().as_nanos() as f64;
+            (ns, rep)
+        })
+        .join()
+        .map(|(ns, rep)| {
+            assert_eq!(rep.stats, baseline.stats, "cold run diverged");
+            ns
+        })
+        .expect("cold bench thread");
+        cold_ns.push(ns);
+    }
+    let cold_mean_ns = cold_ns.iter().sum::<f64>() / cold_ns.len() as f64;
+
+    let warm = Bench::new("serve/simulate/warm-scratch")
+        .iters(iters)
+        .min_time(Duration::from_millis(20))
+        .run(|| {
+            let rep = serve::simulate(&cfg);
+            assert_eq!(rep.stats.served, baseline.stats.served);
+        });
+    let rps_warm = requests as f64 / (warm.mean_ns * 1e-9);
+    let rps_cold = requests as f64 / (cold_mean_ns * 1e-9);
+    row("requests/sec (warm)", format!("{rps_warm:.0}"));
+    row("requests/sec (cold)", format!("{rps_cold:.0}"));
+    row("cold/warm", format!("{:.2}x", cold_mean_ns / warm.mean_ns.max(1.0)));
+
+    section("serve matrix through the persistent executor (t1 vs t8)");
+    let matrix_requests: u64 = 256;
+    let scenarios = serve::serve_matrix(&accel, Backend::Analytic, matrix_requests);
+    let total_matrix_requests = matrix_requests * scenarios.len() as u64;
+    row("scenarios", scenarios.len());
+
+    let time_matrix = |threads: usize| {
+        let t0 = Instant::now();
+        let rep = serve::run_serve_sweep(&scenarios, threads, 42);
+        (t0.elapsed().as_nanos() as f64, rep.to_json().to_string_pretty())
+    };
+    // one untimed pass warms every scenario's schedule-cache entry and
+    // the executor's worker threads
+    let (_, warmup_bytes) = time_matrix(8);
+    let (t1_ns, t1_bytes) = time_matrix(1);
+    let (t8_ns, t8_bytes) = time_matrix(8);
+    assert_eq!(t1_bytes, t8_bytes, "serve matrix must be byte-identical across threads");
+    assert_eq!(t1_bytes, warmup_bytes, "serve matrix rerun diverged");
+    let matrix_rps_t1 = total_matrix_requests as f64 / (t1_ns * 1e-9);
+    let matrix_rps_t8 = total_matrix_requests as f64 / (t8_ns * 1e-9);
+    row("matrix requests/sec (t1)", format!("{matrix_rps_t1:.0}"));
+    row("matrix requests/sec (t8)", format!("{matrix_rps_t8:.0}"));
+    row("t8/t1 speedup", format!("{:.2}x", t1_ns / t8_ns.max(1.0)));
+    row("determinism", "t1 == t8 == rerun (matrix artifact bytes)");
+
+    let bench_json = |r: &streamdcim::benchkit::BenchResult| {
+        Json::obj(vec![
+            ("name", Json::str(r.name.clone())),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+        ])
+    };
+    // deterministic rows first, measured rates after — diff the former,
+    // trend the latter
+    let artifact = Json::obj(vec![
+        ("kind", Json::str("serve-hotloop")),
+        (
+            "scenario",
+            Json::obj(vec![
+                ("id", Json::str(cfg.id())),
+                ("requests", Json::int(requests)),
+                ("served", Json::int(baseline.stats.served)),
+                ("rejected", Json::int(baseline.stats.rejected)),
+                ("makespan", Json::int(baseline.stats.makespan)),
+            ]),
+        ),
+        (
+            "matrix",
+            Json::obj(vec![
+                ("scenarios", Json::int(scenarios.len() as u64)),
+                ("requests_per_scenario", Json::int(matrix_requests)),
+            ]),
+        ),
+        ("benches", Json::arr(vec![bench_json(&warm)])),
+        (
+            "rates",
+            Json::obj(vec![
+                ("requests_per_sec_warm", Json::num(rps_warm)),
+                ("requests_per_sec_cold", Json::num(rps_cold)),
+                ("cold_over_warm", Json::num(cold_mean_ns / warm.mean_ns.max(1.0))),
+                ("matrix_requests_per_sec_t1", Json::num(matrix_rps_t1)),
+                ("matrix_requests_per_sec_t8", Json::num(matrix_rps_t8)),
+                ("matrix_t8_over_t1_speedup", Json::num(t1_ns / t8_ns.max(1.0))),
+            ]),
+        ),
+    ]);
+    let file = std::fs::File::create(&out_path).expect("create bench artifact");
+    let mut out = std::io::BufWriter::new(file);
+    streamdcim::artifact::JsonWriter::pretty(&mut out)
+        .value(&artifact)
+        .and_then(|_| std::io::Write::flush(&mut out))
+        .expect("write bench artifact");
+    row("artifact", out_path.display());
+}

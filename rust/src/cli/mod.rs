@@ -132,10 +132,10 @@ COMMANDS
                --config <file.toml>     (utilization: intra-macro CIM
                                          occupancy by dataflow, cim::;
                                          frontier: a small dse run)
-               --from <dse.jsonl>  (frontier only) rebuild the figure
-                                   from a recorded dse JSONL artifact
-                                   through the pull reader instead of
-                                   re-running the exploration
+               --from <artifact.jsonl>  (frontier, serving) rebuild the
+                                   figure from a recorded JSONL artifact
+                                   (dse or serve) through the pull
+                                   reader instead of re-running it
   dse        deterministic design-space exploration (Pareto frontier)
                --model <preset>    workload every point is priced on
                                    (default base)

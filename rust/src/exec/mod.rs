@@ -1,33 +1,55 @@
 //! Minimal thread executor (tokio is unavailable offline).
 //!
-//! The coordinator's needs are modest: a worker pool consuming jobs from a
-//! shared queue, plus oneshot reply channels.  std::sync::mpsc covers the
-//! channels; this module adds the pool and a tiny `Promise` handle.
+//! One process-wide worker pool serves every fan-out in the crate
+//! (`sweep`, `serve --matrix`, `dse`).  Earlier revisions built and
+//! joined a fresh `ThreadPool` inside every [`run_ordered`] call, which
+//! put a thread spawn/join cycle on each sweep/matrix/dse invocation;
+//! the pool is now lazily initialized once
+//! ([`pool`]) and lives for the process.  Workers pull from per-worker
+//! deques and steal from their siblings when their own deque runs dry,
+//! so one slow job never idles the rest of the pool.
+//!
+//! Determinism: the pool never orders results.  [`run_ordered`] writes
+//! every result back by job index, so the output is bit-identical for
+//! any worker count, steal interleaving, or submission seed — the
+//! contract the scenario sweep, the serving sweep, and the DSE explorer
+//! all inherit.
 //!
 //! Panic safety: a panicking job must never take the pool down with it.
-//! Workers run every job under `catch_unwind`, so they survive, never
-//! poison the shared queue lock, and `Drop` can always join them.  For
-//! jobs submitted through [`ThreadPool::submit`], the captured panic
-//! payload travels back through the [`Promise`] and is re-raised in the
-//! *caller* via `resume_unwind` — the sweep engine sees the original
-//! panic instead of a deadlock or a dangling channel.
+//! Workers run every job under `catch_unwind`, so they survive and never
+//! poison a deque lock.  For jobs submitted through [`Executor::submit`],
+//! the captured panic payload travels back through the [`Promise`] and is
+//! re-raised in the *caller* via `resume_unwind` — the sweep engine sees
+//! the original panic instead of a deadlock or a dangling channel.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::util::prng::Rng;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Run `jobs` on `threads` workers and return the results **in job
-/// order**, regardless of execution order.  `seed` shuffles only the
-/// submission order (coarse load balancing so expensive jobs spread
-/// across workers); because every slot is written back by job index, the
-/// output is bit-identical for any `threads`/`seed` combination — the
-/// shared determinism contract of the scenario sweep and the serving
-/// sweep.  `threads <= 1` runs inline without a pool.
+/// Hard cap on pool width.  `ensure_workers` requests are clamped here;
+/// the deque array is sized to it up front so growing the pool never
+/// reallocates (or re-locks) the deques themselves.
+pub const MAX_WORKERS: usize = 32;
+
+/// Run `jobs` on up to `threads` pool workers and return the results
+/// **in job order**, regardless of execution order.  `seed` shuffles
+/// only the submission order (coarse load balancing so expensive jobs
+/// spread across workers); because every slot is written back by job
+/// index, the output is bit-identical for any `threads`/`seed`
+/// combination — the shared determinism contract of the scenario sweep,
+/// the serving sweep, and the DSE explorer.  `threads <= 1` runs inline
+/// without touching the pool.
+///
+/// `threads` is a high-water-mark request on the process-wide pool: the
+/// pool grows to at least that many workers (capped at [`MAX_WORKERS`])
+/// and never shrinks, so concurrent callers share one set of worker
+/// threads instead of spawning their own.
 pub fn run_ordered<T: Send + 'static>(
     jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
     threads: usize,
@@ -46,7 +68,8 @@ pub fn run_ordered<T: Send + 'static>(
             slots[i] = Some(job());
         }
     } else {
-        let pool = ThreadPool::new(threads);
+        let pool = pool();
+        pool.ensure_workers(threads);
         let promises: Vec<(usize, Promise<T>)> = order
             .iter()
             .map(|&i| {
@@ -61,62 +84,86 @@ pub fn run_ordered<T: Send + 'static>(
     slots.into_iter().map(|s| s.expect("all jobs ran")).collect()
 }
 
-/// Fixed-size thread pool. Dropping the pool joins all workers.
-pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+/// The process-wide executor, created on first use.  Workers are
+/// spawned lazily by [`Executor::ensure_workers`] (or on first submit)
+/// and live for the rest of the process, parked on a condvar while
+/// idle — there is deliberately no shutdown path.
+pub fn pool() -> &'static Executor {
+    static POOL: OnceLock<Executor> = OnceLock::new();
+    POOL.get_or_init(Executor::new)
 }
 
-impl ThreadPool {
-    pub fn new(threads: usize) -> Self {
-        assert!(threads > 0);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..threads)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            // Jobs run outside this critical section, so a
-                            // panicking job cannot poison the lock; recover
-                            // from poison anyway rather than cascading.
-                            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
-                            guard.recv()
-                        };
-                        match job {
-                            // Contain panics: the worker (and with it the
-                            // whole pool) must outlive any single job.
-                            Ok(job) => {
-                                let _ = catch_unwind(AssertUnwindSafe(job));
-                            }
-                            Err(_) => break, // all senders dropped
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { tx: Some(tx), workers }
+/// Persistent work-stealing worker pool.
+///
+/// Layout: [`MAX_WORKERS`] independently locked deques, one owned by
+/// each (potential) worker.  Submission round-robins new jobs over the
+/// deques of spawned workers; worker `i` pops its own deque from the
+/// front (FIFO) and, finding it empty, steals from its siblings' backs.
+/// A `queued` counter under its own mutex plus a condvar parks idle
+/// workers without lost wakeups: every push increments the counter
+/// under the lock before `notify_one`, and a woken worker decrements it
+/// before claiming, so the number of claim-entitled workers never
+/// exceeds the number of unclaimed jobs.
+pub struct Executor {
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// jobs pushed but not yet claimed by a worker (the condvar guard)
+    queued: Mutex<usize>,
+    work: Condvar,
+    /// round-robin submission cursor
+    rr: AtomicUsize,
+    /// how many workers have been spawned so far (monotone, <= MAX_WORKERS)
+    spawned: Mutex<usize>,
+}
+
+impl Executor {
+    fn new() -> Self {
+        Executor {
+            deques: (0..MAX_WORKERS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: Mutex::new(0),
+            work: Condvar::new(),
+            rr: AtomicUsize::new(0),
+            spawned: Mutex::new(0),
+        }
     }
 
-    pub fn threads(&self) -> usize {
-        self.workers.len()
+    /// Current worker count (monotone over the process lifetime).
+    pub fn workers(&self) -> usize {
+        *lock(&self.spawned)
+    }
+
+    /// Grow the pool to at least `n` workers (capped at [`MAX_WORKERS`]).
+    /// Never shrinks: a later `ensure_workers(1)` after an
+    /// `ensure_workers(8)` leaves all 8 workers parked and ready.
+    pub fn ensure_workers(&'static self, n: usize) {
+        let target = n.clamp(1, MAX_WORKERS);
+        let mut spawned = lock(&self.spawned);
+        while *spawned < target {
+            let idx = *spawned;
+            std::thread::Builder::new()
+                .name(format!("exec-worker-{idx}"))
+                .spawn(move || self.worker_loop(idx))
+                .expect("spawn worker");
+            *spawned += 1;
+        }
     }
 
     /// Fire-and-forget: a panic in `f` is contained in the worker (use
-    /// [`ThreadPool::submit`] when the caller must observe it).
-    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker queue closed");
+    /// [`Executor::submit`] when the caller must observe it).
+    pub fn spawn<F: FnOnce() + Send + 'static>(&'static self, f: F) {
+        self.ensure_workers(1);
+        let slots = self.workers();
+        let at = self.rr.fetch_add(1, Ordering::Relaxed) % slots;
+        lock(&self.deques[at]).push_back(Box::new(f));
+        // increment under the lock *then* notify: a worker checking the
+        // counter either sees the job or has a wakeup in flight — no
+        // lost-wakeup window
+        *lock(&self.queued) += 1;
+        self.work.notify_one();
     }
 
     /// Submit a closure and get a handle to its result.  If the closure
     /// panics, the panic is re-raised from [`Promise::wait`].
-    pub fn submit<T, F>(&self, f: F) -> Promise<T>
+    pub fn submit<T, F>(&'static self, f: F) -> Promise<T>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
@@ -127,16 +174,57 @@ impl ThreadPool {
         });
         Promise { rx }
     }
-}
 
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        // Close the queue first so workers drain and exit, then join.
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+    fn worker_loop(&'static self, me: usize) {
+        loop {
+            // Park until entitled to one job.  Decrementing `queued`
+            // under the same lock as the wait keeps the invariant
+            // "unclaimed jobs >= entitled workers", so the claim below
+            // always terminates.
+            {
+                let mut queued = lock(&self.queued);
+                while *queued == 0 {
+                    queued = self
+                        .work
+                        .wait(queued)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                *queued -= 1;
+            }
+            let job = self.claim(me);
+            // Contain panics: the worker must outlive any single job.
+            let _ = catch_unwind(AssertUnwindSafe(job));
         }
     }
+
+    /// Take one job: own deque front first (FIFO), then steal from the
+    /// siblings' backs.  An entitled worker is guaranteed a job exists,
+    /// but a concurrent push can land behind the scan cursor while a
+    /// sibling claims the job ahead of it — so retry the sweep (with a
+    /// yield) until the claim lands.  Retries are bounded in practice
+    /// by the number of in-flight pushes.
+    fn claim(&self, me: usize) -> Job {
+        loop {
+            if let Some(job) = lock(&self.deques[me % MAX_WORKERS]).pop_front() {
+                return job;
+            }
+            for off in 1..MAX_WORKERS {
+                let victim = (me + off) % MAX_WORKERS;
+                if let Some(job) = lock(&self.deques[victim]).pop_back() {
+                    return job;
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Lock a mutex, recovering from poison: jobs run outside every
+/// critical section in this module, so a panicking job can only poison
+/// a lock via an unwinding allocator failure — recover rather than
+/// cascade either way.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Result handle for a submitted job.
@@ -151,7 +239,7 @@ impl<T> Promise<T> {
         match self.rx.recv() {
             Ok(Ok(v)) => v,
             Ok(Err(payload)) => resume_unwind(payload),
-            Err(_) => panic!("pool dropped before job completed"),
+            Err(_) => panic!("executor dropped the job before it completed"),
         }
     }
 
@@ -170,10 +258,15 @@ impl<T> Promise<T> {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // All tests share the one process-wide pool (tests run in parallel
+    // in one process), so none may assume exclusive use of it.
 
     #[test]
     fn runs_jobs() {
-        let pool = ThreadPool::new(4);
+        let pool = pool();
+        pool.ensure_workers(4);
         let counter = Arc::new(AtomicUsize::new(0));
         let promises: Vec<_> = (0..64)
             .map(|i| {
@@ -190,40 +283,39 @@ mod tests {
     }
 
     #[test]
-    fn drop_joins_workers() {
+    fn spawned_jobs_complete() {
+        let pool = pool();
         let counter = Arc::new(AtomicUsize::new(0));
-        {
-            let pool = ThreadPool::new(2);
-            for _ in 0..16 {
-                let c = Arc::clone(&counter);
-                pool.spawn(move || {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                    c.fetch_add(1, Ordering::SeqCst);
-                });
-            }
-        } // drop waits
+        let (tx, rx) = channel();
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..16 {
+            rx.recv().expect("spawned job finished");
+        }
         assert_eq!(counter.load(Ordering::SeqCst), 16);
     }
 
     #[test]
-    fn single_thread_ordering() {
-        let pool = ThreadPool::new(1);
-        let log = Arc::new(Mutex::new(Vec::new()));
-        let ps: Vec<_> = (0..8)
-            .map(|i| {
-                let log = Arc::clone(&log);
-                pool.submit(move || log.lock().unwrap().push(i))
-            })
-            .collect();
-        for p in ps {
-            p.wait();
-        }
-        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    fn ensure_workers_is_monotone_and_capped() {
+        let pool = pool();
+        pool.ensure_workers(2);
+        let before = pool.workers();
+        assert!(before >= 2);
+        pool.ensure_workers(1); // never shrinks
+        assert!(pool.workers() >= before);
+        pool.ensure_workers(MAX_WORKERS + 100);
+        assert!(pool.workers() <= MAX_WORKERS);
     }
 
     #[test]
     fn panicking_job_propagates_to_waiter() {
-        let pool = ThreadPool::new(2);
+        let pool = pool();
         let p: Promise<u32> = pool.submit(|| panic!("job exploded"));
         let err = catch_unwind(AssertUnwindSafe(|| p.wait())).unwrap_err();
         let msg = err
@@ -237,15 +329,14 @@ mod tests {
 
     #[test]
     fn pool_survives_panicking_jobs() {
-        let pool = ThreadPool::new(1);
-        // the single worker hits several panics yet keeps serving
+        let pool = pool();
+        // workers hit several panics yet keep serving
         for _ in 0..3 {
             let p: Promise<()> = pool.submit(|| panic!("boom"));
             assert!(catch_unwind(AssertUnwindSafe(|| p.wait())).is_err());
         }
         assert_eq!(pool.submit(|| 7u32).wait(), 7);
-        assert_eq!(pool.threads(), 1);
-    } // drop must join without hanging
+    }
 
     #[test]
     fn run_ordered_preserves_job_order_across_threads_and_seeds() {
@@ -260,11 +351,23 @@ mod tests {
     }
 
     #[test]
-    fn drop_after_panic_does_not_deadlock() {
-        let pool = ThreadPool::new(2);
-        for _ in 0..8 {
-            pool.spawn(|| panic!("contained"));
+    fn concurrent_run_ordered_callers_share_the_pool() {
+        // several caller threads fan out through the same global pool at
+        // once; every caller still gets its own results in job order
+        let callers: Vec<_> = (0..4u64)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let jobs: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..16u64)
+                        .map(|i| Box::new(move || c * 1000 + i * i) as Box<dyn FnOnce() -> u64 + Send>)
+                        .collect();
+                    let got = run_ordered(jobs, 4, c);
+                    let want: Vec<u64> = (0..16u64).map(|i| c * 1000 + i * i).collect();
+                    assert_eq!(got, want);
+                })
+            })
+            .collect();
+        for c in callers {
+            c.join().expect("caller thread");
         }
-        drop(pool); // joins both workers; a hang here fails the test by timeout
     }
 }

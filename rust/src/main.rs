@@ -495,7 +495,15 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig7" => report::fig7(&both()),
         "headline" => report::headline(&both()),
         "e5" => e5_report(&accel),
-        "serving" => report::serving(&accel),
+        "serving" => match args.flag("from") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading recorded serve artifact {path}: {e}"))?;
+                report::serving_from_jsonl(&text)
+                    .map_err(|e| anyhow!("replaying {path}: {e}"))?
+            }
+            None => report::serving(&accel),
+        },
         "utilization" | "util" => report::utilization(&both()),
         "frontier" | "pareto" => match args.flag("from") {
             Some(path) => {

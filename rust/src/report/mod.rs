@@ -266,6 +266,92 @@ pub fn serving(accel: &AccelConfig) -> FigureText {
     FigureText { title: "Serving — same traffic through the sharded fabric".into(), body }
 }
 
+/// Rebuild the serving figure from a recorded `serve --format jsonl`
+/// artifact instead of re-running the fabric (`report --figure serving
+/// --from <serve.jsonl>`).  Rows stream through the `artifact` pull
+/// reader one line at a time, mirroring [`frontier_from_jsonl`]: the
+/// figure is a pure function of the recorded header/shard/tenant/stats
+/// rows, so a report written on one machine renders identically on any
+/// other.
+pub fn serving_from_jsonl(text: &str) -> Result<FigureText, String> {
+    let mut header: Option<Json> = None;
+    let mut shard_rows: Vec<Json> = Vec::new();
+    let mut tenant_rows: Vec<Json> = Vec::new();
+    let mut stats_row: Option<Json> = None;
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row = crate::artifact::parse_line(line)
+            .map_err(|e| format!("line {}: {e}", no + 1))?;
+        match row.get("row").and_then(Json::as_str) {
+            Some("header") => {
+                if row.get("kind").and_then(Json::as_str) != Some("serve-report") {
+                    return Err(format!("line {}: not a serve-report artifact", no + 1));
+                }
+                header = Some(row);
+            }
+            Some("shard") => shard_rows.push(row),
+            Some("tenant") => tenant_rows.push(row),
+            Some("stats") => stats_row = Some(row),
+            other => return Err(format!("line {}: unexpected row tag {other:?}", no + 1)),
+        }
+    }
+    let header = header.ok_or_else(|| "artifact carried no serve-report header".to_string())?;
+    let stats = stats_row.ok_or_else(|| "artifact carried no stats row".to_string())?;
+    let str_of = |j: &Json, key: &str| {
+        j.get(key).and_then(Json::as_str).unwrap_or("?").to_string()
+    };
+    let u64_of = |j: &Json, key: &str| j.get(key).and_then(Json::as_u64).unwrap_or(0);
+    let f64_of = |j: &Json, key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut body = format!(
+        "replayed from artifact: {} requests, {} arrivals (mean gap {} cycles, seed {})\n",
+        u64_of(&header, "requests"),
+        str_of(&header, "arrival"),
+        u64_of(&header, "mean_gap_cycles"),
+        u64_of(&header, "arrival_seed"),
+    );
+    body.push_str(&format!(
+        "fabric: {} shard(s), {} policy, {} dataflow, {} engine\n",
+        u64_of(&header, "shards"),
+        str_of(&header, "policy"),
+        str_of(&header, "dataflow"),
+        str_of(&header, "engine"),
+    ));
+    if let Some(models) = header.get("models").and_then(Json::as_arr) {
+        let names: Vec<&str> = models.iter().filter_map(Json::as_str).collect();
+        body.push_str(&format!("workloads: {}\n", names.join(", ")));
+    }
+    let p99 = stats.get("latency").and_then(|l| l.get("p99")).and_then(Json::as_u64).unwrap_or(0);
+    body.push_str(&format!(
+        "  {:>7.2} served/Mcycle  {:>4} served  {:>4} rejected  p99 {:>9} cy\n",
+        f64_of(&stats, "served_per_megacycle"),
+        u64_of(&stats, "served"),
+        u64_of(&stats, "rejected"),
+        p99,
+    ));
+    for (i, s) in shard_rows.iter().enumerate() {
+        body.push_str(&format!(
+            "  shard {:<3} {:>6.1}% busy  {:>5} batches  {:>5} served\n",
+            i,
+            100.0 * f64_of(s, "utilization"),
+            u64_of(s, "batches"),
+            u64_of(s, "served"),
+        ));
+    }
+    for t in &tenant_rows {
+        body.push_str(&format!(
+            "  tenant {:<12} {:>5} served  {:>4} rejected  {:>4} SLO violations\n",
+            str_of(t, "name"),
+            u64_of(t, "served"),
+            u64_of(t, "rejected"),
+            u64_of(t, "slo_violations"),
+        ));
+    }
+    Ok(FigureText { title: "Serving — replayed from a recorded artifact".into(), body })
+}
+
 /// Pareto frontier over cycles/energy/area — a compact design-space
 /// exploration (`dse::explore`) of the ViLBERT-base workload on the
 /// analytic backend.  Shows where the paper's hand-picked design point
@@ -484,6 +570,48 @@ mod tests {
         let wrong = "{\"row\":\"header\",\"kind\":\"serve-report\"}";
         assert!(frontier_from_jsonl(wrong).is_err());
         assert!(frontier_from_jsonl("").is_err(), "empty artifact carries no rows");
+    }
+
+    #[test]
+    fn serving_replay_rebuilds_the_figure_from_a_recorded_jsonl() {
+        let mut accel = presets::streamdcim_default();
+        accel.serving.tenants = vec![crate::config::TenantConfig {
+            name: "interactive".into(),
+            weight: 2,
+            slo_cycles: 0,
+        }];
+        let models = serve::sweep::mix_models();
+        let mean_gap = serve::auto_gap(&accel, Backend::Analytic, &models);
+        let rep = serve::simulate(&serve::ServeConfig {
+            accel,
+            models,
+            dataflow: DataflowKind::TileStream,
+            backend: Backend::Analytic,
+            arrival: serve::ArrivalKind::Poisson,
+            requests: 48,
+            mean_gap,
+        });
+        let mut buf = Vec::new();
+        rep.write_jsonl(&mut buf).unwrap();
+        let fig = serving_from_jsonl(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert!(fig.body.contains("replayed from artifact"));
+        assert!(fig.body.contains("served/Mcycle"));
+        assert!(fig.body.contains(&format!("{} served", rep.stats.served)));
+        assert!(fig.body.contains("tile dataflow"));
+        for i in 0..rep.stats.per_shard.len() {
+            assert!(fig.body.contains(&format!("shard {i}")), "shard row {i} missing");
+        }
+        assert!(fig.body.contains("tenant interactive"), "tenant row missing from replay");
+    }
+
+    #[test]
+    fn serving_replay_rejects_non_serve_input() {
+        assert!(serving_from_jsonl("not json").is_err());
+        let wrong = "{\"row\":\"header\",\"kind\":\"dse-report\"}";
+        assert!(serving_from_jsonl(wrong).is_err());
+        assert!(serving_from_jsonl("").is_err(), "empty artifact carries no header");
+        let no_stats = "{\"row\":\"header\",\"kind\":\"serve-report\"}";
+        assert!(serving_from_jsonl(no_stats).is_err(), "header alone is not a report");
     }
 
     #[test]

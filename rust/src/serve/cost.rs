@@ -18,7 +18,10 @@
 //! reaches the DAG lowering or the simulators, so DSE points that differ
 //! only in serving knobs hit the cache instead of re-simulating — and a
 //! cached cost is the bit-identical `BatchCost` a cold run would
-//! produce (property-tested in `tests/proptests.rs`).
+//! produce (property-tested in `tests/proptests.rs`).  The cache is
+//! sharded N ways by key hash with a read-mostly `RwLock` per shard, so
+//! parallel `dse`/`serve --matrix` workers hitting warm entries never
+//! convoy on a single lock.
 //!
 //! Batch semantics: the first request of a batch pays the full run
 //! (`first` cycles); each additional same-model request streams through
@@ -28,7 +31,8 @@
 //! (`per_extra == first`) — an honest difference between the backends.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::{Mutex, OnceLock};
+use std::hash::{Hash, Hasher};
+use std::sync::{OnceLock, RwLock};
 
 use crate::cim::OccupancyLedger;
 use crate::config::{toml, AccelConfig, DataflowKind, ModelConfig, ServingConfig};
@@ -86,6 +90,17 @@ impl BatchCost {
     }
 }
 
+/// The shard-configuration half of [`schedule_cache_key`]: everything
+/// that does not depend on the model.  A [`CostModel`] renders this
+/// once at construction — the canonical-TOML render of the accelerator
+/// is by far the most expensive part of key building, and it is
+/// invariant across every `cost` call on the same instance.
+fn schedule_key_prefix(accel: &AccelConfig, dataflow: DataflowKind, backend: Backend) -> String {
+    let mut canon = accel.clone();
+    canon.serving = ServingConfig::default();
+    format!("{}|{}|{}", backend.slug(), dataflow.slug(), toml::render_accel(&canon))
+}
+
 /// The canonical content-address of one simulation: backend and dataflow
 /// slugs plus the TOML renderings of the accelerator and the model.  The
 /// accelerator is rendered with its serving section reset to defaults —
@@ -98,23 +113,31 @@ pub fn schedule_cache_key(
     backend: Backend,
     model: &ModelConfig,
 ) -> String {
-    let mut canon = accel.clone();
-    canon.serving = ServingConfig::default();
-    format!(
-        "{}|{}|{}|{}",
-        backend.slug(),
-        dataflow.slug(),
-        toml::render_accel(&canon),
-        toml::render_model(model)
-    )
+    format!("{}|{}", schedule_key_prefix(accel, dataflow, backend), toml::render_model(model))
 }
 
-/// The process-wide schedule cache.  The lock is never held during a
-/// simulation, so a concurrent miss at worst duplicates identical pure
-/// work — it can never change a result.
-fn schedule_cache() -> &'static Mutex<HashMap<String, BatchCost>> {
-    static CACHE: OnceLock<Mutex<HashMap<String, BatchCost>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+/// Shard count of the process-wide cache.  A power of two, sized so an
+/// 8-thread `dse`/`--matrix` fan-out rarely sees two workers on one
+/// shard even before the read-mostly `RwLock`s make hits contention-free.
+const CACHE_SHARDS: usize = 16;
+
+/// The process-wide schedule cache, sharded N ways by key hash.  Hits
+/// take a read lock on one shard (many readers in parallel); only a
+/// miss takes that shard's write lock, and no lock is ever held during
+/// a simulation — a concurrent miss at worst duplicates identical pure
+/// work, it can never change a result.
+fn schedule_cache() -> &'static [RwLock<HashMap<String, BatchCost>>] {
+    static CACHE: OnceLock<Vec<RwLock<HashMap<String, BatchCost>>>> = OnceLock::new();
+    CACHE.get_or_init(|| (0..CACHE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect())
+}
+
+/// Pick the shard for a key.  The shard choice is a pure function of
+/// the key and can never affect results — every shard maps the same
+/// key to the same bit-identical [`BatchCost`].
+fn cache_shard(key: &str) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % CACHE_SHARDS
 }
 
 /// Price one `(accel, dataflow, backend, model)` point by simulation,
@@ -171,12 +194,16 @@ pub struct CostModel {
     accel: AccelConfig,
     dataflow: DataflowKind,
     backend: Backend,
+    /// [`schedule_key_prefix`] rendered once at construction; per-model
+    /// keys append only the (cheap) model rendering.
+    key_prefix: String,
     cache: BTreeMap<String, BatchCost>,
 }
 
 impl CostModel {
     pub fn new(accel: AccelConfig, dataflow: DataflowKind, backend: Backend) -> Self {
-        CostModel { accel, dataflow, backend, cache: BTreeMap::new() }
+        let key_prefix = schedule_key_prefix(&accel, dataflow, backend);
+        CostModel { accel, dataflow, backend, key_prefix, cache: BTreeMap::new() }
     }
 
     pub fn dataflow(&self) -> DataflowKind {
@@ -190,14 +217,16 @@ impl CostModel {
     /// Price `model` on this shard configuration.  Lookup order: the
     /// instance memo (by model name — cheap, no rendering), then the
     /// process-wide content-addressed cache, then [`price_uncached`].
+    /// Only the model is rendered per call — the accelerator half of
+    /// the content address was rendered once in [`CostModel::new`].
     pub fn cost(&mut self, model: &ModelConfig) -> BatchCost {
         if let Some(c) = self.cache.get(&model.name) {
             return *c;
         }
-        let key = schedule_cache_key(&self.accel, self.dataflow, self.backend, model);
-        let shared = schedule_cache();
+        let key = format!("{}|{}", self.key_prefix, toml::render_model(model));
+        let shard = &schedule_cache()[cache_shard(&key)];
         let hit = {
-            let guard = shared.lock().unwrap_or_else(|p| p.into_inner());
+            let guard = shard.read().unwrap_or_else(|p| p.into_inner());
             guard.get(&key).copied()
         };
         let cost = match hit {
@@ -206,7 +235,7 @@ impl CostModel {
                 // simulate outside the lock: a racing miss duplicates
                 // pure work, never blocks the winner
                 let c = price_uncached(&self.accel, self.dataflow, self.backend, model);
-                let mut guard = shared.lock().unwrap_or_else(|p| p.into_inner());
+                let mut guard = shard.write().unwrap_or_else(|p| p.into_inner());
                 guard.insert(key, c);
                 c
             }
@@ -342,5 +371,39 @@ mod tests {
         );
         assert_eq!(a, b, "serving knobs changed a cached schedule cost");
         assert_eq!(a, cold, "cache diverged from a cold pricing");
+    }
+
+    #[test]
+    fn hoisted_prefix_builds_the_same_key_bytes() {
+        // CostModel::cost builds keys as `prefix + "|" + render_model`;
+        // that must be byte-identical to the public schedule_cache_key,
+        // or the hoisting would silently split the cache address space
+        let accel = presets::streamdcim_default();
+        for model in [presets::tiny_smoke(), presets::functional_small()] {
+            for df in [DataflowKind::TileStream, DataflowKind::NonStream] {
+                for be in [Backend::Analytic, Backend::Event] {
+                    let hoisted = format!(
+                        "{}|{}",
+                        schedule_key_prefix(&accel, df, be),
+                        toml::render_model(&model)
+                    );
+                    assert_eq!(hoisted, schedule_cache_key(&accel, df, be, &model));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_shard_is_stable_and_in_range() {
+        let accel = presets::streamdcim_default();
+        let key = schedule_cache_key(
+            &accel,
+            DataflowKind::TileStream,
+            Backend::Event,
+            &presets::tiny_smoke(),
+        );
+        let s = cache_shard(&key);
+        assert!(s < CACHE_SHARDS);
+        assert_eq!(s, cache_shard(&key), "shard choice must be a pure function of the key");
     }
 }

@@ -38,6 +38,7 @@
 //! is formed the moment a shard is free and any queue is non-empty, so
 //! multi-request batches emerge exactly when arrivals outpace service.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::io::{self, Write};
 
@@ -46,6 +47,7 @@ use crate::config::{
     AccelConfig, DataflowKind, ModelConfig, RoutePolicy, SchedulerKind, TenantConfig,
 };
 use crate::engine::Backend;
+use crate::metrics::LatencyStats;
 use crate::util::json::Json;
 
 use super::arrival::{self, ArrivalEvent, ArrivalKind, Modality};
@@ -265,15 +267,109 @@ impl ServeReport {
     }
 }
 
-struct Shard {
-    busy_until: u64,
-    busy: u64,
-    batches: u64,
-    served: u64,
-    /// Per-request intra-macro utilization sum (ShardStats::cim_util_sum).
-    cim_util_sum: f64,
-    /// Workload whose macro rewrites the shard last streamed in.
-    resident: Option<usize>,
+/// Sentinel for "no resident workload" in the shard-residency arena
+/// (`Option<usize>` widened away — workload ids are interned `u32`s).
+const NO_RESIDENT: u32 = u32::MAX;
+
+/// Reusable per-simulation working state — the serving analog of the
+/// event engine's `SimScratch`.  Everything here is *working* state
+/// whose size is bounded by the config (shards + queues + tenants,
+/// never the request count); the run's **outputs** ([`ServeStats`],
+/// per-shard/per-tenant rows, latency sketches) are allocated fresh per
+/// run because they *are* the returned report.
+///
+/// Per-request state lives in a struct-of-arrays request arena: queued
+/// requests are `u32` slot ids into parallel `cycle`/`model`/`tenant`
+/// columns, recycled through a free list the moment their batch
+/// dispatches — so steady-state admission/dispatch allocates nothing.
+/// Model and tenant ids are the interned `u32` indexes the arrival
+/// generator already emits (resolved once at config build); names
+/// reappear only when the report is materialized.
+#[derive(Default)]
+struct FabricScratch {
+    /// Per-modality admission queues of request-arena slot ids.
+    queues: Vec<VecDeque<u32>>,
+    /// Request arena (SoA), indexed by slot id.
+    req_cycle: Vec<u64>,
+    req_model: Vec<u32>,
+    req_tenant: Vec<u32>,
+    /// Recycled arena slots.
+    free: Vec<u32>,
+    /// Shard state (SoA), indexed by shard.
+    shard_busy_until: Vec<u64>,
+    shard_busy: Vec<u64>,
+    shard_batches: Vec<u64>,
+    shard_served: Vec<u64>,
+    shard_util: Vec<f64>,
+    /// Resident workload per shard ([`NO_RESIDENT`] = cold).
+    shard_resident: Vec<u32>,
+    /// Router-input buffer, rebuilt per dispatch.
+    loads: Vec<ShardLoad>,
+    /// The batch under construction (arena slot ids).
+    batch: Vec<u32>,
+    /// Per-tenant admission quotas and in-flight counts.
+    quotas: Vec<u64>,
+    tenant_queued: Vec<u64>,
+    /// Per-tenant counters (names reattached at emission time).
+    t_submitted: Vec<u64>,
+    t_served: Vec<u64>,
+    t_rejected: Vec<u64>,
+    t_slo_violations: Vec<u64>,
+    /// Reusable event schedulers (reset per run, allocations retained).
+    wheel: TimeWheel,
+    heap: HeapQueue,
+}
+
+impl FabricScratch {
+    fn reset(&mut self, shards: usize, tenants: usize) {
+        self.queues.resize_with(Modality::ALL.len(), VecDeque::new);
+        for q in &mut self.queues {
+            q.clear();
+        }
+        self.req_cycle.clear();
+        self.req_model.clear();
+        self.req_tenant.clear();
+        self.free.clear();
+        self.shard_busy_until.clear();
+        self.shard_busy_until.resize(shards, 0);
+        self.shard_busy.clear();
+        self.shard_busy.resize(shards, 0);
+        self.shard_batches.clear();
+        self.shard_batches.resize(shards, 0);
+        self.shard_served.clear();
+        self.shard_served.resize(shards, 0);
+        self.shard_util.clear();
+        self.shard_util.resize(shards, 0.0);
+        self.shard_resident.clear();
+        self.shard_resident.resize(shards, NO_RESIDENT);
+        self.loads.clear();
+        self.batch.clear();
+        self.quotas.clear();
+        self.tenant_queued.clear();
+        self.tenant_queued.resize(tenants, 0);
+        self.t_submitted.clear();
+        self.t_submitted.resize(tenants, 0);
+        self.t_served.clear();
+        self.t_served.resize(tenants, 0);
+        self.t_rejected.clear();
+        self.t_rejected.resize(tenants, 0);
+        self.t_slo_violations.clear();
+        self.t_slo_violations.resize(tenants, 0);
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<FabricScratch> = RefCell::new(FabricScratch::default());
+}
+
+/// Run `f` with this thread's fabric scratch.  Re-entrant calls (an
+/// observer driving a nested simulation) fall back to a fresh
+/// throwaway scratch instead of panicking on the RefCell.
+fn with_scratch<T>(f: impl FnOnce(&mut FabricScratch) -> T) -> T {
+    SCRATCH.with(|sc| match sc.try_borrow_mut() {
+        Ok(mut s) => f(&mut s),
+        Err(_) => f(&mut FabricScratch::default()),
+    })
 }
 
 /// One arrival as the fabric saw it — the replay-trace row.  `model`
@@ -382,7 +478,30 @@ pub fn simulate_trace<O: RequestObserver>(
 /// The fabric core, generic over any (cycle-monotone) arrival source.
 /// At most one future arrival is buffered, so memory is
 /// O(shards + queues + tenants) regardless of request count.
+///
+/// Hot-loop layout: per-request state lives in the thread-local
+/// [`FabricScratch`] request arena (SoA columns addressed by `u32` slot
+/// ids, recycled through a free list), shard state in parallel SoA
+/// vectors, and the batch/load/quota buffers and event schedulers are
+/// reused across runs — after the first run on a thread, the loop
+/// allocates only the report it returns.  None of this changes a byte
+/// of output: the event order, arithmetic, and admission/guard
+/// semantics are identical to the pre-arena string-keyed path
+/// (property-tested against a reference implementation below).
 pub fn simulate_stream<I, O>(cfg: &ServeConfig, arrivals: I, obs: &mut O) -> io::Result<ServeReport>
+where
+    I: IntoIterator<Item = ArrivalEvent>,
+    O: RequestObserver,
+{
+    with_scratch(|scratch| simulate_stream_with(cfg, arrivals, obs, scratch))
+}
+
+fn simulate_stream_with<I, O>(
+    cfg: &ServeConfig,
+    arrivals: I,
+    obs: &mut O,
+    scratch: &mut FabricScratch,
+) -> io::Result<ServeReport>
 where
     I: IntoIterator<Item = ArrivalEvent>,
     O: RequestObserver,
@@ -393,48 +512,54 @@ where
     let queue_depth = serving.queue_depth.max(1) as usize;
     let batch_size = serving.batch_size.max(1) as usize;
     let sticky = serving.policy == RoutePolicy::SessionAffinity;
+    let n_tenants = serving.tenants.len();
 
     // Price every workload once up front (memoized pure simulations).
     let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
     let costs: Vec<super::cost::BatchCost> = cfg.models.iter().map(|m| cm.cost(m)).collect();
 
-    let mut queues: Vec<VecDeque<ArrivalEvent>> =
-        (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
-    let mut shards: Vec<Shard> = (0..n_shards)
-        .map(|_| Shard {
-            busy_until: 0,
-            busy: 0,
-            batches: 0,
-            served: 0,
-            cim_util_sum: 0.0,
-            resident: None,
-        })
-        .collect();
+    scratch.reset(n_shards, n_tenants);
+    let FabricScratch {
+        queues,
+        req_cycle,
+        req_model,
+        req_tenant,
+        free,
+        shard_busy_until,
+        shard_busy,
+        shard_batches,
+        shard_served,
+        shard_util,
+        shard_resident,
+        loads,
+        batch,
+        quotas,
+        tenant_queued,
+        t_submitted,
+        t_served,
+        t_rejected,
+        t_slo_violations,
+        wheel,
+        heap,
+    } = scratch;
+
     let mut router = Router::new(serving.policy);
-    let mut stats = ServeStats {
-        per_tenant: serving
-            .tenants
-            .iter()
-            .map(|t| TenantStats {
-                name: t.name.clone(),
-                weight: t.weight,
-                slo_cycles: t.slo_cycles,
-                ..Default::default()
-            })
-            .collect(),
-        ..Default::default()
-    };
+    // The run's outputs are allocated fresh — they ARE the returned
+    // report (and sketches compare by their lazily-grown buckets, so
+    // reusing them would not even be equality-preserving).
+    let mut stats = ServeStats::default();
+    let mut t_latency: Vec<LatencyStats> = (0..n_tenants).map(|_| LatencyStats::default()).collect();
     // Per-tenant admission quotas: each tenant may hold at most a
     // weight-proportional share of the total queue capacity (at least
     // 1), so a flooding tenant cannot starve the others' admission.
     let total_cap = (queue_depth * Modality::ALL.len()) as u64;
     let total_weight: u64 = serving.tenants.iter().map(|t| t.weight.max(1)).sum();
-    let quotas: Vec<u64> = serving
-        .tenants
-        .iter()
-        .map(|t| ((total_cap * t.weight.max(1)) / total_weight.max(1)).max(1))
-        .collect();
-    let mut tenant_queued: Vec<u64> = vec![0; serving.tenants.len()];
+    quotas.extend(
+        serving
+            .tenants
+            .iter()
+            .map(|t| ((total_cap * t.weight.max(1)) / total_weight.max(1)).max(1)),
+    );
     let mut depth_sum: u128 = 0;
     let mut depth_samples: u64 = 0;
     let mut hidden_sum = 0.0f64;
@@ -445,9 +570,15 @@ where
     // Event queue keyed (cycle, kind, seq): kind 0 = arrival (seq =
     // arrival counter), kind 1 = shard-free (seq = shard index).  Total
     // order => deterministic pop sequence under either scheduler.
-    let mut queue: Box<dyn EventQueue> = match serving.scheduler {
-        SchedulerKind::Wheel => Box::new(TimeWheel::new()),
-        SchedulerKind::Heap => Box::new(HeapQueue::new()),
+    let queue: &mut dyn EventQueue = match serving.scheduler {
+        SchedulerKind::Wheel => {
+            wheel.reset();
+            wheel
+        }
+        SchedulerKind::Heap => {
+            heap.reset();
+            heap
+        }
     };
     let mut src = arrivals.into_iter();
     let mut pending = src.next();
@@ -469,8 +600,8 @@ where
                 queue.push((nx.cycle.max(a.cycle), 0, arrivals_seen));
             }
             stats.submitted += 1;
-            if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
-                ts.submitted += 1;
+            if a.tenant < n_tenants {
+                t_submitted[a.tenant] += 1;
             }
             let over_quota = quotas
                 .get(a.tenant)
@@ -478,14 +609,29 @@ where
             let q = &mut queues[a.modality.index()];
             let admitted = !over_quota && q.len() < queue_depth;
             if admitted {
-                q.push_back(a);
+                // intern the request into the arena: recycle a slot or
+                // grow by one row (bounded by total queue capacity)
+                let slot = match free.pop() {
+                    Some(s) => s,
+                    None => {
+                        let s = req_cycle.len() as u32;
+                        req_cycle.push(0);
+                        req_model.push(0);
+                        req_tenant.push(0);
+                        s
+                    }
+                };
+                req_cycle[slot as usize] = a.cycle;
+                req_model[slot as usize] = a.model as u32;
+                req_tenant[slot as usize] = a.tenant as u32;
+                q.push_back(slot);
                 if let Some(c) = tenant_queued.get_mut(a.tenant) {
                     *c += 1;
                 }
             } else {
                 stats.rejected += 1;
-                if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
-                    ts.rejected += 1;
+                if a.tenant < n_tenants {
+                    t_rejected[a.tenant] += 1;
                 }
             }
             obs.on_request(&RequestRecord {
@@ -503,39 +649,51 @@ where
         // work-conserving dispatch: as long as a shard is free and any
         // queue holds work, form a batch and place it
         loop {
-            if !shards.iter().any(|s| s.busy_until <= now) {
+            if !shard_busy_until.iter().any(|&b| b <= now) {
                 break;
             }
             // oldest-head-first queue selection (tie: lowest modality idx)
             let Some(qi) = (0..queues.len())
                 .filter(|&i| !queues[i].is_empty())
-                .min_by_key(|&i| (queues[i].front().expect("non-empty").cycle, i))
+                .min_by_key(|&i| {
+                    (req_cycle[*queues[i].front().expect("non-empty") as usize], i)
+                })
             else {
                 break;
             };
-            let head = queues[qi].pop_front().expect("non-empty queue");
-            let mut batch = vec![head];
+            let head = *queues[qi].front().expect("non-empty queue") as usize;
+            let head_model = req_model[head];
+            batch.clear();
+            batch.push(queues[qi].pop_front().expect("non-empty queue"));
             // same-workload continuation: only requests for the head's
             // model share its compiled schedule
             while batch.len() < batch_size
-                && queues[qi].front().is_some_and(|r| r.model == head.model)
+                && queues[qi].front().is_some_and(|&s| req_model[s as usize] == head_model)
             {
                 batch.push(queues[qi].pop_front().expect("front checked"));
             }
 
-            let loads: Vec<ShardLoad> = shards
-                .iter()
-                .map(|s| ShardLoad { busy_until: s.busy_until, busy: s.busy, resident: s.resident })
-                .collect();
+            loads.clear();
+            for i in 0..n_shards {
+                loads.push(ShardLoad {
+                    busy_until: shard_busy_until[i],
+                    busy: shard_busy[i],
+                    resident: if shard_resident[i] == NO_RESIDENT {
+                        None
+                    } else {
+                        Some(shard_resident[i] as usize)
+                    },
+                });
+            }
             let si = router
-                .route(&loads, head.modality, head.model, now)
+                .route(loads, Modality::ALL[qi], head_model as usize, now)
                 .expect("a free shard was checked above");
-            let cost = costs[head.model];
+            let cost = costs[head_model as usize];
             let cold = cost.batch_cycles(batch.len() as u64);
             // session affinity prices a resident-model batch warm: the
             // macro rewrites are already in place (the CIM analog of
             // prefix caching)
-            let warm_hit = sticky && shards[si].resident == Some(head.model);
+            let warm_hit = sticky && shard_resident[si] == head_model;
             let cycles = if warm_hit {
                 cost.warm_batch_cycles(batch.len() as u64).max(1)
             } else {
@@ -548,18 +706,18 @@ where
                 stats.occupancy.reused_write_bits += cost.reuse_write_bits;
             }
             let end = now + cycles;
-            let shard = &mut shards[si];
-            shard.busy_until = end;
-            shard.busy += cycles;
-            shard.batches += 1;
-            shard.served += batch.len() as u64;
-            shard.cim_util_sum += cost.intra_macro_utilization * batch.len() as f64;
-            shard.resident = Some(head.model);
+            shard_busy_until[si] = end;
+            shard_busy[si] += cycles;
+            shard_batches[si] += 1;
+            shard_served[si] += batch.len() as u64;
+            shard_util[si] += cost.intra_macro_utilization * batch.len() as f64;
+            shard_resident[si] = head_model;
             stats.batches += 1;
             stats.served += batch.len() as u64;
             last_completion = last_completion.max(end);
-            for r in &batch {
-                let lat = end - r.cycle;
+            for &slot in batch.iter() {
+                let slot = slot as usize;
+                let lat = end - req_cycle[slot];
                 stats.latency.record(lat);
                 stats.energy_mj += cost.energy_mj;
                 stats.occupancy.add(&cost.occupancy);
@@ -567,18 +725,22 @@ where
                     hidden_sum += h;
                     hidden_n += 1;
                 }
-                if let Some(c) = tenant_queued.get_mut(r.tenant) {
+                let ti = req_tenant[slot] as usize;
+                if let Some(c) = tenant_queued.get_mut(ti) {
                     *c = c.saturating_sub(1);
                 }
-                if let Some(ts) = stats.per_tenant.get_mut(r.tenant) {
-                    ts.served += 1;
-                    ts.latency.record(lat);
-                    if ts.slo_cycles > 0 && lat > ts.slo_cycles {
-                        ts.slo_violations += 1;
+                if ti < n_tenants {
+                    t_served[ti] += 1;
+                    t_latency[ti].record(lat);
+                    let slo = serving.tenants[ti].slo_cycles;
+                    if slo > 0 && lat > slo {
+                        t_slo_violations[ti] += 1;
                         stats.slo_violations += 1;
                     }
                 }
             }
+            // the batch is served: its arena slots go back on the free list
+            free.extend(batch.iter().copied());
             queue.push((end, 1, si as u64));
         }
 
@@ -594,13 +756,28 @@ where
     stats.mean_queue_depth =
         if depth_samples == 0 { 0.0 } else { depth_sum as f64 / depth_samples as f64 };
     stats.rewrite_hidden = if hidden_n == 0 { None } else { Some(hidden_sum / hidden_n as f64) };
-    stats.per_shard = shards
-        .into_iter()
-        .map(|s| ShardStats {
-            busy: s.busy,
-            batches: s.batches,
-            served: s.served,
-            cim_util_sum: s.cim_util_sum,
+    stats.per_shard = (0..n_shards)
+        .map(|i| ShardStats {
+            busy: shard_busy[i],
+            batches: shard_batches[i],
+            served: shard_served[i],
+            cim_util_sum: shard_util[i],
+        })
+        .collect();
+    // tenant names reappear exactly here — emission time, not hot loop
+    stats.per_tenant = serving
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| TenantStats {
+            name: t.name.clone(),
+            weight: t.weight,
+            slo_cycles: t.slo_cycles,
+            submitted: t_submitted[i],
+            served: t_served[i],
+            rejected: t_rejected[i],
+            slo_violations: t_slo_violations[i],
+            latency: std::mem::take(&mut t_latency[i]),
         })
         .collect();
     stats.intra_macro_utilization = if stats.served == 0 {
@@ -824,5 +1001,268 @@ mod tests {
         rep.write_jsonl(&mut lines).unwrap();
         let text = String::from_utf8(lines).unwrap();
         assert_eq!(text.lines().count(), 2 + s.per_shard.len() + s.per_tenant.len());
+    }
+
+    /// The pre-arena fabric, kept verbatim as an oracle: AoS queued
+    /// requests, `Option<usize>` residency, string-keyed per-tenant
+    /// rows mutated inline, boxed event queue, everything allocated per
+    /// run.  The arena/interned hot loop must reproduce its [`ServeStats`]
+    /// bit for bit on any config.
+    fn reference_stats(cfg: &ServeConfig) -> ServeStats {
+        struct Shard {
+            busy_until: u64,
+            busy: u64,
+            batches: u64,
+            served: u64,
+            cim_util_sum: f64,
+            resident: Option<usize>,
+        }
+        assert!(!cfg.models.is_empty());
+        let serving = cfg.accel.serving.clone();
+        let n_shards = serving.shards.max(1) as usize;
+        let queue_depth = serving.queue_depth.max(1) as usize;
+        let batch_size = serving.batch_size.max(1) as usize;
+        let sticky = serving.policy == RoutePolicy::SessionAffinity;
+        let mut cm = CostModel::new(cfg.accel.clone(), cfg.dataflow, cfg.backend);
+        let costs: Vec<super::super::cost::BatchCost> =
+            cfg.models.iter().map(|m| cm.cost(m)).collect();
+
+        let mut queues: Vec<VecDeque<ArrivalEvent>> =
+            (0..Modality::ALL.len()).map(|_| VecDeque::new()).collect();
+        let mut shards: Vec<Shard> = (0..n_shards)
+            .map(|_| Shard {
+                busy_until: 0,
+                busy: 0,
+                batches: 0,
+                served: 0,
+                cim_util_sum: 0.0,
+                resident: None,
+            })
+            .collect();
+        let mut router = Router::new(serving.policy);
+        let mut stats = ServeStats {
+            per_tenant: serving
+                .tenants
+                .iter()
+                .map(|t| TenantStats {
+                    name: t.name.clone(),
+                    weight: t.weight,
+                    slo_cycles: t.slo_cycles,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        };
+        let total_cap = (queue_depth * Modality::ALL.len()) as u64;
+        let total_weight: u64 = serving.tenants.iter().map(|t| t.weight.max(1)).sum();
+        let quotas: Vec<u64> = serving
+            .tenants
+            .iter()
+            .map(|t| ((total_cap * t.weight.max(1)) / total_weight.max(1)).max(1))
+            .collect();
+        let mut tenant_queued: Vec<u64> = vec![0; serving.tenants.len()];
+        let mut depth_sum: u128 = 0;
+        let mut depth_samples: u64 = 0;
+        let mut hidden_sum = 0.0f64;
+        let mut hidden_n: u64 = 0;
+        let mut last_completion: u64 = 0;
+        let mut last_arrival_cycle: u64 = 0;
+
+        let mut queue: Box<dyn EventQueue> = match serving.scheduler {
+            SchedulerKind::Wheel => Box::new(TimeWheel::new()),
+            SchedulerKind::Heap => Box::new(HeapQueue::new()),
+        };
+        let mut src = arrival_trace(cfg).into_iter();
+        let mut pending = src.next();
+        let mut arrivals_seen: u64 = 0;
+        if let Some(a) = &pending {
+            queue.push((a.cycle, 0, arrivals_seen));
+        }
+
+        while let Some((now, kind, _seq)) = queue.pop() {
+            if kind == 0 {
+                let a = pending.take().expect("pending arrival");
+                arrivals_seen += 1;
+                last_arrival_cycle = a.cycle;
+                pending = src.next();
+                if let Some(nx) = &pending {
+                    queue.push((nx.cycle.max(a.cycle), 0, arrivals_seen));
+                }
+                stats.submitted += 1;
+                if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
+                    ts.submitted += 1;
+                }
+                let over_quota = quotas
+                    .get(a.tenant)
+                    .is_some_and(|&cap| tenant_queued.get(a.tenant).is_some_and(|&q| q >= cap));
+                let q = &mut queues[a.modality.index()];
+                let admitted = !over_quota && q.len() < queue_depth;
+                if admitted {
+                    q.push_back(a);
+                    if let Some(c) = tenant_queued.get_mut(a.tenant) {
+                        *c += 1;
+                    }
+                } else {
+                    stats.rejected += 1;
+                    if let Some(ts) = stats.per_tenant.get_mut(a.tenant) {
+                        ts.rejected += 1;
+                    }
+                }
+                let max_one = queues.iter().map(|q| q.len()).max().unwrap_or(0) as u64;
+                stats.max_queue_depth = stats.max_queue_depth.max(max_one);
+            }
+
+            loop {
+                if !shards.iter().any(|s| s.busy_until <= now) {
+                    break;
+                }
+                let Some(qi) = (0..queues.len())
+                    .filter(|&i| !queues[i].is_empty())
+                    .min_by_key(|&i| (queues[i].front().expect("non-empty").cycle, i))
+                else {
+                    break;
+                };
+                let head = queues[qi].pop_front().expect("non-empty queue");
+                let mut batch = vec![head];
+                while batch.len() < batch_size
+                    && queues[qi].front().is_some_and(|r| r.model == head.model)
+                {
+                    batch.push(queues[qi].pop_front().expect("front checked"));
+                }
+
+                let loads: Vec<ShardLoad> = shards
+                    .iter()
+                    .map(|s| ShardLoad {
+                        busy_until: s.busy_until,
+                        busy: s.busy,
+                        resident: s.resident,
+                    })
+                    .collect();
+                let si = router
+                    .route(&loads, head.modality, head.model, now)
+                    .expect("a free shard was checked above");
+                let cost = costs[head.model];
+                let cold = cost.batch_cycles(batch.len() as u64);
+                let warm_hit = sticky && shards[si].resident == Some(head.model);
+                let cycles = if warm_hit {
+                    cost.warm_batch_cycles(batch.len() as u64).max(1)
+                } else {
+                    cold
+                };
+                if warm_hit {
+                    stats.rewrite_reuse_batches += 1;
+                    stats.rewrite_reuse_cycles_saved += cold.saturating_sub(cycles);
+                    stats.rewrite_reuse_write_bits += cost.reuse_write_bits;
+                    stats.occupancy.reused_write_bits += cost.reuse_write_bits;
+                }
+                let end = now + cycles;
+                let shard = &mut shards[si];
+                shard.busy_until = end;
+                shard.busy += cycles;
+                shard.batches += 1;
+                shard.served += batch.len() as u64;
+                shard.cim_util_sum += cost.intra_macro_utilization * batch.len() as f64;
+                shard.resident = Some(head.model);
+                stats.batches += 1;
+                stats.served += batch.len() as u64;
+                last_completion = last_completion.max(end);
+                for r in &batch {
+                    let lat = end - r.cycle;
+                    stats.latency.record(lat);
+                    stats.energy_mj += cost.energy_mj;
+                    stats.occupancy.add(&cost.occupancy);
+                    if let Some(h) = cost.rewrite_hidden {
+                        hidden_sum += h;
+                        hidden_n += 1;
+                    }
+                    if let Some(c) = tenant_queued.get_mut(r.tenant) {
+                        *c = c.saturating_sub(1);
+                    }
+                    if let Some(ts) = stats.per_tenant.get_mut(r.tenant) {
+                        ts.served += 1;
+                        ts.latency.record(lat);
+                        if ts.slo_cycles > 0 && lat > ts.slo_cycles {
+                            ts.slo_violations += 1;
+                            stats.slo_violations += 1;
+                        }
+                    }
+                }
+                queue.push((end, 1, si as u64));
+            }
+
+            if kind == 0 {
+                depth_sum += queues.iter().map(|q| q.len() as u128).sum::<u128>();
+                depth_samples += 1;
+            }
+        }
+
+        stats.makespan = last_completion.max(last_arrival_cycle);
+        stats.mean_queue_depth =
+            if depth_samples == 0 { 0.0 } else { depth_sum as f64 / depth_samples as f64 };
+        stats.rewrite_hidden =
+            if hidden_n == 0 { None } else { Some(hidden_sum / hidden_n as f64) };
+        stats.per_shard = shards
+            .into_iter()
+            .map(|s| ShardStats {
+                busy: s.busy,
+                batches: s.batches,
+                served: s.served,
+                cim_util_sum: s.cim_util_sum,
+            })
+            .collect();
+        stats.intra_macro_utilization = if stats.served == 0 {
+            0.0
+        } else {
+            stats.per_shard.iter().map(|s| s.cim_util_sum).sum::<f64>() / stats.served as f64
+        };
+        stats
+    }
+
+    #[test]
+    fn arena_path_matches_reference_on_randomized_mixes() {
+        let mut rng = crate::util::prng::Rng::new(0x5eed_fab5);
+        for trial in 0..12u32 {
+            let mut accel = presets::streamdcim_default();
+            accel.serving.shards = rng.range_u64(1, 4);
+            accel.serving.queue_depth = rng.range_u64(2, 16);
+            accel.serving.batch_size = rng.range_u64(1, 6);
+            accel.serving.policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len() - 1)];
+            accel.serving.scheduler =
+                SchedulerKind::ALL[rng.range_usize(0, SchedulerKind::ALL.len() - 1)];
+            accel.serving.arrival_seed = rng.next_u64();
+            let n_tenants = rng.range_usize(0, 3);
+            accel.serving.tenants = (0..n_tenants)
+                .map(|i| TenantConfig {
+                    name: format!("tenant-{i}"),
+                    weight: rng.range_u64(1, 4),
+                    slo_cycles: if rng.range_u64(0, 1) == 0 {
+                        0
+                    } else {
+                        rng.range_u64(1, 1_000_000)
+                    },
+                })
+                .collect();
+            let mut models = vec![presets::tiny_smoke()];
+            if rng.range_u64(0, 1) == 1 {
+                models.push(presets::functional_small());
+            }
+            // a couple of event-backend trials; analytic keeps the rest
+            // cheap (the schedule cache absorbs repeat pricing anyway)
+            let backend = if trial < 2 { Backend::Event } else { Backend::Analytic };
+            let dataflow = DataflowKind::ALL[rng.range_usize(0, DataflowKind::ALL.len() - 1)];
+            let arrival = ArrivalKind::ALL[rng.range_usize(0, ArrivalKind::ALL.len() - 1)];
+            let requests = rng.range_u64(32, 200);
+            let mean_gap = auto_gap(&accel, backend, &models).max(1);
+            let cfg =
+                ServeConfig { accel, models, dataflow, backend, arrival, requests, mean_gap };
+            let arena = simulate(&cfg).stats;
+            let reference = reference_stats(&cfg);
+            assert_eq!(
+                arena, reference,
+                "trial {trial} ({}): arena/interned hot loop diverged from the \
+                 pre-refactor string-keyed reference",
+                cfg.id()
+            );
+        }
     }
 }

@@ -56,6 +56,12 @@ impl HeapQueue {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Empty the queue for reuse, retaining its heap allocation — the
+    /// fabric's per-run scratch calls this instead of rebuilding.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+    }
 }
 
 impl EventQueue for HeapQueue {
@@ -155,6 +161,25 @@ impl TimeWheel {
         }
         let lv = (63 - diff.leading_zeros()) as usize / SLOT_BITS;
         (lv, ((c >> (lv * SLOT_BITS)) & SLOT_MASK) as usize)
+    }
+
+    /// Rewind to an empty wheel at cycle 0 for reuse (the fabric's
+    /// per-run scratch).  A fully drained wheel — the normal case,
+    /// since fabric runs pop every event — already has clear bitmaps
+    /// and empty slots, so this is O(1); a wheel abandoned mid-run
+    /// pays one full sweep.
+    pub fn reset(&mut self) {
+        if self.len > 0 {
+            for lv in self.levels.iter_mut() {
+                lv.occupied = [0; SLOTS / 64];
+                for s in lv.slots.iter_mut() {
+                    s.clear();
+                }
+            }
+        }
+        self.ready.clear();
+        self.cur = 0;
+        self.len = 0;
     }
 
     fn insert_raw(&mut self, ev: Event) {
@@ -278,6 +303,48 @@ mod tests {
         w.push((10, 1, 7));
         h.push((10, 1, 7));
         assert_eq!(drain(&mut w), drain(&mut h));
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_queue() {
+        // drained-then-reset and abandoned-mid-run-then-reset wheels
+        // must both pop exactly what a fresh wheel pops
+        let evs = [(3u64, 0u8, 0u64), (3, 1, 1), (260, 0, 2), (1 << 30, 1, 3)];
+        let fresh = {
+            let mut w = TimeWheel::new();
+            for &e in &evs {
+                w.push(e);
+            }
+            drain(&mut w)
+        };
+        let mut w = TimeWheel::new();
+        for &e in &evs {
+            w.push(e);
+        }
+        drain(&mut w); // fully drained
+        w.reset();
+        for &e in &evs {
+            w.push(e);
+        }
+        assert_eq!(drain(&mut w), fresh);
+        for &e in &evs {
+            w.push(e);
+        }
+        w.pop(); // abandoned mid-run: cur has advanced, slots still occupied
+        w.reset();
+        assert!(w.is_empty());
+        for &e in &evs {
+            w.push(e);
+        }
+        assert_eq!(drain(&mut w), fresh);
+        let mut h = HeapQueue::new();
+        h.push((9, 0, 0));
+        h.reset();
+        assert!(h.is_empty());
+        for &e in &evs {
+            h.push(e);
+        }
+        assert_eq!(drain(&mut h), fresh);
     }
 
     #[test]

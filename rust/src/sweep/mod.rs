@@ -3,7 +3,8 @@
 //! Turns the one-shot simulator into a throughput-oriented evaluation
 //! tool: [`matrix::full_matrix`] enumerates a scenario matrix (dataflow x
 //! workload-registry model x feature ablation x tile-geometry knob),
-//! [`run_sweep`] shards the scenarios across an [`exec::ThreadPool`], and
+//! [`run_sweep`] shards the scenarios across the process-wide
+//! work-stealing pool ([`exec::run_ordered`]), and
 //! the aggregate is a single ranked report with per-dataflow/ablation
 //! geomeans vs the Non-stream baseline — the paper's Fig. 6/7 three-way
 //! comparison generalized across the whole registry.

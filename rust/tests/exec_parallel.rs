@@ -1,0 +1,79 @@
+//! The persistent work-stealing executor behind every parallel
+//! subsystem: one process-wide pool now serves `sweep`, `serve
+//! --matrix`, and `dse` back to back, so this test drives all three
+//! through the SAME pool in one process and asserts every artifact is
+//! byte-identical between 1 and 8 threads.  (The per-subsystem
+//! determinism tests cover each in isolation; this one covers the
+//! sharing — worker reuse, deque recycling, and interleaved submission
+//! must never leak between callers.)
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use streamdcim::config::presets;
+use streamdcim::dse;
+use streamdcim::engine::Backend;
+use streamdcim::exec;
+use streamdcim::serve;
+use streamdcim::sweep;
+
+#[test]
+fn sweep_serve_and_dse_are_bit_identical_through_the_shared_pool() {
+    let accel = presets::streamdcim_default();
+
+    // 1) engine-level sweep
+    let scenarios = sweep::matrix_for(&accel, &[presets::tiny_smoke()]);
+    let sweep_t1 = sweep::run_sweep(&scenarios, 1, 42).to_json().to_string_pretty();
+    let sweep_t8 = sweep::run_sweep(&scenarios, 8, 42).to_json().to_string_pretty();
+    assert_eq!(sweep_t1, sweep_t8, "sweep artifact changed with thread count");
+
+    // 2) serving matrix (the `serve --matrix` path)
+    let serve_scenarios = serve::serve_matrix(&accel, Backend::Analytic, 48);
+    let serve_t1 = serve::run_serve_sweep(&serve_scenarios, 1, 42).to_json().to_string_pretty();
+    let serve_t8 = serve::run_serve_sweep(&serve_scenarios, 8, 42).to_json().to_string_pretty();
+    assert_eq!(serve_t1, serve_t8, "serve matrix artifact changed with thread count");
+
+    // 3) design-space exploration
+    let cfg = dse::DseConfig {
+        accel: accel.clone(),
+        model: presets::tiny_smoke(),
+        objectives: vec![dse::Objective::Cycles, dse::Objective::Energy],
+        backends: vec![Backend::Analytic],
+        budget: 16,
+        serve_requests: 16,
+        seed: 42,
+        two_phase: true,
+        dominance_slack: dse::DEFAULT_DOMINANCE_SLACK,
+    };
+    let dse_t1 = dse::explore(&cfg, 1).to_json().to_string_pretty();
+    let dse_t8 = dse::explore(&cfg, 8).to_json().to_string_pretty();
+    assert_eq!(dse_t1, dse_t8, "dse artifact changed with thread count");
+
+    // and a different shard-shuffle seed must not change any of them
+    let reseeded = sweep::run_sweep(&scenarios, 8, 0xFEED).to_json().to_string_pretty();
+    assert_eq!(sweep_t1, reseeded, "shuffle seed leaked into the sweep artifact");
+}
+
+#[test]
+fn concurrent_callers_share_the_pool_without_cross_talk() {
+    // several OS threads each run their own ordered batch on the shared
+    // pool at the same time; every batch must come back in job order
+    let handles: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let jobs: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..64u64)
+                    .map(|i| Box::new(move || c * 1000 + i) as Box<dyn FnOnce() -> u64 + Send>)
+                    .collect();
+                exec::run_ordered(jobs, 8, c)
+            })
+        })
+        .collect();
+    for (c, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("caller thread");
+        let want: Vec<u64> = (0..64u64).map(|i| c as u64 * 1000 + i).collect();
+        assert_eq!(got, want, "caller {c} got jobs out of order");
+    }
+    // the pool never shrinks and never exceeds its cap
+    assert!(exec::pool().workers() <= exec::MAX_WORKERS);
+}
