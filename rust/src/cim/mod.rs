@@ -166,6 +166,16 @@ impl MacroGeometry {
     pub fn row_write_cycles(&self, cols: u64, bits: u64) -> u64 {
         ceil_div(cols * bits, self.write_port_bits.max(1)) + self.row_setup_cycles
     }
+
+    /// Readout (ADC / adder-tree truncation) quantization levels of the
+    /// accumulated partial sums, derived from the column count: wider
+    /// macros accumulate more partial products per bit-line and earn a
+    /// deeper readout chain.  128 cols → 1024 levels (a 10-bit readout),
+    /// clamped to [256, 65536] (8–16 bits) at the extremes of the DSE
+    /// geometry axis.
+    pub fn readout_levels(&self) -> u64 {
+        (8 * self.cols.max(1)).next_power_of_two().clamp(256, 65_536)
+    }
 }
 
 /// How many times the moving operand is re-streamed in a blocked

@@ -96,12 +96,16 @@ COMMANDS
                --model <preset>                      (default base; see below)
                --dataflow tile|layer|non             (default tile)
                --engine analytic|event               (default analytic)
+               --precision fp32|mx8|mx6|mx4[-noisy]  operand format +
+                                   readout non-idealities (default fp32;
+                                   see docs/numerics.md)
                --out <path>  --format json|jsonl     write the run report
                --config <file.toml>  --json  --trace
   sweep      run the full scenario matrix (dataflow x model x ablation)
                --threads <n>       (default: available cores, max 8)
                --models a,b,c      (default: the whole sweep registry)
                --engine analytic|event  simulation backend (default analytic)
+               --precision <fmt>   operand format for every scenario
                --out <path>  --format json|jsonl   write the aggregate
                --seed <n>          shard-shuffle seed (default 42; does
                                    not affect results — aggregates are
@@ -128,19 +132,25 @@ COMMANDS
                --inflate <f>       multiply current cycles (gate self-test)
   report     regenerate a paper figure
                --figure fig5|fig6|fig7|headline|e5|serving|utilization|
-                        frontier                      (default headline)
+                        accuracy|frontier             (default headline)
                --config <file.toml>     (utilization: intra-macro CIM
                                          occupancy by dataflow, cim::;
+                                         accuracy: the precision axis
+                                         priced on one workload;
                                          frontier: a small dse run)
-               --from <artifact.jsonl>  (frontier, serving) rebuild the
-                                   figure from a recorded JSONL artifact
-                                   (dse or serve) through the pull
-                                   reader instead of re-running it
+               --from <artifact.jsonl>  (frontier, serving, utilization)
+                                   rebuild the figure from a recorded
+                                   JSONL artifact (dse, serve or sweep)
+                                   through the pull reader instead of
+                                   re-running it
   dse        deterministic design-space exploration (Pareto frontier)
                --model <preset>    workload every point is priced on
                                    (default base)
                --objectives a,b,c  cycles|energy|area|utilization|
-                                   throughput (default cycles,energy,area)
+                                   throughput|accuracy
+                                   (default cycles,energy,area; accuracy
+                                   expands the precision axis into the
+                                   explored space)
                --budget <n>        max design points priced (default 64;
                                    0 = the whole space; over-budget
                                    spaces are seeded-sample trimmed,
@@ -192,6 +202,7 @@ COMMANDS
                                    per-tenant latency SLOs
                --queue-depth <n>   per-modality admission bound
                --batch <n>         max batch size  --seed <n> arrival seed
+               --precision <fmt>   operand format for every shard
                --out <path>  --format json|jsonl   deterministic artifact
                --trace-out <trace.jsonl>   record the replayable arrival
                                    trace (streamed row-at-a-time)

@@ -201,6 +201,108 @@ impl Default for ServingConfig {
     }
 }
 
+/// Operand-precision and macro non-ideality model (docs/numerics.md).
+///
+/// The default is the identity configuration every pre-existing
+/// artifact was produced under: ideal fp32 macros, noise injection
+/// off.  Non-default precision changes both the *cost* side (effective
+/// operand bits flow into rewrite/off-chip traffic via
+/// [`crate::numerics::effective_model`]) and the *accuracy* side (the
+/// [`crate::numerics::accuracy_proxy`] MSE/SQNR emitted in every
+/// `RunReport`), so the DSE explorer can trade them off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionConfig {
+    /// Mantissa bits (excluding sign) of the microscaling block-FP
+    /// operand format.  0 selects fp32 — the identity format, no
+    /// quantization at all.
+    pub mantissa_bits: u64,
+    /// Values sharing one 8-bit block exponent (MX-style microscaling).
+    /// 0 together with `mantissa_bits = 0` means fp32; otherwise >= 1.
+    pub shared_exp_block: u64,
+    /// Inject readout non-idealities: ADC quantization at the
+    /// geometry-derived level count plus multiplicative
+    /// device-variation noise on every macro readout.
+    pub noise: bool,
+    /// Std-dev of the multiplicative device-variation noise.
+    pub noise_sigma: f64,
+    /// Seed of the deterministic noise stream (no wall-clock, no
+    /// ambient RNG — bit-identical across `--threads`).
+    pub noise_seed: u64,
+}
+
+impl Default for PrecisionConfig {
+    fn default() -> Self {
+        PrecisionConfig {
+            mantissa_bits: 0,
+            shared_exp_block: 0,
+            noise: false,
+            noise_sigma: 0.02,
+            noise_seed: 42,
+        }
+    }
+}
+
+impl PrecisionConfig {
+    /// True for the identity format (no quantization).
+    pub fn is_fp32(&self) -> bool {
+        self.mantissa_bits == 0
+    }
+
+    /// Named format slug without the noise suffix: `fp32`, `mx8`,
+    /// `mx6`, `mx4`, or `mx<m>b<k>` for unnamed combinations.
+    pub fn format_slug(&self) -> String {
+        match (self.mantissa_bits, self.shared_exp_block) {
+            (0, _) => "fp32".to_string(),
+            (7, 32) => "mx8".to_string(),
+            (5, 32) => "mx6".to_string(),
+            (3, 32) => "mx4".to_string(),
+            (m, k) => format!("mx{m}b{k}"),
+        }
+    }
+
+    /// Machine-readable name (`--precision`, DSE point ids): the format
+    /// slug plus `-noisy` when non-ideality injection is on.
+    pub fn slug(&self) -> String {
+        if self.noise {
+            format!("{}-noisy", self.format_slug())
+        } else {
+            self.format_slug()
+        }
+    }
+
+    /// Parse a named precision variant: `fp32|mx8|mx6|mx4`, each with an
+    /// optional `-noisy` suffix that turns on non-ideality injection.
+    /// Everything except format/noise keeps its default.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        let (base, noise) = match s.strip_suffix("-noisy").or_else(|| s.strip_suffix("+noise")) {
+            Some(b) => (b, true),
+            None => (s.as_str(), false),
+        };
+        let (mantissa_bits, shared_exp_block) = match base {
+            "fp32" | "fp" | "ideal" => (0, 0),
+            "mx8" => (7, 32),
+            "mx6" => (5, 32),
+            "mx4" => (3, 32),
+            _ => return None,
+        };
+        Some(PrecisionConfig { mantissa_bits, shared_exp_block, noise, ..Default::default() })
+    }
+
+    /// Effective storage/streaming bits per operand value: sign +
+    /// mantissa + the amortized share of the 8-bit block exponent.
+    /// fp32 reports `model_bits` unchanged, and quantization can only
+    /// lower the effective width, never raise it.
+    pub fn effective_bits(&self, model_bits: u64) -> u64 {
+        if self.is_fp32() {
+            return model_bits;
+        }
+        let block = self.shared_exp_block.max(1);
+        let exp_share = crate::util::ceil_div(8, block);
+        model_bits.min((1 + self.mantissa_bits + exp_share).max(1))
+    }
+}
+
 /// Feature toggles for ablation studies (paper features individually).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Features {
@@ -265,6 +367,8 @@ pub struct AccelConfig {
     pub energy: EnergyConfig,
     /// Serving-fabric knobs (shard count, queue bound, batcher, policy).
     pub serving: ServingConfig,
+    /// Operand precision + macro non-ideality model (docs/numerics.md).
+    pub precision: PrecisionConfig,
 }
 
 impl AccelConfig {

@@ -1,7 +1,10 @@
 //! Named configuration presets: the paper's accelerator, its two baselines'
 //! operating points, and the ViLBERT workloads it evaluates.
 
-use super::{AccelConfig, EnergyConfig, Features, ModelConfig, PruningSchedule, ServingConfig};
+use super::{
+    AccelConfig, EnergyConfig, Features, ModelConfig, PrecisionConfig, PruningSchedule,
+    ServingConfig,
+};
 
 /// StreamDCIM as described in the paper (Sec. II-III): 3 cores x 8 macros,
 /// macro = 8 arrays of 4 x 16b x 128, 200 MHz, 64 KB buffers, 512-bit
@@ -34,6 +37,7 @@ pub fn streamdcim_default() -> AccelConfig {
         features: Features::default(),
         energy: energy_28nm(),
         serving: ServingConfig::default(),
+        precision: PrecisionConfig::default(),
     }
 }
 

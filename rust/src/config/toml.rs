@@ -163,9 +163,9 @@ macro_rules! set_f64 {
     };
 }
 
-/// Apply `[accel]`, `[energy]`, `[features]`, `[serving]` and `[macro]`
-/// sections onto a config, printing any deprecation warnings (one line
-/// each) on stderr.
+/// Apply `[accel]`, `[energy]`, `[features]`, `[serving]`, `[precision]`
+/// and `[macro]` sections onto a config, printing any deprecation
+/// warnings (one line each) on stderr.
 pub fn apply_accel_overrides(cfg: &mut AccelConfig, doc: &Doc) {
     for w in apply_accel_overrides_warnings(cfg, doc) {
         eprintln!("warning: {w}");
@@ -245,6 +245,28 @@ pub fn apply_accel_overrides_warnings(cfg: &mut AccelConfig, doc: &Doc) -> Vec<S
                 .collect();
         }
     }
+    if let Some(t) = doc.get("precision") {
+        // accept a named format shorthand alongside the raw knobs; raw
+        // keys win when both are present (they are applied after)
+        if let Some(p) = t.get("format").and_then(|v| v.as_str()) {
+            if let Some(parsed) = super::PrecisionConfig::parse(p) {
+                cfg.precision.mantissa_bits = parsed.mantissa_bits;
+                cfg.precision.shared_exp_block = parsed.shared_exp_block;
+                if parsed.noise {
+                    cfg.precision.noise = true;
+                }
+            } else {
+                warnings.push(format!("[precision].format = \"{p}\" is not a known format"));
+            }
+        }
+        set_u64!(t, "mantissa_bits", cfg.precision.mantissa_bits);
+        set_u64!(t, "shared_exp_block", cfg.precision.shared_exp_block);
+        if let Some(v) = t.get("noise").and_then(|v| v.as_bool()) {
+            cfg.precision.noise = v;
+        }
+        set_f64!(t, "noise_sigma", cfg.precision.noise_sigma);
+        set_u64!(t, "noise_seed", cfg.precision.noise_seed);
+    }
     // deprecated alias: [features].hybrid_mode = true/false maps onto
     // the mode policy (true = auto reconfiguration, false = forced
     // normal).  Applied FIRST so a named mode_policy key — in [macro]
@@ -314,7 +336,8 @@ fn push_f64(out: &mut String, key: &str, v: f64) {
 }
 
 /// Serialize the accelerator side of `cfg` as a canonical TOML document
-/// (`[accel]`, `[energy]`, `[features]`, `[serving]`).  The output
+/// (`[accel]`, `[energy]`, `[features]`, `[serving]`, `[precision]`).
+/// The output
 /// round-trips: parsing it and applying it onto any base reproduces
 /// `cfg` exactly, and deprecated aliases never appear — a config loaded
 /// through the legacy `hybrid_mode` bool serializes as `mode_policy`.
@@ -374,6 +397,12 @@ pub fn render_accel(cfg: &AccelConfig) -> String {
             join(&|t| t.slo_cycles.to_string())
         ));
     }
+    s.push_str("\n[precision]\n");
+    s.push_str(&format!("mantissa_bits = {}\n", cfg.precision.mantissa_bits));
+    s.push_str(&format!("shared_exp_block = {}\n", cfg.precision.shared_exp_block));
+    s.push_str(&format!("noise = {}\n", cfg.precision.noise));
+    push_f64(&mut s, "noise_sigma", cfg.precision.noise_sigma);
+    s.push_str(&format!("noise_seed = {}\n", cfg.precision.noise_seed));
     s
 }
 
@@ -568,6 +597,43 @@ keep_ratio = 0.5
         assert_eq!(w.len(), 1, "{w:?}");
         assert!(w[0].contains("overridden by mode_policy = \"hybrid\""), "{}", w[0]);
         assert_eq!(cfg2.features.mode_policy, ModePolicy::ForcedHybrid);
+    }
+
+    #[test]
+    fn precision_section_parses_and_round_trips() {
+        use crate::config::PrecisionConfig;
+        // named format shorthand
+        let doc = parse("[precision]\nformat = \"mx4-noisy\"\nnoise_sigma = 0.05\n").unwrap();
+        let mut cfg = presets::streamdcim_default();
+        assert!(apply_accel_overrides_warnings(&mut cfg, &doc).is_empty());
+        assert_eq!(cfg.precision.mantissa_bits, 3);
+        assert_eq!(cfg.precision.shared_exp_block, 32);
+        assert!(cfg.precision.noise);
+        assert!((cfg.precision.noise_sigma - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.precision.slug(), "mx4-noisy");
+        // raw knobs win over the shorthand
+        let doc = parse("[precision]\nformat = \"mx8\"\nmantissa_bits = 2\n").unwrap();
+        let mut cfg = presets::streamdcim_default();
+        apply_accel_overrides(&mut cfg, &doc);
+        assert_eq!(cfg.precision.mantissa_bits, 2);
+        assert_eq!(cfg.precision.shared_exp_block, 32);
+        // unknown formats warn and leave the config alone
+        let doc = parse("[precision]\nformat = \"int3\"\n").unwrap();
+        let mut cfg = presets::streamdcim_default();
+        let w = apply_accel_overrides_warnings(&mut cfg, &doc);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(cfg.precision.is_fp32());
+        // render_accel round-trips a non-default precision
+        let mut cfg = presets::streamdcim_default();
+        cfg.precision = PrecisionConfig::parse("mx6-noisy").unwrap();
+        cfg.precision.noise_sigma = 0.031;
+        cfg.precision.noise_seed = 7;
+        let text = render_accel(&cfg);
+        assert!(text.contains("[precision]"));
+        let doc = parse(&text).unwrap();
+        let mut back = presets::streamdcim_default();
+        assert!(apply_accel_overrides_warnings(&mut back, &doc).is_empty());
+        assert_eq!(back, cfg);
     }
 
     #[test]

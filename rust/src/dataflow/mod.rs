@@ -45,9 +45,12 @@ pub fn placement(op: &Op) -> Placement {
     }
 }
 
-/// Build the graph a dataflow actually executes: baselines cannot prune.
+/// Build the graph a dataflow actually executes: baselines cannot prune,
+/// and operand precision is capped at the configured format's effective
+/// bits (`numerics::effective_model`; idempotent, so callers that
+/// already transformed the model are unaffected).
 pub fn graph_for(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> OpGraph {
-    let mut m = model.clone();
+    let mut m = crate::numerics::effective_model(cfg, model);
     let prune = kind == DataflowKind::TileStream && cfg.features.token_pruning;
     if !prune {
         m.pruning = crate::config::PruningSchedule::disabled();
@@ -57,6 +60,7 @@ pub fn graph_for(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> 
 
 /// Entry point: run `model` under `kind` on `cfg`, producing a full report.
 pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunReport {
+    let model = &crate::numerics::effective_model(cfg, model);
     let graph = graph_for(kind, cfg, model);
     let mut acc = Accelerator::new(cfg.clone());
     let mut per_layer = Vec::with_capacity(graph.layers.len());
@@ -82,7 +86,9 @@ pub fn run(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> RunRep
     acc.activity.offchip_bits += out_bits;
     acc.offchip.acquire(acc.makespan(), cfg.offchip_cycles(out_bits), "embed-out");
 
-    RunReport::from_accel(&model.name, kind, &acc, per_layer)
+    let mut report = RunReport::from_accel(&model.name, kind, &acc, per_layer);
+    report.accuracy = crate::numerics::accuracy_proxy(cfg, model);
+    report
 }
 
 // ---------------------------------------------------------------------------

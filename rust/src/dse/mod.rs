@@ -6,7 +6,8 @@
 //! paper only samples.  This module closes that gap: it enumerates (or
 //! seeded-sample-trims, under `--budget`) the space of
 //! `cim::MacroGeometry` x `cim::ModePolicy` x dataflow x engine backend
-//! x serving knobs ([`space`]), prices every point through the exact
+//! x serving knobs x precision format ([`space`]), prices every point
+//! through the exact
 //! same paths `sweep` and `serve` use — [`crate::serve::CostModel`]
 //! (backed by the process-wide content-addressed schedule cache) for
 //! cycles/energy/utilization, [`crate::energy::area::AreaModel`] for
@@ -70,7 +71,9 @@ pub mod pareto;
 pub mod space;
 
 pub use pareto::{dominates, dominates_with_slack, frontier_indices, Objective};
-pub use space::{default_point, DsePoint, GeometryVariant, ServingVariant, TenancyVariant};
+pub use space::{
+    default_point, DsePoint, GeometryVariant, PrecisionVariant, ServingVariant, TenancyVariant,
+};
 
 use std::io::{self, Write};
 
@@ -91,8 +94,8 @@ use crate::util::json::Json;
 /// `dse-smoke` CI `cmp`.
 pub const DEFAULT_DOMINANCE_SLACK: f64 = 0.25;
 
-/// The five metrics every design point is priced on, whatever subset of
-/// them the frontier ranks.
+/// The seven metrics every design point is priced on, whatever subset
+/// of them the frontier ranks.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PointMetrics {
     /// End-to-end cycles of one inference of the workload.
@@ -107,6 +110,13 @@ pub struct PointMetrics {
     /// Serving throughput of the point's fabric on a near-saturation
     /// arrival trace: served requests per megacycle.
     pub served_per_mcycle: f64,
+    /// Output MSE of the precision/non-ideality configuration against
+    /// the fp32 reference (`numerics::accuracy_proxy`; 0 for fp32).
+    pub accuracy_mse: f64,
+    /// Output SQNR in dB against the fp32 reference (the accuracy
+    /// objective's raw metric; `AccuracyReport::IDEAL_SQNR_DB` for
+    /// fp32).
+    pub accuracy_sqnr_db: f64,
 }
 
 /// Everything one exploration depends on.  A pure function of this
@@ -223,6 +233,8 @@ pub fn evaluate(
         area_mm2,
         intra_macro_utilization: cost.intra_macro_utilization,
         served_per_mcycle,
+        accuracy_mse: cost.accuracy_mse,
+        accuracy_sqnr_db: cost.accuracy_sqnr_db,
     }
 }
 
@@ -293,7 +305,8 @@ fn surrogate_survivors(
 /// metrics — so the report is bit-identical for any `threads`.
 pub fn explore(cfg: &DseConfig, threads: usize) -> DseReport {
     let explore_serving = cfg.objectives.contains(&Objective::Throughput);
-    let all = space::enumerate(&cfg.backends, explore_serving);
+    let explore_precision = cfg.objectives.contains(&Objective::Accuracy);
+    let all = space::enumerate(&cfg.backends, explore_serving, explore_precision);
     let space_size = all.len();
     let selected = space::select(all, cfg.budget, cfg.seed);
     let n_selected = selected.len();
@@ -412,12 +425,15 @@ fn row_json(r: &DseRow, objectives: &[Objective], rank: usize) -> Json {
                 ("tenancy", Json::str(r.point.serving.tenancy.slug())),
             ]),
         ),
+        ("precision", Json::str(r.point.precision.slug)),
         ("engine", Json::str(r.point.backend.slug())),
         ("cycles", Json::int(m.cycles)),
         ("energy_mj", Json::num(m.energy_mj)),
         ("area_mm2", Json::num(m.area_mm2)),
         ("intra_macro_utilization", Json::num(m.intra_macro_utilization)),
         ("served_per_mcycle", Json::num(m.served_per_mcycle)),
+        ("accuracy_mse", Json::num(m.accuracy_mse)),
+        ("accuracy_sqnr_db", Json::num(m.accuracy_sqnr_db)),
         (
             "objective_costs",
             Json::obj(
@@ -666,7 +682,7 @@ mod tests {
     }
 
     #[test]
-    fn evaluate_prices_all_five_metrics() {
+    fn evaluate_prices_all_metrics() {
         let m = evaluate(
             &default_point(Backend::Analytic),
             &presets::streamdcim_default(),
@@ -678,6 +694,9 @@ mod tests {
         assert!(m.area_mm2 > 0.0);
         assert!(m.intra_macro_utilization > 0.0 && m.intra_macro_utilization <= 1.0);
         assert!(m.served_per_mcycle > 0.0);
+        // the default point is the fp32 ideal: exact by construction
+        assert_eq!(m.accuracy_mse, 0.0);
+        assert_eq!(m.accuracy_sqnr_db, crate::numerics::AccuracyReport::IDEAL_SQNR_DB);
     }
 
     #[test]
@@ -733,10 +752,43 @@ mod tests {
     #[test]
     fn serving_axis_only_explored_for_throughput() {
         let plain = explore(&tiny_cfg(0, vec![Objective::Cycles]), 1);
-        assert_eq!(plain.space_size, space::enumerate(&[Backend::Analytic], false).len());
+        assert_eq!(plain.space_size, space::enumerate(&[Backend::Analytic], false, false).len());
         let thr = explore(&tiny_cfg(6, vec![Objective::Throughput]), 1);
-        assert_eq!(thr.space_size, space::enumerate(&[Backend::Analytic], true).len());
+        assert_eq!(thr.space_size, space::enumerate(&[Backend::Analytic], true, false).len());
         assert!(thr.space_size > plain.space_size);
+    }
+
+    #[test]
+    fn precision_axis_only_explored_for_accuracy() {
+        let acc = explore(&tiny_cfg(6, vec![Objective::Cycles, Objective::Accuracy]), 1);
+        assert_eq!(acc.space_size, space::enumerate(&[Backend::Analytic], false, true).len());
+        let plain = explore(&tiny_cfg(0, vec![Objective::Cycles]), 1);
+        assert!(acc.space_size > plain.space_size);
+        // every fp32 point prices at the ideal SQNR, so the frontier
+        // always carries at least one exact point
+        assert!(acc
+            .rows
+            .iter()
+            .filter(|r| r.on_frontier)
+            .any(|r| r.metrics.accuracy_sqnr_db
+                == crate::numerics::AccuracyReport::IDEAL_SQNR_DB));
+    }
+
+    #[test]
+    fn lower_precision_trades_accuracy_for_energy() {
+        // energy x accuracy over the whole precision axis at the
+        // default geometry: mx4 must price cheaper and less accurate
+        // than fp32, so both land on the frontier of that pair
+        let accel = presets::streamdcim_default();
+        let model = presets::tiny_smoke();
+        let fp32 = evaluate(&default_point(Backend::Analytic), &accel, &model, 0);
+        let mut p4 = default_point(Backend::Analytic);
+        p4.precision =
+            space::precision_variants().into_iter().find(|v| v.slug == "mx4").unwrap();
+        let mx4 = evaluate(&p4, &accel, &model, 0);
+        assert!(mx4.energy_mj < fp32.energy_mj, "narrower operands must price cheaper");
+        assert!(mx4.accuracy_sqnr_db < fp32.accuracy_sqnr_db);
+        assert!(mx4.accuracy_mse > fp32.accuracy_mse);
     }
 
     #[test]

@@ -31,15 +31,20 @@ pub enum Objective {
     Utilization,
     /// Serving throughput, served requests per megacycle (maximize).
     Throughput,
+    /// Numerical accuracy of the precision/non-ideality configuration:
+    /// output SQNR in dB against the fp32 reference
+    /// (`numerics::accuracy_proxy`; maximize).
+    Accuracy,
 }
 
 impl Objective {
-    pub const ALL: [Objective; 5] = [
+    pub const ALL: [Objective; 6] = [
         Objective::Cycles,
         Objective::Energy,
         Objective::Area,
         Objective::Utilization,
         Objective::Throughput,
+        Objective::Accuracy,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -49,6 +54,7 @@ impl Objective {
             Objective::Area => "Area",
             Objective::Utilization => "Utilization",
             Objective::Throughput => "Throughput",
+            Objective::Accuracy => "Accuracy",
         }
     }
 
@@ -60,6 +66,7 @@ impl Objective {
             Objective::Area => "area",
             Objective::Utilization => "utilization",
             Objective::Throughput => "throughput",
+            Objective::Accuracy => "accuracy",
         }
     }
 
@@ -70,6 +77,7 @@ impl Objective {
             "area" | "area-mm2" => Some(Objective::Area),
             "utilization" | "util" | "cim-util" => Some(Objective::Utilization),
             "throughput" | "served" | "served-per-mcycle" => Some(Objective::Throughput),
+            "accuracy" | "sqnr" | "sqnr-db" => Some(Objective::Accuracy),
             _ => None,
         }
     }
@@ -85,7 +93,7 @@ impl Objective {
             }
             let o = Objective::parse(tok).ok_or_else(|| {
                 format!(
-                    "unknown objective '{tok}' (cycles|energy|area|utilization|throughput)"
+                    "unknown objective '{tok}' (cycles|energy|area|utilization|throughput|accuracy)"
                 )
             })?;
             if !out.contains(&o) {
@@ -100,18 +108,25 @@ impl Objective {
 
     /// True for objectives where larger is better.
     pub fn maximize(&self) -> bool {
-        matches!(self, Objective::Utilization | Objective::Throughput)
+        matches!(
+            self,
+            Objective::Utilization | Objective::Throughput | Objective::Accuracy
+        )
     }
 
     /// True when the analytic surrogate prices this objective *exactly*:
-    /// area is a pure function of the accelerator config, and the
-    /// occupancy ledger behind utilization is schedule-derived, so both
-    /// are backend-invariant (`serve::cost` tests pin the latter).  The
-    /// two-phase explorer applies its dominance slack only to the
-    /// approximate objectives (cycles, energy, throughput), comparing
-    /// exact coordinates at margin zero.
+    /// area is a pure function of the accelerator config, the occupancy
+    /// ledger behind utilization is schedule-derived, and the accuracy
+    /// proxy is a pure function of the precision config — all three are
+    /// backend-invariant (`serve::cost` and `tests/dataflow_equivalence`
+    /// pin the latter two).  The two-phase explorer applies its
+    /// dominance slack only to the approximate objectives (cycles,
+    /// energy, throughput), comparing exact coordinates at margin zero.
     pub fn surrogate_exact(&self) -> bool {
-        matches!(self, Objective::Area | Objective::Utilization)
+        matches!(
+            self,
+            Objective::Area | Objective::Utilization | Objective::Accuracy
+        )
     }
 
     /// The raw metric value of this objective.
@@ -122,6 +137,7 @@ impl Objective {
             Objective::Area => m.area_mm2,
             Objective::Utilization => m.intra_macro_utilization,
             Objective::Throughput => m.served_per_mcycle,
+            Objective::Accuracy => m.accuracy_sqnr_db,
         }
     }
 
@@ -214,11 +230,15 @@ mod tests {
             area_mm2: 12.0,
             intra_macro_utilization: 0.5,
             served_per_mcycle: 3.0,
+            accuracy_mse: 0.01,
+            accuracy_sqnr_db: 42.0,
         };
         assert_eq!(Objective::Cycles.cost(&m), 100.0);
         assert_eq!(Objective::Utilization.cost(&m), -0.5);
         assert_eq!(Objective::Throughput.cost(&m), -3.0);
         assert_eq!(Objective::Throughput.raw(&m), 3.0);
+        assert_eq!(Objective::Accuracy.cost(&m), -42.0);
+        assert_eq!(Objective::Accuracy.raw(&m), 42.0);
     }
 
     #[test]
@@ -256,6 +276,7 @@ mod tests {
     fn surrogate_exact_objectives_are_backend_invariant_ones() {
         assert!(Objective::Area.surrogate_exact());
         assert!(Objective::Utilization.surrogate_exact());
+        assert!(Objective::Accuracy.surrogate_exact());
         assert!(!Objective::Cycles.surrogate_exact());
         assert!(!Objective::Energy.surrogate_exact());
         assert!(!Objective::Throughput.surrogate_exact());

@@ -81,6 +81,22 @@ pub struct ServingVariant {
     pub tenancy: TenancyVariant,
 }
 
+/// A named precision/non-ideality operating point of the numerics layer
+/// (`config::PrecisionConfig` knobs the explorer varies).  Only explored
+/// when the accuracy objective is selected — precision cannot move
+/// area or serving throughput, and its latency/energy effect flows
+/// through the effective bit width, so enumerating it elsewhere would
+/// mostly duplicate frontier points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecisionVariant {
+    /// Stable slug used in point ids (`PrecisionConfig::slug` naming:
+    /// `fp32`, `mx8`, `mx4-noisy`, ...).
+    pub slug: &'static str,
+    pub mantissa_bits: u64,
+    pub shared_exp_block: u64,
+    pub noise: bool,
+}
+
 /// One fully-specified design point of the explored space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DsePoint {
@@ -88,24 +104,34 @@ pub struct DsePoint {
     pub policy: ModePolicy,
     pub dataflow: DataflowKind,
     pub serving: ServingVariant,
+    pub precision: PrecisionVariant,
     pub backend: Backend,
 }
 
 impl DsePoint {
-    /// Stable identity: `geometry/mode/dataflow/serving/backend`.
+    /// Stable identity: `geometry/mode/dataflow/serving/backend`, with
+    /// `+precision` appended only off the fp32 default — so every point
+    /// id from before the precision axis existed (perf-gate pins,
+    /// report anchors) is unchanged.
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "{}/{}/{}/{}/{}",
             self.geometry.slug,
             self.policy.slug(),
             self.dataflow.slug(),
             self.serving.slug,
             self.backend.slug()
-        )
+        );
+        if self.precision.slug == "fp32" {
+            base
+        } else {
+            format!("{base}+{}", self.precision.slug)
+        }
     }
 
-    /// Materialize this design point onto `base` (geometry, mode policy
-    /// and serving knobs overwritten; timing/energy constants kept).
+    /// Materialize this design point onto `base` (geometry, mode policy,
+    /// serving and precision knobs overwritten; timing/energy constants
+    /// and the noise sigma/seed kept).
     pub fn apply(&self, base: &AccelConfig) -> AccelConfig {
         let mut cfg = base.clone();
         cfg.arrays_per_macro = self.geometry.sub_arrays;
@@ -118,6 +144,9 @@ impl DsePoint {
         cfg.serving.batch_size = self.serving.batch;
         cfg.serving.scheduler = self.serving.scheduler;
         cfg.serving.tenants = self.serving.tenancy.tenants();
+        cfg.precision.mantissa_bits = self.precision.mantissa_bits;
+        cfg.precision.shared_exp_block = self.precision.shared_exp_block;
+        cfg.precision.noise = self.precision.noise;
         cfg
     }
 }
@@ -268,6 +297,24 @@ pub fn serving_variants() -> Vec<ServingVariant> {
     ]
 }
 
+/// The precision axis: the fp32 ideal first (the paper's digital
+/// reference, and the default everywhere the axis is not explored),
+/// then the microscaling block formats clean and with readout
+/// non-idealities on.  Slugs match `PrecisionConfig::parse`, so any
+/// variant here is reproducible as `--precision <slug>`.
+pub fn precision_variants() -> Vec<PrecisionVariant> {
+    vec![
+        PrecisionVariant { slug: "fp32", mantissa_bits: 0, shared_exp_block: 0, noise: false },
+        PrecisionVariant { slug: "mx8", mantissa_bits: 7, shared_exp_block: 32, noise: false },
+        PrecisionVariant { slug: "mx6", mantissa_bits: 5, shared_exp_block: 32, noise: false },
+        PrecisionVariant { slug: "mx4", mantissa_bits: 3, shared_exp_block: 32, noise: false },
+        PrecisionVariant { slug: "fp32-noisy", mantissa_bits: 0, shared_exp_block: 0, noise: true },
+        PrecisionVariant { slug: "mx8-noisy", mantissa_bits: 7, shared_exp_block: 32, noise: true },
+        PrecisionVariant { slug: "mx6-noisy", mantissa_bits: 5, shared_exp_block: 32, noise: true },
+        PrecisionVariant { slug: "mx4-noisy", mantissa_bits: 3, shared_exp_block: 32, noise: true },
+    ]
+}
+
 /// Dataflows in exploration order: the paper's design first, then the
 /// two baselines (so the default design point is index 0 overall).
 const DATAFLOWS: [DataflowKind; 3] =
@@ -280,13 +327,15 @@ pub fn default_point(backend: Backend) -> DsePoint {
         policy: ModePolicy::Auto,
         dataflow: DataflowKind::TileStream,
         serving: serving_variants()[0],
+        precision: precision_variants()[0],
         backend,
     }
 }
 
 /// Enumerate the full space in canonical order.  `explore_serving`
-/// expands the serving axis; otherwise every point uses the default
-/// fabric (see [`ServingVariant`]).  Index 0 is
+/// expands the serving axis and `explore_precision` the precision axis;
+/// otherwise every point uses the default fabric and the fp32 ideal
+/// (see [`ServingVariant`], [`PrecisionVariant`]).  Index 0 is
 /// [`default_point`]`(backends[0])`.
 ///
 /// The mode-policy axis applies to tile streaming only: the baselines'
@@ -294,12 +343,21 @@ pub fn default_point(backend: Backend) -> DsePoint {
 /// forces normal mode), so a baseline point is enumerated once, as
 /// no-hybrid silicon (`ForcedNormal`) — crossing the ignored policies
 /// in would only add area-dominated duplicates of the same design.
-pub fn enumerate(backends: &[Backend], explore_serving: bool) -> Vec<DsePoint> {
+pub fn enumerate(
+    backends: &[Backend],
+    explore_serving: bool,
+    explore_precision: bool,
+) -> Vec<DsePoint> {
     let geoms = geometry_variants();
     let serves = if explore_serving {
         serving_variants()
     } else {
         vec![serving_variants()[0]]
+    };
+    let precs = if explore_precision {
+        precision_variants()
+    } else {
+        vec![precision_variants()[0]]
     };
     let mut out = Vec::new();
     for &backend in backends {
@@ -312,7 +370,16 @@ pub fn enumerate(backends: &[Backend], explore_serving: bool) -> Vec<DsePoint> {
                 };
                 for &policy in policies {
                     for &serving in &serves {
-                        out.push(DsePoint { geometry, policy, dataflow, serving, backend });
+                        for &precision in &precs {
+                            out.push(DsePoint {
+                                geometry,
+                                policy,
+                                dataflow,
+                                serving,
+                                precision,
+                                backend,
+                            });
+                        }
                     }
                 }
             }
@@ -362,6 +429,7 @@ pub fn perfgate_points() -> Vec<DsePoint> {
             policy: ModePolicy::Auto,
             dataflow: DataflowKind::TileStream,
             serving: serving_variants()[0],
+            precision: precision_variants()[0],
             backend: Backend::Analytic,
         },
         DsePoint {
@@ -371,6 +439,7 @@ pub fn perfgate_points() -> Vec<DsePoint> {
             policy: ModePolicy::ForcedNormal,
             dataflow: DataflowKind::LayerStream,
             serving: serving_variants()[0],
+            precision: precision_variants()[0],
             backend: Backend::Event,
         },
     ]
@@ -384,7 +453,7 @@ mod tests {
 
     #[test]
     fn default_point_leads_the_enumeration() {
-        let pts = enumerate(&[Backend::Analytic], false);
+        let pts = enumerate(&[Backend::Analytic], false, false);
         assert_eq!(pts[0], default_point(Backend::Analytic));
         assert_eq!(pts[0].id(), "g8x4x128/auto/tile/s2-least-loaded-b8/analytic");
     }
@@ -393,9 +462,9 @@ mod tests {
     fn enumeration_sizes_and_unique_ids() {
         // per geometry: tile x 3 policies + the two baselines once each
         // (their rigid silicon ignores the policy)
-        let base = enumerate(&[Backend::Analytic], false);
+        let base = enumerate(&[Backend::Analytic], false, false);
         assert_eq!(base.len(), geometry_variants().len() * (3 + 2));
-        let full = enumerate(&[Backend::Analytic, Backend::Event], true);
+        let full = enumerate(&[Backend::Analytic, Backend::Event], true, false);
         assert_eq!(full.len(), base.len() * 2 * serving_variants().len());
         let ids: BTreeSet<String> = full.iter().map(|p| p.id()).collect();
         assert_eq!(ids.len(), full.len(), "point ids must be unique");
@@ -405,6 +474,45 @@ mod tests {
             .iter()
             .filter(|p| p.dataflow != DataflowKind::TileStream)
             .all(|p| p.policy == ModePolicy::ForcedNormal));
+    }
+
+    #[test]
+    fn precision_axis_expands_ids_off_the_default_only() {
+        let base = enumerate(&[Backend::Analytic], false, false);
+        assert!(base.iter().all(|p| p.precision.slug == "fp32"));
+        let prec = enumerate(&[Backend::Analytic], false, true);
+        assert_eq!(prec.len(), base.len() * precision_variants().len());
+        assert_eq!(prec[0], default_point(Backend::Analytic));
+        let ids: BTreeSet<String> = prec.iter().map(|p| p.id()).collect();
+        assert_eq!(ids.len(), prec.len(), "point ids must be unique");
+        // fp32 points keep the legacy five-segment id; the rest append
+        // the precision slug
+        assert!(!prec[0].id().contains('+'));
+        let noisy = prec.iter().find(|p| p.precision.slug == "mx4-noisy").unwrap();
+        assert!(noisy.id().ends_with("+mx4-noisy"), "id: {}", noisy.id());
+        // every variant is reproducible from the CLI: slugs parse back
+        // to the exact same knobs
+        for v in precision_variants() {
+            let p = crate::config::PrecisionConfig::parse(v.slug).unwrap();
+            assert_eq!(p.mantissa_bits, v.mantissa_bits, "{}", v.slug);
+            assert_eq!(p.shared_exp_block, v.shared_exp_block, "{}", v.slug);
+            assert_eq!(p.noise, v.noise, "{}", v.slug);
+        }
+    }
+
+    #[test]
+    fn apply_materializes_precision_but_keeps_noise_constants() {
+        let base = presets::streamdcim_default();
+        let mut p = default_point(Backend::Analytic);
+        p.precision =
+            precision_variants().into_iter().find(|v| v.slug == "mx4-noisy").unwrap();
+        let cfg = p.apply(&base);
+        assert_eq!(cfg.precision.mantissa_bits, 3);
+        assert_eq!(cfg.precision.shared_exp_block, 32);
+        assert!(cfg.precision.noise);
+        // sigma/seed are pricing constants, not explored knobs
+        assert_eq!(cfg.precision.noise_sigma, base.precision.noise_sigma);
+        assert_eq!(cfg.precision.noise_seed, base.precision.noise_seed);
     }
 
     #[test]
@@ -451,7 +559,7 @@ mod tests {
 
     #[test]
     fn select_keeps_default_order_and_budget() {
-        let pts = enumerate(&[Backend::Analytic], true);
+        let pts = enumerate(&[Backend::Analytic], true, false);
         assert!(pts.len() > 64);
         let sel = select(pts.clone(), 64, 42);
         assert_eq!(sel.len(), 64);

@@ -202,6 +202,7 @@ fn assemble(
         per_layer,
         utilization,
         trace: Some(cycle_trace.clone()),
+        accuracy: sched.accuracy,
     };
     let lanes = if sim.segments.is_empty() {
         Vec::new() // untraced hot path: no Gantt lanes collected

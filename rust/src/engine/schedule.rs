@@ -96,6 +96,11 @@ pub struct TileSchedule {
     pub kind: DataflowKind,
     pub tasks: Vec<Task>,
     pub activity: Activity,
+    /// Accuracy proxy of the configured precision model
+    /// (`numerics::accuracy_proxy`) — config-derived, identical to the
+    /// analytic backend's, carried here so `engine::assemble` attaches
+    /// it without re-running the proxy per simulation.
+    pub accuracy: crate::numerics::AccuracyReport,
     pub n_cores: usize,
     pub layers: Vec<LayerMeta>,
     dep_edges: Vec<u32>,
@@ -198,8 +203,12 @@ impl TileSchedule {
     }
 }
 
-/// Lower `model` under `kind` on `cfg` to a task DAG.
+/// Lower `model` under `kind` on `cfg` to a task DAG.  The model is
+/// first capped at the configured precision's effective operand bits
+/// (`numerics::effective_model`), the same transform `dataflow::run`
+/// applies — so the two backends keep agreeing exactly on total work.
 pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> TileSchedule {
+    let model = &crate::numerics::effective_model(cfg, model);
     let graph = dataflow::graph_for(kind, cfg, model);
     let mut b = Builder {
         cfg: cfg.clone(),
@@ -280,6 +289,7 @@ pub fn build(kind: DataflowKind, cfg: &AccelConfig, model: &ModelConfig) -> Tile
         kind,
         tasks: b.tasks,
         activity: b.activity,
+        accuracy: crate::numerics::accuracy_proxy(cfg, model),
         n_cores: cfg.cores as usize,
         layers,
         dep_edges: b.dep_edges,

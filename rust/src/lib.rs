@@ -63,6 +63,7 @@ pub mod engine;
 pub mod exec;
 pub mod metrics;
 pub mod model;
+pub mod numerics;
 pub mod perfgate;
 pub mod propcheck;
 pub mod pruning;

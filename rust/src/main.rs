@@ -71,10 +71,26 @@ fn load_configs(args: &Args) -> Result<(AccelConfig, ModelConfig)> {
         toml::apply_accel_overrides(&mut accel, &doc);
         toml::apply_model_overrides(&mut model, &doc);
     }
+    apply_precision_flag(args, &mut accel)?;
     if args.has("no-pruning") {
         model.pruning = streamdcim::config::PruningSchedule::disabled();
     }
     Ok((accel, model))
+}
+
+/// `--precision <slug>` (fp32|mx8|mx6|mx4, optional `-noisy` suffix):
+/// overrides the `[precision]` format/noise knobs; the sigma and seed
+/// pricing constants stay whatever the config set.
+fn apply_precision_flag(args: &Args, accel: &mut AccelConfig) -> Result<()> {
+    if let Some(p) = args.flag("precision") {
+        let parsed = streamdcim::config::PrecisionConfig::parse(p).ok_or_else(|| {
+            anyhow!("unknown --precision '{p}' (fp32|mx8|mx6|mx4, optional -noisy suffix)")
+        })?;
+        accel.precision.mantissa_bits = parsed.mantissa_bits;
+        accel.precision.shared_exp_block = parsed.shared_exp_block;
+        accel.precision.noise = parsed.noise;
+    }
+    Ok(())
 }
 
 /// `--threads` with the shared default: available cores capped at 8.
@@ -229,6 +245,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             );
         }
     }
+    apply_precision_flag(args, &mut accel)?;
     let threads = thread_count(args);
     let seed = args.flag_u64("seed", 42);
 
@@ -504,7 +521,16 @@ fn cmd_report(args: &Args) -> Result<()> {
             }
             None => report::serving(&accel),
         },
-        "utilization" | "util" => report::utilization(&both()),
+        "utilization" | "util" => match args.flag("from") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading recorded sweep artifact {path}: {e}"))?;
+                report::utilization_from_jsonl(&text)
+                    .map_err(|e| anyhow!("replaying {path}: {e}"))?
+            }
+            None => report::utilization(&both()),
+        },
+        "accuracy" => report::accuracy(&accel),
         "frontier" | "pareto" => match args.flag("from") {
             Some(path) => {
                 let text = std::fs::read_to_string(path)
@@ -516,7 +542,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         },
         other => bail!(
             "unknown figure '{other}' \
-             (fig5|fig6|fig7|headline|e5|serving|utilization|frontier)"
+             (fig5|fig6|fig7|headline|e5|serving|utilization|accuracy|frontier)"
         ),
     };
     println!("{}\n{}", fig.title, fig.body);
@@ -564,6 +590,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         toml::apply_accel_overrides(&mut accel, &doc);
     }
+    apply_precision_flag(args, &mut accel)?;
     // CLI flags override the [serving] section
     accel.serving.shards = args.flag_u64("shards", accel.serving.shards).max(1);
     accel.serving.queue_depth = args.flag_u64("queue-depth", accel.serving.queue_depth).max(1);
@@ -752,8 +779,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `streamdcim dse`: deterministic design-space exploration — price a
-/// (budget-trimmed) geometry x mode x dataflow x serving x backend
-/// space on one workload and emit the ranked multi-objective artifact
+/// (budget-trimmed) geometry x mode x dataflow x serving x precision x
+/// backend space on one workload and emit the ranked multi-objective artifact
 /// plus the exact Pareto frontier.  Artifacts are bit-identical for any
 /// `--threads` value (the `dse-smoke` CI job `cmp`s re-runs).
 fn cmd_dse(args: &Args) -> Result<()> {

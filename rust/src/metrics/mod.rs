@@ -206,6 +206,11 @@ pub struct RunReport {
     /// Cycle-level pipeline trace; present only for event-engine runs
     /// (the analytic backend cannot observe stalls and bubbles).
     pub trace: Option<crate::engine::CycleTrace>,
+    /// Accuracy proxy of the configured precision/noise model vs the
+    /// fp32 reference (`numerics::accuracy_proxy`).  Config-derived, so
+    /// analytic and event backends report the identical value; defaults
+    /// to the ideal report until the backend fills it in.
+    pub accuracy: crate::numerics::AccuracyReport,
 }
 
 impl RunReport {
@@ -236,6 +241,7 @@ impl RunReport {
             per_layer,
             utilization,
             trace: None,
+            accuracy: crate::numerics::AccuracyReport::ideal(0),
         }
     }
 
@@ -260,6 +266,9 @@ impl RunReport {
             ("ms", Json::num(self.ms)),
             ("energy_mj", Json::num(self.energy.total_mj())),
             ("avg_power_mw", Json::num(self.energy.avg_power_mw)),
+            ("accuracy_mse", Json::num(self.accuracy.mse)),
+            ("accuracy_sqnr_db", Json::num(self.accuracy.sqnr_db)),
+            ("effective_bits", Json::int(self.accuracy.effective_bits)),
             ("macs", Json::int(self.activity.macs)),
             ("offchip_bits", Json::int(self.activity.offchip_bits)),
             ("cim_write_bits", Json::int(self.activity.cim_write_bits)),

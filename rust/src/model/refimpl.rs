@@ -172,16 +172,58 @@ impl BlockWeights {
     }
 }
 
+/// Observation points of the CIM numerics model inside the encoder
+/// block (`numerics` implements the non-ideal version).
+///
+/// `operand` fires on every tensor about to stream into a macro as a
+/// matmul operand (activation quantization); `readout` fires on every
+/// macro accumulation result (ADC quantization + device variation).
+/// Both default to the identity, so [`Ideal`] reproduces the fp32
+/// reference bit-for-bit.  Weights are NOT passed through `operand` —
+/// callers that model weight quantization pre-quantize the
+/// [`BlockWeights`] once (stationary operands are written, not
+/// streamed).
+pub trait NumericsHook {
+    fn operand(&mut self, _m: &mut Mat) {}
+    fn readout(&mut self, _m: &mut Mat) {}
+}
+
+/// Ideal fp32 numerics: every hook is the identity.
+pub struct Ideal;
+
+impl NumericsHook for Ideal {}
+
 /// Cross-modal encoder block (stream for modal X): output tokens and
 /// importance scores of modal-Y keys. Mirrors ref.encoder_block_ref.
 pub fn encoder_block(w: &BlockWeights, ix: &Mat, iy: &Mat, heads: usize) -> (Mat, Vec<f32>) {
+    encoder_block_with(w, ix, iy, heads, &mut Ideal)
+}
+
+/// [`encoder_block`] with a [`NumericsHook`] observing every macro
+/// operand and readout.  With [`Ideal`] the result is bit-identical to
+/// `encoder_block`; residual adds and normalization stay in digital
+/// fp32 regardless of the hook (they never touch a macro).
+pub fn encoder_block_with(
+    w: &BlockWeights,
+    ix: &Mat,
+    iy: &Mat,
+    heads: usize,
+    hook: &mut impl NumericsHook,
+) -> (Mat, Vec<f32>) {
     let d = ix.cols;
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
 
-    let q = matmul(ix, &w.wq);
-    let k = matmul(iy, &w.wk);
-    let v = matmul(iy, &w.wv);
+    let mut ixq = ix.clone();
+    hook.operand(&mut ixq);
+    let mut iyq = iy.clone();
+    hook.operand(&mut iyq);
+    let mut q = matmul(&ixq, &w.wq);
+    hook.readout(&mut q);
+    let mut k = matmul(&iyq, &w.wk);
+    hook.readout(&mut k);
+    let mut v = matmul(&iyq, &w.wv);
+    hook.readout(&mut v);
 
     let nx = ix.rows;
     let ny = iy.rows;
@@ -193,6 +235,7 @@ pub fn encoder_block(w: &BlockWeights, ix: &Mat, iy: &Mat, heads: usize) -> (Mat
         let ks = slice_cols(&k, h * dh, dh);
         let vs = slice_cols(&v, h * dh, dh);
         let mut a = matmul_bt(&qs, &ks);
+        hook.readout(&mut a);
         for x in a.data.iter_mut() {
             *x *= scale;
         }
@@ -204,7 +247,11 @@ pub fn encoder_block(w: &BlockWeights, ix: &Mat, iy: &Mat, heads: usize) -> (Mat
             }
             scores[j] += col / nx as f64;
         }
-        let o = matmul(&a, &vs);
+        // attention probabilities re-enter the TBR-CIM macro as the
+        // streamed operand of A @ V
+        hook.operand(&mut a);
+        let mut o = matmul(&a, &vs);
+        hook.readout(&mut o);
         for i in 0..nx {
             for c in 0..dh {
                 *attn.at_mut(i, h * dh + c) = o.at(i, c);
@@ -213,14 +260,21 @@ pub fn encoder_block(w: &BlockWeights, ix: &Mat, iy: &Mat, heads: usize) -> (Mat
     }
     let scores: Vec<f32> = scores.iter().map(|s| (s / heads as f64) as f32).collect();
 
+    hook.operand(&mut attn);
     let mut x = matmul(&attn, &w.wo);
+    hook.readout(&mut x);
     for i in 0..x.data.len() {
         x.data[i] += ix.data[i];
     }
     layernorm(&mut x, &w.ln1_g, &w.ln1_b, 1e-5);
-    let mut h1 = matmul(&x, &w.w1);
+    let mut xq = x.clone();
+    hook.operand(&mut xq);
+    let mut h1 = matmul(&xq, &w.w1);
+    hook.readout(&mut h1);
     gelu(&mut h1);
-    let h2 = matmul(&h1, &w.w2);
+    hook.operand(&mut h1);
+    let mut h2 = matmul(&h1, &w.w2);
+    hook.readout(&mut h2);
     for i in 0..x.data.len() {
         x.data[i] += h2.data[i];
     }
@@ -328,6 +382,18 @@ mod tests {
         assert_eq!(scores.len(), 48);
         let s: f32 = scores.iter().sum();
         assert!(approx(s, 1.0, 1e-4), "{s}");
+    }
+
+    #[test]
+    fn ideal_hook_is_bit_identical() {
+        let mut rng = Rng::new(6);
+        let w = BlockWeights::random(&mut rng, 64, 128);
+        let ix = Mat::random_i16_grid(&mut rng, 32, 64, 0.5);
+        let iy = Mat::random_i16_grid(&mut rng, 48, 64, 0.5);
+        let (a, sa) = encoder_block(&w, &ix, &iy, 4);
+        let (b, sb) = encoder_block_with(&w, &ix, &iy, 4, &mut Ideal);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
     }
 
     #[test]

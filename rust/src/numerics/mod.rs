@@ -1,0 +1,369 @@
+//! Precision & non-ideality modeling (docs/numerics.md).
+//!
+//! The bit-precision axis of the design space: microscaling block-FP
+//! operand formats ([`MxFormat`], MXFormer direction), seeded readout
+//! non-idealities (ADC quantization at the geometry-derived level count
+//! plus multiplicative device-variation noise, NeuroSim's backbone
+//! idea), and the accuracy proxy ([`accuracy_proxy`]) that turns both
+//! into a scalar objective — output MSE / SQNR vs the fp32 reference
+//! encoder block on a clamped slice of the configured workload.
+//!
+//! Everything here is a pure function of the config and its seeds: no
+//! wall-clock, no ambient RNG, bit-identical across `--threads` and
+//! across runs.  The default [`PrecisionConfig`] (fp32, noise off) is
+//! the exact identity — every pre-existing artifact reproduces
+//! byte-for-byte.
+
+use crate::cim::MacroGeometry;
+use crate::config::{AccelConfig, ModelConfig, PrecisionConfig};
+use crate::model::refimpl::{self, BlockWeights, Mat, NumericsHook};
+use crate::util::prng::Rng;
+
+/// A microscaling block floating-point format: values in blocks of
+/// `shared_exp_block` share one exponent derived from the block's
+/// max-abs; each value keeps `mantissa_bits` mantissa bits plus sign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MxFormat {
+    pub mantissa_bits: u32,
+    pub shared_exp_block: usize,
+}
+
+impl MxFormat {
+    /// The format selected by a [`PrecisionConfig`]; `None` for fp32
+    /// (the identity — no quantization at all).
+    pub fn from_config(p: &PrecisionConfig) -> Option<MxFormat> {
+        if p.is_fp32() {
+            return None;
+        }
+        Some(MxFormat {
+            mantissa_bits: p.mantissa_bits.min(23) as u32,
+            shared_exp_block: p.shared_exp_block.max(1) as usize,
+        })
+    }
+
+    /// Quantize a tensor in place.  Per block: the shared exponent is
+    /// `floor(log2(max|v|))` — independent of the mantissa width — and
+    /// each value rounds to the nearest multiple of
+    /// `2^(e + 1 - mantissa_bits)`.  Because that step is a power of
+    /// two, the representable grid at `m+1` mantissa bits is a superset
+    /// of the grid at `m`, which makes the quantization MSE monotone
+    /// non-increasing in `mantissa_bits` (property-tested in
+    /// `tests/numerics_battery.rs`).
+    pub fn quantize(&self, data: &mut [f32]) {
+        for chunk in data.chunks_mut(self.shared_exp_block) {
+            let a = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if !a.is_finite() || a == 0.0 {
+                continue;
+            }
+            let e = a.log2().floor() as i32;
+            let step = 2.0f32.powi(e + 1 - self.mantissa_bits as i32);
+            if step <= 0.0 {
+                continue; // block max is subnormal; step underflowed
+            }
+            for v in chunk.iter_mut() {
+                *v = (*v / step).round() * step;
+            }
+        }
+    }
+}
+
+/// The readout-side non-ideality model: uniform ADC quantization of
+/// every macro accumulation result to a geometry-derived level count,
+/// followed by multiplicative device-variation noise drawn from the
+/// seeded PRNG stream.
+#[derive(Debug, Clone)]
+pub struct Readout {
+    pub levels: u64,
+    pub sigma: f64,
+}
+
+impl Readout {
+    pub fn from_geometry(g: &MacroGeometry, p: &PrecisionConfig) -> Readout {
+        Readout { levels: g.readout_levels(), sigma: p.noise_sigma }
+    }
+
+    /// ADC quantization: snap every value to one of `levels` uniform
+    /// steps across the tensor's own [-max|v|, +max|v|] range (the
+    /// readout chain auto-ranges per tile).
+    pub fn adc_quantize(&self, data: &mut [f32]) {
+        let a = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if !a.is_finite() || a == 0.0 || self.levels < 2 {
+            return;
+        }
+        let step = 2.0 * a / self.levels as f32;
+        for v in data.iter_mut() {
+            *v = (*v / step).round() * step;
+        }
+    }
+
+    /// Device variation: `v <- v * (1 + sigma * g)` with `g` standard
+    /// normal from `rng`.  Draws are consumed per value in tensor
+    /// order, so the stream is a pure function of the noise seed.
+    pub fn variation(&self, data: &mut [f32], rng: &mut Rng) {
+        for v in data.iter_mut() {
+            *v = (*v as f64 * (1.0 + self.sigma * rng.normal())) as f32;
+        }
+    }
+}
+
+/// The [`NumericsHook`] implementing the full non-ideal macro model:
+/// operand streams are MX-quantized, readouts pass through the ADC and
+/// pick up device variation.  Any part can be absent (fp32 format,
+/// noise off) and the hook degrades to the identity there.
+pub struct CimHook {
+    fmt: Option<MxFormat>,
+    readout: Option<(Readout, Rng)>,
+}
+
+impl CimHook {
+    pub fn new(cfg: &AccelConfig) -> CimHook {
+        let p = &cfg.precision;
+        let readout = if p.noise {
+            Some((Readout::from_geometry(&cfg.geometry(), p), Rng::new(p.noise_seed)))
+        } else {
+            None
+        };
+        CimHook { fmt: MxFormat::from_config(p), readout }
+    }
+}
+
+impl NumericsHook for CimHook {
+    fn operand(&mut self, m: &mut Mat) {
+        if let Some(f) = &self.fmt {
+            f.quantize(&mut m.data);
+        }
+    }
+    fn readout(&mut self, m: &mut Mat) {
+        if let Some((r, rng)) = &mut self.readout {
+            r.adc_quantize(&mut m.data);
+            r.variation(&mut m.data, rng);
+        }
+    }
+}
+
+/// The model as the configured macros actually execute it: operand
+/// precision capped at the format's effective storage bits.  Applied
+/// identically at the top of both backends (`dataflow::run`,
+/// `engine::schedule::build`) and in `dataflow::graph_for`; idempotent
+/// (`min`), so layered application is safe.
+pub fn effective_model(cfg: &AccelConfig, model: &ModelConfig) -> ModelConfig {
+    let mut m = model.clone();
+    m.bits = cfg.precision.effective_bits(m.bits);
+    m
+}
+
+/// Accuracy proxy of one run: output error of the non-ideal encoder
+/// block vs the fp32 reference on a clamped slice of the workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    /// Mean squared output error vs the fp32 reference.
+    pub mse: f64,
+    /// Signal-to-quantization-noise ratio in dB, capped at
+    /// [`AccuracyReport::IDEAL_SQNR_DB`] when the error is exactly zero
+    /// (JSON has no infinity).
+    pub sqnr_db: f64,
+    /// Effective operand storage bits after the format cap.
+    pub effective_bits: u64,
+}
+
+impl AccuracyReport {
+    /// SQNR reported for a bit-exact (zero-error) run.
+    pub const IDEAL_SQNR_DB: f64 = 300.0;
+
+    /// The report of an ideal (bit-exact) run at `effective_bits`.
+    pub fn ideal(effective_bits: u64) -> Self {
+        AccuracyReport { mse: 0.0, sqnr_db: Self::IDEAL_SQNR_DB, effective_bits }
+    }
+
+    pub fn from_outputs(reference: &[f32], observed: &[f32], effective_bits: u64) -> Self {
+        assert_eq!(reference.len(), observed.len());
+        let n = reference.len().max(1) as f64;
+        let mut err = 0.0f64;
+        let mut sig = 0.0f64;
+        for (r, o) in reference.iter().zip(observed) {
+            let d = *r as f64 - *o as f64;
+            err += d * d;
+            sig += *r as f64 * *r as f64;
+        }
+        let mse = err / n;
+        let sqnr_db = if err == 0.0 || sig == 0.0 {
+            Self::IDEAL_SQNR_DB
+        } else {
+            (10.0 * (sig / err).log10()).min(Self::IDEAL_SQNR_DB)
+        };
+        AccuracyReport { mse, sqnr_db, effective_bits }
+    }
+}
+
+/// Data seed of the proxy workload.  Constant: the reference and the
+/// non-ideal run must see the *same* weights and activations, and two
+/// configs differing only in precision must be scored on the same data.
+const PROXY_DATA_SEED: u64 = 0x5dc1_ac0e;
+
+/// Clamp the configured workload to the proxy slice: one cross-modal
+/// encoder block at `d <= 64`, `heads <= 4`, `d_ff <= 128`, `tokens <=
+/// 32` per modality.  Error is dominated by the format/noise model, not
+/// the dims, so the slice keeps the proxy cheap enough to run inside
+/// every pricing call while still exercising every op class.
+fn proxy_dims(model: &ModelConfig) -> (usize, usize, usize, usize, usize) {
+    let heads = model.heads.clamp(1, 4) as usize;
+    let d = ((model.d_model.min(64) as usize) / heads).max(1) * heads;
+    let f = model.d_ff.clamp(1, 128) as usize;
+    let nx = model.tokens_x.clamp(1, 32) as usize;
+    let ny = model.tokens_y.clamp(1, 32) as usize;
+    (d, heads, f, nx, ny)
+}
+
+/// Run one encoder block under the configured numerics model:
+/// stationary weights pre-quantized to the MX format (they are written
+/// into the macros once, not streamed), activations and readouts
+/// through [`CimHook`].
+pub fn quantized_encoder(
+    cfg: &AccelConfig,
+    w: &BlockWeights,
+    ix: &Mat,
+    iy: &Mat,
+    heads: usize,
+) -> (Mat, Vec<f32>) {
+    let mut hook = CimHook::new(cfg);
+    if let Some(f) = &hook.fmt {
+        let mut wq = w.clone();
+        for m in [&mut wq.wq, &mut wq.wk, &mut wq.wv, &mut wq.wo, &mut wq.w1, &mut wq.w2] {
+            f.quantize(&mut m.data);
+        }
+        refimpl::encoder_block_with(&wq, ix, iy, heads, &mut hook)
+    } else {
+        refimpl::encoder_block_with(w, ix, iy, heads, &mut hook)
+    }
+}
+
+/// Score `cfg`'s precision configuration against the fp32 reference on
+/// the proxy slice of `model`.  Pure and deterministic; the fp32 /
+/// noise-off default yields exactly `mse = 0` (the hook path is
+/// bit-identical to the reference, not just close).
+pub fn accuracy_proxy(cfg: &AccelConfig, model: &ModelConfig) -> AccuracyReport {
+    let (d, heads, f, nx, ny) = proxy_dims(model);
+    let mut rng = Rng::new(PROXY_DATA_SEED);
+    let w = BlockWeights::random(&mut rng, d, f);
+    let ix = Mat::random_i16_grid(&mut rng, nx, d, 0.5);
+    let iy = Mat::random_i16_grid(&mut rng, ny, d, 0.5);
+    let (reference, _) = refimpl::encoder_block(&w, &ix, &iy, heads);
+    let (observed, _) = quantized_encoder(cfg, &w, &ix, &iy, heads);
+    AccuracyReport::from_outputs(
+        &reference.data,
+        &observed.data,
+        cfg.precision.effective_bits(model.bits),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::PrecisionConfig;
+
+    fn tensor(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * 1.5) as f32).collect()
+    }
+
+    fn mse(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let d = *x as f64 - *y as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / a.len() as f64
+    }
+
+    #[test]
+    fn fp32_config_is_identity() {
+        let cfg = presets::streamdcim_default();
+        assert!(MxFormat::from_config(&cfg.precision).is_none());
+        let model = presets::vilbert_base();
+        assert_eq!(effective_model(&cfg, &model), model);
+        let acc = accuracy_proxy(&cfg, &model);
+        assert_eq!(acc.mse, 0.0);
+        assert_eq!(acc.sqnr_db, AccuracyReport::IDEAL_SQNR_DB);
+        assert_eq!(acc.effective_bits, model.bits);
+    }
+
+    #[test]
+    fn quantize_snaps_to_block_grid() {
+        let f = MxFormat { mantissa_bits: 3, shared_exp_block: 4 };
+        let mut xs = vec![1.0, 0.3, -0.26, 0.01];
+        f.quantize(&mut xs);
+        // block max 1.0 → e = 0 → step = 2^(0+1-3) = 0.25
+        assert_eq!(xs, vec![1.0, 0.25, -0.25, 0.0]);
+        // exact zeros and representable values survive
+        let mut ys = vec![0.0, -0.5, 0.75, 0.25];
+        f.quantize(&mut ys);
+        assert_eq!(ys, vec![0.0, -0.5, 0.75, 0.25]);
+    }
+
+    #[test]
+    fn mse_monotone_in_mantissa_bits() {
+        let xs = tensor(1, 4096);
+        let mut prev = f64::INFINITY;
+        for m in 1..=10u32 {
+            let f = MxFormat { mantissa_bits: m, shared_exp_block: 32 };
+            let mut q = xs.clone();
+            f.quantize(&mut q);
+            let e = mse(&xs, &q);
+            assert!(e <= prev, "m={m}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn variation_mse_monotone_in_sigma() {
+        let xs = tensor(2, 4096);
+        let mut prev = -1.0;
+        for k in 0..8 {
+            let sigma = 0.005 * k as f64;
+            let r = Readout { levels: u64::MAX, sigma };
+            let mut noisy = xs.clone();
+            r.variation(&mut noisy, &mut Rng::new(99));
+            let e = mse(&xs, &noisy);
+            assert!(e >= prev, "sigma={sigma}: {e} < {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn accuracy_improves_with_format_and_default_never_worse() {
+        let model = presets::vilbert_base();
+        let mut mx4 = presets::streamdcim_default();
+        mx4.precision = PrecisionConfig::parse("mx4").unwrap();
+        let mut mx8 = presets::streamdcim_default();
+        mx8.precision = PrecisionConfig::parse("mx8").unwrap();
+        let a4 = accuracy_proxy(&mx4, &model);
+        let a8 = accuracy_proxy(&mx8, &model);
+        assert!(a4.mse > a8.mse, "mx4 {} vs mx8 {}", a4.mse, a8.mse);
+        assert!(a4.sqnr_db < a8.sqnr_db);
+        assert!(a8.mse > 0.0);
+        assert_eq!(a4.effective_bits, 5); // sign + 3 mantissa + amortized exponent
+        assert_eq!(a8.effective_bits, 9);
+        // the cap never widens a narrow model: INT8 workload stays 8-bit
+        let a8_int8 = accuracy_proxy(&mx8, &presets::trancim_microbench());
+        assert_eq!(a8_int8.effective_bits, 8);
+    }
+
+    #[test]
+    fn noise_injection_is_seeded_and_deterministic() {
+        let model = presets::tiny_smoke();
+        let mut cfg = presets::streamdcim_default();
+        cfg.precision = PrecisionConfig::parse("mx6-noisy").unwrap();
+        let a = accuracy_proxy(&cfg, &model);
+        let b = accuracy_proxy(&cfg, &model);
+        assert_eq!(a, b);
+        let mut reseeded = cfg.clone();
+        reseeded.precision.noise_seed = 7;
+        assert_ne!(accuracy_proxy(&reseeded, &model).mse, a.mse);
+        let mut quiet = cfg.clone();
+        quiet.precision.noise = false;
+        assert!(accuracy_proxy(&quiet, &model).mse < a.mse);
+    }
+}

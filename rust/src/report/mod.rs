@@ -216,6 +216,156 @@ pub fn utilization(all: &[(String, Vec<RunReport>)]) -> FigureText {
     FigureText { title: "Utilization — intra-macro CIM occupancy by dataflow".into(), body }
 }
 
+/// Rebuild the utilization figure from a recorded `sweep --format
+/// jsonl` artifact instead of re-running the matrix (`report --figure
+/// utilization --from <sweep.jsonl>`).  Scenario rows stream through
+/// the `artifact` pull reader one line at a time; only the full
+/// (unablated) runs contribute, mirroring what the live figure
+/// simulates.  Models render in recorded order, so the replayed figure
+/// is a pure function of the artifact bytes.
+pub fn utilization_from_jsonl(text: &str) -> Result<FigureText, String> {
+    let mut engine = String::from("?");
+    // (model, dataflow slug, util, replay_bits, effective_bits)
+    let mut rows: Vec<(String, String, f64, u64, u64)> = Vec::new();
+    let mut saw_header = false;
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row = crate::artifact::parse_line(line)
+            .map_err(|e| format!("line {}: {e}", no + 1))?;
+        match row.get("row").and_then(Json::as_str) {
+            Some("header") => {
+                if row.get("kind").and_then(Json::as_str) != Some("sweep-report") {
+                    return Err(format!("line {}: not a sweep-report artifact", no + 1));
+                }
+                if let Some(e) = row.get("engine").and_then(Json::as_str) {
+                    engine = e.to_string();
+                }
+                saw_header = true;
+            }
+            Some("scenario") => {
+                if row.get("ablation").and_then(Json::as_str) != Some("full") {
+                    continue; // the live figure only runs full configs
+                }
+                let model = row
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("line {}: scenario row without model", no + 1))?
+                    .to_string();
+                let dataflow = row
+                    .get("dataflow")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("line {}: scenario row without dataflow", no + 1))?
+                    .to_string();
+                rows.push((
+                    model,
+                    dataflow,
+                    row.get("intra_macro_utilization").and_then(Json::as_f64).unwrap_or(0.0),
+                    row.get("replay_bits").and_then(Json::as_u64).unwrap_or(0),
+                    row.get("effective_bits").and_then(Json::as_u64).unwrap_or(0),
+                ));
+            }
+            Some("group") | Some("headline") => {}
+            other => return Err(format!("line {}: unexpected row tag {other:?}", no + 1)),
+        }
+    }
+    if !saw_header {
+        return Err("artifact carried no sweep-report header".into());
+    }
+    if rows.is_empty() {
+        return Err("artifact carried no full-config scenario rows".into());
+    }
+    let mut models: Vec<String> = Vec::new();
+    for (m, ..) in &rows {
+        if !models.contains(m) {
+            models.push(m.clone());
+        }
+    }
+    let mut body = format!(
+        "replayed from artifact: {} full-config scenario row(s), {engine} engine\n",
+        rows.len()
+    );
+    for model in &models {
+        body.push_str(&format!("{model}\n"));
+        let util = |slug: &str| -> Option<f64> {
+            rows.iter().find(|(m, d, ..)| m == model && d == slug).map(|r| r.2)
+        };
+        let (tile, layer, non) = (util("tile"), util("layer"), util("non"));
+        for (m, dataflow, u, replay, bits) in &rows {
+            if m != model {
+                continue;
+            }
+            body.push_str(&format!(
+                "  {:<6} intra-macro util {:>5.1} %   replay {:>14} bits   {} effective bits\n",
+                dataflow,
+                u * 100.0,
+                replay,
+                bits,
+            ));
+        }
+        if let (Some(tile), Some(layer), Some(non)) = (tile, layer, non) {
+            let cmp = |a: f64, b: f64| {
+                if a > b {
+                    ">"
+                } else if a < b {
+                    "<"
+                } else {
+                    "="
+                }
+            };
+            body.push_str(&format!(
+                "  ordering: tile {tile:.3} {} layer {layer:.3} {} non {non:.3}\n",
+                cmp(tile, layer),
+                cmp(layer, non),
+            ));
+        }
+    }
+    Ok(FigureText {
+        title: "Utilization — intra-macro CIM occupancy (replayed from artifact)".into(),
+        body,
+    })
+}
+
+/// The precision axis priced on the paper workload: every named
+/// MX format (clean and with readout non-idealities) through one
+/// tile-stream run of ViLBERT-base — accuracy proxy (MSE / SQNR vs the
+/// fp32 reference) next to the cycles and energy the narrower operands
+/// buy.  The figure-side view of the `dse` accuracy objective
+/// (docs/numerics.md).
+pub fn accuracy(accel: &AccelConfig) -> FigureText {
+    let model = crate::config::presets::vilbert_base();
+    let mut body = format!(
+        "{} (tile streaming, analytic pricing; noise sigma {}, seed {})\n\n",
+        model.name, accel.precision.noise_sigma, accel.precision.noise_seed
+    );
+    body.push_str(&format!(
+        "  {:<12} {:>8} {:>12} {:>12} {:>14} {:>10}\n",
+        "format", "bits", "mse", "sqnr dB", "cycles", "energy mJ"
+    ));
+    for v in dse::space::precision_variants() {
+        let mut cfg = accel.clone();
+        cfg.precision.mantissa_bits = v.mantissa_bits;
+        cfg.precision.shared_exp_block = v.shared_exp_block;
+        cfg.precision.noise = v.noise;
+        let r = dataflow::run(DataflowKind::TileStream, &cfg, &model);
+        body.push_str(&format!(
+            "  {:<12} {:>8} {:>12.3e} {:>12.1} {:>14} {:>10.3}\n",
+            v.slug,
+            r.accuracy.effective_bits,
+            r.accuracy.mse,
+            r.accuracy.sqnr_db,
+            r.cycles,
+            r.energy.total_mj(),
+        ));
+    }
+    body.push_str(
+        "\n  (sqnr dB is the dse accuracy objective; fp32 rows report the ideal cap)\n",
+    );
+    FigureText { title: "Accuracy — precision & non-ideality trade-off".into(), body }
+}
+
 /// Serving-level comparison: the same arrival trace through the sharded
 /// fabric under each dataflow (event-engine pricing).  The serving
 /// analogue of Fig. 6 — throughput of a *loaded multi-shard system*
@@ -602,6 +752,47 @@ mod tests {
             assert!(fig.body.contains(&format!("shard {i}")), "shard row {i} missing");
         }
         assert!(fig.body.contains("tenant interactive"), "tenant row missing from replay");
+    }
+
+    #[test]
+    fn utilization_replay_rebuilds_the_figure_from_a_recorded_jsonl() {
+        let accel = presets::streamdcim_default();
+        let models = vec![presets::tiny_smoke()];
+        let scenarios = crate::sweep::matrix_for_backend(&accel, &models, Backend::Analytic);
+        let agg = crate::sweep::run_sweep(&scenarios, 1, 42);
+        let mut buf = Vec::new();
+        agg.write_jsonl(&mut buf).unwrap();
+        let fig = utilization_from_jsonl(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert!(fig.body.contains("replayed from artifact"));
+        assert!(fig.body.contains("tiny-smoke"));
+        assert!(fig.body.contains("intra-macro util"));
+        assert!(fig.body.contains("ordering: tile"), "all three dataflows must replay");
+        assert!(fig.body.contains("effective bits"));
+    }
+
+    #[test]
+    fn utilization_replay_rejects_non_sweep_input() {
+        assert!(utilization_from_jsonl("not json").is_err());
+        let wrong = "{\"row\":\"header\",\"kind\":\"dse-report\"}";
+        assert!(utilization_from_jsonl(wrong).is_err());
+        assert!(utilization_from_jsonl("").is_err(), "empty artifact carries no header");
+        let no_rows = "{\"row\":\"header\",\"kind\":\"sweep-report\"}";
+        assert!(utilization_from_jsonl(no_rows).is_err(), "header alone is not a report");
+        let bad_tag =
+            "{\"row\":\"header\",\"kind\":\"sweep-report\"}\n{\"row\":\"bogus\"}";
+        assert!(utilization_from_jsonl(bad_tag).is_err(), "unknown row tags must be rejected");
+    }
+
+    #[test]
+    fn accuracy_figure_spans_the_precision_axis() {
+        let fig = accuracy(&presets::streamdcim_default());
+        assert!(fig.body.contains("sqnr dB"));
+        for v in dse::space::precision_variants() {
+            assert!(fig.body.contains(v.slug), "missing precision row {}", v.slug);
+        }
+        // the ideal row reports the cap; the narrowest noisy row cannot
+        let cap = format!("{:.1}", crate::numerics::AccuracyReport::IDEAL_SQNR_DB);
+        assert!(fig.body.contains(&cap));
     }
 
     #[test]

@@ -66,6 +66,12 @@ pub struct BatchCost {
     /// (`cim::OccupancyLedger`).  Schedule-derived, so both backends
     /// report it.
     pub intra_macro_utilization: f64,
+    /// Accuracy proxy of the configured precision model: output MSE vs
+    /// the fp32 reference (`numerics::accuracy_proxy`).  Config-derived,
+    /// so both backends report the identical value.
+    pub accuracy_mse: f64,
+    /// SQNR in dB of the same proxy (capped for bit-exact runs).
+    pub accuracy_sqnr_db: f64,
     /// The underlying run's occupancy ledger (one request's worth);
     /// the fabric aggregates it across every served request.
     pub occupancy: OccupancyLedger,
@@ -169,6 +175,8 @@ pub fn price_uncached(
                 energy_mj: report.energy.total_mj(),
                 rewrite_hidden: Some(trace.rewrite_hidden_ratio()),
                 intra_macro_utilization: report.intra_macro_utilization(),
+                accuracy_mse: report.accuracy.mse,
+                accuracy_sqnr_db: report.accuracy.sqnr_db,
                 occupancy: report.activity.occupancy,
             }
         }
@@ -182,6 +190,8 @@ pub fn price_uncached(
                 energy_mj: report.energy.total_mj(),
                 rewrite_hidden: None,
                 intra_macro_utilization: report.intra_macro_utilization(),
+                accuracy_mse: report.accuracy.mse,
+                accuracy_sqnr_db: report.accuracy.sqnr_db,
                 occupancy: report.activity.occupancy,
             }
         }
@@ -340,6 +350,9 @@ mod tests {
         let mut geo = base.clone();
         geo.arrays_per_macro = 16;
         assert_ne!(key(&base), key(&geo), "geometry must change the address");
+        let mut prec = base.clone();
+        prec.precision = crate::config::PrecisionConfig::parse("mx4-noisy").unwrap();
+        assert_ne!(key(&base), key(&prec), "precision must change the address");
         let other_model =
             schedule_cache_key(&base, DataflowKind::TileStream, Backend::Event, &presets::functional_small());
         assert_ne!(key(&base), other_model, "model shapes must change the address");

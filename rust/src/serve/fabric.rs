@@ -720,6 +720,8 @@ where
                 let lat = end - req_cycle[slot];
                 stats.latency.record(lat);
                 stats.energy_mj += cost.energy_mj;
+                stats.accuracy_mse += cost.accuracy_mse;
+                stats.accuracy_sqnr_db += cost.accuracy_sqnr_db;
                 stats.occupancy.add(&cost.occupancy);
                 if let Some(h) = cost.rewrite_hidden {
                     hidden_sum += h;
@@ -785,6 +787,11 @@ where
     } else {
         stats.per_shard.iter().map(|s| s.cim_util_sum).sum::<f64>() / stats.served as f64
     };
+    if stats.served > 0 {
+        // request-weighted means, mirroring intra_macro_utilization
+        stats.accuracy_mse /= stats.served as f64;
+        stats.accuracy_sqnr_db /= stats.served as f64;
+    }
 
     Ok(ServeReport {
         models: cfg.models.iter().map(|m| m.name.clone()).collect(),
@@ -1170,6 +1177,8 @@ mod tests {
                     let lat = end - r.cycle;
                     stats.latency.record(lat);
                     stats.energy_mj += cost.energy_mj;
+                    stats.accuracy_mse += cost.accuracy_mse;
+                    stats.accuracy_sqnr_db += cost.accuracy_sqnr_db;
                     stats.occupancy.add(&cost.occupancy);
                     if let Some(h) = cost.rewrite_hidden {
                         hidden_sum += h;
@@ -1215,6 +1224,10 @@ mod tests {
         } else {
             stats.per_shard.iter().map(|s| s.cim_util_sum).sum::<f64>() / stats.served as f64
         };
+        if stats.served > 0 {
+            stats.accuracy_mse /= stats.served as f64;
+            stats.accuracy_sqnr_db /= stats.served as f64;
+        }
         stats
     }
 

@@ -109,6 +109,12 @@ pub struct ServeStats {
     /// Served-request-weighted intra-macro CIM utilization across all
     /// shards (both backends report it — schedule-derived).
     pub intra_macro_utilization: f64,
+    /// Served-request-weighted accuracy proxy of the configured
+    /// precision model: mean output MSE vs the fp32 reference
+    /// (`numerics::accuracy_proxy`; 0 under the fp32 default).
+    pub accuracy_mse: f64,
+    /// Served-request-weighted SQNR in dB of the same proxy.
+    pub accuracy_sqnr_db: f64,
     /// Energy of all served requests, mJ.
     pub energy_mj: f64,
 }
@@ -163,6 +169,8 @@ impl ServeStats {
                 },
             ),
             ("intra_macro_utilization", Json::num(self.intra_macro_utilization)),
+            ("accuracy_mse", Json::num(self.accuracy_mse)),
+            ("accuracy_sqnr_db", Json::num(self.accuracy_sqnr_db)),
             ("energy_mj", Json::num(self.energy_mj)),
         ])
     }

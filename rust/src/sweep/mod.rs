@@ -412,6 +412,9 @@ fn row_json(r: &SweepRow) -> Json {
         ("offchip_bits", Json::int(rep.activity.offchip_bits)),
         ("exposed_rewrite_cycles", Json::int(rep.exposed_rewrite())),
         ("intra_macro_utilization", Json::num(rep.intra_macro_utilization())),
+        ("accuracy_mse", Json::num(rep.accuracy.mse)),
+        ("accuracy_sqnr_db", Json::num(rep.accuracy.sqnr_db)),
+        ("effective_bits", Json::int(rep.accuracy.effective_bits)),
         ("replay_bits", Json::int(rep.activity.occupancy.replay_bits)),
         ("speedup_vs_non", Json::num(r.speedup_vs_non)),
         ("energy_saving_vs_non", Json::num(r.energy_saving_vs_non)),

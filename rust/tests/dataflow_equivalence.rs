@@ -5,8 +5,9 @@
 #![allow(unknown_lints)]
 #![allow(clippy::style, clippy::complexity)]
 
-use streamdcim::config::{presets, DataflowKind, PruningSchedule};
+use streamdcim::config::{presets, DataflowKind, PrecisionConfig, PruningSchedule};
 use streamdcim::dataflow;
+use streamdcim::engine;
 use streamdcim::model::build_graph;
 
 fn unpruned(mut m: streamdcim::config::ModelConfig) -> streamdcim::config::ModelConfig {
@@ -110,6 +111,86 @@ fn scaling_with_token_count_is_superlinear_for_attention() {
     // flooring small-N cost; expect clearly superlinear, below quadratic
     assert!(ratio > 3.0, "4x tokens must cost >>cycles (attention quadratic): {ratio:.2}");
     assert!(ratio < 16.0, "but generation/FFN keep it below fully quadratic: {ratio:.2}");
+}
+
+#[test]
+fn backends_agree_bit_exactly_on_accuracy_and_occupancy_fields() {
+    // the accuracy proxy and the occupancy ledger are pure functions of
+    // (config, model) — schedule-derived, never timing-derived — so the
+    // analytic and event backends must report the *same bits* for them,
+    // under every dataflow and every precision format
+    let model = presets::tiny_smoke();
+    for slug in ["fp32", "mx8", "mx4-noisy"] {
+        let mut cfg = presets::streamdcim_default();
+        cfg.precision = PrecisionConfig::parse(slug).unwrap();
+        for k in DataflowKind::ALL {
+            let ana = dataflow::run(k, &cfg, &model);
+            let eng = engine::run(k, &cfg, &model);
+            assert_eq!(
+                ana.accuracy,
+                eng.accuracy,
+                "{slug}/{}: accuracy fields diverged across backends",
+                k.name()
+            );
+            assert_eq!(
+                ana.activity.occupancy,
+                eng.activity.occupancy,
+                "{slug}/{}: occupancy ledger diverged across backends",
+                k.name()
+            );
+            assert_eq!(
+                ana.accuracy.effective_bits,
+                cfg.precision.effective_bits(model.bits),
+                "{slug}/{}: effective bits drifted from the config cap",
+                k.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn precision_cap_shrinks_traffic_but_never_the_computation() {
+    // mx4 on a 16-bit model caps operands at 5 effective bits: rewrite
+    // and off-chip traffic shrink on every dataflow, while the logical
+    // MAC count — the computation performed — is untouched
+    let model = unpruned(presets::tiny_smoke());
+    let base = presets::streamdcim_default();
+    let mut mx4 = base.clone();
+    mx4.precision = PrecisionConfig::parse("mx4").unwrap();
+    for k in DataflowKind::ALL {
+        let wide = dataflow::run(k, &base, &model);
+        let narrow = dataflow::run(k, &mx4, &model);
+        assert_eq!(
+            narrow.activity.macs,
+            wide.activity.macs,
+            "{}: the bit cap must not change the computation",
+            k.name()
+        );
+        assert!(
+            narrow.activity.offchip_bits < wide.activity.offchip_bits,
+            "{}: off-chip traffic must shrink with the bit width",
+            k.name()
+        );
+        assert!(
+            narrow.activity.cim_write_bits < wide.activity.cim_write_bits,
+            "{}: macro rewrite traffic must shrink with the bit width",
+            k.name()
+        );
+        assert!(
+            narrow.energy.total_mj() < wide.energy.total_mj(),
+            "{}: narrower operands must save energy ({} vs {})",
+            k.name(),
+            narrow.energy.total_mj(),
+            wide.energy.total_mj()
+        );
+        assert!(
+            narrow.cycles <= wide.cycles,
+            "{}: narrower operands must never cost cycles ({} vs {})",
+            k.name(),
+            narrow.cycles,
+            wide.cycles
+        );
+    }
 }
 
 #[test]

@@ -194,6 +194,149 @@ fn artifact_schema_is_stable_and_parseable() {
 }
 
 #[test]
+fn accuracy_objective_two_phase_frontier_matches_exhaustive() {
+    // the numerics acceptance check: with accuracy in the objective set
+    // (which expands the precision axis into the space), surrogate-guided
+    // two-phase event exploration must land on exactly the frontier the
+    // exhaustive run finds — accuracy is surrogate-exact, so pruning on
+    // it is sound by construction
+    let mut fast_cfg = cfg(
+        presets::tiny_smoke(),
+        64,
+        vec![Objective::Cycles, Objective::Energy, Objective::Accuracy],
+    );
+    fast_cfg.backends = vec![Backend::Event];
+    fast_cfg.serve_requests = 0;
+    fast_cfg.two_phase = true;
+    let mut slow_cfg = fast_cfg.clone();
+    slow_cfg.two_phase = false;
+    let fast = dse::explore(&fast_cfg, 4);
+    let slow = dse::explore(&slow_cfg, 4);
+    assert_eq!(fast.frontier, slow.frontier, "two-phase changed the accuracy frontier set");
+    assert_eq!(
+        fast.frontier_json().to_string_pretty(),
+        slow.frontier_json().to_string_pretty(),
+        "accuracy frontier artifact must be byte-identical to brute force"
+    );
+    assert_eq!(fast.rows.len() + fast.pruned, slow.rows.len());
+    // the fp32 paper default is never pruned by the surrogate phase
+    let default_id = dse::default_point(Backend::Event).id();
+    assert!(
+        fast.rows.iter().any(|r| r.point.id() == default_id),
+        "surrogate phase pruned the paper-default fp32 point"
+    );
+}
+
+#[test]
+fn accuracy_objective_expands_the_precision_axis_with_no_dominated_emission() {
+    let mut c = cfg(
+        presets::tiny_smoke(),
+        0,
+        vec![Objective::Cycles, Objective::Energy, Objective::Accuracy],
+    );
+    c.serve_requests = 0;
+    let rep = dse::explore(&c, 4);
+    // the dominance audit, now with accuracy as a maximize objective
+    let costs: Vec<Vec<f64>> = rep
+        .rows
+        .iter()
+        .map(|r| c.objectives.iter().map(|o| o.cost(&r.metrics)).collect())
+        .collect();
+    for (i, row) in rep.rows.iter().enumerate() {
+        let dominated = costs.iter().any(|q| pareto::dominates(q, &costs[i]));
+        assert_eq!(
+            row.on_frontier, !dominated,
+            "{}: on_frontier flag disagrees with dominance",
+            row.point.id()
+        );
+    }
+    // the fp32 paper default holds the ideal-SQNR corner: a reduced-
+    // precision point can never dominate it (accuracy is maximized and
+    // capped at the ideal), so every dominator must itself be exact
+    let default_id = dse::default_point(Backend::Analytic).id();
+    let default_row =
+        rep.rows.iter().find(|r| r.point.id() == default_id).expect("default point priced");
+    let default_cost: Vec<f64> =
+        c.objectives.iter().map(|o| o.cost(&default_row.metrics)).collect();
+    for (i, row) in rep.rows.iter().enumerate() {
+        if pareto::dominates(&costs[i], &default_cost) {
+            assert_eq!(
+                row.metrics.accuracy_sqnr_db,
+                streamdcim::numerics::AccuracyReport::IDEAL_SQNR_DB,
+                "{} dominates the fp32 default while paying accuracy",
+                row.point.id()
+            );
+        }
+    }
+    // lower precision trades accuracy for energy at the paper geometry
+    let at = |slug: &str| {
+        rep.rows
+            .iter()
+            .find(|r| {
+                r.point.precision.slug == slug
+                    && r.point.geometry.slug == "g8x4x128"
+                    && r.point.policy == streamdcim::cim::ModePolicy::Auto
+                    && r.point.dataflow == streamdcim::config::DataflowKind::TileStream
+            })
+            .expect("point present with budget 0")
+    };
+    let fp32 = at("fp32");
+    let mx4 = at("mx4");
+    assert!(
+        mx4.metrics.energy_mj < fp32.metrics.energy_mj,
+        "mx4 must save energy: {} vs {}",
+        mx4.metrics.energy_mj,
+        fp32.metrics.energy_mj
+    );
+    assert!(
+        mx4.metrics.accuracy_sqnr_db < fp32.metrics.accuracy_sqnr_db,
+        "mx4 must pay accuracy: {} vs {}",
+        mx4.metrics.accuracy_sqnr_db,
+        fp32.metrics.accuracy_sqnr_db
+    );
+    assert!(mx4.metrics.accuracy_mse > fp32.metrics.accuracy_mse);
+    // the frontier keeps at least one exact (ideal-SQNR) point
+    assert!(
+        rep.rows.iter().any(|r| {
+            r.on_frontier
+                && r.metrics.accuracy_sqnr_db
+                    == streamdcim::numerics::AccuracyReport::IDEAL_SQNR_DB
+        }),
+        "frontier lost every exact point"
+    );
+}
+
+#[test]
+fn accuracy_artifacts_are_bit_identical_across_thread_counts() {
+    let c = cfg(
+        presets::tiny_smoke(),
+        16,
+        vec![Objective::Cycles, Objective::Energy, Objective::Area, Objective::Accuracy],
+    );
+    let one = dse::explore(&c, 1);
+    let eight = dse::explore(&c, 8);
+    assert_eq!(
+        one.to_json().to_string_pretty(),
+        eight.to_json().to_string_pretty(),
+        "accuracy-priced ranked artifact must not depend on the thread count"
+    );
+    assert_eq!(
+        one.frontier_json().to_string_pretty(),
+        eight.frontier_json().to_string_pretty(),
+        "accuracy-priced frontier artifact must not depend on the thread count"
+    );
+    // accuracy fields and the precision tag ride in the point schema
+    let doc = Json::parse(&one.to_json().to_string_pretty()).unwrap();
+    let points = doc.get("points").and_then(|p| p.as_arr()).unwrap();
+    assert_eq!(points.len(), 16);
+    for p in points {
+        for field in ["accuracy_mse", "accuracy_sqnr_db", "precision"] {
+            assert!(p.get(field).is_some(), "point missing field {field}");
+        }
+    }
+}
+
+#[test]
 fn throughput_objective_expands_the_serving_axis_and_rewards_shards() {
     let c = cfg(presets::tiny_smoke(), 0, vec![Objective::Throughput]);
     let rep = dse::explore(&c, 4);

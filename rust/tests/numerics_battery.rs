@@ -1,0 +1,215 @@
+//! The numerics test battery: property checks over the microscaling
+//! quantizer, the seeded readout non-idealities, and the accuracy proxy
+//! (`streamdcim::numerics`), plus the end-to-end contract that accuracy
+//! fields in sweep artifacts are byte-identical across thread counts.
+//!
+//! The monotonicity checks are property tests over many random tensors,
+//! shapes, and block sizes (seeded by the repo's own PRNG — no ambient
+//! randomness, every case reproducible by its printed seed).
+
+// Same lint posture as lib.rs (authored offline without clippy in the loop).
+#![allow(unknown_lints)]
+#![allow(clippy::style, clippy::complexity)]
+
+use streamdcim::config::{presets, PrecisionConfig};
+use streamdcim::model::refimpl::{self, BlockWeights, Mat};
+use streamdcim::numerics::{
+    accuracy_proxy, effective_model, quantized_encoder, AccuracyReport, MxFormat, Readout,
+};
+use streamdcim::sweep::{matrix_for, run_sweep};
+use streamdcim::util::prng::Rng;
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len().max(1) as f64
+}
+
+fn random_tensor(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.normal() * 2.0) as f32).collect()
+}
+
+#[test]
+fn fp32_default_is_bit_exact_not_just_close() {
+    // the identity contract: with the default precision config the hook
+    // path must produce the *same bits* as the plain reference — not a
+    // small error, zero error
+    let cfg = presets::streamdcim_default();
+    let mut rng = Rng::new(0xbeef);
+    let w = BlockWeights::random(&mut rng, 32, 64);
+    let ix = Mat::random_i16_grid(&mut rng, 8, 32, 0.5);
+    let iy = Mat::random_i16_grid(&mut rng, 12, 32, 0.5);
+    let (reference, _) = refimpl::encoder_block(&w, &ix, &iy, 4);
+    let (observed, _) = quantized_encoder(&cfg, &w, &ix, &iy, 4);
+    let ref_bits: Vec<u32> = reference.data.iter().map(|v| v.to_bits()).collect();
+    let obs_bits: Vec<u32> = observed.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ref_bits, obs_bits, "fp32 hook path must be the exact identity");
+    // and the proxy reports exactly-zero error on every workload class
+    let models =
+        [presets::vilbert_base(), presets::tiny_smoke(), presets::trancim_microbench()];
+    for model in models {
+        let acc = accuracy_proxy(&cfg, &model);
+        assert_eq!(acc.mse, 0.0, "{}: fp32 proxy error must be exactly 0", model.name);
+        assert_eq!(acc.sqnr_db, AccuracyReport::IDEAL_SQNR_DB, "{}", model.name);
+        assert_eq!(acc.effective_bits, model.bits, "{}", model.name);
+    }
+}
+
+#[test]
+fn quantization_mse_monotone_non_increasing_in_mantissa_bits() {
+    // property test: the representable grid at m+1 mantissa bits nests
+    // the grid at m (the step is a power of two and the shared exponent
+    // is mantissa-independent), so round-to-nearest error can only fall
+    let mut meta = Rng::new(0x5eed);
+    for case in 0..24u64 {
+        let n = 64 + (meta.next_u64() % 4000) as usize;
+        let block = [1usize, 2, 8, 16, 32, 64][(meta.next_u64() % 6) as usize];
+        let xs = random_tensor(0x1000 + case, n);
+        let mut prev = f64::INFINITY;
+        for m in 1..=12u32 {
+            let f = MxFormat { mantissa_bits: m, shared_exp_block: block };
+            let mut q = xs.clone();
+            f.quantize(&mut q);
+            let e = mse(&xs, &q);
+            assert!(
+                e <= prev,
+                "case {case} (n={n}, block={block}): mantissa {m} raised MSE {e:.3e} > {prev:.3e}"
+            );
+            prev = e;
+        }
+    }
+}
+
+#[test]
+fn variation_mse_monotone_non_decreasing_in_sigma() {
+    // property test: with the same seeded gaussian stream the per-value
+    // perturbation is x * sigma * g, so MSE scales with sigma^2 exactly
+    let mut meta = Rng::new(0xda7a);
+    for case in 0..16u64 {
+        let n = 128 + (meta.next_u64() % 2048) as usize;
+        let xs = random_tensor(0x2000 + case, n);
+        let mut prev = -1.0;
+        for k in 0..=6 {
+            let sigma = 0.004 * k as f64;
+            let r = Readout { levels: u64::MAX, sigma };
+            let mut noisy = xs.clone();
+            r.variation(&mut noisy, &mut Rng::new(0x77));
+            let e = mse(&xs, &noisy);
+            assert!(
+                e >= prev,
+                "case {case} (n={n}): sigma {sigma} lowered MSE {e:.3e} < {prev:.3e}"
+            );
+            prev = e;
+        }
+    }
+}
+
+#[test]
+fn adc_error_monotone_non_increasing_in_level_count() {
+    // power-of-two level counts nest their uniform grids: doubling the
+    // levels halves the step, and every old code stays representable
+    let xs = random_tensor(9, 2048);
+    let mut prev = f64::INFINITY;
+    for k in 2..=14u32 {
+        let r = Readout { levels: 1u64 << k, sigma: 0.0 };
+        let mut q = xs.clone();
+        r.adc_quantize(&mut q);
+        let e = mse(&xs, &q);
+        assert!(e <= prev, "levels 2^{k}: MSE {e:.3e} > {prev:.3e}");
+        prev = e;
+    }
+}
+
+#[test]
+fn format_ladder_orders_the_accuracy_proxy() {
+    // mx4 < mx6 < mx8 < fp32 in SQNR (and the reverse in MSE) on the
+    // 16-bit paper workloads — the trade-off surface the DSE explores
+    for model in [presets::vilbert_base(), presets::tiny_smoke()] {
+        let score = |slug: &str| {
+            let mut cfg = presets::streamdcim_default();
+            cfg.precision = PrecisionConfig::parse(slug).unwrap();
+            accuracy_proxy(&cfg, &model)
+        };
+        let (a4, a6, a8, afp) = (score("mx4"), score("mx6"), score("mx8"), score("fp32"));
+        let name = &model.name;
+        assert!(a4.sqnr_db < a6.sqnr_db, "{name}: mx4 {} >= mx6 {}", a4.sqnr_db, a6.sqnr_db);
+        assert!(a6.sqnr_db < a8.sqnr_db, "{name}: mx6 {} >= mx8 {}", a6.sqnr_db, a8.sqnr_db);
+        assert!(a8.sqnr_db < afp.sqnr_db, "{name}: mx8 {} >= fp32 {}", a8.sqnr_db, afp.sqnr_db);
+        assert!(a4.mse > a6.mse && a6.mse > a8.mse && a8.mse > afp.mse, "{name}");
+        assert_eq!(afp.mse, 0.0);
+        assert!(a4.effective_bits < a6.effective_bits);
+        assert!(a6.effective_bits < a8.effective_bits);
+    }
+}
+
+#[test]
+fn readout_noise_widens_the_proxy_error_and_is_seed_deterministic() {
+    let model = presets::tiny_smoke();
+    // sigma 0 with noise on: the ADC alone already costs accuracy
+    let mut adc_only = presets::streamdcim_default();
+    adc_only.precision.noise = true;
+    adc_only.precision.noise_sigma = 0.0;
+    let quiet = accuracy_proxy(&adc_only, &model);
+    assert!(quiet.mse > 0.0, "ADC quantization must be visible in the proxy");
+    // device variation on top strictly widens the error
+    let mut noisy_cfg = adc_only.clone();
+    noisy_cfg.precision.noise_sigma = 0.04;
+    let noisy = accuracy_proxy(&noisy_cfg, &model);
+    assert!(noisy.mse > quiet.mse, "sigma 0.04 {} <= ADC-only {}", noisy.mse, quiet.mse);
+    // and the whole thing is a pure function of the config
+    assert_eq!(noisy, accuracy_proxy(&noisy_cfg, &model));
+    let mut reseeded = noisy_cfg.clone();
+    reseeded.precision.noise_seed = 1234;
+    assert_ne!(accuracy_proxy(&reseeded, &model).mse, noisy.mse, "seed must steer the draw");
+}
+
+#[test]
+fn effective_model_cap_is_idempotent_for_every_format() {
+    for slug in ["fp32", "mx8", "mx6", "mx4", "fp32-noisy", "mx4-noisy"] {
+        let mut cfg = presets::streamdcim_default();
+        cfg.precision = PrecisionConfig::parse(slug).unwrap();
+        for model in [presets::vilbert_base(), presets::trancim_microbench()] {
+            let once = effective_model(&cfg, &model);
+            let twice = effective_model(&cfg, &once);
+            assert_eq!(once, twice, "{slug}/{}: the bit cap must be idempotent", model.name);
+            assert!(once.bits <= model.bits, "{slug}/{}: the cap never widens", model.name);
+        }
+    }
+}
+
+#[test]
+fn sweep_accuracy_fields_are_byte_identical_across_thread_counts() {
+    // the determinism contract extended to the numerics axis: a noisy
+    // reduced-precision sweep must aggregate to the same bytes no matter
+    // how the scenarios were sharded
+    let mut accel = presets::streamdcim_default();
+    accel.precision = PrecisionConfig::parse("mx4-noisy").unwrap();
+    let scenarios = matrix_for(&accel, &[presets::tiny_smoke(), presets::functional_small()]);
+    let one = run_sweep(&scenarios, 1, 42);
+    let eight = run_sweep(&scenarios, 8, 42);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    one.write_jsonl(&mut a).unwrap();
+    eight.write_jsonl(&mut b).unwrap();
+    assert_eq!(a, b, "sweep artifact must not depend on the thread count");
+    let text = String::from_utf8(a).unwrap();
+    assert!(text.contains("\"accuracy_mse\""), "rows must carry accuracy_mse");
+    assert!(text.contains("\"accuracy_sqnr_db\""), "rows must carry accuracy_sqnr_db");
+    assert!(text.contains("\"effective_bits\""), "rows must carry effective_bits");
+    // quantization + noise priced in: no scenario reports the ideal cap
+    for row in &one.rows {
+        assert!(row.result.report.accuracy.mse > 0.0, "{}", row.result.id);
+        assert!(
+            row.result.report.accuracy.sqnr_db < AccuracyReport::IDEAL_SQNR_DB,
+            "{}",
+            row.result.id
+        );
+    }
+}
